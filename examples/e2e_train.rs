@@ -1,0 +1,116 @@
+//! End-to-end validation driver: pretrain a ~28M-parameter GPT-2-family
+//! transformer on the synthetic corpus for a few hundred steps and log the
+//! loss curve (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Build artifacts:  python -m compile.aot --bundle e2e   (from python/)
+//! Run:              cargo run --release --example e2e_train -- [steps]
+//!
+//! This proves all three layers compose at scale: the Pallas streaming
+//! attention kernel (L1) inside the JAX-lowered fused gradient graph (L2),
+//! driven by the Rust coordinator's full training loop (L3) with gradient
+//! accumulation, AdamW, metrics and checkpoint export — Python never runs.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use mft::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
+use mft::exp::datasets::assemble;
+use mft::metrics::{Observer, StepRecord};
+use mft::memopt::{rss_now, rss_peak};
+use mft::runtime::Engine;
+use mft::train::Trainer;
+use mft::util::json::Json;
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = args.get(1).cloned().unwrap_or_else(|| "e2e-25m".to_string());
+
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let engine = Rc::new(Engine::new(&root.join("artifacts"))?);
+
+    let cfg = RunConfig {
+        model: model.clone(),
+        task: "corpus".into(),
+        seq: 256,
+        batch: 4,
+        micro_batch: 4,
+        steps,
+        lr: 3e-4,
+        weight_decay: 0.01,
+        grad_clip: 1.0,
+        mode: TrainMode::FullFt,
+        exec: ExecMode::Fused,
+        attn: AttnImpl::Mea,
+        eval_batches: 4,
+        eval_every: (steps / 12).max(1),
+        seed: 1234,
+        ..RunConfig::default()
+    };
+
+    let info = engine.manifest().model(&cfg.model)?.clone();
+    println!("e2e pretraining: {} ({:.1}M params), {} steps, batch {} \
+              (micro {}), seq {}",
+             cfg.model, info.n_params as f64 / 1e6, cfg.steps, cfg.batch,
+             cfg.micro_batch, cfg.seq);
+
+    let assets = assemble(&info, &cfg.task, cfg.seq, cfg.seed)?;
+    let mut train = assets.train;
+    let test = assets.test;
+
+    let out_dir = root.join("results").join("e2e_train");
+    let mut obs = Observer::new(&out_dir)?;
+    let mut trainer = Trainer::new(engine.clone(), cfg.clone())?;
+
+    let (nll0, ppl0) = trainer.eval_nll(&test, cfg.eval_batches)?;
+    println!("initial: nll {nll0:.4} ppl {ppl0:.1}");
+
+    let t0 = std::time::Instant::now();
+    let mut evals: Vec<(usize, f64)> = vec![(0, ppl0)];
+    for step in 1..=cfg.steps {
+        let ts = std::time::Instant::now();
+        let out = trainer.step(&mut train)?;
+        let mut rec = StepRecord {
+            step,
+            loss: out.loss,
+            grad_norm: out.grad_norm,
+            rss_mb: rss_now() as f64 / MIB,
+            peak_rss_mb: rss_peak() as f64 / MIB,
+            step_time_s: ts.elapsed().as_secs_f64(),
+            time_s: t0.elapsed().as_secs_f64(),
+            battery_pct: 100.0,
+            ..Default::default()
+        };
+        if step % cfg.eval_every == 0 || step == cfg.steps {
+            let (nll, ppl) = trainer.eval_nll(&test, cfg.eval_batches)?;
+            rec.test_loss = Some(nll);
+            rec.test_ppl = Some(ppl);
+            evals.push((step, ppl));
+        }
+        obs.log_step(&rec)?;
+    }
+    let hours = t0.elapsed().as_secs_f64() / 3600.0;
+    let (nll1, ppl1) = trainer.eval_nll(&test, cfg.eval_batches)?;
+    println!("final:   nll {nll1:.4} ppl {ppl1:.1}  ({hours:.2} h wall)");
+    println!("loss curve: results/e2e_train/steps.jsonl");
+    println!("ppl trajectory: {:?}", evals);
+
+    trainer.export(&out_dir)?;
+    obs.write_summary(&Json::obj(vec![
+        ("model", Json::from(model)),
+        ("steps", Json::from(cfg.steps)),
+        ("n_params", Json::from(info.n_params)),
+        ("initial_ppl", Json::from(ppl0)),
+        ("final_ppl", Json::from(ppl1)),
+        ("initial_nll", Json::from(nll0)),
+        ("final_nll", Json::from(nll1)),
+        ("wall_hours", Json::from(hours)),
+        ("peak_rss_mb", Json::from(rss_peak() as f64 / MIB)),
+    ]))?;
+    anyhow::ensure!(nll1 < nll0 - 0.5,
+                    "e2e training failed to learn: {nll0} -> {nll1}");
+    println!("OK: loss decreased {nll0:.3} -> {nll1:.3}");
+    Ok(())
+}

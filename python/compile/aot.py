@@ -1,0 +1,303 @@
+"""AOT pipeline: lower artifact functions to HLO *text* + JSON manifest.
+
+Why text: jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the HLO text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).  Lowered with return_tuple=True and
+unwrapped on the Rust side.
+
+This module is the *only* Python entry point the build uses
+(``make artifacts`` / ``make artifacts-<bundle>``); nothing here runs at
+training time.
+
+Usage:
+    python -m compile.aot --bundle core            # default bundle
+    python -m compile.aot --bundle table4 --force  # rebuild a bundle
+    python -m compile.aot --list
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+
+from . import configs
+from .artifacts import ArtifactSpec, LAYERWISE_KINDS, build_set
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_artifact(spec: ArtifactSpec) -> str:
+    # keep_unused=True: the manifest calling convention passes every
+    # declared input even when a gradient graph does not mathematically
+    # need it (e.g. additive biases in backward passes); without it jax
+    # prunes such parameters and the Rust argument count no longer matches.
+    lowered = jax.jit(spec.fn, keep_unused=True).lower(*spec.example_args())
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Bundle definitions — one per experiment family (see DESIGN.md §5).
+# Each entry: (config, seq, mb, dict(kwargs for build_set))
+# ---------------------------------------------------------------------------
+
+TRAIN_EVAL_KINDS = ["gradlora", "evalnll_lora", "logitsat_lora"]
+LW = list(LAYERWISE_KINDS)
+
+
+def _bundles() -> Dict[str, List[tuple]]:
+    b: Dict[str, List[tuple]] = {}
+
+    # Everything the Rust unit/integration tests touch (nano models, tiny seq).
+    b["tests"] = [
+        ("gpt2-nano", 32, 2, dict(lora_r=4, attns=("naive", "mea"),
+                                  remats=(False, True))),
+        ("qwen-nano", 32, 2, dict(lora_r=4, attns=("naive", "mea"),
+                                  remats=(False, True))),
+        # micro-batch 1: gradient-accumulation split-invariance tests
+        ("gpt2-nano", 32, 1, dict(lora_r=4, attns=("mea",),
+                                  kinds=["gradfull", "gradlora"])),
+    ]
+
+    # Quickstart example: LoRA on gpt2-124m-sim, seq 64, mb 4.
+    b["quickstart"] = [
+        ("gpt2-124m-sim", 64, 4,
+         dict(lora_r=8, attns=("mea",),
+              kinds=["gradlora", "evalnll_lora", "logitsat_lora"])),
+    ]
+
+    # Base-model pretraining (experiment drivers fine-tune from these
+    # checkpoints, mirroring the paper's pretrained GPT-2/Qwen/Gemma bases):
+    # Full-FT grad + eval for every sim model @ seq 128.
+    bases = []
+    for m in ["gpt2-124m-sim", "gpt2-355m-sim", "qwen25-0.5b-sim",
+              "gemma3-270m-sim", "gemma3-1b-sim"]:
+        bases.append((m, 128, 8, dict(attns=("mea",),
+                                      kinds=["gradfull", "evalnll"])))
+    b["bases"] = bases
+
+    # Fig 9: Full-FT on gpt2-124m-sim @ corpus, seq 128, batch 8.
+    # Layerwise (MobileFineTuner path) + fused (reference baseline path).
+    b["fig9"] = [
+        ("gpt2-124m-sim", 128, 8,
+         dict(attns=("mea", "naive"),
+              kinds=["gradfull", "evalnll"] + LW)),
+    ]
+
+    # Tables 4/5 (+ appendix 9-22): PEFT on 5 sim models x tasks, seq 128.
+    # MFT path runs mea attention; reference path runs fused naive.
+    t45 = []
+    for m in ["gpt2-124m-sim", "gpt2-355m-sim", "qwen25-0.5b-sim",
+              "gemma3-270m-sim", "gemma3-1b-sim"]:
+        t45.append((m, 128, 8, dict(lora_r=8, attns=("naive", "mea"),
+                                    kinds=TRAIN_EVAL_KINDS)))
+    b["table4"] = t45
+    # seq-256 variants (appendix tables 10-12, 14-16, 18-22)
+    t45_256 = []
+    for m in ["gpt2-124m-sim", "gpt2-355m-sim", "qwen25-0.5b-sim",
+              "gemma3-270m-sim"]:
+        t45_256.append((m, 256, 8, dict(lora_r=8, attns=("naive", "mea"),
+                                        kinds=TRAIN_EVAL_KINDS)))
+    b["table4-seq256"] = t45_256
+
+    # Fig 10 / Table 6: optimization chains, PEFT seq 256 batch 8.
+    # Chains need: fused naive (none), fused mea (1), fused mea remat (1+2),
+    # grad-accum micro-batches (1+2+3: mb 2), layerwise lora (full chain 4).
+    f10 = []
+    for m in ["gpt2-124m-sim", "gpt2-355m-sim", "gemma3-270m-sim",
+              "qwen25-0.5b-sim"]:
+        f10.append((m, 256, 8, dict(lora_r=8, attns=("naive", "mea"),
+                                    remats=(False, True),
+                                    kinds=["gradlora", "evalnll_lora"])))
+        f10.append((m, 256, 2, dict(lora_r=8, attns=("mea",),
+                                    remats=(True,),
+                                    kinds=["gradlora"])))
+        f10.append((m, 256, 2, dict(lora_r=8, attns=("mea",),
+                                    kinds=["embedfwd", "blockfwdlora",
+                                           "blockbwdlora",
+                                           "headlossgrad_frozen",
+                                           "headloss"])))
+    b["fig10"] = f10
+
+    # Table 7: gradient accumulation ablation on gemma3-270m-sim @ corpus.
+    # b4a2 / b2a4 / b1a8 -> micro-batches 4, 2, 1 (+ mb8 no-accum control).
+    t7 = []
+    for mb in (8, 4, 2, 1):
+        t7.append(("gemma3-270m-sim", 128, mb,
+                   dict(lora_r=8, attns=("mea",),
+                        kinds=["gradlora", "evalnll_lora"])))
+    b["table7"] = t7
+
+    # Fig 11: energy scheduling, qwen sim @ corpus seq 128.
+    b["fig11"] = [
+        ("qwen25-0.5b-sim", 128, 8,
+         dict(lora_r=8, attns=("mea",),
+              kinds=["gradlora", "evalnll_lora"])),
+    ]
+
+    # Table 8: native vs emulated-interpreter pipeline, qwen sim @ MC task.
+    b["table8"] = [
+        ("qwen25-0.5b-sim", 128, 8,
+         dict(lora_r=8, attns=("mea", "naive"),
+              kinds=["gradlora", "evalnll_lora", "logitsat_lora"] + LW)),
+    ]
+
+    # Fig 12 / health agent: qwen sim, seq 128 train + decode (mb 1).
+    b["agent"] = [
+        ("qwen25-0.5b-sim", 128, 8,
+         dict(lora_r=8, attns=("mea",),
+              kinds=["gradlora", "evalnll_lora"])),
+        ("qwen25-0.5b-sim", 128, 1,
+         dict(lora_r=8, attns=("mea",),
+              kinds=["logitsat_lora", "logitsat"])),
+    ]
+
+    # End-to-end pretraining driver (~25M params); also emits the fused
+    # eval + decode artifacts used to sample from the trained model.
+    b["e2e"] = [
+        ("e2e-25m", 256, 4,
+         dict(attns=("mea",), kinds=["gradfull", "evalnll", "logitsat"])),
+    ]
+    b["e2e-100m"] = [
+        ("e2e-100m", 256, 1,
+         dict(attns=("mea",), kinds=["gradfull", "evalnll"])),
+    ]
+
+    # Core = what `make artifacts` builds by default: tests + quickstart.
+    b["core"] = b["tests"] + b["quickstart"]
+    return b
+
+
+BUNDLES = _bundles()
+
+
+# ---------------------------------------------------------------------------
+# Manifest management
+# ---------------------------------------------------------------------------
+
+def _config_manifest(cfg_name: str) -> dict:
+    cfg = configs.get_config(cfg_name)
+    return {
+        "family": cfg.family,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "embed_scale": cfg.embed_scale,
+        "n_params": cfg.n_params(),
+        "params": [[n, list(s), init] for n, s, init in configs.param_specs(cfg)],
+        "lora_r8": [[n, list(s), init]
+                    for n, s, init in configs.lora_param_specs(cfg, 8)],
+        "lora_r4": [[n, list(s), init]
+                    for n, s, init in configs.lora_param_specs(cfg, 4)],
+    }
+
+
+def _artifact_manifest(spec: ArtifactSpec, fname: str, src_hash: str) -> dict:
+    return {
+        "file": fname,
+        "kind": spec.kind,
+        "config": spec.config,
+        "seq": spec.seq,
+        "mb": spec.mb,
+        "attn": spec.attn,
+        "remat": spec.remat,
+        "lora_r": spec.lora_r,
+        "inputs": [[n, dt, list(s)] for n, dt, s in spec.inputs],
+        "outputs": [[n, dt, list(s)] for n, dt, s in spec.outputs],
+        "src_hash": src_hash,
+    }
+
+
+def _src_hash() -> str:
+    """Hash of the compile-path sources: artifact staleness key."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(base):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def run_bundle(bundle: str, out_dir: str, force: bool = False,
+               verbose: bool = True) -> int:
+    if bundle not in BUNDLES:
+        raise SystemExit(f"unknown bundle {bundle!r}; have {sorted(BUNDLES)}")
+    os.makedirs(out_dir, exist_ok=True)
+    man_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "configs": {}, "artifacts": {}}
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest = json.load(f)
+    src = _src_hash()
+
+    built = 0
+    for cfg_name, seq, mb, kw in BUNDLES[bundle]:
+        cfg = configs.get_config(cfg_name)
+        manifest["configs"][cfg_name] = _config_manifest(cfg_name)
+        for spec in build_set(cfg, seq, mb, **kw):
+            fname = spec.name + ".hlo.txt"
+            fpath = os.path.join(out_dir, fname)
+            prev = manifest["artifacts"].get(spec.name)
+            if (not force and prev and prev.get("src_hash") == src
+                    and os.path.exists(fpath)):
+                continue
+            t0 = time.time()
+            text = lower_artifact(spec)
+            with open(fpath, "w") as f:
+                f.write(text)
+            manifest["artifacts"][spec.name] = _artifact_manifest(spec, fname, src)
+            built += 1
+            if verbose:
+                print(f"  [{time.time() - t0:6.1f}s] {spec.name} "
+                      f"({len(text) // 1024} KiB)", flush=True)
+            # persist incrementally so an interrupted build resumes
+            with open(man_path, "w") as f:
+                json.dump(manifest, f, indent=1, sort_keys=True)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"bundle {bundle}: {built} artifacts built, "
+              f"{len(manifest['artifacts'])} total in manifest")
+    return built
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--bundle", default="core")
+    p.add_argument("--out", default=None,
+                   help="artifact dir (default: <repo>/artifacts)")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+    if args.list:
+        for name, items in sorted(BUNDLES.items()):
+            print(f"{name}: {len(items)} cells")
+        return
+    out = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))), "artifacts")
+    run_bundle(args.bundle, out, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,535 @@
+"""Artifact definitions: the exact jax functions lowered to HLO text.
+
+Every artifact is a pure function over a *flat positional* argument list
+(arrays only, scalars as rank-0 f32) with a tuple result; the manifest
+records the IO layout so the Rust coordinator can marshal without any
+Python at runtime.
+
+Artifact kinds
+--------------
+Fused (whole-model graphs — the "no sharding" execution mode, also the
+reference/PyTorch-baseline stand-in):
+  gradfull_{attn}[_rm]   params.., tokens, targets, mask
+                            -> grads.., loss_sum, count
+  gradlora_{attn}[_rm]   params.., lora.., lora_scale, tokens, targets, mask
+                            -> lora_grads.., loss_sum, count
+  evalnll[_lora]         params.. [, lora.., lora_scale], tokens, targets,
+                         mask -> nll_sum, count
+  logitsat[_lora]        params.. [, lora.., lora_scale], tokens, pos
+                            -> logits [mb, V]   (letter scoring + decode)
+
+Layerwise (one block at a time — what makes the ZeRO-style parameter
+sharding of Sec. 4.1.1 real; backward recomputes the block forward from its
+input, i.e. per-block activation checkpointing, Sec. 4.1.3):
+  embedfwd               tokens, wte[, wpe] -> x0
+  blockfwd_{attn}        x, block_params.. -> y
+  blockfwdlora_{attn}    x, block_params.., loraA/B.., lora_scale -> y
+  blockbwd_{attn}        x, block_params.., dy -> dx, dblock_params..
+  blockbwdlora_{attn}    x, block_params.., lora.., lora_scale, dy
+                            -> dx, dlora..
+  headlossgrad           xL, head_params.., targets, mask
+                            -> loss_sum, count, dxL, dhead_params..
+  headlossgrad_frozen    xL, head_params.., targets, mask
+                            -> loss_sum, count, dxL
+  headloss               xL, head_params.., targets, mask -> nll_sum, count
+  embedbwd               tokens, dx0 -> dwte[, dwpe]
+
+``attn`` is "naive" (materializes [B,H,S,S]) or "mea" (the L1 Pallas
+streaming kernel); ``_rm`` applies jax.checkpoint per block inside the
+fused graph (activation checkpointing without layerwise execution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs, losses, model_gpt2, model_qwen
+from .configs import ModelConfig
+
+IoSpec = Tuple[str, str, Tuple[int, ...]]  # (name, dtype, shape)
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+@dataclasses.dataclass
+class ArtifactSpec:
+    name: str
+    kind: str
+    config: str
+    seq: int
+    mb: int
+    fn: Callable
+    inputs: List[IoSpec]
+    outputs: List[IoSpec]
+    attn: str = ""
+    remat: bool = False
+    lora_r: int = 0
+
+    def example_args(self):
+        return [jax.ShapeDtypeStruct(shape, _DTYPES[dt])
+                for (_, dt, shape) in self.inputs]
+
+
+def _model_mod(cfg: ModelConfig):
+    return model_gpt2 if cfg.family == "gpt2" else model_qwen
+
+
+def _io(name: str, dt: str, shape: Sequence[int]) -> IoSpec:
+    return (name, dt, tuple(int(s) for s in shape))
+
+
+def _param_ios(cfg: ModelConfig) -> List[IoSpec]:
+    return [_io(n, "f32", s) for n, s, _ in configs.param_specs(cfg)]
+
+
+def _lora_ios(cfg: ModelConfig, rank: int) -> List[IoSpec]:
+    return [_io(n, "f32", s) for n, s, _ in configs.lora_param_specs(cfg, rank)]
+
+
+def _block_ios(cfg: ModelConfig) -> List[IoSpec]:
+    return [_io(n, "f32", s) for n, s, _ in configs.block_param_specs(cfg)]
+
+
+def _block_lora_ios(cfg: ModelConfig, rank: int) -> List[IoSpec]:
+    out: List[IoSpec] = []
+    d = cfg.d_model
+    for tgt in configs.lora_target_names(cfg):
+        if cfg.family == "gpt2":
+            od = d
+        else:
+            od = (cfg.n_heads if tgt == "q" else cfg.n_kv_heads) * cfg.head_dim
+        out.append(_io(f"lora_{tgt}_a", "f32", (d, rank)))
+        out.append(_io(f"lora_{tgt}_b", "f32", (rank, od)))
+    return out
+
+
+def _head_ios(cfg: ModelConfig) -> List[IoSpec]:
+    if cfg.family == "gpt2":
+        return [_io("lnf_g", "f32", (cfg.d_model,)),
+                _io("lnf_b", "f32", (cfg.d_model,)),
+                _io("wte", "f32", (cfg.vocab, cfg.d_model))]
+    return [_io("rmsf_w", "f32", (cfg.d_model,)),
+            _io("wte", "f32", (cfg.vocab, cfg.d_model))]
+
+
+def _data_ios(mb: int, seq: int) -> List[IoSpec]:
+    return [_io("tokens", "i32", (mb, seq)),
+            _io("targets", "i32", (mb, seq)),
+            _io("mask", "f32", (mb, seq))]
+
+
+def _params_from_args(cfg: ModelConfig, args) -> Dict[str, jnp.ndarray]:
+    names = [n for n, _, _ in configs.param_specs(cfg)]
+    return dict(zip(names, args))
+
+
+def _lora_from_args(cfg: ModelConfig, rank: int, args) -> Dict[str, jnp.ndarray]:
+    names = [n for n, _, _ in configs.lora_param_specs(cfg, rank)]
+    return dict(zip(names, args))
+
+
+# ---------------------------------------------------------------------------
+# Fused artifacts
+# ---------------------------------------------------------------------------
+
+def make_grad_full(cfg: ModelConfig, seq: int, mb: int, attn: str,
+                   remat: bool) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    pspecs = configs.param_specs(cfg)
+    n_params = len(pspecs)
+
+    def fn(*args):
+        params = _params_from_args(cfg, args[:n_params])
+        tokens, targets, mask = args[n_params:]
+
+        def loss_fn(p):
+            logits = mod.forward_logits(cfg, tokens, p, attn, remat=remat)
+            loss_sum, count = losses.masked_ce_sum(logits, targets, mask)
+            return loss_sum, count
+
+        (loss_sum, count), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return tuple(grads[n] for n, _, _ in pspecs) + (loss_sum, count)
+
+    name = f"{cfg.name}_s{seq}_mb{mb}_gradfull_{attn}" + ("_rm" if remat else "")
+    return ArtifactSpec(
+        name=name, kind="gradfull", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        attn=attn, remat=remat,
+        inputs=_param_ios(cfg) + _data_ios(mb, seq),
+        outputs=[_io(f"d_{n}", "f32", s) for n, s, _ in pspecs]
+        + [_io("loss_sum", "f32", ()), _io("count", "f32", ())],
+    )
+
+
+def make_grad_lora(cfg: ModelConfig, seq: int, mb: int, attn: str,
+                   remat: bool, rank: int) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    pspecs = configs.param_specs(cfg)
+    lspecs = configs.lora_param_specs(cfg, rank)
+    n_p, n_l = len(pspecs), len(lspecs)
+
+    def fn(*args):
+        params = _params_from_args(cfg, args[:n_p])
+        lora = _lora_from_args(cfg, rank, args[n_p:n_p + n_l])
+        lora_scale = args[n_p + n_l]
+        tokens, targets, mask = args[n_p + n_l + 1:]
+
+        def loss_fn(lp):
+            logits = mod.forward_logits(cfg, tokens, params, attn, lora=lp,
+                                        lora_scale=lora_scale, remat=remat)
+            loss_sum, count = losses.masked_ce_sum(logits, targets, mask)
+            return loss_sum, count
+
+        (loss_sum, count), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora)
+        return tuple(grads[n] for n, _, _ in lspecs) + (loss_sum, count)
+
+    name = f"{cfg.name}_s{seq}_mb{mb}_gradlora{rank}_{attn}" + ("_rm" if remat else "")
+    return ArtifactSpec(
+        name=name, kind="gradlora", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        attn=attn, remat=remat, lora_r=rank,
+        inputs=_param_ios(cfg) + _lora_ios(cfg, rank)
+        + [_io("lora_scale", "f32", ())] + _data_ios(mb, seq),
+        outputs=[_io(f"d_{n}", "f32", s) for n, s, _ in lspecs]
+        + [_io("loss_sum", "f32", ()), _io("count", "f32", ())],
+    )
+
+
+def make_evalnll(cfg: ModelConfig, seq: int, mb: int, attn: str,
+                 rank: int = 0) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    pspecs = configs.param_specs(cfg)
+    n_p = len(pspecs)
+    lspecs = configs.lora_param_specs(cfg, rank) if rank else []
+    n_l = len(lspecs)
+
+    def fn(*args):
+        params = _params_from_args(cfg, args[:n_p])
+        idx = n_p
+        lora = lora_scale = None
+        if rank:
+            lora = _lora_from_args(cfg, rank, args[idx:idx + n_l])
+            lora_scale = args[idx + n_l]
+            idx += n_l + 1
+        tokens, targets, mask = args[idx:]
+        logits = mod.forward_logits(cfg, tokens, params, attn, lora=lora,
+                                    lora_scale=lora_scale)
+        return losses.masked_ce_sum(logits, targets, mask)
+
+    suffix = f"_lora{rank}" if rank else ""
+    name = f"{cfg.name}_s{seq}_mb{mb}_evalnll{suffix}_{attn}"
+    ins = _param_ios(cfg)
+    if rank:
+        ins += _lora_ios(cfg, rank) + [_io("lora_scale", "f32", ())]
+    ins += _data_ios(mb, seq)
+    return ArtifactSpec(
+        name=name, kind="evalnll", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        attn=attn, lora_r=rank, inputs=ins,
+        outputs=[_io("nll_sum", "f32", ()), _io("count", "f32", ())],
+    )
+
+
+def make_logits_at(cfg: ModelConfig, seq: int, mb: int, attn: str,
+                   rank: int = 0) -> ArtifactSpec:
+    """Logits at one gathered position per sequence: MC letter scoring and
+    greedy decoding both need only a single position's distribution."""
+    mod = _model_mod(cfg)
+    pspecs = configs.param_specs(cfg)
+    n_p = len(pspecs)
+    lspecs = configs.lora_param_specs(cfg, rank) if rank else []
+    n_l = len(lspecs)
+
+    def fn(*args):
+        params = _params_from_args(cfg, args[:n_p])
+        idx = n_p
+        lora = lora_scale = None
+        if rank:
+            lora = _lora_from_args(cfg, rank, args[idx:idx + n_l])
+            lora_scale = args[idx + n_l]
+            idx += n_l + 1
+        tokens, pos = args[idx:]
+        x = mod.embed_fwd(cfg, tokens, *(
+            (params["wte"], params["wpe"]) if cfg.family == "gpt2"
+            else (params["wte"],)))
+        for i in range(cfg.n_layers):
+            bp = {k.split(".", 2)[2]: v for k, v in params.items()
+                  if k.startswith(f"blocks.{i}.")}
+            lp = None
+            if lora is not None:
+                lp = {k.split(".", 2)[2]: v for k, v in lora.items()
+                      if k.startswith(f"blocks.{i}.")}
+            x = mod.block_fwd(cfg, x, bp, attn, lp, lora_scale)
+        xf = mod.final_hidden(cfg, x, params)
+        xg = losses.logits_at_positions(xf, pos)  # [mb, D]
+        return (xg @ params["wte"].T,)
+
+    suffix = f"_lora{rank}" if rank else ""
+    name = f"{cfg.name}_s{seq}_mb{mb}_logitsat{suffix}_{attn}"
+    ins = _param_ios(cfg)
+    if rank:
+        ins += _lora_ios(cfg, rank) + [_io("lora_scale", "f32", ())]
+    ins += [_io("tokens", "i32", (mb, seq)), _io("pos", "i32", (mb,))]
+    return ArtifactSpec(
+        name=name, kind="logitsat", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        attn=attn, lora_r=rank, inputs=ins,
+        outputs=[_io("logits", "f32", (mb, cfg.vocab))],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layerwise artifacts
+# ---------------------------------------------------------------------------
+
+def make_embed_fwd(cfg: ModelConfig, seq: int, mb: int) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    if cfg.family == "gpt2":
+        def fn(tokens, wte, wpe):
+            return (mod.embed_fwd(cfg, tokens, wte, wpe),)
+        ins = [_io("tokens", "i32", (mb, seq)),
+               _io("wte", "f32", (cfg.vocab, cfg.d_model)),
+               _io("wpe", "f32", (cfg.max_seq, cfg.d_model))]
+    else:
+        def fn(tokens, wte):
+            return (mod.embed_fwd(cfg, tokens, wte),)
+        ins = [_io("tokens", "i32", (mb, seq)),
+               _io("wte", "f32", (cfg.vocab, cfg.d_model))]
+    name = f"{cfg.name}_s{seq}_mb{mb}_embedfwd"
+    return ArtifactSpec(
+        name=name, kind="embedfwd", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        inputs=ins,
+        outputs=[_io("x", "f32", (mb, seq, cfg.d_model))],
+    )
+
+
+def make_block_fwd(cfg: ModelConfig, seq: int, mb: int, attn: str,
+                   rank: int = 0) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    bspecs = configs.block_param_specs(cfg)
+    n_b = len(bspecs)
+    bl = _block_lora_ios(cfg, rank) if rank else []
+    n_l = len(bl)
+
+    def fn(x, *rest):
+        bp = dict(zip([n for n, _, _ in bspecs], rest[:n_b]))
+        lp = scale = None
+        if rank:
+            lp = dict(zip([n for n, _, _ in bl], rest[n_b:n_b + n_l]))
+            scale = rest[n_b + n_l]
+        return (mod.block_fwd(cfg, x, bp, attn, lp, scale),)
+
+    suffix = f"lora{rank}" if rank else ""
+    name = f"{cfg.name}_s{seq}_mb{mb}_blockfwd{suffix}_{attn}"
+    ins = [_io("x", "f32", (mb, seq, cfg.d_model))]
+    ins += [_io(n, "f32", s) for n, s, _ in bspecs]
+    if rank:
+        ins += bl + [_io("lora_scale", "f32", ())]
+    return ArtifactSpec(
+        name=name, kind="blockfwd" + ("lora" if rank else ""),
+        config=cfg.name, seq=seq, mb=mb, fn=fn, attn=attn, lora_r=rank,
+        inputs=ins,
+        outputs=[_io("y", "f32", (mb, seq, cfg.d_model))],
+    )
+
+
+def make_block_bwd(cfg: ModelConfig, seq: int, mb: int, attn: str,
+                   rank: int = 0) -> ArtifactSpec:
+    """VJP of block_fwd; recomputes the forward from the block input
+    (per-block activation checkpointing — nothing quadratic is retained
+    between the passes)."""
+    mod = _model_mod(cfg)
+    bspecs = configs.block_param_specs(cfg)
+    n_b = len(bspecs)
+    bl = _block_lora_ios(cfg, rank) if rank else []
+    n_l = len(bl)
+
+    def fn(x, *rest):
+        bp = dict(zip([n for n, _, _ in bspecs], rest[:n_b]))
+        if rank:
+            lp = dict(zip([n for n, _, _ in bl], rest[n_b:n_b + n_l]))
+            scale = rest[n_b + n_l]
+            dy = rest[n_b + n_l + 1]
+
+            def f(x_, lp_):
+                return mod.block_fwd(cfg, x_, bp, attn, lp_, scale)
+
+            _, vjp = jax.vjp(f, x, lp)
+            dx, dlp = vjp(dy)
+            return (dx,) + tuple(dlp[n] for n, _, _ in bl)
+        dy = rest[n_b]
+
+        def f(x_, bp_):
+            return mod.block_fwd(cfg, x_, bp_, attn)
+
+        _, vjp = jax.vjp(f, x, bp)
+        dx, dbp = vjp(dy)
+        return (dx,) + tuple(dbp[n] for n, _, _ in bspecs)
+
+    suffix = f"lora{rank}" if rank else ""
+    name = f"{cfg.name}_s{seq}_mb{mb}_blockbwd{suffix}_{attn}"
+    ins = [_io("x", "f32", (mb, seq, cfg.d_model))]
+    ins += [_io(n, "f32", s) for n, s, _ in bspecs]
+    if rank:
+        ins += bl + [_io("lora_scale", "f32", ())]
+    ins += [_io("dy", "f32", (mb, seq, cfg.d_model))]
+    if rank:
+        outs = [_io("dx", "f32", (mb, seq, cfg.d_model))]
+        outs += [_io(f"d_{n}", "f32", s) for n, _, s in bl]
+    else:
+        outs = [_io("dx", "f32", (mb, seq, cfg.d_model))]
+        outs += [_io(f"d_{n}", "f32", s) for n, s, _ in bspecs]
+    return ArtifactSpec(
+        name=name, kind="blockbwd" + ("lora" if rank else ""),
+        config=cfg.name, seq=seq, mb=mb, fn=fn, attn=attn, lora_r=rank,
+        inputs=ins, outputs=outs,
+    )
+
+
+def make_head_loss_grad(cfg: ModelConfig, seq: int, mb: int,
+                        frozen: bool) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    hspecs = _head_ios(cfg)
+    hnames = [n for n, _, _ in hspecs]
+
+    def fn(x, *rest):
+        hp = dict(zip(hnames, rest[:len(hnames)]))
+        targets, mask = rest[len(hnames):]
+
+        def f(x_, hp_):
+            xf = mod.final_hidden(cfg, x_, hp_)
+            logits = xf @ hp_["wte"].T
+            loss_sum, count = losses.masked_ce_sum(logits, targets, mask)
+            return loss_sum, count
+
+        if frozen:
+            (loss_sum, count), vjp = jax.vjp(lambda x_: f(x_, hp), x)
+            (dx,) = vjp((jnp.ones(()), jnp.zeros(())))
+            return loss_sum, count, dx
+        (loss_sum, count), vjp = jax.vjp(f, x, hp)
+        dx, dhp = vjp((jnp.ones(()), jnp.zeros(())))
+        return (loss_sum, count, dx) + tuple(dhp[n] for n in hnames)
+
+    name = f"{cfg.name}_s{seq}_mb{mb}_headlossgrad" + ("_frozen" if frozen else "")
+    ins = [_io("x", "f32", (mb, seq, cfg.d_model))] + hspecs \
+        + [_io("targets", "i32", (mb, seq)), _io("mask", "f32", (mb, seq))]
+    outs = [_io("loss_sum", "f32", ()), _io("count", "f32", ()),
+            _io("dx", "f32", (mb, seq, cfg.d_model))]
+    if not frozen:
+        outs += [_io(f"d_{n}", "f32", s) for n, _, s in hspecs]
+    return ArtifactSpec(
+        name=name, kind="headlossgrad" + ("_frozen" if frozen else ""),
+        config=cfg.name, seq=seq, mb=mb, fn=fn, inputs=ins, outputs=outs,
+    )
+
+
+def make_head_loss(cfg: ModelConfig, seq: int, mb: int) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+    hspecs = _head_ios(cfg)
+    hnames = [n for n, _, _ in hspecs]
+
+    def fn(x, *rest):
+        hp = dict(zip(hnames, rest[:len(hnames)]))
+        targets, mask = rest[len(hnames):]
+        xf = mod.final_hidden(cfg, x, hp)
+        logits = xf @ hp["wte"].T
+        return losses.masked_ce_sum(logits, targets, mask)
+
+    name = f"{cfg.name}_s{seq}_mb{mb}_headloss"
+    ins = [_io("x", "f32", (mb, seq, cfg.d_model))] + hspecs \
+        + [_io("targets", "i32", (mb, seq)), _io("mask", "f32", (mb, seq))]
+    return ArtifactSpec(
+        name=name, kind="headloss", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        inputs=ins,
+        outputs=[_io("nll_sum", "f32", ()), _io("count", "f32", ())],
+    )
+
+
+def make_embed_bwd(cfg: ModelConfig, seq: int, mb: int) -> ArtifactSpec:
+    mod = _model_mod(cfg)
+
+    if cfg.family == "gpt2":
+        def fn(tokens, dx):
+            def f(wte, wpe):
+                return mod.embed_fwd(cfg, tokens, wte, wpe)
+            zw = jnp.zeros((cfg.vocab, cfg.d_model), jnp.float32)
+            zp = jnp.zeros((cfg.max_seq, cfg.d_model), jnp.float32)
+            _, vjp = jax.vjp(f, zw, zp)
+            dwte, dwpe = vjp(dx)
+            return dwte, dwpe
+        outs = [_io("d_wte", "f32", (cfg.vocab, cfg.d_model)),
+                _io("d_wpe", "f32", (cfg.max_seq, cfg.d_model))]
+    else:
+        def fn(tokens, dx):
+            def f(wte):
+                return mod.embed_fwd(cfg, tokens, wte)
+            zw = jnp.zeros((cfg.vocab, cfg.d_model), jnp.float32)
+            _, vjp = jax.vjp(f, zw)
+            (dwte,) = vjp(dx)
+            return (dwte,)
+        outs = [_io("d_wte", "f32", (cfg.vocab, cfg.d_model))]
+
+    name = f"{cfg.name}_s{seq}_mb{mb}_embedbwd"
+    return ArtifactSpec(
+        name=name, kind="embedbwd", config=cfg.name, seq=seq, mb=mb, fn=fn,
+        inputs=[_io("tokens", "i32", (mb, seq)),
+                _io("dx", "f32", (mb, seq, cfg.d_model))],
+        outputs=outs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bundles
+# ---------------------------------------------------------------------------
+
+FUSED_KINDS = ("gradfull", "gradlora", "evalnll", "evalnll_lora",
+               "logitsat", "logitsat_lora")
+LAYERWISE_KINDS = ("embedfwd", "blockfwd", "blockfwdlora", "blockbwd",
+                   "blockbwdlora", "headlossgrad", "headlossgrad_frozen",
+                   "headloss", "embedbwd")
+
+
+def build_set(cfg: ModelConfig, seq: int, mb: int, *, lora_r: int = 8,
+              attns: Sequence[str] = ("naive", "mea"),
+              kinds: Optional[Sequence[str]] = None,
+              remats: Sequence[bool] = (False,)) -> List[ArtifactSpec]:
+    """Builds the artifact list for one (config, seq, micro-batch) cell."""
+    want = set(kinds) if kinds else set(FUSED_KINDS + LAYERWISE_KINDS)
+    out: List[ArtifactSpec] = []
+    for attn in attns:
+        for rm in remats:
+            if "gradfull" in want:
+                out.append(make_grad_full(cfg, seq, mb, attn, rm))
+            if "gradlora" in want:
+                out.append(make_grad_lora(cfg, seq, mb, attn, rm, lora_r))
+        if "evalnll" in want:
+            out.append(make_evalnll(cfg, seq, mb, attn))
+        if "evalnll_lora" in want:
+            out.append(make_evalnll(cfg, seq, mb, attn, rank=lora_r))
+        if "logitsat" in want:
+            out.append(make_logits_at(cfg, seq, mb, attn))
+        if "logitsat_lora" in want:
+            out.append(make_logits_at(cfg, seq, mb, attn, rank=lora_r))
+        if "blockfwd" in want:
+            out.append(make_block_fwd(cfg, seq, mb, attn))
+        if "blockfwdlora" in want:
+            out.append(make_block_fwd(cfg, seq, mb, attn, rank=lora_r))
+        if "blockbwd" in want:
+            out.append(make_block_bwd(cfg, seq, mb, attn))
+        if "blockbwdlora" in want:
+            out.append(make_block_bwd(cfg, seq, mb, attn, rank=lora_r))
+    if "embedfwd" in want:
+        out.append(make_embed_fwd(cfg, seq, mb))
+    if "headlossgrad" in want:
+        out.append(make_head_loss_grad(cfg, seq, mb, frozen=False))
+    if "headlossgrad_frozen" in want:
+        out.append(make_head_loss_grad(cfg, seq, mb, frozen=True))
+    if "headloss" in want:
+        out.append(make_head_loss(cfg, seq, mb))
+    if "embedbwd" in want:
+        out.append(make_embed_bwd(cfg, seq, mb))
+    # de-duplicate by name (attn loop emits family-invariant kinds once)
+    seen: Dict[str, ArtifactSpec] = {}
+    for a in out:
+        seen.setdefault(a.name, a)
+    return list(seen.values())

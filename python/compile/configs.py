@@ -1,0 +1,211 @@
+"""Model configuration registry for the MobileFineTuner reproduction.
+
+Each paper model (GPT2-124M/355M, Qwen2.5-0.5B, Gemma3-270M/1B) has a
+``*-sim`` configuration: the same architecture family at reduced
+width/depth/vocab so experiments run on a single CPU core.  The relative
+memory/time behaviour between models (vocab-heavy Gemma vs deep GPT2 etc.)
+is preserved by keeping the *shape ratios* of the originals:
+
+  - gpt2 family   : learned positional embeddings, pre-LN, fused QKV,
+                    GELU MLP (4x), biases everywhere, tied LM head.
+  - qwen family   : RoPE, RMSNorm, SwiGLU, grouped-query attention,
+                    no biases, tied LM head.  ``gemma``-flavoured configs
+                    use the same family with a large vocab ratio and
+                    sqrt(d) embedding scaling, mirroring Gemma 3.
+
+``nano`` configs exist purely for tests (fast to trace/compile).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "gpt2" | "qwen"
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int  # == n_heads for MHA (gpt2 family ignores)
+    d_ff: int
+    max_seq: int
+    # qwen-family extras
+    rope_theta: float = 10000.0
+    embed_scale: bool = False  # gemma-style sqrt(d_model) embedding scaling
+    rms_eps: float = 1e-6
+    ln_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Exact trainable parameter count (tied head)."""
+        total = 0
+        for _, shape, _ in param_specs(self):
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def _reg(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+# --- test-scale configs ---------------------------------------------------
+GPT2_NANO = _reg(ModelConfig("gpt2-nano", "gpt2", vocab=384, d_model=32,
+                             n_layers=2, n_heads=2, n_kv_heads=2, d_ff=64,
+                             max_seq=64))
+QWEN_NANO = _reg(ModelConfig("qwen-nano", "qwen", vocab=384, d_model=32,
+                             n_layers=2, n_heads=4, n_kv_heads=2, d_ff=64,
+                             max_seq=64))
+
+# --- paper-model simulations ----------------------------------------------
+# GPT2-124M: 12L x 768d x 12H, vocab 50257 -> sim keeps 4x MLP, LN, tied head.
+GPT2_124M_SIM = _reg(ModelConfig("gpt2-124m-sim", "gpt2", vocab=2048,
+                                 d_model=128, n_layers=4, n_heads=4,
+                                 n_kv_heads=4, d_ff=512, max_seq=256))
+# GPT2-355M: 24L x 1024d x 16H -> deeper and wider than 124M by ~1.9x/1.33x.
+GPT2_355M_SIM = _reg(ModelConfig("gpt2-355m-sim", "gpt2", vocab=2048,
+                                 d_model=192, n_layers=8, n_heads=6,
+                                 n_kv_heads=6, d_ff=768, max_seq=256))
+# Qwen2.5-0.5B: 24L x 896d, 14H/2KV (GQA 7:1), SwiGLU ~4.86x, vocab 151k.
+QWEN25_05B_SIM = _reg(ModelConfig("qwen25-0.5b-sim", "qwen", vocab=4096,
+                                  d_model=160, n_layers=6, n_heads=8,
+                                  n_kv_heads=2, d_ff=768, max_seq=256))
+# Gemma3-270M: vocab-dominated (256k vocab, 640d): sim keeps the huge
+# vocab:d ratio so embedding memory dominates, as in the paper's Fig 10.
+GEMMA3_270M_SIM = _reg(ModelConfig("gemma3-270m-sim", "qwen", vocab=8192,
+                                   d_model=128, n_layers=4, n_heads=4,
+                                   n_kv_heads=1, d_ff=512, max_seq=256,
+                                   embed_scale=True))
+# Gemma3-1B: 26L x 1152d, vocab 256k.
+GEMMA3_1B_SIM = _reg(ModelConfig("gemma3-1b-sim", "qwen", vocab=8192,
+                                 d_model=256, n_layers=8, n_heads=8,
+                                 n_kv_heads=2, d_ff=1024, max_seq=256,
+                                 embed_scale=True))
+
+# --- end-to-end driver config (largest we train for real) ------------------
+E2E_25M = _reg(ModelConfig("e2e-25m", "gpt2", vocab=8192, d_model=448,
+                           n_layers=10, n_heads=8, n_kv_heads=8, d_ff=1792,
+                           max_seq=256))
+E2E_100M = _reg(ModelConfig("e2e-100m", "gpt2", vocab=16384, d_model=768,
+                            n_layers=12, n_heads=12, n_kv_heads=12,
+                            d_ff=3072, max_seq=256))
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> List[ModelConfig]:
+    return list(_REGISTRY.values())
+
+
+# ---------------------------------------------------------------------------
+# Canonical parameter layout.
+#
+# The artifact calling convention passes parameters as a flat list of arrays
+# in exactly this order; the Rust coordinator marshals from its parameter
+# store using the manifest copy of this table.  Init kinds:
+#   normal  -> N(0, 0.02)
+#   scaled  -> N(0, 0.02/sqrt(2*n_layers))   (GPT-2 residual-projection init)
+#   zeros / ones
+# ---------------------------------------------------------------------------
+
+ParamSpec = Tuple[str, Tuple[int, ...], str]  # (name, shape, init)
+
+
+def global_param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Embedding + final-norm parameters (tied LM head reuses wte)."""
+    if cfg.family == "gpt2":
+        return [
+            ("wte", (cfg.vocab, cfg.d_model), "normal"),
+            ("wpe", (cfg.max_seq, cfg.d_model), "normal"),
+            ("lnf_g", (cfg.d_model,), "ones"),
+            ("lnf_b", (cfg.d_model,), "zeros"),
+        ]
+    if cfg.family == "qwen":
+        return [
+            ("wte", (cfg.vocab, cfg.d_model), "normal"),
+            ("rmsf_w", (cfg.d_model,), "ones"),
+        ]
+    raise ValueError(cfg.family)
+
+
+def block_param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Per-transformer-block parameters (identical shapes for every layer)."""
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.family == "gpt2":
+        return [
+            ("ln1_g", (d,), "ones"),
+            ("ln1_b", (d,), "zeros"),
+            ("qkv_w", (d, 3 * d), "normal"),
+            ("qkv_b", (3 * d,), "zeros"),
+            ("o_w", (d, d), "scaled"),
+            ("o_b", (d,), "zeros"),
+            ("ln2_g", (d,), "ones"),
+            ("ln2_b", (d,), "zeros"),
+            ("fc_w", (d, f), "normal"),
+            ("fc_b", (f,), "zeros"),
+            ("proj_w", (f, d), "scaled"),
+            ("proj_b", (d,), "zeros"),
+        ]
+    if cfg.family == "qwen":
+        hd = cfg.head_dim
+        return [
+            ("rms1_w", (d,), "ones"),
+            ("q_w", (d, cfg.n_heads * hd), "normal"),
+            ("k_w", (d, cfg.n_kv_heads * hd), "normal"),
+            ("v_w", (d, cfg.n_kv_heads * hd), "normal"),
+            ("o_w", (cfg.n_heads * hd, d), "scaled"),
+            ("rms2_w", (d,), "ones"),
+            ("gate_w", (d, f), "normal"),
+            ("up_w", (d, f), "normal"),
+            ("down_w", (f, d), "scaled"),
+        ]
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Full ordered parameter table: globals, then blocks 0..L-1."""
+    specs = list(global_param_specs(cfg))
+    for layer in range(cfg.n_layers):
+        for name, shape, init in block_param_specs(cfg):
+            specs.append((f"blocks.{layer}.{name}", shape, init))
+    return specs
+
+
+def lora_target_names(cfg: ModelConfig) -> List[str]:
+    """Projections that receive LoRA adapters (paper: attention q and v)."""
+    if cfg.family == "gpt2":
+        return ["q", "v"]  # slices of the fused qkv projection
+    return ["q", "v"]
+
+
+def lora_param_specs(cfg: ModelConfig, rank: int) -> List[ParamSpec]:
+    """Ordered LoRA parameter table (A: normal init, B: zeros => delta=0)."""
+    d = cfg.d_model
+    specs: List[ParamSpec] = []
+    for layer in range(cfg.n_layers):
+        for tgt in lora_target_names(cfg):
+            if cfg.family == "gpt2":
+                out_dim = d
+            else:
+                out_dim = (cfg.n_heads if tgt == "q" else cfg.n_kv_heads) * cfg.head_dim
+            specs.append((f"blocks.{layer}.lora_{tgt}_a", (d, rank), "normal"))
+            specs.append((f"blocks.{layer}.lora_{tgt}_b", (rank, out_dim), "zeros"))
+    return specs

@@ -1,0 +1,90 @@
+"""L2 HLO cost analysis: op counts + byte estimates from lowered HLO text.
+
+Used in the performance pass to verify L2 targets (DESIGN.md §7):
+  * remat variants trade extra `dot` ops for fewer live intermediates;
+  * the MEA variants replace the quadratic score tensors with while-loops;
+  * no unexpected recomputation in plain fused graphs.
+
+Usage:
+    python -m compile.hlo_stats artifacts/<name>.hlo.txt [...]
+    python -m compile.hlo_stats --compare artifacts/a.hlo.txt artifacts/b.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from collections import Counter
+
+
+SHAPE_RE = re.compile(r"f32\[([\d,]*)\]")
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\],\s]*?\s*(\w+)\(")
+
+
+def analyze(path: str) -> dict:
+    ops = Counter()
+    max_tensor_words = 0
+    total_f32_words = 0
+    n_instr = 0
+    with open(path) as f:
+        for line in f:
+            m = OP_RE.match(line)
+            if m:
+                ops[m.group(1)] += 1
+                n_instr += 1
+            for shape in SHAPE_RE.findall(line.split("=")[0]):
+                if not shape:
+                    words = 1
+                else:
+                    words = 1
+                    for d in shape.split(","):
+                        if d.strip():
+                            words *= int(d)
+                max_tensor_words = max(max_tensor_words, words)
+                total_f32_words += words
+    return {
+        "path": path,
+        "instructions": n_instr,
+        "ops": ops,
+        "max_tensor_mib": max_tensor_words * 4 / (1 << 20),
+        "sum_result_mib": total_f32_words * 4 / (1 << 20),
+    }
+
+
+def show(stats: dict) -> None:
+    print(f"== {stats['path']}")
+    print(f"   instructions: {stats['instructions']}")
+    print(f"   largest f32 result: {stats['max_tensor_mib']:.2f} MiB; "
+          f"sum of result shapes: {stats['sum_result_mib']:.1f} MiB")
+    top = stats["ops"].most_common(12)
+    print("   top ops: " + ", ".join(f"{k}x{v}" for k, v in top))
+
+
+def compare(a: dict, b: dict) -> None:
+    show(a)
+    show(b)
+    print("== delta (b - a)")
+    keys = set(a["ops"]) | set(b["ops"])
+    for k in sorted(keys, key=lambda k: -(b["ops"][k] - a["ops"][k])):
+        d = b["ops"][k] - a["ops"][k]
+        if d:
+            print(f"   {k:<24} {d:+d}")
+    print(f"   sum-result-shapes: {b['sum_result_mib'] - a['sum_result_mib']:+.1f} MiB")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("files", nargs="+")
+    p.add_argument("--compare", action="store_true")
+    args = p.parse_args()
+    stats = [analyze(f) for f in args.files]
+    if args.compare and len(stats) == 2:
+        compare(stats[0], stats[1])
+    else:
+        for s in stats:
+            show(s)
+
+
+if __name__ == "__main__":
+    main()

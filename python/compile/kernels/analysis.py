@@ -1,0 +1,109 @@
+"""L1 kernel structural analysis: VMEM footprint + MXU-utilization model.
+
+``interpret=True`` gives CPU-numpy timing only, which says nothing about
+TPU behaviour — so the kernel is optimized *structurally*: tile shapes are
+chosen from this model and the choice is recorded in EXPERIMENTS.md §Perf.
+
+Model (per grid step, f32 words):
+    VMEM  = q_tile*Dh (Q block) + 2*S*Dh (K,V stripe)
+          + q_tile*Dh (out block) + q_tile*kv_tile (score tile)
+    MXU   = the two dots are [q_tile x Dh] @ [Dh x kv_tile] and
+            [q_tile x kv_tile] @ [kv_tile x Dh]; utilization is estimated
+            as the fraction of each operand dim filling the 128x128
+            systolic array.
+    naive = S*S words per (batch, head) for the score matrix alone.
+
+Usage:
+    python -m compile.kernels.analysis [--seq 128 256] [--dh 32 64]
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+MXU = 128
+
+
+@dataclass
+class TileChoice:
+    seq: int
+    dh: int
+    q_tile: int
+    kv_tile: int
+
+    @property
+    def vmem_words(self) -> int:
+        return (self.q_tile * self.dh * 2 + 2 * self.seq * self.dh
+                + self.q_tile * self.kv_tile)
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_words * 4 / VMEM_BYTES
+
+    @property
+    def naive_words(self) -> int:
+        return self.seq * self.seq
+
+    @property
+    def mxu_util(self) -> float:
+        """Mean systolic-array fill across the kernel's two matmuls."""
+        def fill(m, k, n):
+            return min(m / MXU, 1.0) * min(n / MXU, 1.0) * min(k / MXU, 1.0) ** 0.0
+        a = fill(self.q_tile, self.dh, self.kv_tile)
+        b = fill(self.q_tile, self.kv_tile, self.dh)
+        return (a + b) / 2
+
+    @property
+    def grid_steps_per_bh(self) -> int:
+        return self.seq // self.q_tile
+
+
+def choose_tiles(seq: int, dh: int) -> TileChoice:
+    """Largest MXU-aligned tiles that keep the working set well under
+    VMEM (we target < 25% so double-buffering has headroom)."""
+    # tiles beyond 128 gain no MXU fill and only burn VMEM
+    best = None
+    for q in (128, 64, 32, 16, 8):
+        if q > seq or seq % q:
+            continue
+        for kv in (128, 64, 32, 16, 8):
+            if kv > seq or seq % kv:
+                continue
+            t = TileChoice(seq, dh, q, kv)
+            if t.vmem_frac > 0.25:
+                continue
+            key = (t.mxu_util, q * kv)
+            if best is None or key > (best.mxu_util,
+                                      best.q_tile * best.kv_tile):
+                best = t
+    return best or TileChoice(seq, dh, min(32, seq), min(32, seq))
+
+
+def report(seqs, dhs) -> str:
+    lines = [
+        f"{'seq':>5} {'Dh':>4} {'q_tile':>7} {'kv_tile':>8} "
+        f"{'VMEM':>10} {'%VMEM':>7} {'vs naive':>9} {'MXU':>6}"
+    ]
+    for s in seqs:
+        for dh in dhs:
+            t = choose_tiles(s, dh)
+            lines.append(
+                f"{s:>5} {dh:>4} {t.q_tile:>7} {t.kv_tile:>8} "
+                f"{t.vmem_words * 4 // 1024:>9}K {t.vmem_frac * 100:>6.2f} "
+                f"{t.naive_words / t.vmem_words:>8.1f}x {t.mxu_util:>6.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--seq", nargs="*", type=int, default=[64, 128, 256, 512,
+                                                          1024])
+    p.add_argument("--dh", nargs="*", type=int, default=[32, 64, 128])
+    a = p.parse_args()
+    print(report(a.seq, a.dh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for the attention operators.
+
+``naive_attention`` materializes the full [B, H, S, S] score and probability
+matrices — this is the *unoptimized* path the paper's memory-efficient
+attention replaces, and the numerical ground truth the Pallas kernel is
+tested against.
+
+``streaming_attention_ref`` re-implements the row/tile-streaming online
+softmax in plain jnp (lax.fori_loop over kv tiles).  It is used to check
+that the *algorithm* (not just the Pallas implementation) is exact, and it
+doubles as the reference when hypothesis sweeps shapes too odd for the
+kernel's tiling constraints.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0) -> jnp.ndarray:
+    """[s_q, s_k] boolean mask; True = attend. Row i is absolute q_offset+i."""
+    q_pos = jnp.arange(s_q)[:, None] + q_offset
+    k_pos = jnp.arange(s_k)[None, :]
+    return k_pos <= q_pos
+
+
+def naive_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Exact attention with materialized [B,H,S,S] intermediates.
+
+    q: [B, H, Sq, Dh], k/v: [B, H, Sk, Dh] -> [B, H, Sq, Dh]
+    """
+    *_, s_q, d = q.shape
+    s_k = k.shape[-2]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = causal_mask(s_q, s_k)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def streaming_attention_ref(q, k, v, *, causal: bool = True,
+                            kv_tile: int = 16, scale: float | None = None):
+    """Online-softmax tile-streaming attention in plain jnp.
+
+    Mathematically identical to ``naive_attention`` but never forms the
+    [Sq, Sk] matrix for more than one kv tile at a time.  Mirrors the
+    paper's Sec. 4.1.4 row-streaming operator.
+    """
+    b, h, s_q, d = q.shape
+    s_k = k.shape[-2]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if s_k % kv_tile != 0:
+        kv_tile = s_k  # degenerate single tile
+    n_tiles = s_k // kv_tile
+
+    q_pos = jnp.arange(s_q)
+
+    def body(t, carry):
+        m, l, acc = carry  # running max [b,h,s_q], denom [b,h,s_q], out acc
+        k_t = jax.lax.dynamic_slice_in_dim(k, t * kv_tile, kv_tile, axis=2)
+        v_t = jax.lax.dynamic_slice_in_dim(v, t * kv_tile, kv_tile, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k_t) * scale  # [b,h,s_q,kv_tile]
+        if causal:
+            k_pos = t * kv_tile + jnp.arange(kv_tile)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, v_t)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((b, h, s_q), NEG_INF, q.dtype)
+    l0 = jnp.zeros((b, h, s_q), q.dtype)
+    acc0 = jnp.zeros_like(q)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    return acc / l[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def naive_attention_jit(q, k, v, causal: bool = True):
+    return naive_attention(q, k, v, causal=causal)

@@ -1,0 +1,87 @@
+"""Shared neural-net building blocks for the L2 JAX models.
+
+All functions are pure and shape-polymorphic over batch/sequence; the AOT
+pipeline specializes them per (config, seq, micro-batch) when lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.me_attention import mea_attention
+from .kernels.ref import naive_attention
+
+
+def layernorm(x, g, b, eps: float = 1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    ms = (x ** 2).mean(axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def gelu(x):
+    """tanh-approximation GELU (GPT-2 flavour)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 *
+                                     (x + 0.044715 * x ** 3)))
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def split_heads(x, n_heads: int):
+    """[B, S, H*Dh] -> [B, H, S, Dh]"""
+    b, s, hd = x.shape
+    d = hd // n_heads
+    return x.reshape(b, s, n_heads, d).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    """[B, H, S, Dh] -> [B, S, H*Dh]"""
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def repeat_kv(x, n_rep: int):
+    """GQA: [B, KV, S, Dh] -> [B, KV*n_rep, S, Dh] (head-major repeat)."""
+    if n_rep == 1:
+        return x
+    b, kv, s, d = x.shape
+    x = jnp.broadcast_to(x[:, :, None], (b, kv, n_rep, s, d))
+    return x.reshape(b, kv * n_rep, s, d)
+
+
+def rope_cos_sin(seq: int, head_dim: int, theta: float):
+    """Returns (cos, sin): [seq, head_dim/2] each (constant-folded by XLA)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    ang = pos[:, None] * inv_freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate-half RoPE. x: [B, H, S, Dh]; cos/sin: [S, Dh/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def attention(q, k, v, impl: str):
+    """Dispatch between the materializing and the streaming operator.
+
+    q/k/v: [B, H, S, Dh] with equal head counts (GQA already expanded).
+    impl: "naive" (full [B,H,S,S] intermediates) | "mea" (Pallas streaming).
+    """
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=True)
+    if impl == "mea":
+        return mea_attention(q, k, v, causal=True)
+    raise ValueError(f"unknown attention impl {impl!r}")

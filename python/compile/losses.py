@@ -1,0 +1,43 @@
+"""Loss / scoring heads shared by both model families.
+
+Convention: artifacts return (loss_sum, token_count) rather than a mean so
+the Rust coordinator can accumulate across micro-batches exactly (paper
+Sec. 4.1.2: gradients are summed over micro-batches and the optimizer step
+uses the large-batch mean — dividing the summed gradient by the summed
+token count reproduces large-batch training bit-for-bit up to float
+reassociation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_ce_sum(logits, targets, mask):
+    """Sum of masked token cross-entropies + masked token count.
+
+    logits: [B, S, V] f32; targets: [B, S] i32; mask: [B, S] f32 (0/1).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)  # [B, S]
+    tgt = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum(), mask.sum()
+
+
+def nll_per_sequence(logits, targets, mask):
+    """Per-sequence masked NLL sums: [B]. Used for likelihood MC scoring."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    return ((lse - tgt) * mask).sum(axis=-1)
+
+
+def logits_at_positions(x, pos):
+    """Gather hidden states at per-sequence positions.
+
+    x: [B, S, D]; pos: [B] i32 -> [B, D]
+    """
+    return jnp.take_along_axis(
+        x, pos[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]

@@ -1,0 +1,80 @@
+"""GPT-2-family model (learned positions, pre-LN, fused QKV, GELU MLP).
+
+Parameters are passed as dicts keyed by the names in
+``configs.block_param_specs`` / ``configs.global_param_specs``; the AOT
+layer flattens them in canonical order for the HLO calling convention.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def embed_fwd(cfg: ModelConfig, tokens, wte, wpe):
+    """tokens [B,S] i32 -> x [B,S,D]."""
+    s = tokens.shape[1]
+    return wte[tokens] + wpe[:s][None]
+
+
+def _attn(cfg: ModelConfig, h, bp: Params, attn_impl: str,
+          lora: Optional[Params] = None, lora_scale=None):
+    """Attention sub-block on normalized input h [B,S,D]."""
+    d = cfg.d_model
+    qkv = h @ bp["qkv_w"] + bp["qkv_b"]
+    q, k, v = qkv[..., :d], qkv[..., d:2 * d], qkv[..., 2 * d:]
+    if lora is not None:
+        # LoRA on the q and v slices of the fused projection (paper Sec 3.2).
+        q = q + (h @ lora["lora_q_a"]) @ lora["lora_q_b"] * lora_scale
+        v = v + (h @ lora["lora_v_a"]) @ lora["lora_v_b"] * lora_scale
+    qh = layers.split_heads(q, cfg.n_heads)
+    kh = layers.split_heads(k, cfg.n_heads)
+    vh = layers.split_heads(v, cfg.n_heads)
+    out = layers.attention(qh, kh, vh, attn_impl)
+    return layers.merge_heads(out) @ bp["o_w"] + bp["o_b"]
+
+
+def block_fwd(cfg: ModelConfig, x, bp: Params, attn_impl: str,
+              lora: Optional[Params] = None, lora_scale=None):
+    """One pre-LN transformer block. x [B,S,D] -> [B,S,D]."""
+    h = layers.layernorm(x, bp["ln1_g"], bp["ln1_b"], cfg.ln_eps)
+    x = x + _attn(cfg, h, bp, attn_impl, lora, lora_scale)
+    h2 = layers.layernorm(x, bp["ln2_g"], bp["ln2_b"], cfg.ln_eps)
+    mlp = layers.gelu(h2 @ bp["fc_w"] + bp["fc_b"]) @ bp["proj_w"] + bp["proj_b"]
+    return x + mlp
+
+
+def final_hidden(cfg: ModelConfig, x, gp: Params):
+    return layers.layernorm(x, gp["lnf_g"], gp["lnf_b"], cfg.ln_eps)
+
+
+def head_logits(cfg: ModelConfig, xf, gp: Params):
+    """Tied LM head: [B,S,D] -> [B,S,V]."""
+    return xf @ gp["wte"].T
+
+
+def forward_logits(cfg: ModelConfig, tokens, params: Params, attn_impl: str,
+                   lora: Optional[Params] = None, lora_scale=None,
+                   remat: bool = False):
+    """Full forward to logits. params holds globals + blocks.{i}.* keys."""
+    import jax
+
+    x = embed_fwd(cfg, tokens, params["wte"], params["wpe"])
+    for i in range(cfg.n_layers):
+        bp = {k.split(".", 2)[2]: v for k, v in params.items()
+              if k.startswith(f"blocks.{i}.") and "lora" not in k}
+        lp = None
+        if lora is not None:
+            lp = {k.split(".", 2)[2]: v for k, v in lora.items()
+                  if k.startswith(f"blocks.{i}.")}
+        fn = lambda x_, bp_=bp, lp_=lp: block_fwd(cfg, x_, bp_, attn_impl,
+                                                  lp_, lora_scale)
+        x = jax.checkpoint(fn)(x) if remat else fn(x)
+    xf = final_hidden(cfg, x, params)
+    return head_logits(cfg, xf, params)

@@ -1,0 +1,82 @@
+"""Qwen/Gemma-family model (RoPE, RMSNorm, SwiGLU, GQA, no biases).
+
+``embed_scale=True`` configs (the Gemma-3 sims) multiply token embeddings
+by sqrt(d_model), as Gemma does.  The LM head is tied to ``wte`` for both.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def embed_fwd(cfg: ModelConfig, tokens, wte):
+    x = wte[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32))
+    return x
+
+
+def _attn(cfg: ModelConfig, h, bp: Params, attn_impl: str,
+          lora: Optional[Params] = None, lora_scale=None):
+    s = h.shape[1]
+    q = h @ bp["q_w"]
+    k = h @ bp["k_w"]
+    v = h @ bp["v_w"]
+    if lora is not None:
+        q = q + (h @ lora["lora_q_a"]) @ lora["lora_q_b"] * lora_scale
+        v = v + (h @ lora["lora_v_a"]) @ lora["lora_v_b"] * lora_scale
+    qh = layers.split_heads(q, cfg.n_heads)
+    kh = layers.split_heads(k, cfg.n_kv_heads)
+    vh = layers.split_heads(v, cfg.n_kv_heads)
+    cos, sin = layers.rope_cos_sin(s, cfg.head_dim, cfg.rope_theta)
+    qh = layers.apply_rope(qh, cos, sin)
+    kh = layers.apply_rope(kh, cos, sin)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kh = layers.repeat_kv(kh, n_rep)
+    vh = layers.repeat_kv(vh, n_rep)
+    out = layers.attention(qh, kh, vh, attn_impl)
+    return layers.merge_heads(out) @ bp["o_w"]
+
+
+def block_fwd(cfg: ModelConfig, x, bp: Params, attn_impl: str,
+              lora: Optional[Params] = None, lora_scale=None):
+    h = layers.rmsnorm(x, bp["rms1_w"], cfg.rms_eps)
+    x = x + _attn(cfg, h, bp, attn_impl, lora, lora_scale)
+    h2 = layers.rmsnorm(x, bp["rms2_w"], cfg.rms_eps)
+    mlp = (layers.silu(h2 @ bp["gate_w"]) * (h2 @ bp["up_w"])) @ bp["down_w"]
+    return x + mlp
+
+
+def final_hidden(cfg: ModelConfig, x, gp: Params):
+    return layers.rmsnorm(x, gp["rmsf_w"], cfg.rms_eps)
+
+
+def head_logits(cfg: ModelConfig, xf, gp: Params):
+    return xf @ gp["wte"].T
+
+
+def forward_logits(cfg: ModelConfig, tokens, params: Params, attn_impl: str,
+                   lora: Optional[Params] = None, lora_scale=None,
+                   remat: bool = False):
+    import jax
+
+    x = embed_fwd(cfg, tokens, params["wte"])
+    for i in range(cfg.n_layers):
+        bp = {k.split(".", 2)[2]: v for k, v in params.items()
+              if k.startswith(f"blocks.{i}.") and "lora" not in k}
+        lp = None
+        if lora is not None:
+            lp = {k.split(".", 2)[2]: v for k, v in lora.items()
+                  if k.startswith(f"blocks.{i}.")}
+        fn = lambda x_, bp_=bp, lp_=lp: block_fwd(cfg, x_, bp_, attn_impl,
+                                                  lp_, lora_scale)
+        x = jax.checkpoint(fn)(x) if remat else fn(x)
+    xf = final_hidden(cfg, x, params)
+    return head_logits(cfg, xf, params)

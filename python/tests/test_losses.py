@@ -1,0 +1,97 @@
+"""Loss/scoring head oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.losses import (logits_at_positions, masked_ce_sum,
+                            nll_per_sequence)
+
+
+def manual_ce(logits, targets, mask):
+    b, s, v = logits.shape
+    total = 0.0
+    count = 0.0
+    for i in range(b):
+        for j in range(s):
+            if mask[i, j] > 0:
+                p = np.exp(logits[i, j] - logits[i, j].max())
+                p = p / p.sum()
+                total += -np.log(p[targets[i, j]])
+                count += 1
+    return total, count
+
+
+class TestMaskedCe:
+    def test_matches_manual(self):
+        rng = np.random.default_rng(0)
+        logits = rng.normal(size=(2, 5, 7)).astype(np.float32)
+        targets = rng.integers(0, 7, size=(2, 5)).astype(np.int32)
+        mask = (rng.random((2, 5)) > 0.3).astype(np.float32)
+        got_sum, got_cnt = masked_ce_sum(jnp.array(logits),
+                                         jnp.array(targets), jnp.array(mask))
+        want_sum, want_cnt = manual_ce(logits, targets, mask)
+        np.testing.assert_allclose(got_sum, want_sum, rtol=1e-5)
+        assert float(got_cnt) == want_cnt
+
+    def test_zero_mask_zero_loss(self):
+        logits = jnp.ones((1, 3, 4))
+        targets = jnp.zeros((1, 3), jnp.int32)
+        mask = jnp.zeros((1, 3))
+        s, c = masked_ce_sum(logits, targets, mask)
+        assert float(s) == 0.0 and float(c) == 0.0
+
+    def test_uniform_logits_give_log_vocab(self):
+        v = 11
+        logits = jnp.zeros((1, 4, v))
+        targets = jnp.zeros((1, 4), jnp.int32)
+        mask = jnp.ones((1, 4))
+        s, c = masked_ce_sum(logits, targets, mask)
+        np.testing.assert_allclose(s / c, np.log(v), rtol=1e-6)
+
+    def test_stable_with_huge_logits(self):
+        logits = jnp.full((1, 2, 4), 1e4).at[0, 0, 1].set(1.5e4)
+        targets = jnp.array([[1, 0]], jnp.int32)
+        mask = jnp.ones((1, 2))
+        s, _ = masked_ce_sum(logits, targets, mask)
+        assert bool(jnp.isfinite(s))
+
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(1, 3), s=st.integers(1, 8), v=st.integers(2, 16),
+           seed=st.integers(0, 999))
+    def test_hypothesis_positive_and_finite(self, b, s, v, seed):
+        key = jax.random.PRNGKey(seed)
+        logits = jax.random.normal(key, (b, s, v))
+        targets = jax.random.randint(key, (b, s), 0, v, jnp.int32)
+        mask = jnp.ones((b, s))
+        total, count = masked_ce_sum(logits, targets, mask)
+        assert float(total) >= 0.0
+        assert float(count) == b * s
+
+
+class TestPerSequence:
+    def test_sums_to_batch_total(self):
+        rng = np.random.default_rng(1)
+        logits = jnp.array(rng.normal(size=(3, 4, 6)), jnp.float32)
+        targets = jnp.array(rng.integers(0, 6, size=(3, 4)), jnp.int32)
+        mask = jnp.array((rng.random((3, 4)) > 0.5), jnp.float32)
+        per = nll_per_sequence(logits, targets, mask)
+        total, _ = masked_ce_sum(logits, targets, mask)
+        np.testing.assert_allclose(per.sum(), total, rtol=1e-5)
+        assert per.shape == (3,)
+
+
+class TestLogitsAt:
+    def test_gathers_rows(self):
+        x = jnp.arange(2 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 3)
+        pos = jnp.array([1, 3], jnp.int32)
+        out = logits_at_positions(x, pos)
+        np.testing.assert_allclose(out[0], x[0, 1])
+        np.testing.assert_allclose(out[1], x[1, 3])
+
+    def test_position_zero(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 5, 4))
+        out = logits_at_positions(x, jnp.array([0], jnp.int32))
+        np.testing.assert_allclose(out[0], x[0, 0])

@@ -1,0 +1,59 @@
+//! Memory-efficient vs naive attention: execute-time and transfer stats
+//! for the eval graph (the L1 kernel's end-to-end cost envelope).
+
+include!("common.rs");
+
+use mft::config::Manifest;
+use mft::runtime::Engine;
+use mft::tensor::HostTensor;
+use mft::util::rng::Pcg;
+
+fn main() {
+    let engine = Engine::new(&artifact_dir()).expect("make artifacts first");
+    let model = "gpt2-nano";
+    let mi = engine.manifest().model(model).unwrap().clone();
+    let mut rng = Pcg::new(1);
+    let params: Vec<HostTensor> = mi
+        .params
+        .iter()
+        .map(|p| {
+            let data: Vec<f32> = (0..p.numel())
+                .map(|_| rng.normal_ms(0.0, 0.02) as f32)
+                .collect();
+            HostTensor::from_f32(&p.shape, data).unwrap()
+        })
+        .collect();
+    let (mb, seq) = (2usize, 32usize);
+    let toks: Vec<i32> = (0..mb * seq).map(|_| rng.below(mi.vocab) as i32).collect();
+    let tokens = HostTensor::from_i32(&[mb, seq], toks.clone()).unwrap();
+    let targets = HostTensor::from_i32(&[mb, seq], toks).unwrap();
+    let mask = HostTensor::from_f32(&[mb, seq], vec![1.0; mb * seq]).unwrap();
+
+    for attn in ["mea", "naive"] {
+        let name = Manifest::artifact_name(model, seq, mb, "evalnll",
+                                           Some(attn), 0, false);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.extend([&tokens, &targets, &mask]);
+        engine.run(&name, &inputs).unwrap(); // compile
+        bench(&format!("evalnll/{attn} (s{seq} mb{mb})"), 3, 30, || {
+            engine.run(&name, &inputs).unwrap();
+        });
+    }
+
+    // gradient graphs
+    for attn in ["mea", "naive"] {
+        let name = Manifest::artifact_name(model, seq, mb, "gradfull",
+                                           Some(attn), 0, false);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.extend([&tokens, &targets, &mask]);
+        engine.run(&name, &inputs).unwrap();
+        bench(&format!("gradfull/{attn} (s{seq} mb{mb})"), 3, 20, || {
+            engine.run(&name, &inputs).unwrap();
+        });
+    }
+
+    let stats = engine.stats();
+    println!("\nmarshal share: {:.1}% of total engine time",
+             100.0 * stats.total_marshal_s()
+             / (stats.total_marshal_s() + stats.total_exec_s()));
+}

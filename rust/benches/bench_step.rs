@@ -1,0 +1,70 @@
+//! End-to-end optimizer-step benchmarks per execution mode (feeds the
+//! Table 4 time column and the Table 8 native-vs-emulated comparison).
+//!
+//! Requires the `core` bundle (`make artifacts`).
+
+include!("common.rs");
+
+use std::rc::Rc;
+
+use mft::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
+use mft::exp::datasets::assemble;
+use mft::runtime::Engine;
+use mft::train::Trainer;
+
+fn cfg(model: &str, seq: usize, exec: ExecMode, attn: AttnImpl,
+       mode: TrainMode, mb: usize) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        task: "corpus".into(),
+        seq,
+        batch: 4,
+        micro_batch: mb,
+        steps: 1,
+        mode,
+        exec,
+        attn,
+        ..RunConfig::default()
+    }
+}
+
+fn bench_mode(engine: &Rc<Engine>, name: &str, c: RunConfig, iters: usize) {
+    let info = engine.manifest().model(&c.model).unwrap().clone();
+    let mut dl = assemble(&info, &c.task, c.seq, c.seed).unwrap().train;
+    let mut tr = Trainer::new(engine.clone(), c).unwrap();
+    tr.step(&mut dl).unwrap(); // compile + warm
+    bench(name, 1, iters, || {
+        tr.step(&mut dl).unwrap();
+    });
+}
+
+fn main() {
+    std::env::set_var("MFT_CACHE_DIR",
+                      std::env::temp_dir().join("mft-bench-cache"));
+    let engine = Rc::new(Engine::new(&artifact_dir()).expect(
+        "run `make artifacts` first"));
+
+    println!("== optimizer step, gpt2-nano s32 b4 (full-FT) ==");
+    for (name, exec, attn) in [
+        ("nano/fused/mea", ExecMode::Fused, AttnImpl::Mea),
+        ("nano/fused/naive", ExecMode::Fused, AttnImpl::Naive),
+        ("nano/fused-remat/mea", ExecMode::FusedRemat, AttnImpl::Mea),
+        ("nano/layerwise/mea", ExecMode::Layerwise, AttnImpl::Mea),
+    ] {
+        bench_mode(&engine, name,
+                   cfg("gpt2-nano", 32, exec, attn, TrainMode::FullFt, 2), 20);
+    }
+
+    println!("\n== optimizer step, gpt2-nano s32 b4 (LoRA r4) ==");
+    bench_mode(&engine, "nano/lora/fused/mea",
+               cfg("gpt2-nano", 32, ExecMode::Fused, AttnImpl::Mea,
+                   TrainMode::Lora { rank: 4 }, 2), 20);
+    bench_mode(&engine, "nano/lora/emulated/mea",
+               cfg("gpt2-nano", 32, ExecMode::Emulated, AttnImpl::Mea,
+                   TrainMode::Lora { rank: 4 }, 2), 5);
+
+    println!("\n== optimizer step, gpt2-124m-sim s64 b4mb4 (LoRA r8) ==");
+    bench_mode(&engine, "124m-sim/lora/fused/mea",
+               cfg("gpt2-124m-sim", 64, ExecMode::Fused, AttnImpl::Mea,
+                   TrainMode::Lora { rank: 8 }, 4), 10);
+}

@@ -1,0 +1,71 @@
+//! Substrate micro-benchmarks: tokenizer throughput, shard IO bandwidth,
+//! JSON parsing, optimizer update rate — the L3 hot-path components
+//! outside XLA (perf targets in DESIGN.md §7).
+
+include!("common.rs");
+
+use mft::config::manifest::{ModelInfo, ParamSpec};
+use mft::data::corpus::synthetic_corpus;
+use mft::model::ParamStore;
+use mft::tokenizer::Tokenizer;
+use mft::train::optimizer::AdamW;
+use mft::util::json::Json;
+
+fn main() {
+    // tokenizer: train once, measure encode throughput (target >= 1 MB/s)
+    let corpus = synthetic_corpus(1, 1_000_000);
+    let t0 = std::time::Instant::now();
+    let tok = Tokenizer::train(&corpus, 2048).unwrap();
+    println!("bpe train (1MB corpus, vocab {}): {:.2}s",
+             tok.vocab_size(), t0.elapsed().as_secs_f64());
+    let sample = &corpus[..200_000];
+    let r = bench("tokenizer encode 200KB", 1, 10, || {
+        std::hint::black_box(tok.encode(sample));
+    });
+    println!("  -> {:.2} MB/s", 0.2 / r.median_s);
+
+    // shard IO: offload+fetch a ~4 MB segment (target: amortizable)
+    let info = ModelInfo {
+        name: "bench".into(), family: "gpt2".into(), vocab: 8, d_model: 8,
+        n_layers: 1, n_heads: 1, n_kv_heads: 1, d_ff: 8, max_seq: 8,
+        embed_scale: false, n_params: 0,
+        params: vec![
+            ParamSpec { name: "wte".into(), shape: vec![64, 64], init: "normal".into() },
+            ParamSpec { name: "blocks.0.w".into(), shape: vec![1024, 1024],
+                        init: "normal".into() },
+        ],
+        lora: std::collections::BTreeMap::new(),
+    };
+    let dir = std::env::temp_dir().join(format!("mft-bench-shard-{}",
+                                                std::process::id()));
+    let mut store = ParamStore::new(&info);
+    store.init_random(1).unwrap();
+    store.enable_sharding(&dir, 1).unwrap();
+    let r = bench("shard offload+fetch 4MB segment", 2, 20, || {
+        store.offload(1).unwrap();
+        store.fetch(1).unwrap();
+    });
+    println!("  -> {:.0} MB/s roundtrip", 8.0 / r.median_s);
+
+    // optimizer: AdamW elementwise rate (target: memory-bandwidth bound)
+    let n = 1_000_000;
+    let mut opt = AdamW::new(1e-3, 0.01);
+    opt.next_step();
+    let mut p = vec![0.1f32; n];
+    let g = vec![0.01f32; n];
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let r = bench("adamw update 1M params", 2, 20, || {
+        opt.update(&mut p, &g, &mut m, &mut v);
+    });
+    println!("  -> {:.0} M params/s", 1.0 / r.median_s);
+
+    // JSON: manifest-scale parse
+    let manifest = std::fs::read_to_string(artifact_dir().join("manifest.json"))
+        .unwrap_or_else(|_| "{}".into());
+    let r = bench(&format!("json parse manifest ({} KB)",
+                           manifest.len() / 1024), 2, 30, || {
+        std::hint::black_box(Json::parse(&manifest).unwrap());
+    });
+    println!("  -> {:.1} MB/s", manifest.len() as f64 / 1e6 / r.median_s);
+}

@@ -1,0 +1,63 @@
+// Minimal benchmark harness (criterion is unavailable in the offline
+// registry).  Reports min/median/p95 over warmed iterations; used by all
+// `rust/benches/*` targets (declared with `harness = false`).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!("{:<44} {:>7} it  min {:>10}  med {:>10}  p95 {:>10}",
+                 self.name, self.iters, fmt_t(self.min_s),
+                 fmt_t(self.median_s), fmt_t(self.p95_s));
+    }
+}
+
+pub fn fmt_t(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        p95_s: times[((times.len() as f64 * 0.95) as usize)
+                     .min(times.len() - 1)],
+    };
+    r.print();
+    r
+}
+
+#[allow(dead_code)]
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,81 @@
+//! Greedy decoding through the `logitsat` artifact (agent inference path).
+//!
+//! The health agent answers questions by autoregressive decoding: each
+//! step runs a full forward (mb=1) and reads the logits at the last real
+//! position.  This is deliberately the simplest correct decoder — the
+//! paper's contribution is the fine-tuning runtime, not a serving stack —
+//! but it exercises the same artifact path the letter-accuracy evaluation
+//! uses, and it runs entirely in Rust.
+
+use anyhow::{bail, Result};
+
+use crate::config::Manifest;
+use crate::tensor::HostTensor;
+use crate::tokenizer::Tokenizer;
+use crate::train::Trainer;
+
+/// Greedy-decode up to `max_new` tokens after `prompt`.
+pub fn greedy(trainer: &mut Trainer, tokenizer: &Tokenizer, prompt: &str,
+              max_new: usize) -> Result<String> {
+    let seq = trainer.cfg.seq;
+    let vocab = trainer.info.vocab;
+    let name = Manifest::artifact_name(
+        &trainer.cfg.model, seq, 1, "logitsat",
+        Some(trainer.cfg.attn.as_str()), trainer.cfg.mode.lora_rank(), false);
+
+    let mut ids: Vec<u32> = vec![crate::tokenizer::BOS];
+    ids.extend(tokenizer.encode(prompt));
+    if ids.len() >= seq {
+        bail!("prompt too long: {} tokens for seq {}", ids.len(), seq);
+    }
+
+    // all params resident for fused decode
+    for seg in 0..trainer.store.n_segments() {
+        trainer.store.fetch(seg)?;
+    }
+
+    let mut out_ids: Vec<u32> = Vec::new();
+    let newline = tokenizer.encode("\n");
+    for _ in 0..max_new {
+        let ctx_len = ids.len().min(seq);
+        let start = ids.len() - ctx_len;
+        let mut toks = vec![0i32; seq];
+        for (i, &t) in ids[start..].iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let tokens = HostTensor::from_i32(&[1, seq], toks)?;
+        let pos = HostTensor::from_i32(&[1], vec![(ctx_len - 1) as i32])?;
+
+        let mut inputs: Vec<&HostTensor> = trainer.store.ordered()?;
+        let scale_held;
+        if let Some(lora) = &trainer.lora {
+            inputs.extend(lora.ordered());
+            scale_held = trainer.lora_scale_t.clone();
+            inputs.push(&scale_held);
+        }
+        inputs.push(&tokens);
+        inputs.push(&pos);
+        let outs = trainer.engine.run(&name, &inputs)?;
+        let logits = outs[0].as_f32()?;
+        let next = logits[..vocab]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u32)
+            .unwrap_or(crate::tokenizer::EOS);
+        if next == crate::tokenizer::EOS || next == crate::tokenizer::PAD {
+            if std::env::var("MFT_AGENT_DEBUG").is_ok() {
+                eprintln!("    [decode stopped: token {next} after {} tokens]",
+                          out_ids.len());
+            }
+            break;
+        }
+        ids.push(next);
+        out_ids.push(next);
+        // stop at the end of the agent line ("\n" after content)
+        if out_ids.len() > 4 && newline.len() == 1 && next == newline[0] {
+            break;
+        }
+    }
+    Ok(tokenizer.decode(&out_ids).trim().to_string())
+}

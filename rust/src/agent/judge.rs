@@ -1,0 +1,208 @@
+//! Deterministic grounding judge (the GPT-5.5-judge stand-in, Sec. 8).
+//!
+//! The paper's rubric: 0-1 ungrounded/unusable, 2-3 partially useful,
+//! 4-5 grounded in the user's records, on-topic, actionable.  We measure
+//! the same constructs mechanically:
+//!
+//!   grounding (0-2)    does the response cite the user's actual numbers
+//!                      (average/peak steps, goal, sleep, HR, calories)?
+//!   topicality (0-1)   does it address the question category's subject?
+//!   fluency (0-1)      is it made of real words/sentences (a random or
+//!                      undertrained model emits byte soup)?
+//!   actionability (0-1) does it give a safe, concrete suggestion?
+//!
+//! Deterministic by construction, so Fig. 12 is exactly reproducible.
+
+use crate::agent::qa::{QaCategory, UserStats};
+
+#[derive(Debug, Clone, Default)]
+pub struct JudgeBreakdown {
+    pub grounding: f64,
+    pub topicality: f64,
+    pub fluency: f64,
+    pub actionability: f64,
+}
+
+impl JudgeBreakdown {
+    pub fn total(&self) -> f64 {
+        (self.grounding + self.topicality + self.fluency + self.actionability)
+            .clamp(0.0, 5.0)
+    }
+}
+
+const COMMON_WORDS: &[&str] = &[
+    "the", "a", "an", "is", "are", "your", "you", "and", "or", "of", "to",
+    "in", "with", "than", "for", "it", "this", "that", "per", "day", "days",
+    "steps", "step", "sleep", "rate", "heart", "level", "average", "recent",
+    "activity", "keep", "goal", "run", "walking", "km", "kcal", "hours",
+    "percent", "peak", "daily", "week", "good", "healthy", "pace", "rather",
+    "consistency", "maintain", "stable", "pattern", "baseline", "bpm",
+    "around", "about", "below", "slightly", "higher", "lower", "similar",
+];
+
+fn words(text: &str) -> Vec<String> {
+    text.split(|c: char| !c.is_alphanumeric() && c != ',' && c != '.')
+        .filter(|w| !w.is_empty())
+        .map(|w| w.trim_matches(|c: char| c == ',' || c == '.').to_lowercase())
+        .filter(|w| !w.is_empty())
+        .collect()
+}
+
+/// Does the response contain a number within `tol` (relative) of `target`?
+fn cites_number(resp_words: &[String], target: f64, tol: f64) -> bool {
+    for w in resp_words {
+        let cleaned: String = w.chars().filter(|c| *c != ',').collect();
+        if let Ok(v) = cleaned.parse::<f64>() {
+            if target.abs() > 1e-9
+                && ((v - target) / target).abs() <= tol
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+pub fn judge_response(cat: QaCategory, stats: &UserStats, response: &str)
+                      -> JudgeBreakdown {
+    let ws = words(response);
+    let mut b = JudgeBreakdown::default();
+
+    // --- grounding: up to 2 points, 1 per distinct cited statistic ------
+    let mut cites = 0;
+    if cites_number(&ws, stats.avg_steps, 0.05) { cites += 1; }
+    if cites_number(&ws, stats.peak_steps, 0.05) { cites += 1; }
+    if cites_number(&ws, stats.goal_steps, 0.05) { cites += 1; }
+    if cites_number(&ws, stats.avg_sleep_h, 0.1) { cites += 1; }
+    if cites_number(&ws, stats.avg_hr, 0.1) { cites += 1; }
+    if cites_number(&ws, stats.avg_calories, 0.1) { cites += 1; }
+    b.grounding = (cites as f64).min(2.0);
+
+    // --- topicality ------------------------------------------------------
+    let topic_terms: &[&str] = match cat {
+        QaCategory::ActivitySummary => &["steps", "activity", "average", "peak"],
+        QaCategory::GoalAdjustment => &["goal", "target", "achievable", "steps"],
+        QaCategory::HabitCoaching => &["habit", "pattern", "regular", "stable",
+                                       "floor", "consistency"],
+        QaCategory::MetricInsight => &["heart", "bpm", "sleep", "intensity",
+                                       "kcal", "rate"],
+        QaCategory::PlanRecommendation => &["run", "km", "plan", "walking",
+                                            "workout", "load"],
+    };
+    let hits = topic_terms.iter().filter(|t| ws.iter().any(|w| w == *t)).count();
+    b.topicality = if hits >= 2 { 1.0 } else if hits == 1 { 0.5 } else { 0.0 };
+
+    // --- fluency: recognizable vocabulary AND lexical diversity ----------
+    if !ws.is_empty() {
+        let known = ws
+            .iter()
+            .filter(|w| COMMON_WORDS.contains(&w.as_str())
+                    || w.chars().all(|c| c.is_ascii_digit() || c == '.'))
+            .count();
+        let frac = known as f64 / ws.len() as f64;
+        let distinct: std::collections::HashSet<&String> = ws.iter().collect();
+        // degenerate loops ("a a a ...") are not fluent
+        let diversity = distinct.len() as f64 / ws.len() as f64;
+        b.fluency = if ws.len() >= 8 && frac > 0.45 && distinct.len() >= 8
+                       && diversity > 0.3 { 1.0 }
+                    else if ws.len() >= 5 && frac > 0.25 && distinct.len() >= 4 { 0.5 }
+                    else { 0.0 };
+    }
+
+    // --- actionability: concrete + safe suggestion -----------------------
+    let action_terms = ["keep", "maintain", "aim", "stay", "better to",
+                        "reasonable", "steady", "consistency"];
+    let unsafe_terms = ["double", "triple", "skip sleep", "no rest"];
+    let has_action = action_terms.iter().any(|t| response.to_lowercase().contains(t));
+    let has_unsafe = unsafe_terms.iter().any(|t| response.to_lowercase().contains(t));
+    b.actionability = if has_action && !has_unsafe { 1.0 } else { 0.0 };
+
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> UserStats {
+        UserStats {
+            avg_steps: 11154.0,
+            peak_steps: 15461.0,
+            change_pct: 43.0,
+            avg_calories: 278.0,
+            avg_sleep_h: 7.2,
+            avg_hr: 68.0,
+            avg_screen_h: 4.0,
+            goal_steps: 10500.0,
+        }
+    }
+
+    #[test]
+    fn grounded_answer_scores_high() {
+        let resp = "Your recent activity averages 11,154 steps per day with \
+                    a peak of 15,461 steps. Keep the pace steady and aim to \
+                    maintain this activity level.";
+        let b = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        assert!(b.grounding >= 2.0, "{b:?}");
+        assert!(b.topicality >= 0.5);
+        assert_eq!(b.fluency, 1.0);
+        assert_eq!(b.actionability, 1.0);
+        assert!(b.total() >= 4.0, "total {}", b.total());
+    }
+
+    #[test]
+    fn degenerate_repetition_scores_low() {
+        let resp = "a a a a a a a a a a a a a a a a a a a a";
+        let b = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        assert!(b.fluency == 0.0, "{b:?}");
+        assert!(b.total() <= 1.0, "{b:?}");
+    }
+
+    #[test]
+    fn gibberish_scores_low() {
+        let resp = "zxqv blorp nxx 42Q wibble frub snoz grum plix";
+        let b = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        assert!(b.total() <= 1.0, "{b:?}");
+    }
+
+    #[test]
+    fn wrong_numbers_not_grounded() {
+        let resp = "You average 3,000 steps per day with a peak of 5,000. \
+                    Keep going.";
+        let b = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        assert_eq!(b.grounding, 0.0, "{b:?}");
+    }
+
+    #[test]
+    fn generic_fluent_answer_mid_range() {
+        let resp = "You are doing good activity. Keep a steady pace and \
+                    maintain your daily steps level for a healthy pattern.";
+        let b = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        assert!(b.total() >= 2.0 && b.total() < 4.0, "total {}", b.total());
+    }
+
+    #[test]
+    fn off_topic_penalized() {
+        let resp = "Your recent activity averages 11,154 steps per day. \
+                    Keep steady.";
+        let on = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        let off = judge_response(QaCategory::MetricInsight, &stats(), resp);
+        assert!(on.topicality > off.topicality);
+    }
+
+    #[test]
+    fn tolerance_accepts_rounded_numbers() {
+        // 11,200 is within 5% of 11,154
+        let ws = words("about 11,200 steps");
+        assert!(cites_number(&ws, 11154.0, 0.05));
+        assert!(!cites_number(&ws, 11154.0, 0.001));
+    }
+
+    #[test]
+    fn deterministic() {
+        let resp = "Your average is 11,154 steps; keep it steady.";
+        let a = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        let b = judge_response(QaCategory::ActivitySummary, &stats(), resp);
+        assert_eq!(a.total(), b.total());
+    }
+}

@@ -1,0 +1,126 @@
+//! Wearable-sensing simulator (the Huawei-smartwatch stand-in, Sec. 5.1).
+//!
+//! Each user has a latent profile (baseline activity, sleep, heart rate,
+//! weekly rhythm, a slow trend) from which daily records are sampled.  The
+//! *personalization signal* the paper's agent learns — "this user's own
+//! historical baseline" — exists by construction: two users' records come
+//! from different latent baselines, so grounded answers must cite
+//! user-specific numbers.
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct UserProfile {
+    pub base_steps: f64,
+    pub base_sleep_h: f64,
+    pub base_hr: f64,
+    pub base_screen_h: f64,
+    /// multiplicative weekend activity factor
+    pub weekend_factor: f64,
+    /// steps/day drift over the study (positive = getting more active)
+    pub trend_per_day: f64,
+    /// day-to-day noise scale
+    pub noise: f64,
+}
+
+impl UserProfile {
+    pub fn sample(rng: &mut Pcg) -> UserProfile {
+        UserProfile {
+            base_steps: rng.range_f64(4000.0, 14000.0),
+            base_sleep_h: rng.range_f64(5.5, 8.5),
+            base_hr: rng.range_f64(58.0, 82.0),
+            base_screen_h: rng.range_f64(2.0, 7.0),
+            weekend_factor: rng.range_f64(0.7, 1.4),
+            trend_per_day: rng.range_f64(-20.0, 40.0),
+            noise: rng.range_f64(0.08, 0.22),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DailyRecord {
+    pub day: usize,
+    pub steps: f64,
+    pub distance_km: f64,
+    pub calories: f64,
+    pub hr_avg: f64,
+    pub sleep_h: f64,
+    pub screen_h: f64,
+}
+
+/// Simulate `days` of records for a user.
+pub fn simulate_user(p: &UserProfile, days: usize, rng: &mut Pcg)
+                     -> Vec<DailyRecord> {
+    let mut out = Vec::with_capacity(days);
+    for day in 0..days {
+        let weekend = day % 7 >= 5;
+        let wf = if weekend { p.weekend_factor } else { 1.0 };
+        let drift = p.trend_per_day * day as f64;
+        let steps = ((p.base_steps + drift) * wf
+            * (1.0 + p.noise * rng.normal())).max(200.0);
+        let sleep = (p.base_sleep_h + 0.4 * rng.normal()
+            + if weekend { 0.5 } else { 0.0 }).clamp(3.0, 11.0);
+        let hr = (p.base_hr + 3.0 * rng.normal()
+            + steps / 4000.0).clamp(45.0, 120.0);
+        let screen = (p.base_screen_h + 0.8 * rng.normal()
+            + if weekend { 0.8 } else { 0.0 }).clamp(0.3, 14.0);
+        out.push(DailyRecord {
+            day,
+            steps,
+            distance_km: steps * 0.00075,
+            calories: steps * 0.028 + 35.0 * rng.normal().abs(),
+            hr_avg: hr,
+            sleep_h: sleep,
+            screen_h: screen,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Pcg::new(5);
+        let mut r2 = Pcg::new(5);
+        let p1 = UserProfile::sample(&mut r1);
+        let p2 = UserProfile::sample(&mut r2);
+        let a = simulate_user(&p1, 30, &mut r1);
+        let b = simulate_user(&p2, 30, &mut r2);
+        assert_eq!(a[7].steps, b[7].steps);
+    }
+
+    #[test]
+    fn users_differ() {
+        let mut rng = Pcg::new(6);
+        let p1 = UserProfile::sample(&mut rng);
+        let p2 = UserProfile::sample(&mut rng);
+        assert!((p1.base_steps - p2.base_steps).abs() > 1.0);
+    }
+
+    #[test]
+    fn records_in_physical_ranges() {
+        let mut rng = Pcg::new(7);
+        let p = UserProfile::sample(&mut rng);
+        for r in simulate_user(&p, 120, &mut rng) {
+            assert!(r.steps >= 200.0 && r.steps < 80_000.0);
+            assert!((3.0..=11.0).contains(&r.sleep_h));
+            assert!((45.0..=120.0).contains(&r.hr_avg));
+            assert!(r.distance_km > 0.0 && r.calories > 0.0);
+        }
+    }
+
+    #[test]
+    fn trend_visible_over_time() {
+        let mut rng = Pcg::new(8);
+        let mut p = UserProfile::sample(&mut rng);
+        p.trend_per_day = 50.0;
+        p.noise = 0.01;
+        let recs = simulate_user(&p, 90, &mut rng);
+        let early: f64 = recs[..30].iter().map(|r| r.steps).sum::<f64>() / 30.0;
+        let late: f64 = recs[60..].iter().map(|r| r.steps).sum::<f64>() / 30.0;
+        assert!(late > early + 1000.0, "early {early} late {late}");
+    }
+}

@@ -1,0 +1,268 @@
+//! CLI: the `mft` binary (launcher + worker in one, paper Sec. 6.1.1).
+//!
+//! Subcommands:
+//!   mft train [flags]        one fine-tuning run (worker process)
+//!   mft exp <id> [flags]     regenerate a paper table/figure (launcher:
+//!                            spawns `mft train` workers for clean RSS)
+//!   mft agent [flags]        the campus health-agent case study
+//!   mft viz <run-dir>        terminal training visualizer
+//!   mft devices              list simulated device profiles
+//!   mft info                 manifest/artifact inventory
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
+
+pub struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it: VecDeque<String> = argv.into_iter().collect();
+        while let Some(a) = it.pop_front() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else {
+                    // boolean or valued flag: peek
+                    let takes_value = it
+                        .front()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        flags.push((name.to_string(), it.pop_front()));
+                    } else {
+                        flags.push((name.to_string(), None));
+                    }
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T)
+                                           -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+pub fn artifact_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var("MFT_ARTIFACTS").ok().map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Build a RunConfig from `mft train` flags.
+pub fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.model = args.get("model").unwrap_or("gpt2-nano").to_string();
+    cfg.task = args.get("task").unwrap_or("corpus").to_string();
+    cfg.seq = args.get_parse("seq", 32usize)?;
+    cfg.batch = args.get_parse("batch", 8usize)?;
+    cfg.micro_batch = args.get_parse("micro-batch", cfg.batch)?;
+    cfg.steps = args.get_parse("steps", 20usize)?;
+    cfg.lr = args.get_parse("lr", 2e-4f32)?;
+    cfg.weight_decay = args.get_parse("weight-decay", 0.0f32)?;
+    cfg.grad_clip = args.get_parse("grad-clip", 1.0f32)?;
+    cfg.mode = match args.get("mode").unwrap_or("lora") {
+        "full" | "fullft" => TrainMode::FullFt,
+        "lora" => TrainMode::Lora { rank: args.get_parse("lora-rank", 8usize)? },
+        m => bail!("--mode must be full|lora, got {m:?}"),
+    };
+    cfg.lora_alpha = args.get_parse("lora-alpha", 32.0f32)?;
+    cfg.exec = ExecMode::parse(args.get("exec").unwrap_or("fused"))?;
+    cfg.attn = AttnImpl::parse(args.get("attn").unwrap_or("mea"))?;
+    cfg.shard_offload = args.has("shard");
+    cfg.seed = args.get_parse("seed", 42u64)?;
+    cfg.eval_every = args.get_parse("eval-every", 0usize)?;
+    cfg.eval_batches = args.get_parse("eval-batches", 4usize)?;
+    cfg.device = args.get("device").map(String::from);
+    cfg.energy_k = args.get_parse("energy-k", 0usize)?;
+    cfg.energy_mu = args.get_parse("energy-mu", 0.6f64)?;
+    cfg.energy_rho = args.get_parse("energy-rho", 0.5f64)?;
+    cfg.battery_init = args.get_parse("battery-init", 1.0f64)?;
+    cfg.virtual_clock = args.has("virtual-clock");
+    cfg.out_dir = args.get("out").map(String::from);
+    cfg.init_from = args.get("init-from").map(String::from);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv);
+    match args.pos(0) {
+        Some("train") => cmd_train(&args),
+        Some("exp") => crate::exp::drivers::dispatch(&args),
+        Some("agent") => crate::agent::cmd_agent(&args),
+        Some("viz") => crate::viz::cmd_viz(&args),
+        Some("devices") => cmd_devices(),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand {other:?}; \
+                              try train|exp|agent|viz|devices|info"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let dir = artifact_dir(args);
+    let res = crate::exp::run_training(&dir, cfg).context("training session")?;
+    // machine-readable summary on stdout (workers are parsed by drivers)
+    println!("{}", res.summary);
+    if !res.ok && !args.has("allow-oom") {
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    println!("{:<16} {:<22} {:<26} {:>6} {:>10} {:>8}",
+             "name", "os", "soc", "ram", "budget", "gflops");
+    for d in crate::sim::DEVICES {
+        println!("{:<16} {:<22} {:<26} {:>4}GB {:>7}MiB {:>8.0}",
+                 d.name, d.os, d.soc, d.ram_gb,
+                 d.ram_budget_bytes / (1024 * 1024), d.cpu_gflops);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    let m = crate::config::Manifest::load(&dir)?;
+    println!("artifact dir: {}", dir.display());
+    println!("model configs ({}):", m.configs.len());
+    for (name, c) in &m.configs {
+        println!("  {:<18} {:<5} d={} L={} H={}/{} V={} params={}",
+                 name, c.family, c.d_model, c.n_layers, c.n_heads,
+                 c.n_kv_heads, c.vocab, c.n_params);
+    }
+    println!("artifacts ({}):", m.artifacts.len());
+    let mut by_kind: std::collections::BTreeMap<&str, usize> =
+        std::collections::BTreeMap::new();
+    for a in m.artifacts.values() {
+        *by_kind.entry(a.kind.as_str()).or_default() += 1;
+    }
+    for (k, n) in by_kind {
+        println!("  {k:<22} x{n}");
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "MobileFineTuner (reproduction) — on-device LLM fine-tuning runtime\n\
+         \n\
+         usage: mft <subcommand> [flags]\n\
+         \n\
+         subcommands:\n\
+           train     run one fine-tuning session\n\
+                     --model M --task T --seq N --batch N --micro-batch N\n\
+                     --steps N --mode full|lora --lora-rank R --lora-alpha A\n\
+                     --exec fused|fused-remat|layerwise|emulated\n\
+                     --attn mea|naive --shard --device D --energy-k K\n\
+                     --energy-mu F --energy-rho F --virtual-clock\n\
+                     --out DIR --init-from CKPT --seed N\n\
+           exp       regenerate a paper experiment:\n\
+                     fig9 table4 table5 fig10 table6 table7 fig11 table8 fig12\n\
+           agent     campus health-agent case study (train/ask)\n\
+           viz       terminal dashboard over a run dir\n\
+           devices   list simulated device profiles\n\
+           info      artifact inventory"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let a = args("train --model gpt2-nano --steps 5 --shard --lr 0.001");
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.get("model"), Some("gpt2-nano"));
+        assert!(a.has("shard"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 5);
+        assert_eq!(a.get_parse("lr", 0.0f32).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn eq_form_flags() {
+        let a = args("exp --out=/tmp/x --steps=7");
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn run_config_defaults_and_overrides() {
+        let a = args("train");
+        let c = run_config(&a).unwrap();
+        assert_eq!(c.model, "gpt2-nano");
+        assert_eq!(c.micro_batch, c.batch);
+
+        let a = args("train --mode full --exec layerwise --shard \
+                      --micro-batch 4 --batch 8 --attn naive");
+        let c = run_config(&a).unwrap();
+        assert_eq!(c.mode, TrainMode::FullFt);
+        assert_eq!(c.exec, ExecMode::Layerwise);
+        assert!(c.shard_offload);
+        assert_eq!(c.accum_steps(), 2);
+        assert_eq!(c.attn, AttnImpl::Naive);
+    }
+
+    #[test]
+    fn bad_flags_rejected() {
+        assert!(run_config(&args("train --mode adapters")).is_err());
+        assert!(run_config(&args("train --exec magic")).is_err());
+        assert!(run_config(&args("train --steps banana")).is_err());
+        // shard without layerwise
+        assert!(run_config(&args("train --shard")).is_err());
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = args("train --steps 3 --steps 9");
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 9);
+    }
+}

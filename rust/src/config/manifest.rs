@@ -1,0 +1,338 @@
+//! Parser for `artifacts/manifest.json` — the contract between the Python
+//! AOT pipeline and the Rust coordinator.
+//!
+//! The manifest carries, per model config, the canonical parameter table
+//! (name/shape/init, in artifact argument order) and, per artifact, the
+//! exact IO layout.  The coordinator marshals tensors purely from this
+//! data; no shapes are hard-coded in Rust.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" | "scaled" | "zeros" | "ones"
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub embed_scale: bool,
+    pub n_params: usize,
+    /// Canonical full-model parameter table (globals then blocks.{i}.*).
+    pub params: Vec<ParamSpec>,
+    /// LoRA tables keyed by rank.
+    pub lora: BTreeMap<usize, Vec<ParamSpec>>,
+}
+
+impl ModelInfo {
+    pub fn param(&self, name: &str) -> Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("model {}: unknown param {name:?}", self.name))
+    }
+
+    /// Parameter names belonging to block `i`.
+    pub fn block_param_names(&self, layer: usize) -> Vec<String> {
+        let prefix = format!("blocks.{layer}.");
+        self.params
+            .iter()
+            .filter(|p| p.name.starts_with(&prefix))
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    /// Global (non-block) parameter names.
+    pub fn global_param_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|p| !p.name.starts_with("blocks."))
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    pub fn lora_specs(&self, rank: usize) -> Result<&[ParamSpec]> {
+        self.lora
+            .get(&rank)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("model {}: no LoRA table for rank {rank}", self.name))
+    }
+
+    /// Head parameter names in artifact order (headlossgrad convention).
+    pub fn head_param_names(&self) -> Vec<&'static str> {
+        if self.family == "gpt2" {
+            vec!["lnf_g", "lnf_b", "wte"]
+        } else {
+            vec!["rmsf_w", "wte"]
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: String,
+    pub seq: usize,
+    pub mb: usize,
+    pub attn: String,
+    pub remat: bool,
+    pub lora_r: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactInfo {
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn parse_param_list(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|row| {
+            let row = row.as_arr()?;
+            if row.len() != 3 {
+                bail!("param row must be [name, shape, init]");
+            }
+            Ok(ParamSpec {
+                name: row[0].as_str()?.to_string(),
+                shape: row[1].as_arr()?.iter().map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+                init: row[2].as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_io_list(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|row| {
+            let row = row.as_arr()?;
+            Ok(IoSpec {
+                name: row[0].as_str()?.to_string(),
+                dtype: DType::from_manifest(row[1].as_str()?)?,
+                shape: row[2].as_arr()?.iter().map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` (or \
+                 `python -m compile.aot --bundle <name>`) first",
+                path.display()
+            )
+        })?;
+        let root = Json::parse(&text).context("manifest.json parse error")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, cj) in root.req("configs")?.as_obj()? {
+            let mut lora = BTreeMap::new();
+            for (k, v) in cj.as_obj()? {
+                if let Some(r) = k.strip_prefix("lora_r") {
+                    lora.insert(r.parse::<usize>()?, parse_param_list(v)?);
+                }
+            }
+            configs.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    family: cj.req("family")?.as_str()?.to_string(),
+                    vocab: cj.req("vocab")?.as_usize()?,
+                    d_model: cj.req("d_model")?.as_usize()?,
+                    n_layers: cj.req("n_layers")?.as_usize()?,
+                    n_heads: cj.req("n_heads")?.as_usize()?,
+                    n_kv_heads: cj.req("n_kv_heads")?.as_usize()?,
+                    d_ff: cj.req("d_ff")?.as_usize()?,
+                    max_seq: cj.req("max_seq")?.as_usize()?,
+                    embed_scale: cj.req("embed_scale")?.as_bool()?,
+                    n_params: cj.req("n_params")?.as_usize()?,
+                    params: parse_param_list(cj.req("params")?)?,
+                    lora,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in root.req("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: aj.req("file")?.as_str()?.to_string(),
+                    kind: aj.req("kind")?.as_str()?.to_string(),
+                    config: aj.req("config")?.as_str()?.to_string(),
+                    seq: aj.req("seq")?.as_usize()?,
+                    mb: aj.req("mb")?.as_usize()?,
+                    attn: aj.req("attn")?.as_str()?.to_string(),
+                    remat: aj.req("remat")?.as_bool()?,
+                    lora_r: aj.req("lora_r")?.as_usize()?,
+                    inputs: parse_io_list(aj.req("inputs")?)?,
+                    outputs: parse_io_list(aj.req("outputs")?)?,
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), configs, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!(
+                "model config {name:?} not in manifest (have: {:?}); \
+                 build its bundle with `python -m compile.aot`",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| anyhow!(
+            "artifact {name:?} missing from manifest — build the bundle that \
+             provides it (see python/compile/aot.py BUNDLES)"))
+    }
+
+    /// Canonical artifact naming (matches python/compile/artifacts.py).
+    pub fn artifact_name(
+        model: &str, seq: usize, mb: usize, kind: &str, attn: Option<&str>,
+        lora_r: usize, remat: bool,
+    ) -> String {
+        let mut n = format!("{model}_s{seq}_mb{mb}_");
+        match kind {
+            "gradfull" => n.push_str("gradfull"),
+            "gradlora" => n.push_str(&format!("gradlora{lora_r}")),
+            "evalnll" if lora_r > 0 => n.push_str(&format!("evalnll_lora{lora_r}")),
+            "evalnll" => n.push_str("evalnll"),
+            "logitsat" if lora_r > 0 => n.push_str(&format!("logitsat_lora{lora_r}")),
+            "logitsat" => n.push_str("logitsat"),
+            "blockfwd" if lora_r > 0 => n.push_str(&format!("blockfwdlora{lora_r}")),
+            "blockfwd" => n.push_str("blockfwd"),
+            "blockbwd" if lora_r > 0 => n.push_str(&format!("blockbwdlora{lora_r}")),
+            "blockbwd" => n.push_str("blockbwd"),
+            "embedfwd" => return format!("{model}_s{seq}_mb{mb}_embedfwd"),
+            "embedbwd" => return format!("{model}_s{seq}_mb{mb}_embedbwd"),
+            "headloss" => return format!("{model}_s{seq}_mb{mb}_headloss"),
+            "headlossgrad" => return format!("{model}_s{seq}_mb{mb}_headlossgrad"),
+            "headlossgrad_frozen" => {
+                return format!("{model}_s{seq}_mb{mb}_headlossgrad_frozen")
+            }
+            other => panic!("unknown artifact kind {other:?}"),
+        }
+        if let Some(a) = attn {
+            n.push('_');
+            n.push_str(a);
+        }
+        if remat {
+            n.push_str("_rm");
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_python() {
+        assert_eq!(
+            Manifest::artifact_name("gpt2-nano", 32, 2, "gradfull",
+                                    Some("mea"), 0, false),
+            "gpt2-nano_s32_mb2_gradfull_mea"
+        );
+        assert_eq!(
+            Manifest::artifact_name("gpt2-nano", 32, 2, "gradlora",
+                                    Some("naive"), 4, true),
+            "gpt2-nano_s32_mb2_gradlora4_naive_rm"
+        );
+        assert_eq!(
+            Manifest::artifact_name("qwen-nano", 32, 2, "evalnll",
+                                    Some("mea"), 4, false),
+            "qwen-nano_s32_mb2_evalnll_lora4_mea"
+        );
+        assert_eq!(
+            Manifest::artifact_name("qwen-nano", 32, 2, "headlossgrad_frozen",
+                                    None, 0, false),
+            "qwen-nano_s32_mb2_headlossgrad_frozen"
+        );
+        assert_eq!(
+            Manifest::artifact_name("m", 128, 8, "blockbwd", Some("mea"),
+                                    8, false),
+            "m_s128_mb8_blockbwdlora8_mea"
+        );
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("mft-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{
+          "version": 1,
+          "configs": {"m": {"family":"gpt2","vocab":16,"d_model":4,
+            "n_layers":1,"n_heads":1,"n_kv_heads":1,"d_ff":8,"max_seq":8,
+            "embed_scale":false,"n_params":100,
+            "params":[["wte",[16,4],"normal"],["blocks.0.qkv_w",[4,12],"normal"]],
+            "lora_r4":[["blocks.0.lora_q_a",[4,4],"normal"]]}},
+          "artifacts": {"m_s8_mb1_evalnll_naive": {"file":"f.hlo.txt",
+            "kind":"evalnll","config":"m","seq":8,"mb":1,"attn":"naive",
+            "remat":false,"lora_r":0,
+            "inputs":[["wte","f32",[16,4]]],
+            "outputs":[["nll_sum","f32",[]]]}}
+        }"#).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let mi = m.model("m").unwrap();
+        assert_eq!(mi.params.len(), 2);
+        assert_eq!(mi.block_param_names(0), vec!["blocks.0.qkv_w"]);
+        assert_eq!(mi.global_param_names(), vec!["wte"]);
+        assert_eq!(mi.lora_specs(4).unwrap().len(), 1);
+        assert!(mi.lora_specs(8).is_err());
+        let a = m.artifact("m_s8_mb1_evalnll_naive").unwrap();
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Configuration: AOT manifest parsing + training run configuration.
+
+pub mod manifest;
+pub mod run;
+
+pub use manifest::{ArtifactInfo, IoSpec, Manifest, ModelInfo, ParamSpec};
+pub use run::{AttnImpl, ExecMode, RunConfig, TrainMode};

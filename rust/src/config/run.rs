@@ -1,0 +1,256 @@
+//! Training-run configuration (the `mft train` parameter surface).
+
+use anyhow::{bail, Result};
+
+/// Attention operator choice — optimization ① of the paper's chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnImpl {
+    /// Materializes the full [B,H,S,S] intermediates.
+    Naive,
+    /// Memory-efficient streaming attention (L1 Pallas kernel).
+    Mea,
+}
+
+impl AttnImpl {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AttnImpl::Naive => "naive",
+            AttnImpl::Mea => "mea",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "naive" => Ok(AttnImpl::Naive),
+            "mea" => Ok(AttnImpl::Mea),
+            _ => bail!("attention must be 'naive' or 'mea', got {s:?}"),
+        }
+    }
+}
+
+/// Full-parameter vs LoRA fine-tuning (paper Sec. 3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    FullFt,
+    Lora { rank: usize },
+}
+
+impl TrainMode {
+    pub fn lora_rank(&self) -> usize {
+        match self {
+            TrainMode::FullFt => 0,
+            TrainMode::Lora { rank } => *rank,
+        }
+    }
+}
+
+/// Execution strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One whole-model XLA executable per micro-batch step.  All
+    /// parameters and (without remat) all activations live for the whole
+    /// call — the unoptimized baseline, and the stand-in for the paper's
+    /// server-side PyTorch reference.
+    Fused,
+    /// Fused graph with per-block activation checkpointing (remat) —
+    /// optimization ② without layerwise execution.
+    FusedRemat,
+    /// Layer-at-a-time execution driven by the coordinator: enables the
+    /// ZeRO-inspired parameter sharding (④) and makes activation
+    /// checkpointing a coordinator policy.  Required when the device RAM
+    /// budget cannot hold all parameters.
+    Layerwise,
+    /// Op-granular emulated-interpreter pipeline (the Termux + PyTorch
+    /// comparison baseline of paper Table 8).
+    Emulated,
+}
+
+impl ExecMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExecMode::Fused => "fused",
+            ExecMode::FusedRemat => "fused-remat",
+            ExecMode::Layerwise => "layerwise",
+            ExecMode::Emulated => "emulated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fused" => Ok(ExecMode::Fused),
+            "fused-remat" => Ok(ExecMode::FusedRemat),
+            "layerwise" => Ok(ExecMode::Layerwise),
+            "emulated" => Ok(ExecMode::Emulated),
+            _ => bail!("exec mode must be fused|fused-remat|layerwise|emulated, got {s:?}"),
+        }
+    }
+}
+
+/// Everything needed to run one fine-tuning job.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub task: String,
+    pub seq: usize,
+    /// Effective (optimizer-step) batch size.
+    pub batch: usize,
+    /// Micro-batch size; batch/micro_batch = gradient-accumulation steps
+    /// (optimization ③).
+    pub micro_batch: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    pub mode: TrainMode,
+    pub lora_alpha: f32,
+    pub exec: ExecMode,
+    pub attn: AttnImpl,
+    /// Offload inactive parameter segments to disk (optimization ④;
+    /// layerwise exec only).
+    pub shard_offload: bool,
+    pub seed: u64,
+    /// Evaluate every N steps (0 = only at start/end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Device profile name (None = unconstrained host).
+    pub device: Option<String>,
+    /// Energy-aware scheduling (paper Sec. 4.2): check every K steps,
+    /// threshold mu (battery fraction), slowdown rho.
+    pub energy_k: usize,
+    pub energy_mu: f64,
+    pub energy_rho: f64,
+    /// Initial battery level fraction (Fig. 11 starts runs near the
+    /// threshold).
+    pub battery_init: f64,
+    pub virtual_clock: bool,
+    /// Directory for metrics JSONL + summaries (None = no logging).
+    pub out_dir: Option<String>,
+    /// Load initial weights from a safetensors checkpoint.
+    pub init_from: Option<String>,
+}
+
+impl RunConfig {
+    pub fn accum_steps(&self) -> usize {
+        debug_assert!(self.batch % self.micro_batch == 0);
+        self.batch / self.micro_batch
+    }
+
+    pub fn lora_scale(&self) -> f32 {
+        match self.mode {
+            TrainMode::FullFt => 0.0,
+            TrainMode::Lora { rank } => self.lora_alpha / rank as f32,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.micro_batch == 0 {
+            bail!("batch sizes must be positive");
+        }
+        if self.batch % self.micro_batch != 0 {
+            bail!("batch ({}) must be a multiple of micro_batch ({})",
+                  self.batch, self.micro_batch);
+        }
+        if self.shard_offload && self.exec != ExecMode::Layerwise {
+            bail!("parameter sharding requires --exec layerwise");
+        }
+        if let TrainMode::Lora { rank } = self.mode {
+            if rank == 0 {
+                bail!("LoRA rank must be positive");
+            }
+        }
+        if !(0.0..=1.0).contains(&self.energy_mu) {
+            bail!("energy threshold mu must be in [0,1]");
+        }
+        if !(0.0..1.0).contains(&self.energy_rho) {
+            bail!("energy slowdown rho must be in [0,1)");
+        }
+        Ok(())
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "gpt2-nano".into(),
+            task: "corpus".into(),
+            seq: 32,
+            batch: 4,
+            micro_batch: 2,
+            steps: 10,
+            lr: 2e-4,
+            weight_decay: 0.0,
+            grad_clip: 1.0,
+            mode: TrainMode::Lora { rank: 4 },
+            lora_alpha: 16.0,
+            exec: ExecMode::Fused,
+            attn: AttnImpl::Mea,
+            shard_offload: false,
+            seed: 42,
+            eval_every: 0,
+            eval_batches: 4,
+            device: None,
+            energy_k: 0,
+            energy_mu: 0.6,
+            energy_rho: 0.5,
+            battery_init: 1.0,
+            virtual_clock: false,
+            out_dir: None,
+            init_from: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn accum_steps() {
+        let mut c = RunConfig::default();
+        c.batch = 8;
+        c.micro_batch = 2;
+        assert_eq!(c.accum_steps(), 4);
+    }
+
+    #[test]
+    fn lora_scale() {
+        let mut c = RunConfig::default();
+        c.mode = TrainMode::Lora { rank: 8 };
+        c.lora_alpha = 32.0;
+        assert_eq!(c.lora_scale(), 4.0);
+        c.mode = TrainMode::FullFt;
+        assert_eq!(c.lora_scale(), 0.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = RunConfig::default();
+        c.batch = 5;
+        c.micro_batch = 2;
+        assert!(c.validate().is_err());
+
+        let mut c = RunConfig::default();
+        c.shard_offload = true;
+        c.exec = ExecMode::Fused;
+        assert!(c.validate().is_err());
+        c.exec = ExecMode::Layerwise;
+        assert!(c.validate().is_ok());
+
+        let mut c = RunConfig::default();
+        c.energy_rho = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn enum_parsing() {
+        assert_eq!(AttnImpl::parse("mea").unwrap(), AttnImpl::Mea);
+        assert!(AttnImpl::parse("flash").is_err());
+        assert_eq!(ExecMode::parse("layerwise").unwrap(), ExecMode::Layerwise);
+        assert!(ExecMode::parse("x").is_err());
+    }
+}

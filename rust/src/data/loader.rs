@@ -1,0 +1,331 @@
+//! Batching DataLoader: tokenized examples -> (tokens, targets, mask)
+//! micro-batches in the artifact calling convention.
+//!
+//! Two dataset shapes:
+//!   * LM corpus: contiguous token stream chunked into `seq`-length windows
+//!     (next-token targets, full mask);
+//!   * MC tasks: one example per row, right-padded, mask = 1 on real
+//!     next-token positions only (prompt + answer), 0 on padding.
+//!
+//! For MC evaluation the loader also exposes the answer-letter position of
+//! each row (the paper's letter-token likelihood protocol scores the
+//! distribution at exactly that position).
+
+use anyhow::{bail, Result};
+
+use crate::data::tasks::{McExample, LETTERS};
+use crate::tensor::HostTensor;
+use crate::tokenizer::{Tokenizer, BOS, PAD};
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// One micro-batch in artifact layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: HostTensor,
+    pub targets: HostTensor,
+    pub mask: HostTensor,
+    /// Position of the answer-letter *input* token per row (MC tasks only):
+    /// logits at this position predict the letter.
+    pub answer_pos: Option<Vec<usize>>,
+    /// Correct option index per row (MC tasks only).
+    pub labels: Option<Vec<usize>>,
+    /// Number of options per row (MC tasks only).
+    pub n_opts: Option<Vec<usize>>,
+}
+
+/// Tokenized example: ids + (optional) answer metadata.
+#[derive(Debug, Clone)]
+struct Row {
+    ids: Vec<u32>,
+    /// index in `ids` of the answer letter token (MC)
+    answer_idx: Option<usize>,
+    label: Option<usize>,
+    n_options: usize,
+}
+
+#[derive(Debug)]
+pub struct DataLoader {
+    rows: Vec<Row>,
+    seq: usize,
+    /// letter token ids (A..D) for MC scoring
+    pub letter_ids: Vec<u32>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg,
+    shuffle: bool,
+}
+
+impl DataLoader {
+    /// LM loader over a contiguous corpus.
+    pub fn from_corpus(tok: &Tokenizer, text: &str, seq: usize,
+                       seed: u64, shuffle: bool) -> Result<DataLoader> {
+        let ids = tok.encode(text);
+        if ids.len() < seq + 1 {
+            bail!("corpus too small: {} tokens for seq {}", ids.len(), seq);
+        }
+        let mut rows = Vec::new();
+        let mut i = 0;
+        while i + seq + 1 <= ids.len() {
+            rows.push(Row {
+                ids: ids[i..i + seq + 1].to_vec(),
+                answer_idx: None,
+                label: None,
+                n_options: 0,
+            });
+            i += seq;
+        }
+        Self::new(rows, seq, tok, seed, shuffle)
+    }
+
+    /// MC loader.  Each example is rendered, tokenized, BOS-prefixed and
+    /// truncated/padded to `seq`.
+    pub fn from_mc(tok: &Tokenizer, examples: &[McExample], seq: usize,
+                   seed: u64, shuffle: bool) -> Result<DataLoader> {
+        let mut rows = Vec::new();
+        for ex in examples {
+            let prompt_ids = {
+                let mut v = vec![BOS];
+                v.extend(tok.encode(&ex.prompt_text()));
+                v
+            };
+            let letter_id = tok
+                .single_token(LETTERS[ex.answer])
+                .ok_or_else(|| anyhow::anyhow!("letter not a single token"))?;
+            let mut ids = prompt_ids;
+            // The letter must fit inside the window with one target slot.
+            if ids.len() + 1 > seq {
+                ids.truncate(seq - 1);
+            }
+            let answer_idx = ids.len(); // letter's input index
+            ids.push(letter_id);
+            rows.push(Row {
+                ids,
+                answer_idx: Some(answer_idx),
+                label: Some(ex.answer),
+                n_options: ex.options.len(),
+            });
+        }
+        Self::new(rows, seq, tok, seed, shuffle)
+    }
+
+    fn new(rows: Vec<Row>, seq: usize, tok: &Tokenizer, seed: u64,
+           shuffle: bool) -> Result<DataLoader> {
+        if rows.is_empty() {
+            bail!("empty dataset");
+        }
+        let letter_ids = LETTERS
+            .iter()
+            .map(|l| tok.single_token(l)
+                 .ok_or_else(|| anyhow::anyhow!("letter {l} not single token")))
+            .collect::<Result<Vec<_>>>()?;
+        let order: Vec<usize> = (0..rows.len()).collect();
+        Ok(DataLoader {
+            rows,
+            seq,
+            letter_ids,
+            order,
+            cursor: 0,
+            rng: Pcg::new(seed),
+            shuffle,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Steps per epoch at micro-batch `mb`.
+    pub fn batches_per_epoch(&self, mb: usize) -> usize {
+        self.rows.len() / mb
+    }
+
+    /// Next micro-batch of `mb` rows (wraps around epochs; reshuffles at
+    /// each epoch boundary when enabled).
+    pub fn next_batch(&mut self, mb: usize) -> Batch {
+        let mut idxs = Vec::with_capacity(mb);
+        for _ in 0..mb {
+            if self.cursor == 0 && self.shuffle {
+                self.rng.shuffle(&mut self.order);
+            }
+            idxs.push(self.order[self.cursor]);
+            self.cursor = (self.cursor + 1) % self.order.len();
+        }
+        self.render(&idxs)
+    }
+
+    /// Deterministic batch by row indices (evaluation).
+    pub fn batch_at(&self, idxs: &[usize]) -> Batch {
+        self.render(idxs)
+    }
+
+    fn render(&self, idxs: &[usize]) -> Batch {
+        let mb = idxs.len();
+        let seq = self.seq;
+        let mut tokens = vec![PAD as i32; mb * seq];
+        let mut targets = vec![PAD as i32; mb * seq];
+        let mut mask = vec![0.0f32; mb * seq];
+        let mut answer_pos = Vec::with_capacity(mb);
+        let mut labels = Vec::with_capacity(mb);
+        let mut n_opts = Vec::with_capacity(mb);
+        let mut any_mc = false;
+        for (b, &ri) in idxs.iter().enumerate() {
+            let row = &self.rows[ri];
+            let n = row.ids.len().min(seq + 1);
+            // inputs are ids[..n-1] (or up to seq), targets shifted by one
+            let in_len = (n - 1).min(seq);
+            for s in 0..in_len {
+                tokens[b * seq + s] = row.ids[s] as i32;
+                targets[b * seq + s] = row.ids[s + 1] as i32;
+            }
+            match row.answer_idx {
+                None => {
+                    // LM row: all in_len positions supervised
+                    for s in 0..in_len {
+                        mask[b * seq + s] = 1.0;
+                    }
+                    answer_pos.push(0);
+                    labels.push(0);
+                    n_opts.push(0);
+                }
+                Some(ai) => {
+                    any_mc = true;
+                    // supervise the whole rendered example (paper trains
+                    // with LM loss over the sequence), padding excluded
+                    for s in 0..in_len {
+                        mask[b * seq + s] = 1.0;
+                    }
+                    // the letter is *input* at ai; the position whose
+                    // logits predict it is ai-1
+                    answer_pos.push(ai - 1);
+                    labels.push(row.label.unwrap_or(0));
+                    n_opts.push(row.n_options);
+                }
+            }
+            let _ = row.n_options;
+        }
+        Batch {
+            tokens: HostTensor::from_i32(&[mb, seq], tokens).unwrap(),
+            targets: HostTensor::from_i32(&[mb, seq], targets).unwrap(),
+            mask: HostTensor::from_f32(&[mb, seq], mask).unwrap(),
+            answer_pos: if any_mc { Some(answer_pos) } else { None },
+            labels: if any_mc { Some(labels) } else { None },
+            n_opts: if any_mc { Some(n_opts) } else { None },
+        }
+    }
+
+    /// Option counts per row (for accuracy over 2-option tasks).
+    pub fn n_options(&self, idx: usize) -> usize {
+        self.rows[idx].n_options
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::synthetic_corpus;
+    use crate::data::tasks::{generate, TaskKind};
+
+    fn tok() -> Tokenizer {
+        let corpus = synthetic_corpus(1, 40_000);
+        Tokenizer::train(&corpus, 512).unwrap()
+    }
+
+    #[test]
+    fn corpus_loader_shapes() {
+        let t = tok();
+        let corpus = synthetic_corpus(2, 20_000);
+        let mut dl = DataLoader::from_corpus(&t, &corpus, 32, 3, true).unwrap();
+        let b = dl.next_batch(4);
+        assert_eq!(b.tokens.shape(), &[4, 32]);
+        assert_eq!(b.targets.shape(), &[4, 32]);
+        assert_eq!(b.mask.shape(), &[4, 32]);
+        assert!(b.answer_pos.is_none());
+        // full mask on LM rows
+        assert_eq!(b.mask.as_f32().unwrap().iter().sum::<f32>(), 128.0);
+    }
+
+    #[test]
+    fn corpus_targets_shifted() {
+        let t = tok();
+        let corpus = synthetic_corpus(2, 20_000);
+        let dl = DataLoader::from_corpus(&t, &corpus, 16, 3, false).unwrap();
+        let b = dl.batch_at(&[0]);
+        let toks = b.tokens.as_i32().unwrap();
+        let tgts = b.targets.as_i32().unwrap();
+        for s in 0..15 {
+            assert_eq!(tgts[s], toks[s + 1]);
+        }
+    }
+
+    #[test]
+    fn mc_loader_letter_position() {
+        let t = tok();
+        let data = generate(TaskKind::Mmlu, 5, 8, 0);
+        let dl = DataLoader::from_mc(&t, &data.train, 128, 7, false).unwrap();
+        let b = dl.batch_at(&[0, 1]);
+        let pos = b.answer_pos.as_ref().unwrap();
+        let toks = b.tokens.as_i32().unwrap();
+        let tgts = b.targets.as_i32().unwrap();
+        for (row, &p) in pos.iter().enumerate() {
+            // the target at answer_pos is the letter token
+            let letter = tgts[row * 128 + p];
+            let lbl = b.labels.as_ref().unwrap()[row];
+            assert_eq!(letter as u32, dl.letter_ids[lbl]);
+            // the letter is the row's last id: it appears only as a
+            // target, never as an input token
+            assert_eq!(toks[row * 128 + p + 1], 0);
+        }
+    }
+
+    #[test]
+    fn mc_mask_excludes_padding() {
+        let t = tok();
+        let data = generate(TaskKind::Piqa, 5, 4, 0);
+        let dl = DataLoader::from_mc(&t, &data.train, 128, 7, false).unwrap();
+        let b = dl.batch_at(&[0]);
+        let mask = b.mask.as_f32().unwrap();
+        let total: f32 = mask.iter().sum();
+        assert!(total > 4.0 && total < 127.0, "mask sum {total}");
+        // mask must be a prefix (1s then 0s)
+        let first_zero = mask.iter().position(|&m| m == 0.0).unwrap();
+        assert!(mask[first_zero..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn epoch_wraps_and_shuffles() {
+        let t = tok();
+        let corpus = synthetic_corpus(2, 30_000);
+        let mut dl = DataLoader::from_corpus(&t, &corpus, 32, 3, true).unwrap();
+        let n = dl.len();
+        // drain two epochs without panic
+        for _ in 0..(2 * n + 3) {
+            dl.next_batch(1);
+        }
+    }
+
+    #[test]
+    fn truncation_keeps_letter_in_window() {
+        let t = tok();
+        let data = generate(TaskKind::Mmlu, 5, 8, 0);
+        // tiny window forces truncation
+        let dl = DataLoader::from_mc(&t, &data.train, 24, 7, false).unwrap();
+        let b = dl.batch_at(&[0, 1, 2]);
+        for &p in b.answer_pos.as_ref().unwrap() {
+            assert!(p < 24 - 1);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Datasets: synthetic generators matching the paper's six benchmarks,
+//! plus batching.
+//!
+//! The paper evaluates WikiText-2 (LM) and five multiple-choice suites
+//! (MMLU, ARC-C, ARC-E, HellaSwag, PIQA) plus QNLI for the Termux
+//! comparison.  Those corpora cannot ship in this sandbox, so each task
+//! has a synthetic generator with the *same shape*: a text-generation
+//! corpus with learnable statistical structure, and letter-answer MC tasks
+//! whose answers are derivable from a generated fact/rule table — so
+//! fine-tuning measurably improves loss/PPL/accuracy under the paper's
+//! exact evaluation protocol (likelihood-based letter scoring).
+
+pub mod corpus;
+pub mod loader;
+pub mod tasks;
+
+pub use corpus::synthetic_corpus;
+pub use loader::{Batch, DataLoader, Split};
+pub use tasks::{McExample, TaskData, TaskKind};

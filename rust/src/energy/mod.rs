@@ -1,0 +1,211 @@
+//! Energy model + PowerMonitor + energy-aware computation scheduler
+//! (paper Sec. 4.2, Fig. 6, Fig. 11).
+//!
+//! The battery model integrates P = P_idle + P_compute over (virtual or
+//! wall) time; the PowerMonitor samples the battery percentage every K
+//! fine-tuning steps; when it drops below threshold mu, the scheduler
+//! reduces computation frequency by rho — implemented, as in the paper, by
+//! injecting a sleep delay after each step so the step *period* becomes
+//! period / (1 - rho).
+
+use crate::util::clock::Clock;
+
+/// Simple battery + power model for a device profile.
+#[derive(Debug, Clone)]
+pub struct BatteryModel {
+    pub capacity_j: f64,
+    pub level_j: f64,
+    /// baseline draw of the phone while the app runs (W)
+    pub p_idle: f64,
+    /// additional draw while the trainer computes (W)
+    pub p_compute: f64,
+}
+
+impl BatteryModel {
+    /// capacity from mAh at a nominal voltage.
+    pub fn from_mah(mah: f64, volts: f64, p_idle: f64, p_compute: f64)
+                    -> BatteryModel {
+        let capacity_j = mah / 1000.0 * volts * 3600.0;
+        BatteryModel { capacity_j, level_j: capacity_j, p_idle, p_compute }
+    }
+
+    pub fn set_level_frac(&mut self, frac: f64) {
+        self.level_j = (self.capacity_j * frac).clamp(0.0, self.capacity_j);
+    }
+
+    pub fn level_frac(&self) -> f64 {
+        (self.level_j / self.capacity_j).clamp(0.0, 1.0)
+    }
+
+    /// Drain for `compute_s` seconds of compute and `idle_s` of idle.
+    /// Returns the energy consumed (J).
+    pub fn drain(&mut self, compute_s: f64, idle_s: f64) -> f64 {
+        let e = (self.p_idle + self.p_compute) * compute_s.max(0.0)
+            + self.p_idle * idle_s.max(0.0);
+        self.level_j = (self.level_j - e).max(0.0);
+        e
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.level_j <= 0.0
+    }
+}
+
+/// PowerMonitor + dynamic computation scheduling (Fig. 6).
+#[derive(Debug)]
+pub struct EnergyScheduler {
+    /// check battery every K steps (0 = disabled)
+    pub k: usize,
+    /// battery threshold mu in [0,1]
+    pub mu: f64,
+    /// frequency reduction rho in [0,1)
+    pub rho: f64,
+    /// currently throttled?
+    throttled: bool,
+    steps_since_check: usize,
+}
+
+impl EnergyScheduler {
+    pub fn new(k: usize, mu: f64, rho: f64) -> EnergyScheduler {
+        EnergyScheduler { k, mu, rho, throttled: false, steps_since_check: 0 }
+    }
+
+    pub fn disabled() -> EnergyScheduler {
+        EnergyScheduler::new(0, 0.0, 0.0)
+    }
+
+    pub fn is_throttled(&self) -> bool {
+        self.throttled
+    }
+
+    /// Called after each fine-tuning step with the step's compute time.
+    /// Samples the battery every K steps, updates the throttle state, and
+    /// sleeps (wall) / advances (virtual) the injected delay.  Returns the
+    /// injected delay in seconds.
+    pub fn after_step(&mut self, battery: &BatteryModel, clock: &Clock,
+                      step_compute_s: f64) -> f64 {
+        if self.k == 0 {
+            return 0.0;
+        }
+        self.steps_since_check += 1;
+        if self.steps_since_check >= self.k {
+            self.steps_since_check = 0;
+            self.throttled = battery.level_frac() < self.mu;
+        }
+        if self.throttled && self.rho > 0.0 {
+            // frequency f' = f * (1 - rho)  =>  period' = period / (1-rho);
+            // the injected sleep supplies the difference.
+            let delay = step_compute_s * (self.rho / (1.0 - self.rho));
+            clock.sleep(delay);
+            delay
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn battery_capacity_math() {
+        // 4000 mAh at 3.7 V = 53280 J
+        let b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        assert!((b.capacity_j - 53280.0).abs() < 1.0);
+        assert_eq!(b.level_frac(), 1.0);
+    }
+
+    #[test]
+    fn drain_accounting() {
+        let mut b = BatteryModel::from_mah(1000.0, 3.7, 1.0, 4.0);
+        let e = b.drain(10.0, 5.0); // 10s at 5W + 5s at 1W = 55 J
+        assert!((e - 55.0).abs() < 1e-9);
+        assert!(b.level_frac() < 1.0);
+    }
+
+    #[test]
+    fn drain_clamps_at_zero() {
+        let mut b = BatteryModel::from_mah(1.0, 3.7, 1000.0, 0.0);
+        b.drain(1e6, 0.0);
+        assert!(b.is_empty());
+        assert_eq!(b.level_frac(), 0.0);
+    }
+
+    #[test]
+    fn scheduler_throttles_below_threshold() {
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        let mut s = EnergyScheduler::new(1, 0.6, 0.5);
+        // full battery: no delay
+        let d = s.after_step(&b, &clock, 1.0);
+        assert_eq!(d, 0.0);
+        assert!(!s.is_throttled());
+        // below threshold: delay = step * rho/(1-rho) = 1.0 (period doubles)
+        b.set_level_frac(0.5);
+        let d = s.after_step(&b, &clock, 1.0);
+        assert!((d - 1.0).abs() < 1e-9, "delay {d}");
+        assert!(s.is_throttled());
+        assert!((clock.now_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scheduler_respects_k() {
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        b.set_level_frac(0.1);
+        let mut s = EnergyScheduler::new(3, 0.6, 0.5);
+        // checks only on every 3rd step
+        assert_eq!(s.after_step(&b, &clock, 1.0), 0.0);
+        assert_eq!(s.after_step(&b, &clock, 1.0), 0.0);
+        assert!(s.after_step(&b, &clock, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn disabled_scheduler_never_delays() {
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        b.set_level_frac(0.0);
+        let mut s = EnergyScheduler::disabled();
+        assert_eq!(s.after_step(&b, &clock, 1.0), 0.0);
+    }
+
+    #[test]
+    fn recovery_unthrottles() {
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        let mut s = EnergyScheduler::new(1, 0.6, 0.5);
+        b.set_level_frac(0.5);
+        s.after_step(&b, &clock, 1.0);
+        assert!(s.is_throttled());
+        b.set_level_frac(0.9); // e.g. plugged in
+        s.after_step(&b, &clock, 1.0);
+        assert!(!s.is_throttled());
+    }
+
+    #[test]
+    fn paper_fig11_shape() {
+        // K=1, mu=60%, rho=50%: per-step interval doubles at the threshold
+        // (paper: 0.081 h -> 0.164 h).
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4460.0, 3.85, 0.8, 5.0);
+        let mut s = EnergyScheduler::new(1, 0.6, 0.5);
+        let step_s = 0.081 * 3600.0;
+        let mut interval_before = 0.0;
+        let mut interval_after = 0.0;
+        for _ in 0..120 {
+            let t0 = clock.now_s();
+            clock.advance_work(step_s);
+            b.drain(step_s, 0.0);
+            s.after_step(&b, &clock, step_s);
+            let dt = clock.now_s() - t0;
+            if b.level_frac() >= 0.6 {
+                interval_before = dt;
+            } else if interval_after == 0.0 && s.is_throttled() {
+                interval_after = dt;
+            }
+        }
+        assert!(interval_after > interval_before * 1.9,
+                "{interval_before} -> {interval_after}");
+    }
+}

@@ -1,0 +1,76 @@
+//! Evaluation protocol helpers (paper Sec. 6.3).
+//!
+//! The heavy lifting (NLL, letter-token accuracy) lives on
+//! [`crate::train::Trainer`]; this module holds the protocol glue: progress
+//! checkpoints (the paper's 30/60/90% runtime evaluations, Tab. 5) and
+//! metric containers shared by the experiment drivers.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalResult {
+    pub nll: f64,
+    pub ppl: f64,
+    pub accuracy: Option<f64>,
+}
+
+impl EvalResult {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("nll", Json::from(self.nll)),
+            ("ppl", Json::from(self.ppl)),
+        ];
+        if let Some(a) = self.accuracy {
+            pairs.push(("accuracy", Json::from(a)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The paper's runtime-testing marks: 30%, 60%, 90% of total steps
+/// (Tab. 5 / Tabs. 17-22).
+pub fn progress_marks(total_steps: usize) -> [usize; 3] {
+    let m = |f: f64| ((total_steps as f64 * f).round() as usize).max(1);
+    [m(0.3), m(0.6), m(0.9)]
+}
+
+/// Should we run an eval at `step` (1-based, after the step completes)?
+pub fn is_eval_step(step: usize, total_steps: usize, eval_every: usize) -> bool {
+    if step == total_steps {
+        return true;
+    }
+    if eval_every > 0 && step % eval_every == 0 {
+        return true;
+    }
+    progress_marks(total_steps).contains(&step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_for_paper_runs() {
+        assert_eq!(progress_marks(100), [30, 60, 90]);
+        assert_eq!(progress_marks(130), [39, 78, 117]);
+        assert_eq!(progress_marks(1), [1, 1, 1]);
+    }
+
+    #[test]
+    fn eval_steps() {
+        assert!(is_eval_step(30, 100, 0));
+        assert!(is_eval_step(100, 100, 0));
+        assert!(!is_eval_step(31, 100, 0));
+        assert!(is_eval_step(10, 100, 10));
+        assert!(is_eval_step(20, 100, 10));
+    }
+
+    #[test]
+    fn result_json() {
+        let r = EvalResult { nll: 2.0, ppl: 7.389, accuracy: Some(0.5) };
+        let j = r.to_json();
+        assert_eq!(j.get("accuracy").unwrap().as_f64().unwrap(), 0.5);
+        let r2 = EvalResult { accuracy: None, ..r };
+        assert!(r2.to_json().get("accuracy").is_none());
+    }
+}

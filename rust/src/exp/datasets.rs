@@ -1,0 +1,125 @@
+//! Dataset assembly: tokenizer + train/test loaders per (model, task).
+//!
+//! The tokenizer is trained once per vocab size on the seed corpus and
+//! cached under `.cache/` (BPE training is deterministic, so the cache is
+//! content-stable).  Task datasets are generated on the fly — they are
+//! cheap and seeded.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::manifest::ModelInfo;
+use crate::data::corpus::synthetic_corpus;
+use crate::data::tasks::{self, TaskKind};
+use crate::data::DataLoader;
+use crate::tokenizer::Tokenizer;
+
+/// Default corpus parameters (the "WikiText-2-sim" snapshot).
+pub const CORPUS_SEED: u64 = 20250711;
+pub const CORPUS_BYTES: usize = 1_500_000;
+/// Held-out tail fraction used as the LM test split.
+pub const CORPUS_TEST_FRAC: f64 = 0.1;
+
+pub struct TaskAssets {
+    pub tokenizer: Tokenizer,
+    pub train: DataLoader,
+    pub test: DataLoader,
+    pub task: String,
+}
+
+/// Load-or-train the cached tokenizer for a vocab size.
+pub fn tokenizer_for(cache_dir: &Path, vocab: usize) -> Result<Tokenizer> {
+    std::fs::create_dir_all(cache_dir)?;
+    let path = cache_dir.join(format!("bpe-v{vocab}-s{CORPUS_SEED}.json"));
+    if path.exists() {
+        if let Ok(t) = Tokenizer::load(&path) {
+            return Ok(t);
+        }
+    }
+    let corpus = synthetic_corpus(CORPUS_SEED, CORPUS_BYTES);
+    let tok = Tokenizer::train(&corpus, vocab)
+        .context("tokenizer training failed")?;
+    tok.save(&path)?;
+    Ok(tok)
+}
+
+pub fn default_cache_dir() -> PathBuf {
+    std::env::var("MFT_CACHE_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(".cache"))
+}
+
+/// Assemble loaders for a task name ("corpus" or an MC task).
+pub fn assemble(info: &ModelInfo, task: &str, seq: usize, seed: u64)
+                -> Result<TaskAssets> {
+    let cache = default_cache_dir();
+    let tokenizer = tokenizer_for(&cache, info.vocab)?;
+    if task == "corpus" {
+        let corpus = synthetic_corpus(CORPUS_SEED, CORPUS_BYTES);
+        let split = (corpus.len() as f64 * (1.0 - CORPUS_TEST_FRAC)) as usize;
+        // split on a char boundary
+        let split = (split..corpus.len())
+            .find(|&i| corpus.is_char_boundary(i))
+            .unwrap_or(corpus.len());
+        let train = DataLoader::from_corpus(&tokenizer, &corpus[..split], seq,
+                                            seed, true)?;
+        let test = DataLoader::from_corpus(&tokenizer, &corpus[split..], seq,
+                                           seed, false)?;
+        return Ok(TaskAssets { tokenizer, train, test, task: task.into() });
+    }
+    let kind = TaskKind::parse(task)?;
+    let data = tasks::generate(kind, CORPUS_SEED ^ seed, 800, 160);
+    let train = DataLoader::from_mc(&tokenizer, &data.train, seq, seed, true)?;
+    let test = DataLoader::from_mc(&tokenizer, &data.test, seq, seed, false)?;
+    Ok(TaskAssets { tokenizer, train, test, task: task.into() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::manifest::ModelInfo;
+    use std::collections::BTreeMap;
+
+    fn info(vocab: usize) -> ModelInfo {
+        ModelInfo {
+            name: "t".into(), family: "gpt2".into(), vocab, d_model: 8,
+            n_layers: 1, n_heads: 1, n_kv_heads: 1, d_ff: 8, max_seq: 64,
+            embed_scale: false, n_params: 0, params: vec![],
+            lora: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn corpus_assets() {
+        std::env::set_var("MFT_CACHE_DIR",
+                          std::env::temp_dir().join("mft-cache-test"));
+        let a = assemble(&info(512), "corpus", 32, 1).unwrap();
+        assert!(a.train.len() > a.test.len());
+        assert!(a.tokenizer.vocab_size() <= 512);
+    }
+
+    #[test]
+    fn mc_assets() {
+        std::env::set_var("MFT_CACHE_DIR",
+                          std::env::temp_dir().join("mft-cache-test"));
+        let a = assemble(&info(512), "mmlu", 64, 1).unwrap();
+        assert_eq!(a.train.len(), 800);
+        assert_eq!(a.test.len(), 160);
+    }
+
+    #[test]
+    fn tokenizer_cached() {
+        let dir = std::env::temp_dir().join("mft-cache-test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let t1 = tokenizer_for(&dir, 400).unwrap();
+        assert!(dir.join(format!("bpe-v400-s{CORPUS_SEED}.json")).exists());
+        let t2 = tokenizer_for(&dir, 400).unwrap();
+        assert_eq!(t1.encode("the test"), t2.encode("the test"));
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        assert!(assemble(&info(512), "imagenet", 32, 1).is_err());
+    }
+}

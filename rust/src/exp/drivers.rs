@@ -1,0 +1,666 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5 index).
+//!
+//! Drivers act as the *launcher*: memory-sensitive cells spawn `mft train`
+//! worker subprocesses so each measurement gets a private, monotonic
+//! VmHWM; convergence-only cells run in-process.  Every driver writes its
+//! rows to `results/<id>.json` and prints the paper-shaped table.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
+use crate::exp::run_training;
+use crate::util::json::Json;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        Some("bases") => bases(args),
+        Some("fig9") => fig9(args),
+        Some("table4") => table4(args),
+        Some("table5") => table5(args),
+        Some("fig10") => fig10(args),
+        Some("table6") => table6(args),
+        Some("table7") => table7(args),
+        Some("fig11") => fig11(args),
+        Some("table8") => table8(args),
+        Some("fig12") => crate::agent::cmd_agent(args),
+        Some(other) => bail!("unknown experiment {other:?}; have \
+            bases fig9 table4 table5 fig10 table6 table7 fig11 table8 fig12"),
+        None => bail!("usage: mft exp <id> [flags]"),
+    }
+}
+
+fn results_dir(args: &Args) -> Result<PathBuf> {
+    let d = PathBuf::from(args.get("results").unwrap_or("results"));
+    std::fs::create_dir_all(&d)?;
+    Ok(d)
+}
+
+fn write_results(args: &Args, name: &str, value: &Json) -> Result<()> {
+    let p = results_dir(args)?.join(format!("{name}.json"));
+    std::fs::write(&p, value.to_string())?;
+    eprintln!("[results] wrote {}", p.display());
+    Ok(())
+}
+
+/// Spawn an `mft train` worker and parse its summary JSON (clean VmHWM).
+fn spawn_train(args: &Args, flags: &[(&str, String)], bools: &[&str])
+               -> Result<Json> {
+    let exe = std::env::current_exe()?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("train").arg("--allow-oom");
+    cmd.arg("--artifacts")
+        .arg(crate::cli::artifact_dir(args).display().to_string());
+    for (k, v) in flags {
+        cmd.arg(format!("--{k}")).arg(v);
+    }
+    for b in bools {
+        cmd.arg(format!("--{b}"));
+    }
+    let out = cmd.output().context("spawn mft train worker")?;
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let last = stdout
+        .lines()
+        .rev()
+        .find(|l| l.trim_start().starts_with('{'))
+        .ok_or_else(|| anyhow::anyhow!(
+            "worker produced no summary; stderr:\n{}",
+            String::from_utf8_lossy(&out.stderr)))?;
+    Json::parse(last).context("parse worker summary")
+}
+
+fn sum_f(j: &Json, k: &str) -> f64 {
+    j.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN)
+}
+
+fn sum_ok(j: &Json) -> bool {
+    j.get("ok").and_then(|v| v.as_bool().ok()).unwrap_or(false)
+}
+
+// ===========================================================================
+// Base-model pretraining: the sim-model stand-ins for the paper's
+// pretrained GPT-2 / Qwen2.5 / Gemma-3 checkpoints.  Fine-tuning
+// experiments start from these (use `mft exp bases` once).
+// ===========================================================================
+
+pub const BASE_MODELS: &[&str] = &["gpt2-124m-sim", "gpt2-355m-sim",
+                                   "qwen25-0.5b-sim", "gemma3-270m-sim",
+                                   "gemma3-1b-sim"];
+
+fn base_ckpt_path(args: &Args, model: &str) -> Result<PathBuf> {
+    Ok(results_dir(args)?.join("bases").join(model)
+        .join("model.safetensors"))
+}
+
+/// Path flag for --init-from if a pretrained base exists.
+fn base_flag(args: &Args, model: &str) -> Vec<(&'static str, String)> {
+    match base_ckpt_path(args, model) {
+        Ok(p) if p.exists() => vec![("init-from", p.display().to_string())],
+        _ => vec![],
+    }
+}
+
+fn bases(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 200usize)?;
+    let dir = crate::cli::artifact_dir(args);
+    let models: Vec<String> = match args.get("models") {
+        Some(m) => m.split(',').map(String::from).collect(),
+        None => BASE_MODELS.iter().map(|s| s.to_string()).collect(),
+    };
+    let mut rows = Vec::new();
+    for model in &models {
+        let out = results_dir(args)?.join("bases").join(model);
+        eprintln!("== pretraining base {model} ({steps} steps) ==");
+        let cfg = RunConfig {
+            model: model.clone(),
+            task: "corpus".into(),
+            seq: 128,
+            batch: 8,
+            micro_batch: 8,
+            steps,
+            lr: 6e-4,
+            weight_decay: 0.01,
+            mode: TrainMode::FullFt,
+            exec: ExecMode::Fused,
+            attn: AttnImpl::Mea,
+            eval_every: (steps / 5).max(1),
+            eval_batches: 4,
+            seed: 7,
+            out_dir: Some(out.display().to_string()),
+            ..RunConfig::default()
+        };
+        let res = run_training(&dir, cfg)?;
+        println!("{model:<18} ppl {:.1} -> {:.1}",
+                 sum_f(&res.summary, "initial_ppl"),
+                 sum_f(&res.summary, "best_ppl"));
+        rows.push(Json::obj(vec![
+            ("model", Json::from(model.as_str())),
+            ("summary", res.summary.clone()),
+        ]));
+    }
+    write_results(args, "bases", &Json::Arr(rows))
+}
+
+// ===========================================================================
+// Fig. 9 — Full-FT correctness: loss/PPL trajectories, MFT vs reference
+// ===========================================================================
+
+fn fig9(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 30usize)?;
+    let dir = crate::cli::artifact_dir(args);
+    let base = RunConfig {
+        model: args.get("model").unwrap_or("gpt2-124m-sim").to_string(),
+        task: "corpus".into(),
+        seq: 128,
+        batch: 8,
+        micro_batch: 8,
+        steps,
+        lr: 1e-5, // paper Sec. 7.1.1
+        mode: TrainMode::FullFt,
+        eval_every: (steps / 10).max(1),
+        eval_batches: 4,
+        seed: 42,
+        init_from: base_ckpt_path(args, args.get("model")
+                .unwrap_or("gpt2-124m-sim"))
+            .ok()
+            .filter(|p| p.exists())
+            .map(|p| p.display().to_string()),
+        ..RunConfig::default()
+    };
+
+    eprintln!("== Fig 9: MobileFineTuner (layerwise, MEA) ==");
+    let mft = run_training(&dir, RunConfig {
+        exec: ExecMode::Layerwise,
+        attn: AttnImpl::Mea,
+        out_dir: Some(results_dir(args)?.join("fig9_mft")
+                      .display().to_string()),
+        ..base.clone()
+    })?;
+    eprintln!("== Fig 9: reference (fused, naive attention) ==");
+    let refr = run_training(&dir, RunConfig {
+        exec: ExecMode::Fused,
+        attn: AttnImpl::Naive,
+        out_dir: Some(results_dir(args)?.join("fig9_ref")
+                      .display().to_string()),
+        ..base
+    })?;
+
+    let row = |j: &Json, tag: &str| -> String {
+        format!("{tag:<22} loss {:.4}  best-ppl {:.2}  peak-rss {:.0}MiB",
+                sum_f(j, "final_loss"), sum_f(j, "best_ppl"),
+                sum_f(j, "peak_rss_mb"))
+    };
+    println!("\nFig.9 — Full-FT on {}@corpus (seq128 b8 lr1e-5, {steps} steps)",
+             args.get("model").unwrap_or("gpt2-124m-sim"));
+    println!("{}", row(&mft.summary, "MobileFineTuner"));
+    println!("{}", row(&refr.summary, "PyTorch-reference"));
+    let d = (sum_f(&mft.summary, "final_loss")
+             - sum_f(&refr.summary, "final_loss")).abs();
+    println!("final-loss |Δ| = {d:.4}  (curves in results/fig9_*/steps.jsonl)");
+
+    write_results(args, "fig9", &Json::obj(vec![
+        ("mft", mft.summary.clone()),
+        ("reference", refr.summary.clone()),
+    ]))
+}
+
+// ===========================================================================
+// Table 4 (+ appendix 9-16) — PEFT final metrics; Table 5 reuses the
+// runtime_evals these runs record.
+// ===========================================================================
+
+const T4_MODELS: &[&str] = &["gpt2-124m-sim", "gpt2-355m-sim",
+                             "qwen25-0.5b-sim", "gemma3-270m-sim",
+                             "gemma3-1b-sim"];
+const T4_TASKS: &[&str] = &["mmlu", "piqa", "arc-c", "arc-e"];
+
+fn table4(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 24usize)?;
+    let seq = args.get_parse("seq", 128usize)?;
+    let models: Vec<String> = match args.get("models") {
+        Some(m) => m.split(',').map(String::from).collect(),
+        None => T4_MODELS.iter().map(|s| s.to_string()).collect(),
+    };
+    let tasks: Vec<String> = match args.get("tasks") {
+        Some(t) => t.split(',').map(String::from).collect(),
+        None => T4_TASKS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let mut rows: Vec<Json> = Vec::new();
+    for task in &tasks {
+        for model in &models {
+            eprintln!("== Table 4: {model} @ {task} (seq{seq}) ==");
+            let mut common = vec![
+                ("model", model.clone()),
+                ("task", task.clone()),
+                ("seq", seq.to_string()),
+                ("batch", "8".into()),
+                ("steps", steps.to_string()),
+                ("lr", "2e-4".into()),
+                ("mode", "lora".into()),
+                ("lora-rank", "8".into()),
+                ("lora-alpha", "32".into()),
+                ("eval-batches", "4".into()),
+                ("device", "iqoo15".into()),
+            ];
+            common.extend(base_flag(args, model));
+            // MobileFineTuner: MEA attention (its built-in memory opt path)
+            let mut mft_flags = common.to_vec();
+            mft_flags.push(("exec", "fused".into()));
+            mft_flags.push(("attn", "mea".into()));
+            mft_flags.push(("seed", "42".into()));
+            let mft = spawn_train(args, &mft_flags, &[])?;
+            // Reference trainer: fused naive (server-side PyTorch stand-in)
+            let mut ref_flags = common.to_vec();
+            ref_flags.push(("exec", "fused".into()));
+            ref_flags.push(("attn", "naive".into()));
+            ref_flags.push(("seed", "43".into()));
+            let rf = spawn_train(args, &ref_flags, &[])?;
+
+            println!(
+                "{model:<18} {task:<9} | M loss {:.3}->{:.3} acc {:.1}->{:.1}% \
+                 ppl {:.1}->{:.1} | P loss ->{:.3} acc ->{:.1}% | \
+                 {:.2}h {:.1}kJ {:.0}MiB",
+                sum_f(&mft, "initial_nll"), sum_f(&mft, "final_loss"),
+                sum_f(&mft, "initial_acc") * 100.0,
+                sum_f(&mft, "best_acc") * 100.0,
+                sum_f(&mft, "initial_ppl"), sum_f(&mft, "best_ppl"),
+                sum_f(&rf, "final_loss"), sum_f(&rf, "best_acc") * 100.0,
+                sum_f(&mft, "time_device_s") / 3600.0,
+                sum_f(&mft, "energy_kj"), sum_f(&mft, "peak_rss_mb"));
+
+            rows.push(Json::obj(vec![
+                ("model", Json::from(model.as_str())),
+                ("task", Json::from(task.as_str())),
+                ("seq", Json::from(seq)),
+                ("mft", mft),
+                ("reference", rf),
+            ]));
+        }
+    }
+    let name = if seq == 128 { "table4".to_string() }
+               else { format!("table4_seq{seq}") };
+    write_results(args, &name, &Json::Arr(rows))
+}
+
+// ===========================================================================
+// Table 5 — runtime testing accuracy/PPL at 30/60/90% progress
+// ===========================================================================
+
+fn table5(args: &Args) -> Result<()> {
+    let seq = args.get_parse("seq", 128usize)?;
+    let name = if seq == 128 { "table4".to_string() }
+               else { format!("table4_seq{seq}") };
+    let p = results_dir(args)?.join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&p).with_context(|| format!(
+        "{} missing — run `mft exp table4` first", p.display()))?;
+    let rows = Json::parse(&text)?;
+
+    println!("Table 5 — runtime testing accuracy/PPL at 30/60/90% \
+              (M = MobileFineTuner, P = reference)");
+    println!("{:<18} {:<9} {:>24} {:>24} {:>24}", "model", "task",
+             "30% acc/ppl (M|P)", "60% acc/ppl (M|P)", "90% acc/ppl (M|P)");
+    let mut out_rows = Vec::new();
+    for row in rows.as_arr()? {
+        let model = row.req("model")?.as_str()?;
+        let task = row.req("task")?.as_str()?;
+        let get_marks = |j: &Json| -> Vec<(f64, f64)> {
+            j.get("runtime_evals")
+                .and_then(|e| e.as_arr().ok())
+                .map(|evals| {
+                    evals.iter().map(|e| {
+                        (e.get("acc").and_then(|a| a.as_f64().ok())
+                            .unwrap_or(f64::NAN),
+                         sum_f(e, "ppl"))
+                    }).collect()
+                })
+                .unwrap_or_default()
+        };
+        let m = get_marks(row.req("mft")?);
+        let p_ = get_marks(row.req("reference")?);
+        let fmt = |i: usize| -> String {
+            let (ma, mp) = m.get(i).copied().unwrap_or((f64::NAN, f64::NAN));
+            let (pa, pp) = p_.get(i).copied().unwrap_or((f64::NAN, f64::NAN));
+            format!("{:.1}/{:.1}|{:.1}/{:.1}",
+                    ma * 100.0, mp, pa * 100.0, pp)
+        };
+        println!("{model:<18} {task:<9} {:>24} {:>24} {:>24}",
+                 fmt(0), fmt(1), fmt(2));
+        out_rows.push(Json::obj(vec![
+            ("model", Json::from(model)),
+            ("task", Json::from(task)),
+            ("mft_marks", Json::Arr(m.iter().map(|(a, p)| Json::Arr(
+                vec![Json::from(*a), Json::from(*p)])).collect())),
+            ("ref_marks", Json::Arr(p_.iter().map(|(a, p)| Json::Arr(
+                vec![Json::from(*a), Json::from(*p)])).collect())),
+        ]));
+    }
+    write_results(args, &format!("table5_seq{seq}"), &Json::Arr(out_rows))
+}
+
+// ===========================================================================
+// Fig. 10 — peak RSS under optimization chains; Table 6 — minimum chain
+// per model x device
+// ===========================================================================
+
+/// The paper's chain: ∅, ①, ①②, ①②③, ①②③④.
+/// ① MEA attention  ② activation ckpt  ③ grad accumulation  ④ sharding
+pub const CHAINS: &[(&str, &str)] = &[
+    ("none", "no optimizations (fused, naive attention)"),
+    ("c1", "(1) memory-efficient attention"),
+    ("c12", "(1)+(2) + activation checkpointing"),
+    ("c123", "(1)+(2)+(3) + gradient accumulation (mb 2)"),
+    ("c1234", "(1)+(2)+(3)+(4) + parameter sharding (layerwise)"),
+];
+
+fn chain_flags(chain: &str, model: &str, seq: usize, steps: usize)
+               -> (Vec<(&'static str, String)>, Vec<&'static str>) {
+    let mut f: Vec<(&'static str, String)> = vec![
+        ("model", model.to_string()),
+        ("task", "corpus".to_string()),
+        ("seq", seq.to_string()),
+        ("batch", "8".to_string()),
+        ("steps", steps.to_string()),
+        ("mode", "lora".to_string()),
+        ("lora-rank", "8".to_string()),
+        ("lora-alpha", "32".to_string()),
+        ("lr", "2e-4".to_string()),
+        ("eval-batches", "0".to_string()), // RSS probe: no eval graphs
+    ];
+    let mut b: Vec<&'static str> = Vec::new();
+    match chain {
+        "none" => {
+            f.push(("exec", "fused".into()));
+            f.push(("attn", "naive".into()));
+        }
+        "c1" => {
+            f.push(("exec", "fused".into()));
+            f.push(("attn", "mea".into()));
+        }
+        "c12" => {
+            f.push(("exec", "fused-remat".into()));
+            f.push(("attn", "mea".into()));
+        }
+        "c123" => {
+            f.push(("exec", "fused-remat".into()));
+            f.push(("attn", "mea".into()));
+            f.push(("micro-batch", "2".into()));
+        }
+        "c1234" => {
+            f.push(("exec", "layerwise".into()));
+            f.push(("attn", "mea".into()));
+            f.push(("micro-batch", "2".into()));
+            b.push("shard");
+        }
+        _ => unreachable!(),
+    }
+    (f, b)
+}
+
+const F10_MODELS: &[&str] = &["gpt2-124m-sim", "gpt2-355m-sim",
+                              "gemma3-270m-sim", "qwen25-0.5b-sim"];
+
+fn fig10(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 3usize)?;
+    let seq = args.get_parse("seq", 256usize)?;
+    let models: Vec<String> = match args.get("models") {
+        Some(m) => m.split(',').map(String::from).collect(),
+        None => F10_MODELS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    println!("Fig.10 — peak RSS (MiB) under optimization chains, \
+              PEFT @ corpus seq{seq} b8");
+    println!("{:<18} {:>8} {:>8} {:>8} {:>8} {:>8}", "model",
+             "none", "(1)", "(1,2)", "(1-3)", "(1-4)");
+    let mut rows = Vec::new();
+    for model in &models {
+        let mut cells = Vec::new();
+        for (chain, _) in CHAINS {
+            let (f, b) = chain_flags(chain, model, seq, steps);
+            let j = spawn_train(args, &f, &b)?;
+            cells.push(sum_f(&j, "peak_rss_mb"));
+        }
+        println!("{:<18} {:>8.0} {:>8.0} {:>8.0} {:>8.0} {:>8.0}",
+                 model, cells[0], cells[1], cells[2], cells[3], cells[4]);
+        rows.push(Json::obj(vec![
+            ("model", Json::from(model.as_str())),
+            ("peak_rss_mb", Json::Arr(cells.into_iter().map(Json::from)
+                                      .collect())),
+        ]));
+    }
+    write_results(args, "fig10", &Json::Arr(rows))
+}
+
+const T6_DEVICES: &[&str] = &["p50-pro", "nova9-pro", "iqoo15",
+                              "macbook-air-m2"];
+
+fn table6(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 3usize)?;
+    let seq = args.get_parse("seq", 256usize)?;
+    let models: Vec<String> = match args.get("models") {
+        Some(m) => m.split(',').map(String::from).collect(),
+        None => F10_MODELS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    println!("Table 6 — minimum optimization configuration to complete \
+              fine-tuning (seq{seq} b8); 'any' = runs without optimizations");
+    println!("{:<18} {:>14} {:>14} {:>14} {:>14}",
+             "model", "p50-pro", "nova9-pro", "iqoo15", "macbook");
+    let chain_label = |c: &str| match c {
+        "none" => "any",
+        "c1" => "(1)",
+        "c12" => "(1,2)",
+        "c123" => "(1-3)",
+        "c1234" => "(1-4)",
+        _ => "?",
+    };
+    let mut rows = Vec::new();
+    for model in &models {
+        let mut cols = Vec::new();
+        for device in T6_DEVICES {
+            let mut found = "OOM".to_string();
+            for (chain, _) in CHAINS {
+                let (mut f, b) = chain_flags(chain, model, seq, steps);
+                f.push(("device", device.to_string()));
+                let j = spawn_train(args, &f, &b)?;
+                if sum_ok(&j) {
+                    found = chain_label(chain).to_string();
+                    break;
+                }
+            }
+            cols.push(found);
+        }
+        println!("{:<18} {:>14} {:>14} {:>14} {:>14}",
+                 model, cols[0], cols[1], cols[2], cols[3]);
+        rows.push(Json::obj(vec![
+            ("model", Json::from(model.as_str())),
+            ("min_chain", Json::Arr(cols.into_iter().map(Json::from)
+                                    .collect())),
+        ]));
+    }
+    write_results(args, "table6", &Json::Arr(rows))
+}
+
+// ===========================================================================
+// Table 7 — gradient accumulation ablation
+// ===========================================================================
+
+fn table7(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 40usize)?;
+    let dir = crate::cli::artifact_dir(args);
+    let model = args.get("model").unwrap_or("gemma3-270m-sim").to_string();
+
+    println!("Table 7 — gradient accumulation ablation on {model}@corpus \
+              (batch 8, {steps} steps)");
+    println!("{:<8} {:>18} {:>12} {:>12}", "method", "convergence-step",
+             "final-loss", "final-ppl");
+    let mut rows = Vec::new();
+    for (label, mb) in [("b8a1", 8usize), ("b4a2", 4), ("b2a4", 2),
+                        ("b1a8", 1)] {
+        let cfg = RunConfig {
+            model: model.clone(),
+            task: "corpus".into(),
+            seq: 128,
+            batch: 8,
+            micro_batch: mb,
+            steps,
+            lr: 2e-4,
+            mode: TrainMode::Lora { rank: 8 },
+            lora_alpha: 32.0,
+            exec: ExecMode::Fused,
+            attn: AttnImpl::Mea,
+            eval_every: (steps / 8).max(1),
+            eval_batches: 4,
+            seed: 42, // same data order across settings
+            init_from: base_ckpt_path(args, &model).ok()
+                .filter(|p| p.exists())
+                .map(|p| p.display().to_string()),
+            out_dir: Some(results_dir(args)?
+                          .join(format!("table7_{label}"))
+                          .display().to_string()),
+            ..RunConfig::default()
+        };
+        let res = run_training(&dir, cfg)?;
+        // convergence step: first eval whose ppl is within 2% of best
+        let best = sum_f(&res.summary, "best_ppl");
+        let mut conv = f64::NAN;
+        if let Some(evals) = res.summary.get("runtime_evals")
+            .and_then(|e| e.as_arr().ok()) {
+            for e in evals {
+                if sum_f(e, "ppl") <= best * 1.02 {
+                    conv = sum_f(e, "step");
+                    break;
+                }
+            }
+        }
+        println!("{:<8} {:>18.0} {:>12.4} {:>12.2}", label, conv,
+                 sum_f(&res.summary, "final_loss"), best);
+        rows.push(Json::obj(vec![
+            ("method", Json::from(label)),
+            ("micro_batch", Json::from(mb)),
+            ("convergence_step", Json::from(conv)),
+            ("final_loss", Json::from(sum_f(&res.summary, "final_loss"))),
+            ("final_ppl", Json::from(best)),
+        ]));
+    }
+    write_results(args, "table7", &Json::Arr(rows))
+}
+
+// ===========================================================================
+// Fig. 11 — energy-aware computation scheduling
+// ===========================================================================
+
+fn fig11(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 100usize)?;
+    let dir = crate::cli::artifact_dir(args);
+    let out = results_dir(args)?.join("fig11_run");
+    let cfg = RunConfig {
+        model: args.get("model").unwrap_or("qwen25-0.5b-sim").to_string(),
+        task: "corpus".into(),
+        seq: 128,
+        batch: 8,
+        micro_batch: 8,
+        steps,
+        lr: 2e-4,
+        mode: TrainMode::Lora { rank: 8 },
+        lora_alpha: 16.0, // paper Sec. 7.2.2
+        exec: ExecMode::Fused,
+        attn: AttnImpl::Mea,
+        device: Some("nova9-pro".into()),
+        energy_k: 1,
+        energy_mu: 0.6,
+        energy_rho: 0.5,
+        battery_init: 0.66, // crosses the 60% threshold mid-run
+        virtual_clock: true,
+        eval_batches: 2,
+        eval_every: steps / 4,
+        init_from: base_ckpt_path(args, "qwen25-0.5b-sim").ok()
+            .filter(|p| p.exists())
+            .map(|p| p.display().to_string()),
+        out_dir: Some(out.display().to_string()),
+        ..RunConfig::default()
+    };
+    let res = run_training(&dir, cfg)?;
+
+    // analyze per-step intervals before/after the throttle point
+    let recs = crate::metrics::read_steps(&out)?;
+    let mut cross_step = None;
+    let mut before = Vec::new();
+    let mut after = Vec::new();
+    for r in &recs {
+        let interval = r.step_time_s + r.sched_delay_s;
+        if r.sched_delay_s > 0.0 {
+            if cross_step.is_none() {
+                cross_step = Some(r.step);
+            }
+            after.push(interval);
+        } else {
+            before.push(interval);
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let (mb, ma) = (mean(&before), mean(&after));
+    println!("Fig.11 — energy-aware scheduling (K=1, mu=60%, rho=50%)");
+    println!("battery crossed 60% at step {:?}", cross_step);
+    println!("mean step interval: {:.4} h before -> {:.4} h after \
+              ({:.2}x)", mb / 3600.0, ma / 3600.0, ma / mb.max(1e-12));
+    write_results(args, "fig11", &Json::obj(vec![
+        ("cross_step", cross_step.map(Json::from).unwrap_or(Json::Null)),
+        ("interval_before_s", Json::from(mb)),
+        ("interval_after_s", Json::from(ma)),
+        ("ratio", Json::from(ma / mb.max(1e-12))),
+        ("summary", res.summary.clone()),
+    ]))
+}
+
+// ===========================================================================
+// Table 8 — native runtime vs emulated-interpreter (Termux) pipeline
+// ===========================================================================
+
+fn table8(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 6usize)?;
+    let model = args.get("model").unwrap_or("qwen25-0.5b-sim").to_string();
+    let task = args.get("task").unwrap_or("piqa").to_string();
+    let common = [
+        ("model", model.clone()),
+        ("task", task.clone()),
+        ("seq", "128".to_string()),
+        ("batch", "8".to_string()),
+        ("steps", steps.to_string()),
+        ("mode", "lora".to_string()),
+        ("lora-rank", "8".to_string()),
+        ("lora-alpha", "16".to_string()),
+        ("lr", "2e-4".to_string()),
+        ("eval-batches", "0".to_string()),
+    ];
+    eprintln!("== Table 8: emulated Termux+PyTorch pipeline ==");
+    let mut term_flags = common.to_vec();
+    term_flags.push(("exec", "emulated".into()));
+    term_flags.push(("attn", "naive".into()));
+    let termux = spawn_train(args, &term_flags, &[])?;
+    eprintln!("== Table 8: MobileFineTuner native ==");
+    let mut mft_flags = common.to_vec();
+    mft_flags.push(("exec", "fused".into()));
+    mft_flags.push(("attn", "mea".into()));
+    let mft = spawn_train(args, &mft_flags, &[])?;
+
+    // exclude one-time XLA compilation from the per-step cost
+    let step_time = |j: &Json| (sum_f(j, "time_host_s") - sum_f(j, "compile_s"))
+        / sum_f(j, "steps_done").max(1.0);
+    println!("\nTable 8 — comparison with Termux pipeline on {model}@{task}");
+    println!("{:<24} {:>20} {:>14}", "method", "avg step time (s)",
+             "peak RSS (MiB)");
+    println!("{:<24} {:>20.2} {:>14.0}", "Termux + PyTorch (emu)",
+             step_time(&termux), sum_f(&termux, "peak_rss_mb"));
+    println!("{:<24} {:>20.2} {:>14.0}", "MobileFineTuner",
+             step_time(&mft), sum_f(&mft, "peak_rss_mb"));
+    println!("speedup: {:.2}x", step_time(&termux) / step_time(&mft));
+    write_results(args, "table8", &Json::obj(vec![
+        ("termux", termux.clone()),
+        ("mft", mft.clone()),
+        ("speedup", Json::from(step_time(&termux) / step_time(&mft))),
+    ]))
+}

@@ -1,0 +1,9 @@
+//! Application layer: dataset assembly, the end-to-end training session,
+//! and the experiment drivers that regenerate every paper table/figure
+//! (see DESIGN.md §5 for the index).
+
+pub mod datasets;
+pub mod drivers;
+pub mod run;
+
+pub use run::{run_training, SessionResult};

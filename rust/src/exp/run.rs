@@ -1,0 +1,250 @@
+//! The end-to-end training session: everything `mft train` does.
+//!
+//! Wires together dataset assembly, the trainer, the memory guard, the
+//! battery model + energy scheduler, and the metrics observer, then runs
+//! the step loop with the paper's 30/60/90% runtime evaluations.  Returns
+//! a machine-readable summary (the experiment drivers parse it from worker
+//! subprocesses to get clean per-run peak-RSS numbers).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExecMode, RunConfig};
+use crate::energy::{BatteryModel, EnergyScheduler};
+use crate::eval::is_eval_step;
+use crate::exp::datasets::assemble;
+use crate::memopt::{rss_now, rss_peak, OomGuard};
+use crate::metrics::{Observer, StepRecord};
+use crate::runtime::Engine;
+use crate::sim;
+use crate::train::Trainer;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+/// Rough sustained f32 throughput of this host (GFLOP/s), used only to
+/// scale reported times to device-equivalents.  Override with
+/// MFT_HOST_GFLOPS.
+pub fn host_gflops() -> f64 {
+    std::env::var("MFT_HOST_GFLOPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0)
+}
+
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    pub summary: Json,
+    pub ok: bool,
+}
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+pub fn run_training(artifact_dir: &Path, cfg: RunConfig) -> Result<SessionResult> {
+    cfg.validate()?;
+    let engine = Rc::new(Engine::new(artifact_dir)?);
+    let info = engine.manifest().model(&cfg.model)?.clone();
+    let assets = assemble(&info, &cfg.task, cfg.seq, cfg.seed)?;
+    let mut train_loader = assets.train;
+    let test_loader = assets.test;
+    let is_mc = cfg.task != "corpus";
+
+    let mut trainer = Trainer::new(engine.clone(), cfg.clone())?;
+
+    // run directory + observer
+    let out_dir = cfg.out_dir.clone().map(PathBuf::from);
+    let mut observer = match &out_dir {
+        Some(d) => Observer::new(d)?,
+        None => Observer::null(),
+    };
+
+    // device constraints
+    let device = match &cfg.device {
+        Some(name) => Some(sim::device(name)?),
+        None => None,
+    };
+    let mut guard = match device {
+        Some(d) => OomGuard::new(d.ram_budget_bytes),
+        None => OomGuard::unlimited(),
+    };
+    let mut battery = match device {
+        Some(d) => BatteryModel::from_mah(d.battery_mah, d.battery_volts,
+                                          d.p_idle, d.p_compute),
+        None => BatteryModel::from_mah(5000.0, 3.85, 0.8, 5.0),
+    };
+    battery.set_level_frac(cfg.battery_init);
+    let mut scheduler = if cfg.energy_k > 0 {
+        EnergyScheduler::new(cfg.energy_k, cfg.energy_mu, cfg.energy_rho)
+    } else {
+        EnergyScheduler::disabled()
+    };
+    let clock = if cfg.virtual_clock {
+        Clock::virtual_clock()
+    } else {
+        Clock::wall()
+    };
+
+    // sharding (optimization ④)
+    if cfg.shard_offload {
+        let shard_dir = out_dir
+            .clone()
+            .unwrap_or_else(|| std::env::temp_dir().join(format!(
+                "mft-shards-{}", std::process::id())))
+            .join("shards");
+        trainer.enable_sharding(&shard_dir, 1)?;
+    }
+
+    // initial evaluation (the paper's "initial loss/acc/PPL" column);
+    // eval_batches == 0 disables all evaluations (RSS-probe runs).
+    let do_eval = cfg.eval_batches > 0;
+    let (nll0, ppl0) = if do_eval {
+        trainer.eval_nll(&test_loader, cfg.eval_batches)?
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    let acc0 = if is_mc && do_eval {
+        Some(trainer.eval_accuracy(&test_loader, cfg.eval_batches)?)
+    } else {
+        None
+    };
+
+    let mut total_energy_j = 0.0f64;
+    let mut oom: Option<String> = None;
+    let mut runtime_evals: Vec<Json> = Vec::new();
+    let mut final_loss = f64::NAN;
+    let mut best_ppl = f64::INFINITY;
+    let mut best_acc: f64 = 0.0;
+    let mut steps_done = 0usize;
+    let t_start = Instant::now();
+
+    for step in 1..=cfg.steps {
+        let t0 = Instant::now();
+        let out = match trainer.step(&mut train_loader) {
+            Ok(o) => o,
+            Err(e) => {
+                oom = Some(format!("{e:#}"));
+                break;
+            }
+        };
+        let host_step_s = t0.elapsed().as_secs_f64();
+        // device-equivalent step time + battery drain
+        let dev_step_s = match device {
+            Some(d) => d.scale_time(host_step_s, host_gflops()),
+            None => host_step_s,
+        };
+        clock.advance_work(dev_step_s);
+        total_energy_j += battery.drain(dev_step_s, 0.0);
+        let delay = scheduler.after_step(&battery, &clock, dev_step_s);
+        if delay > 0.0 {
+            total_energy_j += battery.drain(0.0, delay);
+        }
+
+        // memory guard (simulated OOM per Tab. 6 protocol)
+        let rss = match guard.check() {
+            Ok(r) => r,
+            Err(e) => {
+                oom = Some(format!("{e:#}"));
+                break;
+            }
+        };
+
+        final_loss = out.loss;
+        steps_done = step;
+
+        let mut rec = StepRecord {
+            step,
+            loss: out.loss,
+            grad_norm: out.grad_norm,
+            rss_mb: rss as f64 / MIB,
+            peak_rss_mb: rss_peak() as f64 / MIB,
+            energy_j: total_energy_j,
+            battery_pct: battery.level_frac() * 100.0,
+            step_time_s: dev_step_s,
+            sched_delay_s: delay,
+            time_s: clock.now_s(),
+            ..Default::default()
+        };
+
+        if do_eval && is_eval_step(step, cfg.steps, cfg.eval_every) {
+            let (nll, ppl) = trainer.eval_nll(&test_loader, cfg.eval_batches)?;
+            rec.test_loss = Some(nll);
+            rec.test_ppl = Some(ppl);
+            best_ppl = best_ppl.min(ppl);
+            if is_mc {
+                let acc = trainer.eval_accuracy(&test_loader, cfg.eval_batches)?;
+                rec.test_acc = Some(acc);
+                best_acc = best_acc.max(acc);
+            }
+            runtime_evals.push(Json::obj(vec![
+                ("step", Json::from(step)),
+                ("nll", Json::from(nll)),
+                ("ppl", Json::from(ppl)),
+                ("acc", rec.test_acc.map(Json::from).unwrap_or(Json::Null)),
+            ]));
+        }
+        observer.log_step(&rec)?;
+    }
+
+    // export trained weights
+    if let Some(d) = &out_dir {
+        trainer.export(d).context("export checkpoint")?;
+    }
+
+    let stats = engine.stats();
+    let shard = &trainer.store.stats;
+    let summary = Json::obj(vec![
+        ("model", Json::from(cfg.model.as_str())),
+        ("task", Json::from(cfg.task.as_str())),
+        ("exec", Json::from(cfg.exec.as_str())),
+        ("attn", Json::from(cfg.attn.as_str())),
+        ("lora_r", Json::from(cfg.mode.lora_rank())),
+        ("batch", Json::from(cfg.batch)),
+        ("micro_batch", Json::from(cfg.micro_batch)),
+        ("seq", Json::from(cfg.seq)),
+        ("steps_requested", Json::from(cfg.steps)),
+        ("steps_done", Json::from(steps_done)),
+        ("ok", Json::from(oom.is_none())),
+        ("oom", oom.clone().map(Json::from).unwrap_or(Json::Null)),
+        ("initial_nll", if nll0.is_nan() { Json::Null } else { Json::from(nll0) }),
+        ("initial_ppl", if ppl0.is_nan() { Json::Null } else { Json::from(ppl0) }),
+        ("initial_acc", acc0.map(Json::from).unwrap_or(Json::Null)),
+        ("final_loss", if final_loss.is_nan() { Json::Null }
+                       else { Json::from(final_loss) }),
+        ("best_ppl", if best_ppl.is_finite() { Json::from(best_ppl) }
+                     else { Json::Null }),
+        ("best_acc", if is_mc { Json::from(best_acc) } else { Json::Null }),
+        ("runtime_evals", Json::Arr(runtime_evals)),
+        ("peak_rss_mb", Json::from(rss_peak() as f64 / MIB)),
+        ("final_rss_mb", Json::from(rss_now() as f64 / MIB)),
+        ("energy_kj", Json::from(total_energy_j / 1000.0)),
+        ("time_device_s", Json::from(clock.now_s())),
+        ("time_host_s", Json::from(t_start.elapsed().as_secs_f64())),
+        ("battery_pct", Json::from(battery.level_frac() * 100.0)),
+        ("exec_calls", Json::from(stats.total_calls())),
+        ("exec_s", Json::from(stats.total_exec_s())),
+        ("marshal_s", Json::from(stats.total_marshal_s())),
+        ("compile_s", Json::from(stats.total_compile_s())),
+        ("shard_fetches", Json::from(shard.fetches)),
+        ("shard_offloads", Json::from(shard.offloads)),
+        ("shard_io_s", Json::from(shard.io_s)),
+        ("store_resident_mb",
+         Json::from(trainer.store.resident_bytes() as f64 / MIB)),
+    ]);
+    observer.write_summary(&summary)?;
+    let ok = oom.is_none();
+    Ok(SessionResult { summary, ok })
+}
+
+/// Convenience: the micro-batch exec label used by experiment tables.
+pub fn exec_label(cfg: &RunConfig) -> String {
+    let mut s = format!("{}-{}", cfg.exec.as_str(), cfg.attn.as_str());
+    if cfg.exec == ExecMode::Layerwise && cfg.shard_offload {
+        s.push_str("-shard");
+    }
+    if cfg.accum_steps() > 1 {
+        s.push_str(&format!("-a{}", cfg.accum_steps()));
+    }
+    s
+}

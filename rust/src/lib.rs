@@ -1,0 +1,37 @@
+//! # MobileFineTuner (reproduction) — resource-aware on-device LLM fine-tuning
+//!
+//! Rust re-implementation of the MobileFineTuner system (Geng et al., 2025):
+//! an end-to-end fine-tuning stack for resource-constrained devices.  The
+//! Rust layer is the paper's contribution — the *coordinator*: training
+//! loop, ZeRO-inspired parameter sharding with disk offload, gradient
+//! accumulation, activation-checkpoint policy, optimizer, energy-aware
+//! scheduling, device simulation, metrics and the training visualizer.
+//!
+//! Compute (transformer fwd/bwd, the memory-efficient attention kernel) is
+//! AOT-compiled from JAX/Pallas to HLO text at build time and executed via
+//! the PJRT CPU client ([`runtime`]); Python never runs on the training
+//! path.
+//!
+//! Layer map (paper Fig. 3 — four-layer architecture):
+//! * Basic layer       -> [`tensor`], [`runtime`], [`util`]
+//! * Intermediate      -> the AOT artifacts (python/compile) + [`model`]
+//! * Abstract layer    -> [`train`] (optimizers, trainers), [`memopt`]
+//! * Application layer -> [`cli`], [`exp`], [`agent`], [`viz`]
+
+pub mod agent;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod energy;
+pub mod eval;
+pub mod exp;
+pub mod memopt;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+pub mod viz;

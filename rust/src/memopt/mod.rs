@@ -1,0 +1,135 @@
+//! Memory observability + OOM guard (paper Sec. 4.1 / 6.1.2).
+//!
+//! * [`rss_now`] / [`rss_peak`] read VmRSS / VmHWM from `/proc/self/status`
+//!   — the same "Resident Set Size" metric the paper's observer logs via
+//!   `dumpsys procstats` on Android.
+//! * [`OomGuard`] enforces a simulated device RAM budget: when the measured
+//!   RSS crosses the budget the guard returns the same failure the paper's
+//!   unoptimized configurations hit on 8 GB phones (Tab. 6), letting the
+//!   experiment drivers map out minimum-optimization matrices without real
+//!   8 GB hardware.
+
+use anyhow::{bail, Result};
+
+/// Current resident set size in bytes (VmRSS).
+pub fn rss_now() -> u64 {
+    read_status_kib("VmRSS:") * 1024
+}
+
+/// Peak resident set size in bytes (VmHWM — monotonic per process).
+pub fn rss_peak() -> u64 {
+    read_status_kib("VmHWM:") * 1024
+}
+
+fn read_status_kib(key: &str) -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let kib: u64 = rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kib;
+        }
+    }
+    0
+}
+
+/// Simulated out-of-memory failure (matches the paper's Tab. 6 protocol).
+#[derive(Debug, thiserror::Error)]
+#[error("simulated OOM: RSS {rss_mb:.0} MiB exceeds device budget {budget_mb:.0} MiB")]
+pub struct SimOom {
+    pub rss_mb: f64,
+    pub budget_mb: f64,
+}
+
+/// Checks measured RSS against a device budget.
+///
+/// The check uses the process *high-water mark* (VmHWM), not the instant
+/// VmRSS: a phone OOM-kills at the transient peak inside an op, which on
+/// this runtime occurs mid-execute and is already released again by the
+/// step boundary where the guard runs.  Workers run one configuration per
+/// process, so VmHWM is exactly that configuration's peak.
+#[derive(Debug, Clone)]
+pub struct OomGuard {
+    pub budget_bytes: u64,
+    pub peak_seen: u64,
+}
+
+impl OomGuard {
+    pub fn new(budget_bytes: u64) -> OomGuard {
+        OomGuard { budget_bytes, peak_seen: 0 }
+    }
+
+    /// Unlimited guard (host execution).
+    pub fn unlimited() -> OomGuard {
+        OomGuard { budget_bytes: u64::MAX, peak_seen: 0 }
+    }
+
+    /// Call at memory high-water points (after each micro-step).
+    ///
+    /// Uses VmHWM (peak), not instant VmRSS: the OOM-relevant moment is
+    /// the transient peak inside the executed graph, which is released
+    /// again by the time the step boundary runs this check.
+    pub fn check(&mut self) -> Result<u64> {
+        let rss = rss_now();
+        let peak = rss_peak();
+        self.peak_seen = self.peak_seen.max(peak);
+        if peak > self.budget_bytes {
+            let e = SimOom {
+                rss_mb: peak as f64 / (1024.0 * 1024.0),
+                budget_mb: self.budget_bytes as f64 / (1024.0 * 1024.0),
+            };
+            bail!(e);
+        }
+        Ok(rss)
+    }
+
+    pub fn is_limited(&self) -> bool {
+        self.budget_bytes != u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_readable_and_sane() {
+        let rss = rss_now();
+        let peak = rss_peak();
+        assert!(rss > 1024 * 1024, "rss = {rss}");
+        assert!(peak >= rss, "peak {peak} < rss {rss}");
+    }
+
+    #[test]
+    fn peak_monotonic_with_allocation() {
+        let before = rss_peak();
+        let v: Vec<u8> = vec![1; 64 * 1024 * 1024];
+        std::hint::black_box(&v);
+        let after = rss_peak();
+        assert!(after >= before + 32 * 1024 * 1024,
+                "peak before {before}, after {after}");
+    }
+
+    #[test]
+    fn guard_trips_over_budget() {
+        let mut g = OomGuard::new(1); // 1 byte budget
+        let err = g.check().unwrap_err();
+        assert!(err.to_string().contains("simulated OOM"));
+        assert!(g.peak_seen > 0);
+    }
+
+    #[test]
+    fn unlimited_guard_never_trips() {
+        let mut g = OomGuard::unlimited();
+        assert!(!g.is_limited());
+        for _ in 0..3 {
+            g.check().unwrap();
+        }
+    }
+}

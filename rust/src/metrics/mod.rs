@@ -1,0 +1,204 @@
+//! Metrics observer (paper Sec. 6.1.2): per-step JSONL logs + run summary.
+//!
+//! Every training step logs step number, loss, eval PPL/accuracy when
+//! available, RSS / peak RSS, energy drawn, battery %, and step time —
+//! the exact columns of the paper's observer.  The training visualizer
+//! ([`crate::viz`]) tails the JSONL file; experiment drivers parse the
+//! summary JSON from worker subprocesses.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub test_loss: Option<f64>,
+    pub test_ppl: Option<f64>,
+    pub test_acc: Option<f64>,
+    pub rss_mb: f64,
+    pub peak_rss_mb: f64,
+    pub energy_j: f64,
+    pub battery_pct: f64,
+    pub step_time_s: f64,
+    pub sched_delay_s: f64,
+    pub time_s: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("step", Json::from(self.step)),
+            ("loss", Json::from(self.loss)),
+            ("grad_norm", Json::from(self.grad_norm)),
+            ("rss_mb", Json::from(self.rss_mb)),
+            ("peak_rss_mb", Json::from(self.peak_rss_mb)),
+            ("energy_j", Json::from(self.energy_j)),
+            ("battery_pct", Json::from(self.battery_pct)),
+            ("step_time_s", Json::from(self.step_time_s)),
+            ("sched_delay_s", Json::from(self.sched_delay_s)),
+            ("time_s", Json::from(self.time_s)),
+        ];
+        if let Some(v) = self.test_loss {
+            pairs.push(("test_loss", Json::from(v)));
+        }
+        if let Some(v) = self.test_ppl {
+            pairs.push(("test_ppl", Json::from(v)));
+        }
+        if let Some(v) = self.test_acc {
+            pairs.push(("test_acc", Json::from(v)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<StepRecord> {
+        Ok(StepRecord {
+            step: j.req("step")?.as_usize()?,
+            loss: j.req("loss")?.as_f64()?,
+            grad_norm: j.get("grad_norm").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            test_loss: j.get("test_loss").map(|v| v.as_f64()).transpose()?,
+            test_ppl: j.get("test_ppl").map(|v| v.as_f64()).transpose()?,
+            test_acc: j.get("test_acc").map(|v| v.as_f64()).transpose()?,
+            rss_mb: j.get("rss_mb").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            peak_rss_mb: j.get("peak_rss_mb").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            energy_j: j.get("energy_j").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            battery_pct: j.get("battery_pct").map(|v| v.as_f64()).transpose()?.unwrap_or(100.0),
+            step_time_s: j.get("step_time_s").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            sched_delay_s: j.get("sched_delay_s").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            time_s: j.get("time_s").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+        })
+    }
+}
+
+/// Appends step records to `<dir>/steps.jsonl` and writes
+/// `<dir>/summary.json` at the end of the run.
+pub struct Observer {
+    dir: PathBuf,
+    steps: Option<BufWriter<File>>,
+    pub quiet: bool,
+}
+
+impl Observer {
+    pub fn new(dir: &Path) -> Result<Observer> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create run dir {}", dir.display()))?;
+        let f = OpenOptions::new()
+            .create(true)
+            .truncate(true)
+            .write(true)
+            .open(dir.join("steps.jsonl"))?;
+        Ok(Observer { dir: dir.to_path_buf(), steps: Some(BufWriter::new(f)),
+                      quiet: false })
+    }
+
+    /// Logging disabled (no run dir).
+    pub fn null() -> Observer {
+        Observer { dir: PathBuf::new(), steps: None, quiet: true }
+    }
+
+    pub fn log_step(&mut self, rec: &StepRecord) -> Result<()> {
+        if let Some(w) = &mut self.steps {
+            let mut line = String::new();
+            rec.to_json().write(&mut line);
+            line.push('\n');
+            w.write_all(line.as_bytes())?;
+            w.flush()?;
+        }
+        if !self.quiet {
+            let extra = match (rec.test_ppl, rec.test_acc) {
+                (Some(p), Some(a)) => format!(" ppl={p:.2} acc={:.2}%", a * 100.0),
+                (Some(p), None) => format!(" ppl={p:.2}"),
+                _ => String::new(),
+            };
+            eprintln!(
+                "step {:>5} loss={:.4}{extra} rss={:.0}MiB peak={:.0}MiB \
+                 bat={:.0}% t={:.2}s",
+                rec.step, rec.loss, rec.rss_mb, rec.peak_rss_mb,
+                rec.battery_pct, rec.step_time_s,
+            );
+        }
+        Ok(())
+    }
+
+    pub fn write_summary(&self, summary: &Json) -> Result<()> {
+        if self.steps.is_some() {
+            std::fs::write(self.dir.join("summary.json"), summary.to_string())?;
+        }
+        Ok(())
+    }
+}
+
+/// Read back a run's step records.
+pub fn read_steps(dir: &Path) -> Result<Vec<StepRecord>> {
+    let text = std::fs::read_to_string(dir.join("steps.jsonl"))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| StepRecord::from_json(&Json::parse(l)?))
+        .collect()
+}
+
+/// Read a run's summary JSON.
+pub fn read_summary(dir: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(dir.join("summary.json"))?;
+    Json::parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mft-metrics-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = tdir("rt");
+        let mut obs = Observer::new(&dir).unwrap();
+        obs.quiet = true;
+        for i in 0..3 {
+            let rec = StepRecord {
+                step: i,
+                loss: 2.5 - i as f64 * 0.1,
+                test_ppl: if i == 2 { Some(12.0) } else { None },
+                rss_mb: 100.0,
+                ..Default::default()
+            };
+            obs.log_step(&rec).unwrap();
+        }
+        let recs = read_steps(&dir).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].step, 0);
+        assert!((recs[1].loss - 2.4).abs() < 1e-9);
+        assert_eq!(recs[2].test_ppl, Some(12.0));
+        assert_eq!(recs[0].test_ppl, None);
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let dir = tdir("sum");
+        let obs = Observer::new(&dir).unwrap();
+        obs.write_summary(&Json::obj(vec![
+            ("final_loss", Json::from(1.5)),
+            ("peak_rss_mb", Json::from(200.0)),
+        ])).unwrap();
+        let s = read_summary(&dir).unwrap();
+        assert_eq!(s.get("final_loss").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn null_observer_writes_nothing() {
+        let mut obs = Observer::null();
+        obs.log_step(&StepRecord::default()).unwrap();
+        obs.write_summary(&Json::Null).unwrap();
+    }
+}

@@ -1,0 +1,6 @@
+//! Model state: the parameter store with ZeRO-inspired disk sharding,
+//! deterministic initialization, and safetensors import/export.
+
+pub mod store;
+
+pub use store::{ParamStore, SegState, ShardStats};

@@ -1,0 +1,593 @@
+//! ZeRO-inspired parameter store (paper Sec. 4.1.1, Fig. 4).
+//!
+//! Parameters are partitioned into contiguous *segments* — one for the
+//! global (embedding/head-norm) parameters and one per transformer block.
+//! Each segment is either RAM-resident or offloaded to a disk shard file;
+//! a mapping table tracks location and state.  The layerwise trainer
+//! fetches only the segment needed for the current forward/backward step
+//! and promptly offloads inactive segments, bounding the resident
+//! parameter footprint to `max_resident_blocks` blocks (+ globals).
+//!
+//! Optimizer state (Adam m/v) is stored alongside its parameters in the
+//! same segment and offloaded together, mirroring ZeRO-3's partitioning of
+//! parameter + optimizer state.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::manifest::{ModelInfo, ParamSpec};
+use crate::tensor::safetensors::{read_safetensors, write_safetensors};
+use crate::tensor::HostTensor;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegState {
+    Ram,
+    Disk,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    pub fetches: u64,
+    pub offloads: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub io_s: f64,
+}
+
+struct Segment {
+    name: String,
+    /// parameter names in canonical order (m./v. state not listed here)
+    param_names: Vec<String>,
+    state: SegState,
+    /// resident tensors (params + optional "m.<p>"/"v.<p>" entries)
+    tensors: HashMap<String, HostTensor>,
+    file: Option<PathBuf>,
+    /// dirty = RAM copy newer than disk copy
+    dirty: bool,
+}
+
+pub struct ParamStore {
+    model: String,
+    specs: Vec<ParamSpec>,
+    segments: Vec<Segment>,
+    seg_of: HashMap<String, usize>,
+    /// block segment ids in LRU order (most recent last)
+    lru: Vec<usize>,
+    /// None = sharding disabled (everything stays in RAM)
+    shard_dir: Option<PathBuf>,
+    max_resident_blocks: usize,
+    with_opt_state: bool,
+    pub stats: ShardStats,
+}
+
+impl ParamStore {
+    /// Build the segment layout from a model's manifest entry.
+    pub fn new(info: &ModelInfo) -> ParamStore {
+        let mut segments = Vec::new();
+        let mut seg_of = HashMap::new();
+
+        let globals: Vec<String> = info.global_param_names();
+        segments.push(Segment {
+            name: "globals".into(),
+            param_names: globals.clone(),
+            state: SegState::Ram,
+            tensors: HashMap::new(),
+            file: None,
+            dirty: true,
+        });
+        for n in globals {
+            seg_of.insert(n, 0);
+        }
+        for l in 0..info.n_layers {
+            let names = info.block_param_names(l);
+            let id = segments.len();
+            for n in &names {
+                seg_of.insert(n.clone(), id);
+            }
+            segments.push(Segment {
+                name: format!("block.{l}"),
+                param_names: names,
+                state: SegState::Ram,
+                tensors: HashMap::new(),
+                file: None,
+                dirty: true,
+            });
+        }
+        ParamStore {
+            model: info.name.clone(),
+            specs: info.params.clone(),
+            segments,
+            seg_of,
+            lru: Vec::new(),
+            shard_dir: None,
+            max_resident_blocks: usize::MAX,
+            with_opt_state: false,
+            stats: ShardStats::default(),
+        }
+    }
+
+    /// Enable disk offload: inactive block segments beyond
+    /// `max_resident_blocks` are written to `dir` and dropped from RAM.
+    pub fn enable_sharding(&mut self, dir: &Path, max_resident_blocks: usize)
+                           -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create shard dir {}", dir.display()))?;
+        self.shard_dir = Some(dir.to_path_buf());
+        self.max_resident_blocks = max_resident_blocks.max(1);
+        Ok(())
+    }
+
+    /// Track Adam m/v alongside each parameter (offloaded with it).
+    pub fn with_optimizer_state(&mut self) {
+        self.with_opt_state = true;
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn segment_state(&self, idx: usize) -> SegState {
+        self.segments[idx].state
+    }
+
+    /// Mapping table snapshot: (segment name, state, resident bytes).
+    pub fn mapping_table(&self) -> Vec<(String, SegState, usize)> {
+        self.segments
+            .iter()
+            .map(|s| {
+                let bytes = s.tensors.values().map(|t| t.size_bytes()).sum();
+                (s.name.clone(), s.state, bytes)
+            })
+            .collect()
+    }
+
+    /// Total bytes currently resident in RAM.
+    pub fn resident_bytes(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| s.tensors.values().map(|t| t.size_bytes()).sum::<usize>())
+            .sum()
+    }
+
+    fn spec(&self, name: &str) -> Result<&ParamSpec> {
+        self.specs
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))
+    }
+
+    /// Deterministic initialization per the manifest init kinds.
+    pub fn init_random(&mut self, seed: u64) -> Result<()> {
+        let mut rng = Pcg::new(seed);
+        // scaled init depends on layer count
+        let n_layers = self
+            .segments
+            .len()
+            .saturating_sub(1);
+        let scaled_std = 0.02 / ((2 * n_layers.max(1)) as f64).sqrt();
+        for spec in self.specs.clone() {
+            let n = spec.numel();
+            let data: Vec<f32> = match spec.init.as_str() {
+                "zeros" => vec![0.0; n],
+                "ones" => vec![1.0; n],
+                "scaled" => (0..n).map(|_| rng.normal_ms(0.0, scaled_std) as f32).collect(),
+                _ => (0..n).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect(),
+            };
+            let t = HostTensor::from_f32(&spec.shape, data)?;
+            self.insert(&spec.name, t)?;
+        }
+        if self.with_opt_state {
+            self.init_opt_state()?;
+        }
+        Ok(())
+    }
+
+    fn init_opt_state(&mut self) -> Result<()> {
+        for spec in self.specs.clone() {
+            let z = HostTensor::from_f32(&spec.shape, vec![0.0; spec.numel()])?;
+            let seg = self.seg_of[&spec.name];
+            self.segments[seg]
+                .tensors
+                .insert(format!("m.{}", spec.name), z.clone());
+            self.segments[seg].tensors.insert(format!("v.{}", spec.name), z);
+        }
+        Ok(())
+    }
+
+    fn insert(&mut self, name: &str, t: HostTensor) -> Result<()> {
+        let spec = self.spec(name)?;
+        if t.shape() != spec.shape.as_slice() {
+            bail!("param {name:?}: shape {:?} != manifest {:?}",
+                  t.shape(), spec.shape);
+        }
+        let seg = *self
+            .seg_of
+            .get(name)
+            .ok_or_else(|| anyhow!("param {name:?} has no segment"))?;
+        self.segments[seg].tensors.insert(name.to_string(), t);
+        self.segments[seg].dirty = true;
+        Ok(())
+    }
+
+    /// Load weights from a safetensors checkpoint (missing params keep
+    /// their current values; extra tensors are rejected).
+    pub fn load_safetensors(&mut self, path: &Path) -> Result<()> {
+        let (tensors, _) = read_safetensors(path)?;
+        for (name, t) in tensors {
+            if name.starts_with("m.") || name.starts_with("v.") {
+                let base = &name[2..];
+                let seg = *self.seg_of.get(base)
+                    .ok_or_else(|| anyhow!("opt state {name:?} for unknown param"))?;
+                self.segments[seg].tensors.insert(name, t);
+                continue;
+            }
+            self.insert(&name, t)?;
+        }
+        Ok(())
+    }
+
+    /// Export all parameters (fetching offloaded segments as needed).
+    pub fn export_safetensors(&mut self, path: &Path,
+                              include_opt_state: bool) -> Result<()> {
+        let n = self.segments.len();
+        let mut out = Vec::new();
+        for i in 0..n {
+            self.fetch(i)?;
+        }
+        for spec in &self.specs {
+            let seg = &self.segments[self.seg_of[&spec.name]];
+            let t = seg
+                .tensors
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("param {} not materialized", spec.name))?;
+            out.push((spec.name.clone(), t.clone()));
+            if include_opt_state {
+                for pre in ["m", "v"] {
+                    if let Some(t) = seg.tensors.get(&format!("{pre}.{}", spec.name)) {
+                        out.push((format!("{pre}.{}", spec.name), t.clone()));
+                    }
+                }
+            }
+        }
+        let meta = vec![("model".to_string(), self.model.clone()),
+                        ("format".to_string(), "mft-checkpoint-v1".to_string())];
+        write_safetensors(path, &out, &meta)
+    }
+
+    /// Ensure a segment is RAM-resident (reading its shard if offloaded)
+    /// and update the LRU.  Returns the segment index for convenience.
+    pub fn fetch(&mut self, seg: usize) -> Result<usize> {
+        if self.segments[seg].state == SegState::Disk {
+            let t0 = Instant::now();
+            let file = self.segments[seg]
+                .file
+                .clone()
+                .ok_or_else(|| anyhow!("segment {seg} on disk without file"))?;
+            let (tensors, _) = read_safetensors(&file)?;
+            let bytes: u64 = tensors.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+            let s = &mut self.segments[seg];
+            s.tensors = tensors.into_iter().collect();
+            s.state = SegState::Ram;
+            s.dirty = false;
+            self.stats.fetches += 1;
+            self.stats.bytes_read += bytes;
+            self.stats.io_s += t0.elapsed().as_secs_f64();
+        }
+        if seg > 0 {
+            self.lru.retain(|&i| i != seg);
+            self.lru.push(seg);
+            self.enforce_budget(seg)?;
+        }
+        Ok(seg)
+    }
+
+    /// Fetch the segment holding block `l`.
+    pub fn fetch_block(&mut self, l: usize) -> Result<usize> {
+        self.fetch(l + 1)
+    }
+
+    fn enforce_budget(&mut self, keep: usize) -> Result<()> {
+        if self.shard_dir.is_none() {
+            return Ok(());
+        }
+        while self.lru.len() > self.max_resident_blocks {
+            // evict the least recently used block that isn't `keep`
+            let victim = match self.lru.iter().find(|&&i| i != keep) {
+                Some(&v) => v,
+                None => break,
+            };
+            self.offload(victim)?;
+        }
+        Ok(())
+    }
+
+    /// Write a segment to its shard file and release the RAM copy.
+    pub fn offload(&mut self, seg: usize) -> Result<()> {
+        let Some(dir) = self.shard_dir.clone() else {
+            bail!("sharding not enabled");
+        };
+        if self.segments[seg].state == SegState::Disk {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let file = dir.join(format!("{}.safetensors", self.segments[seg].name));
+        if self.segments[seg].dirty || self.segments[seg].file.is_none() {
+            let mut tensors: Vec<(String, HostTensor)> = self.segments[seg]
+                .tensors
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            tensors.sort_by(|a, b| a.0.cmp(&b.0));
+            let bytes: u64 = tensors.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+            write_safetensors(&file, &tensors, &[])?;
+            self.stats.bytes_written += bytes;
+        }
+        let s = &mut self.segments[seg];
+        s.file = Some(file);
+        s.tensors = HashMap::new(); // release RAM
+        s.state = SegState::Disk;
+        s.dirty = false;
+        self.stats.offloads += 1;
+        self.stats.io_s += t0.elapsed().as_secs_f64();
+        self.lru.retain(|&i| i != seg);
+        Ok(())
+    }
+
+    /// Borrow a resident parameter (error if its segment is offloaded —
+    /// callers must `fetch` first; this keeps swap decisions explicit in
+    /// the trainer, as in the paper's design).
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        let seg = *self
+            .seg_of
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))?;
+        let s = &self.segments[seg];
+        if s.state == SegState::Disk {
+            bail!("param {name:?} is offloaded (segment {}); fetch first", s.name);
+        }
+        s.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("param {name:?} not initialized"))
+    }
+
+    /// Borrow optimizer-state tensors m/v for a parameter (mutable).
+    pub fn get_param_and_state(
+        &mut self,
+        name: &str,
+    ) -> Result<(&mut HostTensor, &mut HostTensor, &mut HostTensor)> {
+        let seg = *self
+            .seg_of
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))?;
+        let s = &mut self.segments[seg];
+        if s.state == SegState::Disk {
+            bail!("param {name:?} offloaded; fetch first");
+        }
+        s.dirty = true;
+        let (mk, vk) = (format!("m.{name}"), format!("v.{name}"));
+        // split borrows via raw pointers (keys are distinct)
+        let p = s.tensors.get_mut(name).ok_or_else(|| anyhow!("missing {name}"))?
+            as *mut HostTensor;
+        let m = s.tensors.get_mut(&mk).ok_or_else(|| anyhow!("missing {mk}"))?
+            as *mut HostTensor;
+        let v = s.tensors.get_mut(&vk).ok_or_else(|| anyhow!("missing {vk}"))?
+            as *mut HostTensor;
+        unsafe { Ok((&mut *p, &mut *m, &mut *v)) }
+    }
+
+    /// Mark a parameter's segment dirty after an in-place update.
+    pub fn mark_dirty(&mut self, name: &str) {
+        if let Some(&seg) = self.seg_of.get(name) {
+            self.segments[seg].dirty = true;
+        }
+    }
+
+    /// All parameters in canonical order (must all be resident — used by
+    /// the fused trainer where sharding is off).
+    pub fn ordered(&self) -> Result<Vec<&HostTensor>> {
+        self.specs.iter().map(|s| self.get(&s.name)).collect()
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        self.specs.iter().map(|s| s.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::manifest::ModelInfo;
+    use std::collections::BTreeMap;
+
+    fn tiny_info() -> ModelInfo {
+        ModelInfo {
+            name: "tiny".into(),
+            family: "gpt2".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 3,
+            n_heads: 1,
+            n_kv_heads: 1,
+            d_ff: 8,
+            max_seq: 8,
+            embed_scale: false,
+            n_params: 0,
+            params: vec![
+                ParamSpec { name: "wte".into(), shape: vec![8, 4], init: "normal".into() },
+                ParamSpec { name: "blocks.0.w".into(), shape: vec![4, 4], init: "normal".into() },
+                ParamSpec { name: "blocks.1.w".into(), shape: vec![4, 4], init: "scaled".into() },
+                ParamSpec { name: "blocks.2.w".into(), shape: vec![4, 4], init: "zeros".into() },
+            ],
+            lora: BTreeMap::new(),
+        }
+    }
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mft-store-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn segment_layout() {
+        let s = ParamStore::new(&tiny_info());
+        assert_eq!(s.n_segments(), 4); // globals + 3 blocks
+        let table = s.mapping_table();
+        assert_eq!(table[0].0, "globals");
+        assert_eq!(table[3].0, "block.2");
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(1).unwrap();
+        assert!(s.get("wte").unwrap().l2_norm().unwrap() > 0.0);
+        assert_eq!(s.get("blocks.2.w").unwrap().l2_norm().unwrap(), 0.0);
+        // scaled init has smaller std than normal
+        let n = s.get("wte").unwrap().l2_norm().unwrap()
+            / (8.0f64 * 4.0).sqrt();
+        let sc = s.get("blocks.1.w").unwrap().l2_norm().unwrap()
+            / (4.0f64 * 4.0).sqrt();
+        assert!(sc < n, "scaled {sc} < normal {n}");
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let mut a = ParamStore::new(&tiny_info());
+        let mut b = ParamStore::new(&tiny_info());
+        a.init_random(7).unwrap();
+        b.init_random(7).unwrap();
+        assert_eq!(a.get("wte").unwrap(), b.get("wte").unwrap());
+    }
+
+    #[test]
+    fn offload_fetch_roundtrip() {
+        let dir = tdir("rt");
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(2).unwrap();
+        let orig = s.get("blocks.1.w").unwrap().clone();
+        s.enable_sharding(&dir, 1).unwrap();
+        s.offload(2).unwrap(); // block.1 lives in segment 2
+        assert_eq!(s.segment_state(2), SegState::Disk);
+        assert!(s.get("blocks.1.w").is_err(), "offloaded param must not read");
+        s.fetch(2).unwrap();
+        assert_eq!(s.get("blocks.1.w").unwrap(), &orig);
+        assert!(s.stats.fetches >= 1 && s.stats.offloads >= 1);
+    }
+
+    #[test]
+    fn lru_budget_enforced() {
+        let dir = tdir("lru");
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(3).unwrap();
+        s.enable_sharding(&dir, 1).unwrap();
+        s.fetch_block(0).unwrap();
+        s.fetch_block(1).unwrap(); // evicts block 0
+        assert_eq!(s.segment_state(1), SegState::Disk);
+        assert_eq!(s.segment_state(2), SegState::Ram);
+        s.fetch_block(2).unwrap(); // evicts block 1
+        assert_eq!(s.segment_state(2), SegState::Disk);
+        assert_eq!(s.segment_state(3), SegState::Ram);
+        // globals never evicted
+        assert_eq!(s.segment_state(0), SegState::Ram);
+    }
+
+    #[test]
+    fn resident_bytes_drop_on_offload() {
+        let dir = tdir("bytes");
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(4).unwrap();
+        let full = s.resident_bytes();
+        s.enable_sharding(&dir, 3).unwrap();
+        s.offload(1).unwrap();
+        assert!(s.resident_bytes() < full);
+    }
+
+    #[test]
+    fn dirty_tracking_persists_updates() {
+        let dir = tdir("dirty");
+        let mut s = ParamStore::new(&tiny_info());
+        s.with_optimizer_state();
+        s.init_random(5).unwrap();
+        s.enable_sharding(&dir, 3).unwrap();
+        {
+            let (p, m, _v) = s.get_param_and_state("blocks.0.w").unwrap();
+            p.as_f32_mut().unwrap()[0] = 99.0;
+            m.as_f32_mut().unwrap()[0] = 42.0;
+        }
+        s.offload(1).unwrap();
+        s.fetch(1).unwrap();
+        assert_eq!(s.get("blocks.0.w").unwrap().as_f32().unwrap()[0], 99.0);
+        let (_, m, _) = s.get_param_and_state("blocks.0.w").unwrap();
+        assert_eq!(m.as_f32().unwrap()[0], 42.0);
+    }
+
+    #[test]
+    fn clean_offload_skips_write() {
+        let dir = tdir("clean");
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(6).unwrap();
+        s.enable_sharding(&dir, 3).unwrap();
+        s.offload(1).unwrap();
+        s.fetch(1).unwrap();
+        let written_before = s.stats.bytes_written;
+        s.offload(1).unwrap(); // not dirty -> no rewrite
+        assert_eq!(s.stats.bytes_written, written_before);
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let dir = tdir("ckpt");
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(8).unwrap();
+        let p = dir.join("model.safetensors");
+        s.export_safetensors(&p, false).unwrap();
+        let mut s2 = ParamStore::new(&tiny_info());
+        s2.init_random(999).unwrap();
+        s2.load_safetensors(&p).unwrap();
+        assert_eq!(s.get("wte").unwrap(), s2.get("wte").unwrap());
+        assert_eq!(s.get("blocks.1.w").unwrap(), s2.get("blocks.1.w").unwrap());
+    }
+
+    #[test]
+    fn export_includes_opt_state() {
+        let dir = tdir("opt");
+        let mut s = ParamStore::new(&tiny_info());
+        s.with_optimizer_state();
+        s.init_random(9).unwrap();
+        {
+            let (_, m, _) = s.get_param_and_state("wte").unwrap();
+            m.as_f32_mut().unwrap()[0] = 5.0;
+        }
+        let p = dir.join("ckpt.safetensors");
+        s.export_safetensors(&p, true).unwrap();
+        let mut s2 = ParamStore::new(&tiny_info());
+        s2.with_optimizer_state();
+        s2.init_random(10).unwrap();
+        s2.load_safetensors(&p).unwrap();
+        let (_, m, _) = s2.get_param_and_state("wte").unwrap();
+        assert_eq!(m.as_f32().unwrap()[0], 5.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut s = ParamStore::new(&tiny_info());
+        let bad = HostTensor::zeros(crate::tensor::DType::F32, &[2, 2]);
+        assert!(s.insert("wte", bad).is_err());
+    }
+
+    #[test]
+    fn ordered_matches_spec_order() {
+        let mut s = ParamStore::new(&tiny_info());
+        s.init_random(11).unwrap();
+        let v = s.ordered().unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].shape(), &[8, 4]); // wte first
+    }
+}

@@ -1,0 +1,296 @@
+//! The execution engine: a thin, fast wrapper over the `xla` crate's PJRT
+//! CPU client.
+//!
+//! Responsibilities:
+//!   * load `artifacts/<name>.hlo.txt` (HLO **text** — see DESIGN.md §6),
+//!     compile to a `PjRtLoadedExecutable`, and cache it for the process
+//!     lifetime (compilation happens once per artifact per run);
+//!   * marshal [`HostTensor`]s to/from XLA literals with shape/dtype
+//!     validation against the manifest;
+//!   * account every call: execute wall time, transfer bytes, call counts
+//!     per artifact (feeds the metrics observer and EXPERIMENTS.md §Perf).
+//!
+//! Python never runs here — the artifacts are self-contained HLO.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::manifest::{ArtifactInfo, Manifest};
+use crate::tensor::{DType, HostTensor};
+
+/// Per-artifact execution statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactStats {
+    pub calls: u64,
+    pub exec_s: f64,
+    pub marshal_s: f64,
+    pub compile_s: f64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub per_artifact: HashMap<String, ArtifactStats>,
+}
+
+impl EngineStats {
+    pub fn total_exec_s(&self) -> f64 {
+        self.per_artifact.values().map(|s| s.exec_s).sum()
+    }
+
+    pub fn total_marshal_s(&self) -> f64 {
+        self.per_artifact.values().map(|s| s.marshal_s).sum()
+    }
+
+    pub fn total_compile_s(&self) -> f64 {
+        self.per_artifact.values().map(|s| s.compile_s).sum()
+    }
+
+    pub fn total_calls(&self) -> u64 {
+        self.per_artifact.values().map(|s| s.calls).sum()
+    }
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = EngineStats::default();
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Drop a compiled executable (frees its memory; it will recompile on
+    /// next use).  The layerwise trainer uses this to keep only the
+    /// executables of the active phase resident on tight devices.
+    pub fn evict(&self, name: &str) {
+        self.cache.borrow_mut().remove(name);
+    }
+
+    fn executable(&self, info: &ArtifactInfo) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&info.name) {
+            return Ok(exe.clone());
+        }
+        let path = info.path(&self.manifest.dir);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!(
+            "parse HLO text {}: {e} — rebuild artifacts", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("XLA compile {}: {e}", info.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats
+            .borrow_mut()
+            .per_artifact
+            .entry(info.name.clone())
+            .or_default()
+            .compile_s += dt;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (so first-step latency excludes compiles).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        let info = self.manifest.artifact(name)?.clone();
+        self.executable(&info).map(|_| ())
+    }
+
+    /// Upload a host tensor to a device buffer.
+    ///
+    /// NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` (the
+    /// literal-taking variant): the underlying C shim converts each input
+    /// literal to a device buffer and never releases it, leaking the full
+    /// input size on every call (~4 MiB/step at gpt2-124m-sim scale; see
+    /// EXPERIMENTS.md §Perf).  Creating buffers here keeps ownership in
+    /// Rust so `Drop` frees them — and lets callers keep hot parameters
+    /// device-resident across steps.
+    pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        match t {
+            HostTensor::F32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow::anyhow!("upload f32: {e}")),
+            HostTensor::I32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow::anyhow!("upload i32: {e}")),
+        }
+    }
+
+    fn from_literal(lit: &Literal, dtype: DType, shape: &[usize]) -> Result<HostTensor> {
+        match dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal read (f32): {e}"))?;
+                HostTensor::from_f32(shape, v)
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal read (i32): {e}"))?;
+                HostTensor::from_i32(shape, v)
+            }
+        }
+    }
+
+    fn validate_inputs(info: &ArtifactInfo, inputs: &[&HostTensor]) -> Result<()> {
+        if inputs.len() != info.inputs.len() {
+            bail!("artifact {}: expected {} inputs, got {}",
+                  info.name, info.inputs.len(), inputs.len());
+        }
+        for (t, spec) in inputs.iter().zip(&info.inputs) {
+            if t.dtype() != spec.dtype {
+                bail!("artifact {} input {:?}: dtype {:?} != {:?}",
+                      info.name, spec.name, t.dtype(), spec.dtype);
+            }
+            if t.shape() != spec.shape.as_slice() {
+                bail!("artifact {} input {:?}: shape {:?} != {:?}",
+                      info.name, spec.name, t.shape(), spec.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact by name with full IO validation.
+    ///
+    /// Inputs must be in manifest order.  Returns outputs in manifest
+    /// order as host tensors.
+    pub fn run(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let info = self.manifest.artifact(name)?.clone();
+        Self::validate_inputs(&info, inputs)?;
+        let exe = self.executable(&info)?;
+
+        let tm0 = Instant::now();
+        let buffers: Vec<PjRtBuffer> =
+            inputs.iter().map(|t| self.upload(t)).collect::<Result<_>>()?;
+        let marshal_in = tm0.elapsed().as_secs_f64();
+        let bytes_in: u64 = inputs.iter().map(|t| t.size_bytes() as u64).sum();
+
+        let te0 = Instant::now();
+        let result = exe
+            .execute_b::<PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", info.name))?;
+        drop(buffers);
+        let out_buf = &result[0][0];
+        let tuple_lit = out_buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("read output of {}: {e}", info.name))?;
+        let exec_s = te0.elapsed().as_secs_f64();
+
+        let tm1 = Instant::now();
+        // Artifacts are lowered with return_tuple=True: the root is a tuple.
+        let parts = tuple_lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose output tuple of {}: {e}", info.name))?;
+        if parts.len() != info.outputs.len() {
+            bail!("artifact {}: expected {} outputs, got {}",
+                  info.name, info.outputs.len(), parts.len());
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&info.outputs) {
+            outs.push(Self::from_literal(lit, spec.dtype, &spec.shape)?);
+        }
+        let marshal_out = tm1.elapsed().as_secs_f64();
+        let bytes_out: u64 = outs.iter().map(|t| t.size_bytes() as u64).sum();
+
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.per_artifact.entry(info.name.clone()).or_default();
+        s.calls += 1;
+        s.exec_s += exec_s;
+        s.marshal_s += marshal_in + marshal_out;
+        s.bytes_in += bytes_in;
+        s.bytes_out += bytes_out;
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine integration tests live in rust/tests/ (they need built
+    // artifacts); here we only test pure helpers.
+    use super::*;
+    use crate::config::manifest::IoSpec;
+
+    fn fake_info() -> ArtifactInfo {
+        ArtifactInfo {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            kind: "evalnll".into(),
+            config: "m".into(),
+            seq: 4,
+            mb: 1,
+            attn: "mea".into(),
+            remat: false,
+            lora_r: 0,
+            inputs: vec![IoSpec {
+                name: "x".into(),
+                dtype: DType::F32,
+                shape: vec![2, 2],
+            }],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn input_validation_rejects_wrong_arity() {
+        let info = fake_info();
+        assert!(Engine::validate_inputs(&info, &[]).is_err());
+    }
+
+    #[test]
+    fn input_validation_rejects_wrong_shape() {
+        let info = fake_info();
+        let bad = HostTensor::zeros(DType::F32, &[2, 3]);
+        assert!(Engine::validate_inputs(&info, &[&bad]).is_err());
+        let good = HostTensor::zeros(DType::F32, &[2, 2]);
+        assert!(Engine::validate_inputs(&info, &[&good]).is_ok());
+    }
+
+    #[test]
+    fn input_validation_rejects_wrong_dtype() {
+        let info = fake_info();
+        let bad = HostTensor::zeros(DType::I32, &[2, 2]);
+        assert!(Engine::validate_inputs(&info, &[&bad]).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+
+pub mod engine;
+
+pub use engine::{Engine, EngineStats};

@@ -1,0 +1,140 @@
+//! Device profiles (paper Tab. 3) for the mobile-constraint simulation.
+//!
+//! Real phones aren't available in this environment, so the constraint
+//! surface — RAM ceiling, compute rate, power draw, battery — is carried
+//! by these profiles.  RAM budgets are scaled 16:1 against the physical
+//! devices (8 GB phone -> 512 MiB process budget) because the sim models
+//! are ~16-60x smaller than the paper's; the *ordering* and the
+//! OOM-without-optimization behaviour (Tab. 6) are what must carry over,
+//! and both are shape-driven, not absolute.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub os: &'static str,
+    pub soc: &'static str,
+    /// physical device RAM (GiB), for documentation
+    pub ram_gb: f64,
+    /// simulated process RSS budget (bytes); scaled 16:1
+    pub ram_budget_bytes: u64,
+    /// sustained CPU throughput (GFLOP/s) for time scaling
+    pub cpu_gflops: f64,
+    /// battery capacity (mAh) and nominal voltage
+    pub battery_mah: f64,
+    pub battery_volts: f64,
+    /// idle + compute power draw (W)
+    pub p_idle: f64,
+    pub p_compute: f64,
+}
+
+const GIB: u64 = 1024 * 1024 * 1024;
+const MIB: u64 = 1024 * 1024;
+
+/// Paper Tab. 3 devices.
+pub const DEVICES: &[DeviceProfile] = &[
+    DeviceProfile {
+        name: "p50-pro",
+        os: "Android 11.0",
+        soc: "Kirin 9000",
+        ram_gb: 8.0,
+        ram_budget_bytes: 512 * MIB,
+        cpu_gflops: 22.0,
+        battery_mah: 4360.0,
+        battery_volts: 3.85,
+        p_idle: 0.9,
+        p_compute: 5.5,
+    },
+    DeviceProfile {
+        name: "nova9-pro",
+        os: "HarmonyOS 2.0",
+        soc: "Snapdragon 778G 4G",
+        ram_gb: 8.0,
+        ram_budget_bytes: 512 * MIB,
+        cpu_gflops: 15.0,
+        battery_mah: 4000.0,
+        battery_volts: 3.85,
+        p_idle: 0.8,
+        p_compute: 4.5,
+    },
+    DeviceProfile {
+        name: "iqoo15",
+        os: "Android 16",
+        soc: "Snapdragon 8 Elite Gen 5",
+        ram_gb: 16.0,
+        ram_budget_bytes: GIB,
+        cpu_gflops: 60.0,
+        battery_mah: 6500.0,
+        battery_volts: 3.85,
+        p_idle: 1.0,
+        p_compute: 8.0,
+    },
+    DeviceProfile {
+        name: "macbook-air-m2",
+        os: "macOS Sequoia 15.6.1",
+        soc: "Apple M2",
+        ram_gb: 16.0,
+        ram_budget_bytes: GIB,
+        cpu_gflops: 110.0,
+        battery_mah: 14000.0,
+        battery_volts: 3.8,
+        p_idle: 2.0,
+        p_compute: 15.0,
+    },
+];
+
+pub fn device(name: &str) -> Result<&'static DeviceProfile> {
+    for d in DEVICES {
+        if d.name == name {
+            return Ok(d);
+        }
+    }
+    bail!("unknown device {name:?}; have {:?}",
+          DEVICES.iter().map(|d| d.name).collect::<Vec<_>>())
+}
+
+impl DeviceProfile {
+    /// Scale a wall-clock duration measured on this host to the device's
+    /// slower CPU (used for reported device-equivalent times).
+    pub fn scale_time(&self, host_seconds: f64, host_gflops: f64) -> f64 {
+        host_seconds * (host_gflops / self.cpu_gflops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_devices_match_paper_table3() {
+        assert_eq!(DEVICES.len(), 4);
+        assert_eq!(device("p50-pro").unwrap().soc, "Kirin 9000");
+        assert_eq!(device("iqoo15").unwrap().ram_gb, 16.0);
+        assert!(device("pixel-9").is_err());
+    }
+
+    #[test]
+    fn ram_budgets_scaled_consistently() {
+        for d in DEVICES {
+            let scale = d.ram_gb * GIB as f64 / d.ram_budget_bytes as f64;
+            assert!((scale - 16.0).abs() < 0.01, "{}: scale {scale}", d.name);
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // 8 GB phones must have tighter budgets than the 16 GB devices
+        let p50 = device("p50-pro").unwrap();
+        let iqoo = device("iqoo15").unwrap();
+        assert!(p50.ram_budget_bytes < iqoo.ram_budget_bytes);
+        assert!(p50.cpu_gflops < iqoo.cpu_gflops);
+    }
+
+    #[test]
+    fn time_scaling() {
+        let d = device("nova9-pro").unwrap();
+        // host 30 GFLOPs, device 15 -> twice as slow
+        assert!((d.scale_time(1.0, 30.0) - 2.0).abs() < 1e-9);
+    }
+}

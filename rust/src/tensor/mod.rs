@@ -1,0 +1,240 @@
+//! Host tensor type + safetensors serialization (Basic Layer).
+
+pub mod safetensors;
+
+use anyhow::{bail, Result};
+
+/// Element types used across the artifact calling convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// Dense host tensor.  Storage is a flat `Vec` in row-major order.
+///
+/// This deliberately mirrors the paper's C++ tensor abstraction (Basic
+/// Layer, Sec. 3.1): a shape + contiguous buffer with explicit, predictable
+/// memory, no autograd — gradients come from the AOT artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] },
+            DType::I32 => HostTensor::I32 { shape: shape.to_vec(), data: vec![0; n] },
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(HostTensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(HostTensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            t => bail!("not a scalar: shape {:?}", t.shape()),
+        }
+    }
+
+    /// Raw little-endian bytes (for safetensors / shard files).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        match self {
+            HostTensor::F32 { data, .. } => {
+                data.iter().flat_map(|v| v.to_le_bytes()).collect()
+            }
+            HostTensor::I32 { data, .. } => {
+                data.iter().flat_map(|v| v.to_le_bytes()).collect()
+            }
+        }
+    }
+
+    pub fn from_le_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * dtype.size() {
+            bail!("byte length {} != {} elements of {:?}", bytes.len(), n, dtype);
+        }
+        match dtype {
+            DType::F32 => {
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(HostTensor::F32 { shape: shape.to_vec(), data })
+            }
+            DType::I32 => {
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(HostTensor::I32 { shape: shape.to_vec(), data })
+            }
+        }
+    }
+
+    /// L2 norm (f32 tensors), used by grad-clip and tests.
+    pub fn l2_norm(&self) -> Result<f64> {
+        let d = self.as_f32()?;
+        Ok(d.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt())
+    }
+
+    /// Max |x| (debugging / divergence checks).
+    pub fn max_abs(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        Ok(d.iter().fold(0.0f32, |m, &x| m.max(x.abs())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shapes() {
+        let t = HostTensor::zeros(DType::F32, &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(HostTensor::from_f32(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(HostTensor::from_f32(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(3.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.scalar().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_f32() {
+        let t = HostTensor::from_f32(&[3], vec![1.0, -2.5, 1e-7]).unwrap();
+        let b = t.to_le_bytes();
+        let t2 = HostTensor::from_le_bytes(DType::F32, &[3], &b).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_i32() {
+        let t = HostTensor::from_i32(&[2, 2], vec![1, -2, 3, i32::MAX]).unwrap();
+        let b = t.to_le_bytes();
+        let t2 = HostTensor::from_le_bytes(DType::I32, &[2, 2], &b).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn le_bytes_length_checked() {
+        assert!(HostTensor::from_le_bytes(DType::F32, &[2], &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let t = HostTensor::from_f32(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((t.l2_norm().unwrap() - 5.0).abs() < 1e-9);
+        assert_eq!(t.max_abs().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn wrong_dtype_access() {
+        let t = HostTensor::zeros(DType::I32, &[2]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+}

@@ -1,0 +1,204 @@
+//! safetensors read/write (paper Sec. 3.2: models load from and export to
+//! the standard Hugging Face formats, so fine-tuned weights round-trip
+//! with the wider ecosystem).
+//!
+//! Format: 8-byte little-endian header length, JSON header mapping tensor
+//! name -> {dtype, shape, data_offsets:[begin,end]} (plus optional
+//! `__metadata__`), then the raw tensor bytes.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{DType, HostTensor};
+use crate::util::json::Json;
+
+fn dtype_tag(dt: DType) -> &'static str {
+    match dt {
+        DType::F32 => "F32",
+        DType::I32 => "I32",
+    }
+}
+
+fn tag_dtype(s: &str) -> Result<DType> {
+    match s {
+        "F32" => Ok(DType::F32),
+        "I32" => Ok(DType::I32),
+        other => bail!("unsupported safetensors dtype {other:?} (f32/i32 build)"),
+    }
+}
+
+/// Serialize tensors (insertion order preserved) + optional metadata.
+pub fn write_safetensors(
+    path: &Path,
+    tensors: &[(String, HostTensor)],
+    metadata: &[(String, String)],
+) -> Result<()> {
+    let mut header = Vec::new();
+    if !metadata.is_empty() {
+        let meta = Json::Obj(
+            metadata.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        header.push(("__metadata__".to_string(), meta));
+    }
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        let nbytes = t.size_bytes();
+        header.push((
+            name.clone(),
+            Json::obj(vec![
+                ("dtype", Json::Str(dtype_tag(t.dtype()).into())),
+                ("shape", Json::Arr(t.shape().iter().map(|&s| Json::from(s)).collect())),
+                ("data_offsets", Json::Arr(vec![Json::from(offset), Json::from(offset + nbytes)])),
+            ]),
+        ));
+        offset += nbytes;
+    }
+    let mut hjson = Json::Obj(header).to_string().into_bytes();
+    // pad header to 8-byte alignment (spec recommendation)
+    while hjson.len() % 8 != 0 {
+        hjson.push(b' ');
+    }
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for (_, t) in tensors {
+            f.write_all(&t.to_le_bytes())?;
+        }
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Parse a safetensors file into (tensors, metadata).
+pub fn read_safetensors(
+    path: &Path,
+) -> Result<(Vec<(String, HostTensor)>, BTreeMap<String, String>)> {
+    let mut f = fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8).context("read header length")?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    if hlen > 100 * 1024 * 1024 {
+        bail!("implausible header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf).context("read header")?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?.trim_end())?;
+    let mut body = Vec::new();
+    f.read_to_end(&mut body)?;
+
+    let mut meta = BTreeMap::new();
+    let mut out = Vec::new();
+    for (name, spec) in header.as_obj()? {
+        if name == "__metadata__" {
+            for (k, v) in spec.as_obj()? {
+                meta.insert(k.clone(), v.as_str()?.to_string());
+            }
+            continue;
+        }
+        let dt = tag_dtype(spec.req("dtype")?.as_str()?)?;
+        let shape: Vec<usize> = spec
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|j| j.as_usize())
+            .collect::<Result<_>>()?;
+        let offs = spec.req("data_offsets")?.as_arr()?;
+        let (b, e) = (offs[0].as_usize()?, offs[1].as_usize()?);
+        if e > body.len() || b > e {
+            bail!("tensor {name:?} offsets [{b},{e}) out of bounds ({} bytes)",
+                  body.len());
+        }
+        let t = HostTensor::from_le_bytes(dt, &shape, &body[b..e])
+            .with_context(|| format!("tensor {name:?}"))?;
+        out.push((name.clone(), t));
+    }
+    Ok((out, meta))
+}
+
+/// Read a single named tensor (used by the shard store for lazy loads).
+pub fn read_tensor(path: &Path, name: &str) -> Result<HostTensor> {
+    let (tensors, _) = read_safetensors(path)?;
+    tensors
+        .into_iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, t)| t)
+        .ok_or_else(|| anyhow!("tensor {name:?} not found in {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("mft-st-{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_multiple_tensors() {
+        let p = tmpdir().join("a.safetensors");
+        let tensors = vec![
+            ("wte".to_string(),
+             HostTensor::from_f32(&[4, 2], (0..8).map(|i| i as f32).collect()).unwrap()),
+            ("tokens".to_string(),
+             HostTensor::from_i32(&[3], vec![5, -1, 7]).unwrap()),
+            ("scalar".to_string(), HostTensor::scalar_f32(2.5)),
+        ];
+        let meta = vec![("model".to_string(), "gpt2-nano".to_string())];
+        write_safetensors(&p, &tensors, &meta).unwrap();
+        let (got, gmeta) = read_safetensors(&p).unwrap();
+        assert_eq!(got, tensors);
+        assert_eq!(gmeta.get("model").unwrap(), "gpt2-nano");
+    }
+
+    #[test]
+    fn read_single_tensor() {
+        let p = tmpdir().join("b.safetensors");
+        let tensors = vec![
+            ("x".to_string(), HostTensor::from_f32(&[2], vec![1.0, 2.0]).unwrap()),
+            ("y".to_string(), HostTensor::from_f32(&[2], vec![3.0, 4.0]).unwrap()),
+        ];
+        write_safetensors(&p, &tensors, &[]).unwrap();
+        let y = read_tensor(&p, "y").unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[3.0, 4.0]);
+        assert!(read_tensor(&p, "z").is_err());
+    }
+
+    #[test]
+    fn empty_metadata_ok() {
+        let p = tmpdir().join("c.safetensors");
+        write_safetensors(&p, &[("t".into(),
+            HostTensor::zeros(DType::F32, &[1]))], &[]).unwrap();
+        let (got, meta) = read_safetensors(&p).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(meta.is_empty());
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let p = tmpdir().join("d.safetensors");
+        fs::write(&p, [255u8; 4]).unwrap();
+        assert!(read_safetensors(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_body_rejected() {
+        let p = tmpdir().join("e.safetensors");
+        write_safetensors(&p, &[("t".into(),
+            HostTensor::from_f32(&[4], vec![1.0; 4]).unwrap())], &[]).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        fs::write(&p, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(read_safetensors(&p).is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! Byte-level BPE tokenizer (trainer + encoder/decoder).
+//!
+//! MobileFineTuner bundles tokenizer support so models fine-tune directly
+//! from on-device text (paper Sec. 3.1, Application Layer).  This is a
+//! from-scratch byte-pair-encoding implementation:
+//!
+//!   * training operates on a word-frequency table (corpus split on
+//!     whitespace, the space attached to the following word GPT-2-style),
+//!     merging the most frequent adjacent symbol pair until the vocab is
+//!     full;
+//!   * encoding applies merges by rank with a per-word cache;
+//!   * the vocabulary serializes to JSON and round-trips exactly.
+//!
+//! Token id layout: 0 = PAD, 1 = BOS, 2 = EOS, 3..258 = raw bytes,
+//! 259.. = merges.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const BYTE_BASE: u32 = 3;
+pub const N_SPECIAL: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge list in rank order: (left, right) -> new id BYTE_BASE+256+rank
+    merges: Vec<(u32, u32)>,
+    merge_rank: HashMap<(u32, u32), u32>,
+    /// decoded bytes per token id
+    decode_table: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    pub fn vocab_size(&self) -> usize {
+        self.decode_table.len()
+    }
+
+    /// Train on a corpus to the target vocabulary size.
+    pub fn train(corpus: &str, vocab_size: usize) -> Result<Tokenizer> {
+        let min_vocab = (N_SPECIAL + 256) as usize;
+        if vocab_size < min_vocab {
+            bail!("vocab_size must be >= {min_vocab}");
+        }
+        // word frequency table; spaces attach to the following word so
+        // decoding is lossless.
+        let mut word_freq: HashMap<Vec<u32>, u64> = HashMap::new();
+        for word in split_words(corpus) {
+            let ids: Vec<u32> =
+                word.as_bytes().iter().map(|&b| BYTE_BASE + b as u32).collect();
+            *word_freq.entry(ids).or_insert(0) += 1;
+        }
+
+        let mut words: Vec<(Vec<u32>, u64)> = word_freq.into_iter().collect();
+        words.sort(); // deterministic order
+
+        let n_merges = vocab_size - min_vocab;
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut next_id = BYTE_BASE + 256;
+
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut pair_counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for (w, f) in &words {
+                for pair in w.windows(2) {
+                    *pair_counts.entry((pair[0], pair[1])).or_insert(0) += f;
+                }
+            }
+            // most frequent pair; ties broken by smallest ids (determinism)
+            let best = pair_counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+                .map(|(&p, &c)| (p, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break; // no productive merges left
+            }
+            merges.push(pair);
+            for (w, _) in &mut words {
+                merge_in_place(w, pair, next_id);
+            }
+            next_id += 1;
+        }
+
+        Ok(Self::from_merges(merges))
+    }
+
+    fn from_merges(merges: Vec<(u32, u32)>) -> Tokenizer {
+        let mut decode_table: Vec<Vec<u8>> = Vec::new();
+        decode_table.push(b"<pad>".to_vec());
+        decode_table.push(b"<bos>".to_vec());
+        decode_table.push(b"<eos>".to_vec());
+        for b in 0u16..256 {
+            decode_table.push(vec![b as u8]);
+        }
+        let mut merge_rank = HashMap::new();
+        for (rank, &(a, b)) in merges.iter().enumerate() {
+            let bytes = [decode_table[a as usize].clone(),
+                         decode_table[b as usize].clone()].concat();
+            decode_table.push(bytes);
+            merge_rank.insert((a, b), rank as u32);
+        }
+        Tokenizer { merges, merge_rank, decode_table }
+    }
+
+    /// Encode text (no special tokens added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3 + 1);
+        let mut cache: HashMap<&str, Vec<u32>> = HashMap::new();
+        for word in split_words(text) {
+            if let Some(ids) = cache.get(word) {
+                out.extend_from_slice(ids);
+                continue;
+            }
+            let ids = self.encode_word(word);
+            out.extend_from_slice(&ids);
+            cache.insert(word, ids);
+        }
+        out
+    }
+
+    fn encode_word(&self, word: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> =
+            word.as_bytes().iter().map(|&b| BYTE_BASE + b as u32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, usize)> = None;
+            for (i, pair) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.merge_rank.get(&(pair[0], pair[1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank as usize];
+            let new_id = BYTE_BASE + 256 + rank;
+            merge_in_place(&mut ids, pair, new_id);
+        }
+        ids
+    }
+
+    /// Decode ids back to text (special tokens skipped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id < N_SPECIAL {
+                continue;
+            }
+            if let Some(b) = self.decode_table.get(id as usize) {
+                bytes.extend_from_slice(b);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Token id for a short string, if it encodes to exactly one token.
+    pub fn single_token(&self, s: &str) -> Option<u32> {
+        let ids = self.encode(s);
+        if ids.len() == 1 { Some(ids[0]) } else { None }
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let merges: Vec<Json> = self
+            .merges
+            .iter()
+            .map(|&(a, b)| Json::Arr(vec![Json::from(a as usize), Json::from(b as usize)]))
+            .collect();
+        let j = Json::obj(vec![
+            ("format", Json::Str("mft-bpe-v1".into())),
+            ("merges", Json::Arr(merges)),
+        ]);
+        std::fs::write(path, j.to_string()).with_context(|| format!("write {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read tokenizer {path:?}"))?;
+        let j = Json::parse(&text)?;
+        if j.req("format")?.as_str()? != "mft-bpe-v1" {
+            bail!("unknown tokenizer format");
+        }
+        let merges = j
+            .req("merges")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = p.as_arr()?;
+                Ok((p[0].as_usize()? as u32, p[1].as_usize()? as u32))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self::from_merges(merges))
+    }
+}
+
+/// Split into words, attaching leading whitespace to the following word.
+fn split_words(text: &str) -> impl Iterator<Item = &str> {
+    let bytes = text.as_bytes();
+    let mut spans = Vec::new();
+    let mut start = 0usize;
+    let mut i = 0usize;
+    let mut in_ws = true;
+    while i < bytes.len() {
+        let is_ws = bytes[i].is_ascii_whitespace();
+        if is_ws && !in_ws {
+            spans.push((start, i));
+            start = i;
+            in_ws = true;
+        } else if !is_ws && in_ws {
+            in_ws = false;
+        }
+        i += 1;
+    }
+    if start < bytes.len() {
+        spans.push((start, bytes.len()));
+    }
+    spans.into_iter().map(move |(a, b)| &text[a..b])
+}
+
+fn merge_in_place(ids: &mut Vec<u32>, pair: (u32, u32), new_id: u32) {
+    let mut w = 0usize;
+    let mut r = 0usize;
+    while r < ids.len() {
+        if r + 1 < ids.len() && ids[r] == pair.0 && ids[r + 1] == pair.1 {
+            ids[w] = new_id;
+            r += 2;
+        } else {
+            ids[w] = ids[r];
+            r += 1;
+        }
+        w += 1;
+    }
+    ids.truncate(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the quick brown fox jumps over the lazy dog. \
+        the dog sleeps. the fox runs. the quick dog jumps over the brown fox. \
+        lazy lazy lazy dogs sleep all day. quick foxes jump.";
+
+    #[test]
+    fn roundtrip_exact() {
+        let tok = Tokenizer::train(CORPUS, 300).unwrap();
+        for text in [CORPUS, "the quick fox", "unseen wörds with ütf8 😀",
+                     "  leading spaces", "trailing  "] {
+            let ids = tok.encode(text);
+            assert_eq!(tok.decode(&ids), text, "roundtrip of {text:?}");
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let tok = Tokenizer::train(CORPUS, 400).unwrap();
+        let ids = tok.encode("the quick brown fox");
+        assert!(ids.len() < "the quick brown fox".len(),
+                "expected compression, got {} tokens", ids.len());
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let tok = Tokenizer::train(CORPUS, 300).unwrap();
+        assert!(tok.vocab_size() <= 300);
+        let ids = tok.encode(CORPUS);
+        assert!(ids.iter().all(|&i| (i as usize) < tok.vocab_size()));
+    }
+
+    #[test]
+    fn min_vocab_enforced() {
+        assert!(Tokenizer::train(CORPUS, 10).is_err());
+        // byte-only vocab works
+        let tok = Tokenizer::train(CORPUS, 259).unwrap();
+        assert_eq!(tok.encode("ab"), vec![BYTE_BASE + 97, BYTE_BASE + 98]);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Tokenizer::train(CORPUS, 320).unwrap();
+        let b = Tokenizer::train(CORPUS, 320).unwrap();
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn encoding_deterministic_and_stable() {
+        let tok = Tokenizer::train(CORPUS, 350).unwrap();
+        assert_eq!(tok.encode("the quick dog"), tok.encode("the quick dog"));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let tok = Tokenizer::train(CORPUS, 330).unwrap();
+        let p = std::env::temp_dir().join(format!("mft-tok-{}.json", std::process::id()));
+        tok.save(&p).unwrap();
+        let tok2 = Tokenizer::load(&p).unwrap();
+        assert_eq!(tok.encode(CORPUS), tok2.encode(CORPUS));
+        assert_eq!(tok.vocab_size(), tok2.vocab_size());
+    }
+
+    #[test]
+    fn single_token_letters() {
+        let tok = Tokenizer::train(CORPUS, 300).unwrap();
+        assert!(tok.single_token("A").is_some());
+        assert!(tok.single_token("the quick").is_none());
+    }
+
+    #[test]
+    fn whitespace_attachment() {
+        let words: Vec<&str> = split_words(" a bb  c").collect();
+        assert_eq!(words, vec![" a", " bb", "  c"]);
+        let words: Vec<&str> = split_words("a b ").collect();
+        assert_eq!(words, vec!["a", " b", " "]);
+    }
+
+    #[test]
+    fn empty_and_unicode() {
+        let tok = Tokenizer::train(CORPUS, 300).unwrap();
+        assert!(tok.encode("").is_empty());
+        let ids = tok.encode("héllo");
+        assert_eq!(tok.decode(&ids), "héllo");
+    }
+}

@@ -1,0 +1,34 @@
+//! Fused micro-step: one whole-model gradient executable per micro-batch.
+//!
+//! This is the unoptimized execution mode (all parameters and — without
+//! remat — all activations resident for the duration of the call), and the
+//! numerical reference the layerwise coordinator is validated against.  It
+//! also stands in for the paper's server-side PyTorch baseline.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::tensor::HostTensor;
+use crate::train::trainer::Trainer;
+
+impl Trainer {
+    pub(crate) fn micro_step_fused(&mut self, batch: &Batch) -> Result<()> {
+        // all segments must be resident for a fused call
+        for seg in 0..self.store.n_segments() {
+            self.store.fetch(seg)?;
+        }
+        let mut inputs: Vec<&HostTensor> = self.store.ordered()?;
+        if let Some(lora) = &self.lora {
+            inputs.extend(lora.ordered());
+            inputs.push(&self.lora_scale_t);
+        }
+        inputs.push(&batch.tokens);
+        inputs.push(&batch.targets);
+        inputs.push(&batch.mask);
+        let mut outs = self.engine.run(&self.names.grad_fused, &inputs)?;
+        let count = outs.pop().expect("count").scalar()?;
+        let loss_sum = outs.pop().expect("loss").scalar()?;
+        self.grads.accumulate(&outs, loss_sum, count)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,200 @@
+//! Gradient accumulation buffers (paper Sec. 4.1.2).
+//!
+//! A large-batch update is split into micro-batches; artifact gradients
+//! (sums over the micro-batch's masked tokens) are accumulated here and a
+//! single optimizer step is taken with the mean over the *total* token
+//! count — bit-equivalent (up to float reassociation) to a large-batch
+//! step, at the memory cost of one micro-batch.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::HostTensor;
+
+#[derive(Debug)]
+pub struct GradBuffer {
+    names: Vec<String>,
+    bufs: HashMap<String, Vec<f32>>,
+    /// summed loss over accumulated micro-batches
+    pub loss_sum: f64,
+    /// summed masked-token count
+    pub count: f64,
+    pub micro_steps: usize,
+}
+
+impl GradBuffer {
+    pub fn new(names_shapes: &[(String, usize)]) -> GradBuffer {
+        let mut bufs = HashMap::new();
+        let mut names = Vec::new();
+        for (n, len) in names_shapes {
+            names.push(n.clone());
+            bufs.insert(n.clone(), vec![0.0; *len]);
+        }
+        GradBuffer { names, bufs, loss_sum: 0.0, count: 0.0, micro_steps: 0 }
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Accumulate one micro-batch: `grads` in `names` order, plus the
+    /// artifact's (loss_sum, count) scalars.
+    pub fn accumulate(&mut self, grads: &[HostTensor], loss_sum: f32,
+                      count: f32) -> Result<()> {
+        if grads.len() != self.names.len() {
+            bail!("grad count {} != expected {}", grads.len(), self.names.len());
+        }
+        for (name, g) in self.names.iter().zip(grads) {
+            let buf = self.bufs.get_mut(name).unwrap();
+            let src = g.as_f32()?;
+            if src.len() != buf.len() {
+                bail!("grad {name:?}: length {} != {}", src.len(), buf.len());
+            }
+            for (b, &s) in buf.iter_mut().zip(src) {
+                *b += s;
+            }
+        }
+        self.loss_sum += loss_sum as f64;
+        self.count += count as f64;
+        self.micro_steps += 1;
+        Ok(())
+    }
+
+    /// Mean loss per token over everything accumulated.
+    pub fn mean_loss(&self) -> f64 {
+        if self.count == 0.0 { 0.0 } else { self.loss_sum / self.count }
+    }
+
+    /// Scale all gradients by 1/count (sum-of-token-nll -> mean), making
+    /// the update independent of the accumulation split.
+    pub fn finalize_mean(&mut self) {
+        let inv = if self.count == 0.0 { 0.0 } else { (1.0 / self.count) as f32 };
+        for buf in self.bufs.values_mut() {
+            for x in buf.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.bufs
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("no grad buffer {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        self.bufs
+            .get_mut(name)
+            .map(|v| v.as_mut_slice())
+            .ok_or_else(|| anyhow!("no grad buffer {name:?}"))
+    }
+
+    /// Mutable views over all buffers (for global-norm clipping).
+    pub fn all_mut(&mut self) -> Vec<&mut [f32]> {
+        let names = self.names.clone();
+        let mut out: Vec<&mut [f32]> = Vec::with_capacity(names.len());
+        // safe split borrows: HashMap values are distinct allocations
+        for n in &names {
+            let p = self.bufs.get_mut(n).unwrap() as *mut Vec<f32>;
+            out.push(unsafe { (*p).as_mut_slice() });
+        }
+        out
+    }
+
+    /// Reset for the next optimizer step.
+    pub fn zero(&mut self) {
+        for buf in self.bufs.values_mut() {
+            buf.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.loss_sum = 0.0;
+        self.count = 0.0;
+        self.micro_steps = 0;
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bufs.values().map(|b| b.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf() -> GradBuffer {
+        GradBuffer::new(&[("a".into(), 2), ("b".into(), 3)])
+    }
+
+    fn grads(va: f32, vb: f32) -> Vec<HostTensor> {
+        vec![
+            HostTensor::from_f32(&[2], vec![va; 2]).unwrap(),
+            HostTensor::from_f32(&[3], vec![vb; 3]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn accumulates_sums() {
+        let mut g = buf();
+        g.accumulate(&grads(1.0, 2.0), 10.0, 4.0).unwrap();
+        g.accumulate(&grads(0.5, 1.0), 6.0, 4.0).unwrap();
+        assert_eq!(g.get("a").unwrap(), &[1.5, 1.5]);
+        assert_eq!(g.get("b").unwrap(), &[3.0, 3.0, 3.0]);
+        assert_eq!(g.loss_sum, 16.0);
+        assert_eq!(g.count, 8.0);
+        assert_eq!(g.micro_steps, 2);
+        assert!((g.mean_loss() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finalize_mean_divides_by_count() {
+        let mut g = buf();
+        g.accumulate(&grads(8.0, 8.0), 8.0, 4.0).unwrap();
+        g.finalize_mean();
+        assert_eq!(g.get("a").unwrap(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn split_invariance() {
+        // accumulating [4 tokens] once == accumulating [2]+[2] halves
+        let mut one = buf();
+        one.accumulate(&grads(4.0, 2.0), 8.0, 4.0).unwrap();
+        one.finalize_mean();
+
+        let mut two = buf();
+        two.accumulate(&grads(2.0, 1.0), 4.0, 2.0).unwrap();
+        two.accumulate(&grads(2.0, 1.0), 4.0, 2.0).unwrap();
+        two.finalize_mean();
+
+        assert_eq!(one.get("a").unwrap(), two.get("a").unwrap());
+        assert_eq!(one.get("b").unwrap(), two.get("b").unwrap());
+        assert_eq!(one.mean_loss(), two.mean_loss());
+    }
+
+    #[test]
+    fn zero_resets() {
+        let mut g = buf();
+        g.accumulate(&grads(1.0, 1.0), 1.0, 1.0).unwrap();
+        g.zero();
+        assert_eq!(g.get("a").unwrap(), &[0.0, 0.0]);
+        assert_eq!(g.loss_sum, 0.0);
+        assert_eq!(g.micro_steps, 0);
+    }
+
+    #[test]
+    fn rejects_mismatched_grads() {
+        let mut g = buf();
+        let wrong = vec![HostTensor::from_f32(&[2], vec![0.0; 2]).unwrap()];
+        assert!(g.accumulate(&wrong, 0.0, 0.0).is_err());
+        let wrong_len = vec![
+            HostTensor::from_f32(&[3], vec![0.0; 3]).unwrap(),
+            HostTensor::from_f32(&[3], vec![0.0; 3]).unwrap(),
+        ];
+        assert!(g.accumulate(&wrong_len, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        assert_eq!(buf().bytes(), (2 + 3) * 4);
+    }
+}

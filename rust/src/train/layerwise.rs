@@ -1,0 +1,144 @@
+//! Layerwise micro-step: the coordinator drives the model one transformer
+//! block at a time (paper Sec. 4.1.1 + 4.1.3 combined).
+//!
+//! Forward: embed -> block 0..L-1 -> head, retaining only each block's
+//! *input* activation (the activation-checkpoint set).  Backward: the head
+//! artifact returns dx; each block's backward artifact *recomputes* its
+//! forward internally from the retained input — no attention probabilities
+//! or MLP intermediates survive between passes.  With sharding enabled the
+//! store keeps at most `max_resident_blocks` block segments in RAM and
+//! streams the rest from disk, exactly Fig. 4's active-segment scheme.
+//!
+//! Memory profile per micro-batch (vs fused):
+//!   fused:      all params + all per-layer intermediates (incl. [B,H,S,S]
+//!               with naive attention)
+//!   layerwise:  <= k block segments + (L+1) block inputs [B,S,D] + one
+//!               block's transient working set
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Batch;
+use crate::tensor::HostTensor;
+use crate::train::trainer::Trainer;
+
+impl Trainer {
+    pub(crate) fn micro_step_layerwise(&mut self, batch: &Batch) -> Result<()> {
+        let n_layers = self.info.n_layers;
+        let is_lora = self.lora.is_some();
+
+        // ---- forward ----
+        self.store.fetch(0)?; // globals
+        let mut em_in: Vec<&HostTensor> = vec![&batch.tokens];
+        let wte = self.store.get("wte")?;
+        em_in.push(wte);
+        let wpe_held;
+        if self.info.family == "gpt2" {
+            wpe_held = self.store.get("wpe")?.clone();
+            em_in.push(&wpe_held);
+        }
+        let mut x = self.engine.run(&self.names.embedfwd, &em_in)?.remove(0);
+
+        // retained activations: block inputs only (checkpoint set)
+        let mut xs: Vec<HostTensor> = Vec::with_capacity(n_layers + 1);
+        for l in 0..n_layers {
+            self.store.fetch_block(l)?;
+            let bp_names = self.info.block_param_names(l);
+            let mut inputs: Vec<&HostTensor> = vec![&x];
+            for n in &bp_names {
+                inputs.push(self.store.get(n)?);
+            }
+            let lb;
+            if let Some(lora) = &self.lora {
+                lb = lora.block_ordered(l);
+                inputs.extend(lb);
+                inputs.push(&self.lora_scale_t);
+            }
+            let y = self.engine.run(&self.names.blockfwd, &inputs)?.remove(0);
+            xs.push(x);
+            x = y;
+        }
+
+        // ---- head loss + gradient ----
+        self.store.fetch(0)?;
+        let mut hin: Vec<&HostTensor> = vec![&x];
+        for hp in self.info.head_param_names() {
+            hin.push(self.store.get(hp)?);
+        }
+        hin.push(&batch.targets);
+        hin.push(&batch.mask);
+        let mut hout = self.engine.run(&self.names.headlossgrad, &hin)?;
+        let loss_sum = hout[0].scalar()?;
+        let count = hout[1].scalar()?;
+        let mut dx = hout[2].clone();
+        if !is_lora {
+            // head grads: d_lnf_g, d_lnf_b, d_wte (gpt2) / d_rmsf_w, d_wte
+            let head_names = self.info.head_param_names();
+            for (i, hp) in head_names.iter().enumerate() {
+                let g = hout
+                    .get(3 + i)
+                    .ok_or_else(|| anyhow!("missing head grad {hp}"))?;
+                add_into(self.grads.get_mut(hp)?, g)?;
+            }
+        }
+        drop(hout.drain(..));
+
+        // ---- backward through blocks (reverse order) ----
+        for l in (0..n_layers).rev() {
+            self.store.fetch_block(l)?;
+            let bp_names = self.info.block_param_names(l);
+            let mut inputs: Vec<&HostTensor> = vec![&xs[l]];
+            for n in &bp_names {
+                inputs.push(self.store.get(n)?);
+            }
+            let lb;
+            if let Some(lora) = &self.lora {
+                lb = lora.block_ordered(l);
+                inputs.extend(lb);
+                inputs.push(&self.lora_scale_t);
+            }
+            inputs.push(&dx);
+            let mut outs = self.engine.run(&self.names.blockbwd, &inputs)?;
+            dx = outs.remove(0);
+            // release this layer's retained activation immediately
+            xs[l] = HostTensor::from_f32(&[0], vec![])?;
+            if is_lora {
+                let lnames = self.lora.as_ref().unwrap().block_names(l);
+                for (n, g) in lnames.iter().zip(&outs) {
+                    add_into(self.grads.get_mut(n)?, g)?;
+                }
+            } else {
+                for (n, g) in bp_names.iter().zip(&outs) {
+                    add_into(self.grads.get_mut(n)?, g)?;
+                }
+            }
+        }
+
+        // ---- embedding backward (full-FT only; embeddings frozen in LoRA)
+        if !is_lora {
+            let ein: Vec<&HostTensor> = vec![&batch.tokens, &dx];
+            let eout = self.engine.run(&self.names.embedbwd, &ein)?;
+            add_into(self.grads.get_mut("wte")?, &eout[0])?;
+            if self.info.family == "gpt2" {
+                add_into(self.grads.get_mut("wpe")?, &eout[1])?;
+            }
+        }
+
+        // bookkeep loss/count without re-adding grads (they were added
+        // in-place above): bump the scalar accumulators directly.
+        self.grads.loss_sum += loss_sum as f64;
+        self.grads.count += count as f64;
+        self.grads.micro_steps += 1;
+        Ok(())
+    }
+}
+
+fn add_into(dst: &mut [f32], src: &HostTensor) -> Result<()> {
+    let s = src.as_f32()?;
+    if s.len() != dst.len() {
+        anyhow::bail!("grad length {} != buffer {}", s.len(), dst.len());
+    }
+    for (d, &x) in dst.iter_mut().zip(s) {
+        *d += x;
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! LoRA adapter state (paper Sec. 3.2 PEFT workflow).
+//!
+//! The adapter is small (2 * L * targets * d * r params), so it always
+//! stays RAM-resident with its own Adam state, independent of the base
+//! model's sharding policy — exactly the paper's health-agent deployment
+//! shape: frozen base streamed from disk, trainable adapter in memory,
+//! adapter exported to safetensors for the inference app.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::manifest::{ModelInfo, ParamSpec};
+use crate::tensor::safetensors::{read_safetensors, write_safetensors};
+use crate::tensor::HostTensor;
+use crate::util::rng::Pcg;
+
+#[derive(Debug)]
+pub struct LoraState {
+    pub rank: usize,
+    pub specs: Vec<ParamSpec>,
+    tensors: HashMap<String, HostTensor>,
+    m: HashMap<String, Vec<f32>>,
+    v: HashMap<String, Vec<f32>>,
+}
+
+impl LoraState {
+    /// Fresh adapter: A ~ N(0, 0.02), B = 0 (so the initial delta is zero
+    /// and step 0 reproduces the base model exactly).
+    pub fn init(info: &ModelInfo, rank: usize, seed: u64) -> Result<LoraState> {
+        let specs = info.lora_specs(rank)?.to_vec();
+        let mut rng = Pcg::new(seed);
+        let mut tensors = HashMap::new();
+        let mut m = HashMap::new();
+        let mut v = HashMap::new();
+        for s in &specs {
+            let n = s.numel();
+            let data: Vec<f32> = if s.init == "zeros" {
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect()
+            };
+            tensors.insert(s.name.clone(), HostTensor::from_f32(&s.shape, data)?);
+            m.insert(s.name.clone(), vec![0.0; n]);
+            v.insert(s.name.clone(), vec![0.0; n]);
+        }
+        Ok(LoraState { rank, specs, tensors, m, v })
+    }
+
+    /// Adapter tensors in canonical (manifest) order.
+    pub fn ordered(&self) -> Vec<&HostTensor> {
+        self.specs.iter().map(|s| &self.tensors[&s.name]).collect()
+    }
+
+    pub fn names_lens(&self) -> Vec<(String, usize)> {
+        self.specs.iter().map(|s| (s.name.clone(), s.numel())).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("no lora param {name:?}"))
+    }
+
+    /// Borrow (param, m, v) mutably for the optimizer.
+    pub fn param_and_state(&mut self, name: &str)
+                           -> Result<(&mut [f32], &mut [f32], &mut [f32])> {
+        let p = self
+            .tensors
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no lora param {name:?}"))? as *mut HostTensor;
+        let m = self.m.get_mut(name).unwrap() as *mut Vec<f32>;
+        let v = self.v.get_mut(name).unwrap() as *mut Vec<f32>;
+        unsafe { Ok(((*p).as_f32_mut()?, (*m).as_mut_slice(), (*v).as_mut_slice())) }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.specs.iter().map(|s| s.numel()).sum()
+    }
+
+    /// Block-local adapter tensors for layer `l`, ordered (A, B) per target
+    /// — the blockfwdlora/blockbwdlora artifact convention.
+    pub fn block_ordered(&self, layer: usize) -> Vec<&HostTensor> {
+        let prefix = format!("blocks.{layer}.");
+        self.specs
+            .iter()
+            .filter(|s| s.name.starts_with(&prefix))
+            .map(|s| &self.tensors[&s.name])
+            .collect()
+    }
+
+    pub fn block_names(&self, layer: usize) -> Vec<String> {
+        let prefix = format!("blocks.{layer}.");
+        self.specs
+            .iter()
+            .filter(|s| s.name.starts_with(&prefix))
+            .map(|s| s.name.clone())
+            .collect()
+    }
+
+    pub fn export(&self, path: &Path, model: &str, alpha: f32) -> Result<()> {
+        let tensors: Vec<(String, HostTensor)> = self
+            .specs
+            .iter()
+            .map(|s| (s.name.clone(), self.tensors[&s.name].clone()))
+            .collect();
+        let meta = vec![
+            ("model".to_string(), model.to_string()),
+            ("lora_rank".to_string(), self.rank.to_string()),
+            ("lora_alpha".to_string(), alpha.to_string()),
+            ("format".to_string(), "mft-lora-v1".to_string()),
+        ];
+        write_safetensors(path, &tensors, &meta)
+    }
+
+    pub fn load(info: &ModelInfo, rank: usize, path: &Path) -> Result<LoraState> {
+        let mut st = LoraState::init(info, rank, 0)?;
+        let (tensors, _) = read_safetensors(path)?;
+        for (name, t) in tensors {
+            let spec = st
+                .specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow!("unexpected lora tensor {name:?}"))?;
+            if t.shape() != spec.shape.as_slice() {
+                anyhow::bail!("lora {name:?} shape mismatch");
+            }
+            st.tensors.insert(name, t);
+        }
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::manifest::ModelInfo;
+    use std::collections::BTreeMap;
+
+    fn info() -> ModelInfo {
+        let mut lora = BTreeMap::new();
+        lora.insert(4, vec![
+            ParamSpec { name: "blocks.0.lora_q_a".into(), shape: vec![8, 4],
+                        init: "normal".into() },
+            ParamSpec { name: "blocks.0.lora_q_b".into(), shape: vec![4, 8],
+                        init: "zeros".into() },
+            ParamSpec { name: "blocks.1.lora_q_a".into(), shape: vec![8, 4],
+                        init: "normal".into() },
+            ParamSpec { name: "blocks.1.lora_q_b".into(), shape: vec![4, 8],
+                        init: "zeros".into() },
+        ]);
+        ModelInfo {
+            name: "t".into(), family: "gpt2".into(), vocab: 8, d_model: 8,
+            n_layers: 2, n_heads: 1, n_kv_heads: 1, d_ff: 8, max_seq: 8,
+            embed_scale: false, n_params: 0, params: vec![], lora,
+        }
+    }
+
+    #[test]
+    fn init_b_zero_a_nonzero() {
+        let st = LoraState::init(&info(), 4, 1).unwrap();
+        assert!(st.get("blocks.0.lora_q_a").unwrap().l2_norm().unwrap() > 0.0);
+        assert_eq!(st.get("blocks.0.lora_q_b").unwrap().l2_norm().unwrap(), 0.0);
+        assert_eq!(st.n_params(), 2 * (8 * 4 + 4 * 8));
+    }
+
+    #[test]
+    fn block_ordering() {
+        let st = LoraState::init(&info(), 4, 2).unwrap();
+        assert_eq!(st.block_names(1),
+                   vec!["blocks.1.lora_q_a", "blocks.1.lora_q_b"]);
+        assert_eq!(st.block_ordered(0).len(), 2);
+    }
+
+    #[test]
+    fn export_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mft-lora-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("adapter.safetensors");
+        let mut st = LoraState::init(&info(), 4, 3).unwrap();
+        {
+            let (pm, _, _) = st.param_and_state("blocks.0.lora_q_b").unwrap();
+            pm[0] = 7.5;
+        }
+        st.export(&p, "t", 16.0).unwrap();
+        let st2 = LoraState::load(&info(), 4, &p).unwrap();
+        assert_eq!(st2.get("blocks.0.lora_q_b").unwrap().as_f32().unwrap()[0], 7.5);
+        assert_eq!(st.get("blocks.1.lora_q_a").unwrap(),
+                   st2.get("blocks.1.lora_q_a").unwrap());
+    }
+
+    #[test]
+    fn missing_rank_errors() {
+        assert!(LoraState::init(&info(), 8, 0).is_err());
+    }
+}

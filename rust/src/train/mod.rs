@@ -1,0 +1,16 @@
+//! Training engine (Abstract + Application layers): optimizers, gradient
+//! accumulation, LoRA state, and the three execution strategies (fused,
+//! layerwise/sharded, emulated-interpreter baseline).
+
+pub mod emulated;
+pub mod fused;
+pub mod grads;
+pub mod layerwise;
+pub mod lora;
+pub mod optimizer;
+pub mod trainer;
+
+pub use grads::GradBuffer;
+pub use lora::LoraState;
+pub use optimizer::{AdamW, OptimizerKind, Sgd};
+pub use trainer::{StepOutput, Trainer};

@@ -1,0 +1,291 @@
+//! The coordinator's training loop core.
+//!
+//! A [`Trainer`] owns the parameter store, optional LoRA adapter, optimizer
+//! and gradient buffers, and executes optimizer steps through one of four
+//! strategies (see [`crate::config::ExecMode`]).  The strategy only changes
+//! *how* micro-batch gradients are produced; accumulation, clipping and the
+//! optimizer update are shared — which is exactly why gradient accumulation
+//! is a free optimization (paper Tab. 7).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::manifest::ModelInfo;
+use crate::config::{ExecMode, Manifest, RunConfig, TrainMode};
+use crate::data::{Batch, DataLoader};
+use crate::model::ParamStore;
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+use crate::train::grads::GradBuffer;
+use crate::train::lora::LoraState;
+use crate::train::optimizer::{clip_global_norm, AdamW};
+
+/// Resolved artifact names for the run (computed once).
+#[derive(Debug, Clone)]
+pub struct ArtifactNames {
+    pub grad_fused: String,
+    pub evalnll: String,
+    pub logitsat: Option<String>,
+    pub embedfwd: String,
+    pub blockfwd: String,
+    pub blockbwd: String,
+    pub headlossgrad: String,
+    pub headloss: String,
+    pub embedbwd: String,
+}
+
+impl ArtifactNames {
+    pub fn resolve(cfg: &RunConfig) -> ArtifactNames {
+        let r = cfg.mode.lora_rank();
+        let attn = Some(cfg.attn.as_str());
+        let remat = cfg.exec == ExecMode::FusedRemat;
+        let m = &cfg.model;
+        let (s, mb) = (cfg.seq, cfg.micro_batch);
+        let gkind = if r > 0 { "gradlora" } else { "gradfull" };
+        let hlg = if r > 0 { "headlossgrad_frozen" } else { "headlossgrad" };
+        ArtifactNames {
+            grad_fused: Manifest::artifact_name(m, s, mb, gkind, attn, r, remat),
+            evalnll: Manifest::artifact_name(m, s, mb, "evalnll", attn, r, false),
+            logitsat: Some(Manifest::artifact_name(m, s, mb, "logitsat", attn, r, false)),
+            embedfwd: Manifest::artifact_name(m, s, mb, "embedfwd", None, 0, false),
+            blockfwd: Manifest::artifact_name(m, s, mb, "blockfwd", attn, r, false),
+            blockbwd: Manifest::artifact_name(m, s, mb, "blockbwd", attn, r, false),
+            headlossgrad: Manifest::artifact_name(m, s, mb, hlg, None, 0, false),
+            headloss: Manifest::artifact_name(m, s, mb, "headloss", None, 0, false),
+            embedbwd: Manifest::artifact_name(m, s, mb, "embedbwd", None, 0, false),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub micro_steps: usize,
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub engine: Rc<Engine>,
+    pub info: ModelInfo,
+    pub store: ParamStore,
+    pub lora: Option<LoraState>,
+    pub opt: AdamW,
+    pub grads: GradBuffer,
+    pub names: ArtifactNames,
+    pub lora_scale_t: HostTensor,
+}
+
+impl Trainer {
+    pub fn new(engine: Rc<Engine>, cfg: RunConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let info = engine.manifest().model(&cfg.model)?.clone();
+        if cfg.seq > info.max_seq {
+            bail!("seq {} exceeds model max_seq {}", cfg.seq, info.max_seq);
+        }
+        let mut store = ParamStore::new(&info);
+        let is_lora = matches!(cfg.mode, TrainMode::Lora { .. });
+        if !is_lora {
+            store.with_optimizer_state();
+        }
+        store.init_random(cfg.seed)?;
+        if let Some(path) = &cfg.init_from {
+            store
+                .load_safetensors(Path::new(path))
+                .with_context(|| format!("load init checkpoint {path}"))?;
+        }
+        let lora = match cfg.mode {
+            TrainMode::Lora { rank } => {
+                Some(LoraState::init(&info, rank, cfg.seed.wrapping_add(1))?)
+            }
+            TrainMode::FullFt => None,
+        };
+        let grads = match &lora {
+            Some(l) => GradBuffer::new(&l.names_lens()),
+            None => GradBuffer::new(
+                &info.params.iter().map(|p| (p.name.clone(), p.numel())).collect::<Vec<_>>()),
+        };
+        let names = ArtifactNames::resolve(&cfg);
+        let opt = AdamW::new(cfg.lr, cfg.weight_decay);
+        let lora_scale_t = HostTensor::scalar_f32(cfg.lora_scale());
+        Ok(Trainer { cfg, engine, info, store, lora, opt, grads, names,
+                     lora_scale_t })
+    }
+
+    /// Enable disk sharding on the parameter store (optimization ④).
+    pub fn enable_sharding(&mut self, dir: &Path, max_resident_blocks: usize)
+                           -> Result<()> {
+        if self.cfg.exec != ExecMode::Layerwise {
+            bail!("sharding requires layerwise execution");
+        }
+        self.store.enable_sharding(dir, max_resident_blocks)
+    }
+
+    /// One optimizer step = `accum_steps` micro-batch gradient passes +
+    /// clip + update.
+    pub fn step(&mut self, loader: &mut DataLoader) -> Result<StepOutput> {
+        self.grads.zero();
+        for _ in 0..self.cfg.accum_steps() {
+            let batch = loader.next_batch(self.cfg.micro_batch);
+            match self.cfg.exec {
+                ExecMode::Fused | ExecMode::FusedRemat => {
+                    self.micro_step_fused(&batch)?
+                }
+                ExecMode::Layerwise => self.micro_step_layerwise(&batch)?,
+                ExecMode::Emulated => self.micro_step_emulated(&batch)?,
+            }
+        }
+        let loss = self.grads.mean_loss();
+        self.grads.finalize_mean();
+        let (norm, _) = clip_global_norm(&mut self.grads.all_mut(),
+                                         self.cfg.grad_clip);
+        self.apply_update()?;
+        Ok(StepOutput { loss, grad_norm: norm,
+                        micro_steps: self.cfg.accum_steps() })
+    }
+
+    fn apply_update(&mut self) -> Result<()> {
+        self.opt.next_step();
+        match &mut self.lora {
+            Some(lora) => {
+                let names: Vec<String> =
+                    lora.specs.iter().map(|s| s.name.clone()).collect();
+                for n in names {
+                    let g = self.grads.get(&n)?.to_vec();
+                    let (p, m, v) = lora.param_and_state(&n)?;
+                    self.opt.update(p, &g, m, v);
+                }
+            }
+            None => {
+                // Full-FT: walk segments so sharded stores fetch/offload
+                // one segment at a time (ZeRO-style update locality).
+                let names = self.store.param_names();
+                let n_seg = self.store.n_segments();
+                for seg in 0..n_seg {
+                    self.store.fetch(seg)?;
+                    for n in &names {
+                        // only params in this segment
+                        if self.store.get(n).is_err() {
+                            continue;
+                        }
+                        if !self.param_in_segment(n, seg) {
+                            continue;
+                        }
+                        let g = self.grads.get(n)?.to_vec();
+                        let (p, m, v) = self.store.get_param_and_state(n)?;
+                        self.opt.update(p.as_f32_mut()?, &g, m.as_f32_mut()?,
+                                        v.as_f32_mut()?);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn param_in_segment(&self, name: &str, seg: usize) -> bool {
+        if seg == 0 {
+            !name.starts_with("blocks.")
+        } else {
+            name.starts_with(&format!("blocks.{}.", seg - 1))
+        }
+    }
+
+    /// Evaluation NLL over `n_batches` deterministic batches.
+    pub fn eval_nll(&mut self, loader: &DataLoader, n_batches: usize)
+                    -> Result<(f64, f64)> {
+        let mb = self.cfg.micro_batch;
+        let mut total_nll = 0.0f64;
+        let mut total_cnt = 0.0f64;
+        for bi in 0..n_batches {
+            let idxs: Vec<usize> =
+                (0..mb).map(|r| (bi * mb + r) % loader.len()).collect();
+            let batch = loader.batch_at(&idxs);
+            let (nll, cnt) = self.eval_batch_nll(&batch)?;
+            total_nll += nll;
+            total_cnt += cnt;
+        }
+        let mean = if total_cnt > 0.0 { total_nll / total_cnt } else { 0.0 };
+        Ok((mean, mean.exp()))
+    }
+
+    pub fn eval_batch_nll(&mut self, batch: &Batch) -> Result<(f64, f64)> {
+        // ensure all params resident for the fused eval graph
+        for seg in 0..self.store.n_segments() {
+            self.store.fetch(seg)?;
+        }
+        let mut inputs: Vec<&HostTensor> = self.store.ordered()?;
+        if let Some(lora) = &self.lora {
+            inputs.extend(lora.ordered());
+            inputs.push(&self.lora_scale_t);
+        }
+        inputs.push(&batch.tokens);
+        inputs.push(&batch.targets);
+        inputs.push(&batch.mask);
+        let outs = self.engine.run(&self.names.evalnll, &inputs)?;
+        Ok((outs[0].scalar()? as f64, outs[1].scalar()? as f64))
+    }
+
+    /// Letter-token MC accuracy (paper's likelihood protocol): compare
+    /// logits at the answer position across the option letters.
+    pub fn eval_accuracy(&mut self, loader: &DataLoader, n_batches: usize)
+                         -> Result<f64> {
+        let Some(logitsat) = self.names.logitsat.clone() else {
+            bail!("no logitsat artifact for this run");
+        };
+        for seg in 0..self.store.n_segments() {
+            self.store.fetch(seg)?;
+        }
+        let mb = self.cfg.micro_batch;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let idxs: Vec<usize> =
+                (0..mb).map(|r| (bi * mb + r) % loader.len()).collect();
+            let batch = loader.batch_at(&idxs);
+            let (Some(pos), Some(labels), Some(n_opts)) =
+                (&batch.answer_pos, &batch.labels, &batch.n_opts) else {
+                bail!("accuracy eval needs an MC dataset");
+            };
+            let pos_t = HostTensor::from_i32(
+                &[mb], pos.iter().map(|&p| p as i32).collect())?;
+            let mut inputs: Vec<&HostTensor> = self.store.ordered()?;
+            if let Some(lora) = &self.lora {
+                inputs.extend(lora.ordered());
+                inputs.push(&self.lora_scale_t);
+            }
+            inputs.push(&batch.tokens);
+            inputs.push(&pos_t);
+            let outs = self.engine.run(&logitsat, &inputs)?;
+            let logits = outs[0].as_f32()?;
+            let vocab = self.info.vocab;
+            for (row, (&label, &k)) in labels.iter().zip(n_opts).enumerate() {
+                let row_logits = &logits[row * vocab..(row + 1) * vocab];
+                let pred = (0..k)
+                    .max_by(|&a, &b| {
+                        let la = row_logits[loader.letter_ids[a] as usize];
+                        let lb = row_logits[loader.letter_ids[b] as usize];
+                        la.partial_cmp(&lb).unwrap()
+                    })
+                    .unwrap_or(0);
+                if pred == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Export the trained model / adapter.
+    pub fn export(&mut self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        match &self.lora {
+            Some(lora) => lora.export(&dir.join("adapter.safetensors"),
+                                      &self.cfg.model, self.cfg.lora_alpha),
+            None => self.store.export_safetensors(
+                &dir.join("model.safetensors"), false),
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Wall/virtual clock abstraction.
+//!
+//! The energy-aware scheduler (paper Sec. 4.2) reasons about hours of
+//! training and battery drain.  Experiments run on a [`Clock::Virtual`]
+//! clock so a 9-hour fine-tuning trace (paper Fig. 11) replays in
+//! milliseconds while exercising the exact same scheduler/monitor code
+//! path; real deployments use [`Clock::Wall`].
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub enum Clock {
+    Wall { start: Instant },
+    Virtual { now_s: RefCell<f64> },
+}
+
+impl Clock {
+    pub fn wall() -> Self {
+        Clock::Wall { start: Instant::now() }
+    }
+
+    pub fn virtual_clock() -> Self {
+        Clock::Virtual { now_s: RefCell::new(0.0) }
+    }
+
+    /// Seconds since clock creation.
+    pub fn now_s(&self) -> f64 {
+        match self {
+            Clock::Wall { start } => start.elapsed().as_secs_f64(),
+            Clock::Virtual { now_s } => *now_s.borrow(),
+        }
+    }
+
+    /// Sleep (wall) or advance (virtual) by `secs`.
+    pub fn sleep(&self, secs: f64) {
+        match self {
+            Clock::Wall { .. } => {
+                if secs > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+                }
+            }
+            Clock::Virtual { now_s } => {
+                *now_s.borrow_mut() += secs.max(0.0);
+            }
+        }
+    }
+
+    /// Record that `secs` of work happened (advances virtual time only —
+    /// on the wall clock real work already advanced it).
+    pub fn advance_work(&self, secs: f64) {
+        if let Clock::Virtual { now_s } = self {
+            *now_s.borrow_mut() += secs.max(0.0);
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_advances_on_sleep_and_work() {
+        let c = Clock::virtual_clock();
+        assert_eq!(c.now_s(), 0.0);
+        c.sleep(10.0);
+        c.advance_work(5.0);
+        assert_eq!(c.now_s(), 15.0);
+    }
+
+    #[test]
+    fn virtual_negative_ignored() {
+        let c = Clock::virtual_clock();
+        c.sleep(-3.0);
+        assert_eq!(c.now_s(), 0.0);
+    }
+
+    #[test]
+    fn wall_monotonic() {
+        let c = Clock::wall();
+        let a = c.now_s();
+        c.sleep(0.002);
+        assert!(c.now_s() >= a + 0.001);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn wall_ignores_advance_work() {
+        let c = Clock::wall();
+        c.advance_work(100.0);
+        assert!(c.now_s() < 1.0);
+    }
+}

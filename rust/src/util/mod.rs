@@ -1,0 +1,39 @@
+//! Shared substrate: JSON, seeded RNG, virtual clock, small helpers.
+
+pub mod clock;
+pub mod json;
+pub mod rng;
+
+/// Format a byte count as a human-readable string (MiB with 1 decimal).
+pub fn fmt_mib(bytes: u64) -> String {
+    format!("{:.1} MiB", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// Format seconds as h/m/s.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.2} h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1} m", secs / 60.0)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_mib_basic() {
+        assert_eq!(fmt_mib(1024 * 1024), "1.0 MiB");
+        assert_eq!(fmt_mib(1536 * 1024), "1.5 MiB");
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert_eq!(fmt_duration(10.0), "10.00 s");
+        assert_eq!(fmt_duration(90.0), "1.5 m");
+        assert_eq!(fmt_duration(7200.0), "2.00 h");
+    }
+}

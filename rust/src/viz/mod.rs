@@ -1,0 +1,150 @@
+//! Training visualizer (paper Sec. 6.4, Fig. 8): a terminal dashboard
+//! decoupled from the training engine.
+//!
+//! `mft viz <run-dir>` tails the run's `steps.jsonl` and renders progress,
+//! loss/PPL sparklines, learning metrics, peak RSS and the live log —
+//! the same panels as the paper's Android visualizer, in a terminal.
+//! `--follow` keeps refreshing while a training process writes.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::metrics::{read_steps, StepRecord};
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render a sparkline of `width` chars from a series.
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    // resample to width buckets (mean per bucket)
+    let mut buckets = Vec::with_capacity(width.min(values.len()));
+    let n_b = width.min(values.len());
+    for b in 0..n_b {
+        let lo = b * values.len() / n_b;
+        let hi = ((b + 1) * values.len() / n_b).max(lo + 1);
+        let mean = values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        buckets.push(mean);
+    }
+    let (min, max) = buckets.iter().fold((f64::INFINITY, f64::NEG_INFINITY),
+                                         |(a, b), &v| (a.min(v), b.max(v)));
+    let span = (max - min).max(1e-12);
+    buckets
+        .iter()
+        .map(|&v| {
+            let idx = (((v - min) / span) * 7.0).round() as usize;
+            SPARK[idx.min(7)]
+        })
+        .collect()
+}
+
+/// Render the dashboard for a set of step records.
+pub fn render(recs: &[StepRecord], total_steps: Option<usize>) -> String {
+    let mut out = String::new();
+    let Some(last) = recs.last() else {
+        return "no steps logged yet\n".into();
+    };
+    let losses: Vec<f64> = recs.iter().map(|r| r.loss).collect();
+    let ppls: Vec<f64> = recs.iter().filter_map(|r| r.test_ppl).collect();
+    let rss: Vec<f64> = recs.iter().map(|r| r.rss_mb).collect();
+
+    let total = total_steps.unwrap_or(last.step);
+    let frac = (last.step as f64 / total.max(1) as f64).clamp(0.0, 1.0);
+    let fill = (frac * 30.0) as usize;
+    out.push_str(&format!(
+        "MobileFineTuner  step {}/{}  [{}{}] {:.0}%\n",
+        last.step, total, "█".repeat(fill), "░".repeat(30 - fill),
+        frac * 100.0));
+    out.push_str(&format!("loss  {:>9.4}  {}\n", last.loss,
+                          sparkline(&losses, 40)));
+    if let Some(p) = ppls.last() {
+        out.push_str(&format!("ppl   {:>9.2}  {}\n", p, sparkline(&ppls, 40)));
+    }
+    if let Some(a) = recs.iter().filter_map(|r| r.test_acc).last() {
+        out.push_str(&format!("acc   {:>8.2}%\n", a * 100.0));
+    }
+    out.push_str(&format!("rss   {:>6.0}MiB  {}   peak {:.0}MiB\n",
+                          last.rss_mb, sparkline(&rss, 40), last.peak_rss_mb));
+    out.push_str(&format!(
+        "bat   {:>7.1}%   energy {:>8.2} kJ   step {:.2}s   t {:.1}s\n",
+        last.battery_pct, last.energy_j / 1000.0, last.step_time_s,
+        last.time_s));
+    out
+}
+
+pub fn cmd_viz(args: &Args) -> Result<()> {
+    let Some(dir) = args.pos(1) else {
+        bail!("usage: mft viz <run-dir> [--follow] [--steps N]");
+    };
+    let dir = Path::new(dir);
+    let total = args.get("steps").and_then(|s| s.parse().ok());
+    let follow = args.has("follow");
+    loop {
+        let recs = read_steps(dir).unwrap_or_default();
+        if follow {
+            print!("\x1b[2J\x1b[H"); // clear screen
+        }
+        print!("{}", render(&recs, total));
+        if !follow {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_shapes() {
+        let s = sparkline(&[1.0, 2.0, 3.0, 4.0], 4);
+        assert_eq!(s.chars().count(), 4);
+        let chars: Vec<char> = s.chars().collect();
+        assert_eq!(chars[0], '▁');
+        assert_eq!(chars[3], '█');
+    }
+
+    #[test]
+    fn sparkline_resamples() {
+        let vals: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = sparkline(&vals, 10);
+        assert_eq!(s.chars().count(), 10);
+    }
+
+    #[test]
+    fn sparkline_constant_series() {
+        let s = sparkline(&[5.0; 8], 8);
+        assert_eq!(s.chars().count(), 8);
+    }
+
+    #[test]
+    fn sparkline_empty() {
+        assert_eq!(sparkline(&[], 10), "");
+    }
+
+    #[test]
+    fn render_empty_and_nonempty() {
+        assert!(render(&[], None).contains("no steps"));
+        let recs = vec![StepRecord {
+            step: 5,
+            loss: 2.0,
+            test_ppl: Some(8.0),
+            test_acc: Some(0.4),
+            rss_mb: 120.0,
+            peak_rss_mb: 150.0,
+            battery_pct: 90.0,
+            ..Default::default()
+        }];
+        let s = render(&recs, Some(10));
+        assert!(s.contains("step 5/10"));
+        assert!(s.contains("loss"));
+        assert!(s.contains("ppl"));
+        assert!(s.contains("40.00%"));
+        assert!(s.contains("peak 150MiB"));
+    }
+}

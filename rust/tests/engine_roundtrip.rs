@@ -1,0 +1,278 @@
+//! Engine <-> artifact integration: load HLO text, compile via PJRT CPU,
+//! execute, and check numerics against invariants the Python tests proved.
+//!
+//! Requires `make artifacts` (the `core` bundle) to have run.
+
+use std::path::PathBuf;
+
+use mft::config::Manifest;
+use mft::runtime::Engine;
+use mft::tensor::{DType, HostTensor};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Engine {
+    Engine::new(&artifact_dir()).expect("run `make artifacts` before cargo test")
+}
+
+/// Deterministic pseudo-random params matching ParamSpec init kinds.
+fn init_params(eng: &Engine, model: &str, seed: u64) -> Vec<(String, HostTensor)> {
+    let mi = eng.manifest().model(model).unwrap();
+    let mut rng = mft::util::rng::Pcg::new(seed);
+    mi.params
+        .iter()
+        .map(|p| {
+            let n = p.numel();
+            let data: Vec<f32> = match p.init.as_str() {
+                "zeros" => vec![0.0; n],
+                "ones" => vec![1.0; n],
+                _ => (0..n).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect(),
+            };
+            (p.name.clone(),
+             HostTensor::from_f32(&p.shape, data).unwrap())
+        })
+        .collect()
+}
+
+fn batch(vocab: usize, mb: usize, seq: usize, seed: u64)
+         -> (HostTensor, HostTensor, HostTensor) {
+    let mut rng = mft::util::rng::Pcg::new(seed);
+    let toks: Vec<i32> = (0..mb * seq).map(|_| rng.below(vocab) as i32).collect();
+    let mut tgts = vec![0i32; mb * seq];
+    for b in 0..mb {
+        for s in 0..seq - 1 {
+            tgts[b * seq + s] = toks[b * seq + s + 1];
+        }
+    }
+    let mut mask = vec![1.0f32; mb * seq];
+    for b in 0..mb {
+        mask[b * seq + seq - 1] = 0.0;
+    }
+    (
+        HostTensor::from_i32(&[mb, seq], toks).unwrap(),
+        HostTensor::from_i32(&[mb, seq], tgts).unwrap(),
+        HostTensor::from_f32(&[mb, seq], mask).unwrap(),
+    )
+}
+
+#[test]
+fn evalnll_runs_and_is_finite() {
+    let eng = engine();
+    for model in ["gpt2-nano", "qwen-nano"] {
+        let mi = eng.manifest().model(model).unwrap();
+        let params = init_params(&eng, model, 1);
+        let (toks, tgts, mask) = batch(mi.vocab, 2, 32, 2);
+        let name = Manifest::artifact_name(model, 32, 2, "evalnll",
+                                           Some("mea"), 0, false);
+        let mut inputs: Vec<HostTensor> =
+            params.iter().map(|(_, t)| t.clone()).collect();
+        inputs.extend([toks, tgts, mask]);
+        let outs = eng.run(&name, &inputs.iter().collect::<Vec<_>>()).unwrap();
+        let nll = outs[0].scalar().unwrap();
+        let count = outs[1].scalar().unwrap();
+        assert_eq!(count, 62.0); // 2 * (32-1) masked positions
+        // random init: per-token nll near ln(vocab)=ln(256)~5.55
+        let per_tok = nll / count;
+        assert!(per_tok > 4.0 && per_tok < 7.0, "{model}: per-tok nll {per_tok}");
+    }
+}
+
+#[test]
+fn mea_and_naive_artifacts_agree() {
+    let eng = engine();
+    let model = "gpt2-nano";
+    let mi = eng.manifest().model(model).unwrap();
+    let params = init_params(&eng, model, 3);
+    let (toks, tgts, mask) = batch(mi.vocab, 2, 32, 4);
+    let mut inputs: Vec<HostTensor> = params.iter().map(|(_, t)| t.clone()).collect();
+    inputs.extend([toks, tgts, mask]);
+    let refs: Vec<&mft::tensor::HostTensor> = inputs.iter().collect();
+    let a = eng.run(&Manifest::artifact_name(model, 32, 2, "evalnll",
+                                             Some("mea"), 0, false), &refs).unwrap();
+    let b = eng.run(&Manifest::artifact_name(model, 32, 2, "evalnll",
+                                             Some("naive"), 0, false), &refs).unwrap();
+    let (na, nb) = (a[0].scalar().unwrap(), b[0].scalar().unwrap());
+    assert!((na - nb).abs() < 1e-2 * na.abs().max(1.0), "{na} vs {nb}");
+}
+
+#[test]
+fn gradfull_layerwise_composition_matches_fused() {
+    // The core coordination invariant: embed -> blocks -> head (+ bwd chain)
+    // executed artifact-by-artifact equals the fused gradient graph.
+    let eng = engine();
+    for model in ["gpt2-nano", "qwen-nano"] {
+        let mi = eng.manifest().model(model).unwrap().clone();
+        let params = init_params(&eng, model, 5);
+        let get = |n: &str| -> HostTensor {
+            params.iter().find(|(pn, _)| pn == n).unwrap().1.clone()
+        };
+        let (toks, tgts, mask) = batch(mi.vocab, 2, 32, 6);
+
+        // fused gradient
+        let gname = Manifest::artifact_name(model, 32, 2, "gradfull",
+                                            Some("mea"), 0, false);
+        let mut inputs: Vec<HostTensor> =
+            params.iter().map(|(_, t)| t.clone()).collect();
+        inputs.extend([toks.clone(), tgts.clone(), mask.clone()]);
+        let fused = eng.run(&gname, &inputs.iter().collect::<Vec<_>>()).unwrap();
+        let fused_loss = fused[fused.len() - 2].scalar().unwrap();
+
+        // layerwise forward
+        let ename = Manifest::artifact_name(model, 32, 2, "embedfwd", None, 0, false);
+        let mut em_in = vec![toks.clone(), get("wte")];
+        if mi.family == "gpt2" {
+            em_in.push(get("wpe"));
+        }
+        let mut x = eng.run(&ename, &em_in.iter().collect::<Vec<_>>()).unwrap().remove(0);
+        let bname = Manifest::artifact_name(model, 32, 2, "blockfwd",
+                                            Some("mea"), 0, false);
+        let mut xs = vec![x.clone()];
+        for l in 0..mi.n_layers {
+            let mut bin = vec![x.clone()];
+            for pn in mi.block_param_names(l) {
+                bin.push(get(&pn));
+            }
+            x = eng.run(&bname, &bin.iter().collect::<Vec<_>>()).unwrap().remove(0);
+            xs.push(x.clone());
+        }
+        // head loss+grad
+        let hname = Manifest::artifact_name(model, 32, 2, "headlossgrad",
+                                            None, 0, false);
+        let mut hin = vec![x];
+        for hp in mi.head_param_names() {
+            hin.push(get(hp));
+        }
+        hin.extend([tgts.clone(), mask.clone()]);
+        let hout = eng.run(&hname, &hin.iter().collect::<Vec<_>>()).unwrap();
+        let lw_loss = hout[0].scalar().unwrap();
+        assert!((lw_loss - fused_loss).abs() < 1e-2 * fused_loss.abs(),
+                "{model}: layerwise {lw_loss} vs fused {fused_loss}");
+
+        // backward through blocks; compare one block-param gradient with
+        // the fused result.
+        let mut dx = hout[2].clone();
+        let bbname = Manifest::artifact_name(model, 32, 2, "blockbwd",
+                                             Some("mea"), 0, false);
+        let mut block_grads: Vec<Vec<HostTensor>> = vec![Vec::new(); mi.n_layers];
+        for l in (0..mi.n_layers).rev() {
+            let mut bin = vec![xs[l].clone()];
+            for pn in mi.block_param_names(l) {
+                bin.push(get(&pn));
+            }
+            bin.push(dx);
+            let mut outs = eng.run(&bbname, &bin.iter().collect::<Vec<_>>()).unwrap();
+            dx = outs.remove(0);
+            block_grads[l] = outs;
+        }
+        // fused grads are ordered like mi.params (globals then blocks)
+        let n_glob = mi.global_param_names().len();
+        let n_block = mi.block_param_names(0).len();
+        for l in 0..mi.n_layers {
+            for j in 0..n_block {
+                let fused_g = &fused[n_glob + l * n_block + j];
+                let lw_g = &block_grads[l][j];
+                let d: f32 = fused_g
+                    .as_f32().unwrap()
+                    .iter()
+                    .zip(lw_g.as_f32().unwrap())
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                let scale = fused_g.max_abs().unwrap().max(1e-3);
+                assert!(d < 2e-2 * scale + 1e-4,
+                        "{model} layer {l} param {j}: max grad diff {d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lora_grad_artifact_runs() {
+    let eng = engine();
+    let model = "qwen-nano";
+    let mi = eng.manifest().model(model).unwrap().clone();
+    let params = init_params(&eng, model, 7);
+    let lora_specs = mi.lora_specs(4).unwrap().to_vec();
+    let mut rng = mft::util::rng::Pcg::new(8);
+    let lora: Vec<HostTensor> = lora_specs
+        .iter()
+        .map(|p| {
+            let n = p.numel();
+            let data = if p.init == "zeros" {
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect()
+            };
+            HostTensor::from_f32(&p.shape, data).unwrap()
+        })
+        .collect();
+    let (toks, tgts, mask) = batch(mi.vocab, 2, 32, 9);
+    let name = Manifest::artifact_name(model, 32, 2, "gradlora",
+                                       Some("mea"), 4, false);
+    let mut inputs: Vec<HostTensor> = params.iter().map(|(_, t)| t.clone()).collect();
+    inputs.extend(lora);
+    inputs.push(HostTensor::scalar_f32(4.0)); // alpha/r = 16/4
+    inputs.extend([toks, tgts, mask]);
+    let outs = eng.run(&name, &inputs.iter().collect::<Vec<_>>()).unwrap();
+    assert_eq!(outs.len(), lora_specs.len() + 2);
+    // B matrices are zero => dA (for q) must be zero, dB nonzero in general
+    for (spec, g) in lora_specs.iter().zip(&outs) {
+        let norm = g.l2_norm().unwrap();
+        if spec.name.ends_with("_a") {
+            assert!(norm < 1e-6, "{}: dA norm {norm} (B=0 => dA=0)", spec.name);
+        } else {
+            assert!(norm > 1e-8, "{}: dB norm {norm}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn logitsat_gathers_positions() {
+    let eng = engine();
+    let model = "gpt2-nano";
+    let mi = eng.manifest().model(model).unwrap();
+    let params = init_params(&eng, model, 10);
+    let (toks, _, _) = batch(mi.vocab, 2, 32, 11);
+    let pos = HostTensor::from_i32(&[2], vec![5, 20]).unwrap();
+    let name = Manifest::artifact_name(model, 32, 2, "logitsat",
+                                       Some("mea"), 0, false);
+    let mut inputs: Vec<HostTensor> = params.iter().map(|(_, t)| t.clone()).collect();
+    inputs.extend([toks, pos]);
+    let outs = eng.run(&name, &inputs.iter().collect::<Vec<_>>()).unwrap();
+    assert_eq!(outs[0].shape(), &[2, mi.vocab]);
+    assert!(outs[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn engine_caches_and_counts() {
+    let eng = engine();
+    let model = "gpt2-nano";
+    let mi = eng.manifest().model(model).unwrap();
+    let params = init_params(&eng, model, 12);
+    let (toks, tgts, mask) = batch(mi.vocab, 2, 32, 13);
+    let name = Manifest::artifact_name(model, 32, 2, "evalnll",
+                                       Some("mea"), 0, false);
+    let mut inputs: Vec<HostTensor> = params.iter().map(|(_, t)| t.clone()).collect();
+    inputs.extend([toks, tgts, mask]);
+    eng.run(&name, &inputs.iter().collect::<Vec<_>>()).unwrap();
+    eng.run(&name, &inputs.iter().collect::<Vec<_>>()).unwrap();
+    let stats = eng.stats();
+    let s = &stats.per_artifact[&name];
+    assert_eq!(s.calls, 2);
+    assert!(s.compile_s > 0.0);
+    assert!(s.exec_s > 0.0);
+    assert_eq!(eng.cached_executables(), 1);
+    eng.evict(&name);
+    assert_eq!(eng.cached_executables(), 0);
+}
+
+#[test]
+fn run_rejects_bad_inputs() {
+    let eng = engine();
+    let name = Manifest::artifact_name("gpt2-nano", 32, 2, "evalnll",
+                                       Some("mea"), 0, false);
+    assert!(eng.run(&name, &[]).is_err());
+    let bad = HostTensor::zeros(DType::F32, &[1]);
+    assert!(eng.run(&name, &[&bad]).is_err());
+}

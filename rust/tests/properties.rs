@@ -1,0 +1,317 @@
+//! Randomized property tests over coordinator invariants.
+//!
+//! `proptest` is not available in the offline registry, so these use the
+//! in-tree PCG RNG with many seeded cases per property — same discipline
+//! (generate, check invariant, shrink-by-seed-report), explicit seeds in
+//! failure messages.
+
+use mft::data::corpus::synthetic_corpus;
+use mft::tensor::safetensors::{read_safetensors, write_safetensors};
+use mft::tensor::{DType, HostTensor};
+use mft::tokenizer::Tokenizer;
+use mft::train::optimizer::{clip_global_norm, AdamW};
+use mft::train::GradBuffer;
+use mft::util::json::Json;
+use mft::util::rng::Pcg;
+
+fn cases(n: usize) -> impl Iterator<Item = u64> {
+    (0..n as u64).map(|i| i * 2654435761 + 12345)
+}
+
+// --- tokenizer --------------------------------------------------------------
+
+#[test]
+fn prop_tokenizer_roundtrip_arbitrary_text() {
+    let corpus = synthetic_corpus(1, 30_000);
+    let tok = Tokenizer::train(&corpus, 600).unwrap();
+    for seed in cases(50) {
+        let mut rng = Pcg::new(seed);
+        // random printable-ish strings incl. unicode + whitespace runs
+        let len = rng.below(200);
+        let mut s = String::new();
+        for _ in 0..len {
+            match rng.below(10) {
+                0 => s.push(' '),
+                1 => s.push('\n'),
+                2 => s.push(char::from_u32(0xE9).unwrap()), // é
+                3 => s.push(char::from_u32(0x1F600).unwrap()), // emoji
+                _ => s.push((b'a' + rng.below(26) as u8) as char),
+            }
+        }
+        let ids = tok.encode(&s);
+        assert_eq!(tok.decode(&ids), s, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_tokenizer_ids_bounded() {
+    let corpus = synthetic_corpus(2, 30_000);
+    let tok = Tokenizer::train(&corpus, 700).unwrap();
+    for seed in cases(20) {
+        let mut rng = Pcg::new(seed);
+        let words: Vec<&str> = corpus.split_whitespace().collect();
+        let mut s = String::new();
+        for _ in 0..rng.below(60) {
+            s.push_str(words[rng.below(words.len())]);
+            s.push(' ');
+        }
+        for id in tok.encode(&s) {
+            assert!((id as usize) < tok.vocab_size(), "seed {seed}: id {id}");
+        }
+    }
+}
+
+// --- json -------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            _ => Json::Str(format!("s{}-\"q\"\n\\x", rng.below(1000))),
+        };
+    }
+    match rng.below(6) {
+        0 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1))
+                       .collect()),
+        1 => Json::Obj((0..rng.below(4))
+                       .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                       .collect()),
+        _ => random_json(rng, 0),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in cases(200) {
+        let mut rng = Pcg::new(seed);
+        let v = random_json(&mut rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("seed {seed}: reparse failed: {e}\n{text}")
+        });
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+// --- safetensors ------------------------------------------------------------
+
+#[test]
+fn prop_safetensors_roundtrip_random_shapes() {
+    let dir = std::env::temp_dir().join(format!("mft-prop-st-{}",
+                                                std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in cases(25) {
+        let mut rng = Pcg::new(seed);
+        let n_tensors = 1 + rng.below(6);
+        let tensors: Vec<(String, HostTensor)> = (0..n_tensors)
+            .map(|i| {
+                let rank = rng.below(4);
+                let shape: Vec<usize> =
+                    (0..rank).map(|_| 1 + rng.below(8)).collect();
+                let n: usize = shape.iter().product();
+                let t = if rng.below(2) == 0 {
+                    HostTensor::from_f32(
+                        &shape,
+                        (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+                } else {
+                    HostTensor::from_i32(
+                        &shape,
+                        (0..n).map(|_| rng.next_u32() as i32).collect()).unwrap()
+                };
+                (format!("t{i}"), t)
+            })
+            .collect();
+        let p = dir.join(format!("{seed}.safetensors"));
+        write_safetensors(&p, &tensors, &[]).unwrap();
+        let (back, _) = read_safetensors(&p).unwrap();
+        assert_eq!(back, tensors, "seed {seed}");
+    }
+}
+
+// --- gradient accumulation ---------------------------------------------------
+
+#[test]
+fn prop_grad_accum_split_invariance() {
+    // accumulating a set of (grad, loss, count) micro-batches must give
+    // the same finalized mean regardless of grouping order.
+    for seed in cases(40) {
+        let mut rng = Pcg::new(seed);
+        let len = 1 + rng.below(16);
+        let n_micro = 1 + rng.below(6);
+        let micro: Vec<(Vec<f32>, f32, f32)> = (0..n_micro)
+            .map(|_| {
+                let g: Vec<f32> =
+                    (0..len).map(|_| rng.normal() as f32).collect();
+                (g, rng.uniform() as f32 * 10.0, 1.0 + rng.below(8) as f32)
+            })
+            .collect();
+
+        let run = |order: &[usize]| {
+            let mut buf = GradBuffer::new(&[("w".into(), len)]);
+            for &i in order {
+                let (g, l, c) = &micro[i];
+                let t = HostTensor::from_f32(&[len], g.clone()).unwrap();
+                buf.accumulate(&[t], *l, *c).unwrap();
+            }
+            buf.finalize_mean();
+            (buf.get("w").unwrap().to_vec(), buf.mean_loss())
+        };
+        let fwd: Vec<usize> = (0..n_micro).collect();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let (ga, la) = run(&fwd);
+        let (gb, lb) = run(&rev);
+        for (a, b) in ga.iter().zip(&gb) {
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0), "seed {seed}");
+        }
+        assert!((la - lb).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+// --- optimizer ----------------------------------------------------------------
+
+#[test]
+fn prop_adamw_descends_convex() {
+    // on f(p) = sum (p - c)^2 the loss must decrease over 50 steps for
+    // random targets/starts.
+    for seed in cases(20) {
+        let mut rng = Pcg::new(seed);
+        let n = 1 + rng.below(10);
+        let c: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+        let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
+        let mut opt = AdamW::new(0.05, 0.0);
+        let loss = |p: &[f32]| -> f32 {
+            p.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        let l0 = loss(&p);
+        for _ in 0..50 {
+            opt.next_step();
+            let g: Vec<f32> =
+                p.iter().zip(&c).map(|(a, b)| 2.0 * (a - b)).collect();
+            opt.update(&mut p, &g, &mut m, &mut v);
+        }
+        let l1 = loss(&p);
+        assert!(l1 < l0 * 0.9 + 1e-4, "seed {seed}: {l0} -> {l1}");
+    }
+}
+
+#[test]
+fn prop_clip_never_increases_norm() {
+    for seed in cases(60) {
+        let mut rng = Pcg::new(seed);
+        let mut a: Vec<f32> =
+            (0..1 + rng.below(20)).map(|_| rng.normal() as f32 * 5.0).collect();
+        let mut b: Vec<f32> =
+            (0..1 + rng.below(20)).map(|_| rng.normal() as f32 * 5.0).collect();
+        let max_norm = rng.uniform() as f32 * 4.0 + 0.1;
+        let (pre, _) = clip_global_norm(&mut [&mut a, &mut b], max_norm);
+        let post = (a.iter().chain(&b).map(|x| (*x as f64) * (*x as f64))
+                    .sum::<f64>()).sqrt();
+        assert!(post <= pre + 1e-6, "seed {seed}");
+        assert!(post <= max_norm as f64 * (1.0 + 1e-4),
+                "seed {seed}: post {post} > {max_norm}");
+    }
+}
+
+// --- datasets -----------------------------------------------------------------
+
+#[test]
+fn prop_mc_tasks_well_formed() {
+    use mft::data::tasks::{generate, TaskKind};
+    for (i, kind) in [TaskKind::Mmlu, TaskKind::ArcEasy, TaskKind::ArcChallenge,
+                      TaskKind::Hellaswag, TaskKind::Piqa, TaskKind::Qnli]
+        .into_iter().enumerate()
+    {
+        for seed in cases(5) {
+            let d = generate(kind, seed + i as u64, 40, 10);
+            assert_eq!(d.train.len() + d.test.len(), 50);
+            for e in d.train.iter().chain(&d.test) {
+                assert!(e.answer < e.options.len(), "{kind:?} seed {seed}");
+                // options must be distinct (else the answer is ambiguous)
+                let mut opts = e.options.clone();
+                opts.sort();
+                opts.dedup();
+                assert_eq!(opts.len(), e.options.len(),
+                           "{kind:?} seed {seed}: duplicate options {:?}",
+                           e.options);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_corpus_loader_masks_are_prefixes() {
+    use mft::data::DataLoader;
+    let corpus = synthetic_corpus(3, 60_000);
+    let tok = Tokenizer::train(&corpus, 512).unwrap();
+    use mft::data::tasks::{generate, TaskKind};
+    let d = generate(TaskKind::Mmlu, 9, 30, 0);
+    for seq in [32, 48, 96] {
+        let dl = DataLoader::from_mc(&tok, &d.train, seq, 1, false).unwrap();
+        for i in 0..10 {
+            let b = dl.batch_at(&[i]);
+            let m = b.mask.as_f32().unwrap();
+            let first_zero = m.iter().position(|&x| x == 0.0)
+                .unwrap_or(m.len());
+            assert!(m[..first_zero].iter().all(|&x| x == 1.0));
+            assert!(m[first_zero..].iter().all(|&x| x == 0.0));
+            // answer position within the supervised prefix
+            let p = b.answer_pos.as_ref().unwrap()[0];
+            assert!(p < first_zero, "seq {seq} row {i}");
+        }
+    }
+}
+
+// --- store / memory -----------------------------------------------------------
+
+#[test]
+fn prop_store_fetch_offload_any_order_preserves_values() {
+    use mft::config::manifest::{ModelInfo, ParamSpec};
+    use mft::model::ParamStore;
+    let info = ModelInfo {
+        name: "p".into(), family: "gpt2".into(), vocab: 8, d_model: 4,
+        n_layers: 4, n_heads: 1, n_kv_heads: 1, d_ff: 8, max_seq: 8,
+        embed_scale: false, n_params: 0,
+        params: (0..4).map(|l| ParamSpec {
+            name: format!("blocks.{l}.w"),
+            shape: vec![6, 6],
+            init: "normal".into(),
+        }).chain([ParamSpec {
+            name: "wte".into(), shape: vec![8, 4], init: "normal".into(),
+        }]).collect(),
+        lora: Default::default(),
+    };
+    for seed in cases(15) {
+        let dir = std::env::temp_dir().join(format!(
+            "mft-prop-store-{}-{seed}", std::process::id()));
+        let mut store = ParamStore::new(&info);
+        store.init_random(seed).unwrap();
+        let originals: Vec<HostTensor> = (0..4)
+            .map(|l| store.get(&format!("blocks.{l}.w")).unwrap().clone())
+            .collect();
+        store.enable_sharding(&dir, 1 + (seed as usize) % 3).unwrap();
+        let mut rng = Pcg::new(seed ^ 0xff);
+        for _ in 0..30 {
+            let l = rng.below(4);
+            store.fetch_block(l).unwrap();
+            let got = store.get(&format!("blocks.{l}.w")).unwrap();
+            assert_eq!(got, &originals[l], "seed {seed} block {l}");
+        }
+    }
+}
+
+#[test]
+fn prop_tensor_bytes_roundtrip() {
+    for seed in cases(40) {
+        let mut rng = Pcg::new(seed);
+        let n = 1 + rng.below(100);
+        let t = HostTensor::from_f32(
+            &[n], (0..n).map(|_| rng.normal() as f32).collect()).unwrap();
+        let b = t.to_le_bytes();
+        let back = HostTensor::from_le_bytes(DType::F32, &[n], &b).unwrap();
+        assert_eq!(t, back, "seed {seed}");
+    }
+}

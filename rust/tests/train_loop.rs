@@ -1,0 +1,205 @@
+//! Training-loop integration tests over the nano artifacts (`core` bundle).
+//!
+//! These pin the coordinator's central claims:
+//!   * full-FT training *learns* (loss drops on the synthetic corpus);
+//!   * the layerwise (sharded-capable) execution path produces the same
+//!     optimization trajectory as the fused reference — the paper's
+//!     correctness experiment (Fig. 9) at test scale;
+//!   * gradient accumulation is split-invariant (Tab. 7 at test scale);
+//!   * sharding to disk changes nothing numerically;
+//!   * the emulated (Termux) mode is slower but numerically identical.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use mft::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
+use mft::data::DataLoader;
+use mft::exp::datasets::assemble;
+use mft::runtime::Engine;
+use mft::train::Trainer;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::new(&artifact_dir()).expect("run `make artifacts` first"))
+}
+
+fn nano_cfg(model: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        task: "corpus".into(),
+        seq: 32,
+        batch: 4,
+        micro_batch: 2,
+        steps: 10,
+        lr: 3e-3,
+        grad_clip: 1.0,
+        mode: TrainMode::FullFt,
+        exec: ExecMode::Fused,
+        attn: AttnImpl::Mea,
+        seed: 42,
+        eval_batches: 2,
+        ..RunConfig::default()
+    }
+}
+
+fn loader(eng: &Engine, cfg: &RunConfig) -> DataLoader {
+    let info = eng.manifest().model(&cfg.model).unwrap().clone();
+    std::env::set_var("MFT_CACHE_DIR",
+                      std::env::temp_dir().join("mft-train-loop-cache"));
+    assemble(&info, &cfg.task, cfg.seq, cfg.seed).unwrap().train
+}
+
+fn run_steps(eng: Rc<Engine>, cfg: RunConfig, n: usize) -> Vec<f64> {
+    let mut dl = loader(&eng, &cfg);
+    let mut tr = Trainer::new(eng, cfg).unwrap();
+    (0..n).map(|_| tr.step(&mut dl).unwrap().loss).collect()
+}
+
+#[test]
+fn fullft_learns_on_corpus() {
+    for model in ["gpt2-nano", "qwen-nano"] {
+        let losses = run_steps(engine(), nano_cfg(model), 25);
+        let first = losses[..3].iter().sum::<f64>() / 3.0;
+        let last = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+        assert!(last < first - 0.3,
+                "{model}: loss did not drop: {first:.3} -> {last:.3}");
+    }
+}
+
+#[test]
+fn layerwise_matches_fused_trajectory() {
+    for model in ["gpt2-nano", "qwen-nano"] {
+        let fused = run_steps(engine(), nano_cfg(model), 6);
+        let mut cfg = nano_cfg(model);
+        cfg.exec = ExecMode::Layerwise;
+        let layerwise = run_steps(engine(), cfg, 6);
+        for (i, (a, b)) in fused.iter().zip(&layerwise).enumerate() {
+            assert!((a - b).abs() < 5e-3 * a.abs().max(1.0),
+                    "{model} step {i}: fused {a} vs layerwise {b}");
+        }
+    }
+}
+
+#[test]
+fn sharded_layerwise_identical_to_unsharded() {
+    let model = "gpt2-nano";
+    let mut cfg = nano_cfg(model);
+    cfg.exec = ExecMode::Layerwise;
+    let plain = run_steps(engine(), cfg.clone(), 5);
+
+    let eng = engine();
+    let mut dl = loader(&eng, &cfg);
+    let mut tr = Trainer::new(eng, cfg).unwrap();
+    let dir = std::env::temp_dir().join(format!("mft-shard-it-{}",
+                                                std::process::id()));
+    tr.enable_sharding(&dir, 1).unwrap();
+    let sharded: Vec<f64> =
+        (0..5).map(|_| tr.step(&mut dl).unwrap().loss).collect();
+    assert!(tr.store.stats.offloads > 0, "sharding never offloaded");
+    for (a, b) in plain.iter().zip(&sharded) {
+        assert!((a - b).abs() < 1e-5, "shard changed numerics: {a} vs {b}");
+    }
+}
+
+#[test]
+fn grad_accum_split_invariant() {
+    // batch 4 as 2x2 vs 4x1 micro-batches: same trajectory
+    let mut a = nano_cfg("gpt2-nano");
+    a.micro_batch = 2;
+    let mut b = nano_cfg("gpt2-nano");
+    b.micro_batch = 1;
+    let la = run_steps(engine(), a, 5);
+    let lb = run_steps(engine(), b, 5);
+    for (x, y) in la.iter().zip(&lb) {
+        assert!((x - y).abs() < 2e-3 * x.abs().max(1.0),
+                "accum split changed trajectory: {x} vs {y}");
+    }
+}
+
+#[test]
+fn lora_only_updates_adapter() {
+    let eng = engine();
+    let mut cfg = nano_cfg("qwen-nano");
+    cfg.mode = TrainMode::Lora { rank: 4 };
+    cfg.lora_alpha = 16.0;
+    let mut dl = loader(&eng, &cfg);
+    let mut tr = Trainer::new(eng, cfg).unwrap();
+    let base_before = tr.store.get("wte").unwrap().clone();
+    let lora_b_before = tr.lora.as_ref().unwrap()
+        .get("blocks.0.lora_q_b").unwrap().clone();
+    for _ in 0..3 {
+        tr.step(&mut dl).unwrap();
+    }
+    assert_eq!(tr.store.get("wte").unwrap(), &base_before,
+               "frozen base moved");
+    assert_ne!(tr.lora.as_ref().unwrap().get("blocks.0.lora_q_b").unwrap(),
+               &lora_b_before, "adapter did not move");
+}
+
+#[test]
+fn remat_matches_plain_fused() {
+    let fused = run_steps(engine(), nano_cfg("gpt2-nano"), 4);
+    let mut cfg = nano_cfg("gpt2-nano");
+    cfg.exec = ExecMode::FusedRemat;
+    let remat = run_steps(engine(), cfg, 4);
+    for (a, b) in fused.iter().zip(&remat) {
+        assert!((a - b).abs() < 1e-4, "remat changed numerics: {a} vs {b}");
+    }
+}
+
+#[test]
+fn emulated_matches_fused_numerics() {
+    let mut cfg = nano_cfg("gpt2-nano");
+    cfg.steps = 3;
+    let fused = run_steps(engine(), cfg.clone(), 3);
+    cfg.exec = ExecMode::Emulated;
+    std::env::set_var("MFT_EAGER_TAX", "0.05"); // keep the test fast
+    let em = run_steps(engine(), cfg, 3);
+    std::env::remove_var("MFT_EAGER_TAX");
+    for (a, b) in fused.iter().zip(&em) {
+        assert!((a - b).abs() < 1e-6, "emulated diverged: {a} vs {b}");
+    }
+}
+
+#[test]
+fn mc_accuracy_evaluation_runs() {
+    let eng = engine();
+    let mut cfg = nano_cfg("gpt2-nano");
+    cfg.task = "piqa".into();
+    cfg.mode = TrainMode::Lora { rank: 4 };
+    let info = eng.manifest().model(&cfg.model).unwrap().clone();
+    let assets = assemble(&info, &cfg.task, cfg.seq, cfg.seed).unwrap();
+    let mut tr = Trainer::new(eng, cfg).unwrap();
+    let acc = tr.eval_accuracy(&assets.test, 4).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    let (nll, ppl) = tr.eval_nll(&assets.test, 4).unwrap();
+    assert!(nll > 0.0 && ppl > 1.0);
+}
+
+#[test]
+fn export_and_reload_checkpoint() {
+    let eng = engine();
+    let cfg = nano_cfg("gpt2-nano");
+    let mut dl = loader(&eng, &cfg);
+    let mut tr = Trainer::new(eng.clone(), cfg.clone()).unwrap();
+    for _ in 0..3 {
+        tr.step(&mut dl).unwrap();
+    }
+    let dir = std::env::temp_dir().join(format!("mft-ckpt-it-{}",
+                                                std::process::id()));
+    tr.export(&dir).unwrap();
+    // reload into a new trainer; eval must match
+    let test = {
+        let info = eng.manifest().model(&cfg.model).unwrap().clone();
+        assemble(&info, "corpus", cfg.seq, cfg.seed).unwrap().test
+    };
+    let (nll_a, _) = tr.eval_nll(&test, 2).unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.init_from = Some(dir.join("model.safetensors").display().to_string());
+    let mut tr2 = Trainer::new(eng, cfg2).unwrap();
+    let (nll_b, _) = tr2.eval_nll(&test, 2).unwrap();
+    assert!((nll_a - nll_b).abs() < 1e-5, "{nll_a} vs {nll_b}");
+}

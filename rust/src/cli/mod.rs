@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   mft train [flags]        one fine-tuning run (worker process)
+//!   mft fleet [flags]        federated fine-tuning over a simulated
+//!                            device fleet (see [`crate::fleet`])
 //!   mft exp <id> [flags]     regenerate a paper table/figure (launcher:
 //!                            spawns `mft train` workers for clean RSS)
 //!   mft agent [flags]        the campus health-agent case study
@@ -127,13 +129,14 @@ pub fn main() -> Result<()> {
     let args = Args::parse(argv);
     match args.pos(0) {
         Some("train") => cmd_train(&args),
+        Some("fleet") => crate::fleet::cmd_fleet(&args),
         Some("exp") => crate::exp::drivers::dispatch(&args),
         Some("agent") => crate::agent::cmd_agent(&args),
         Some("viz") => crate::viz::cmd_viz(&args),
         Some("devices") => cmd_devices(),
         Some("info") => cmd_info(&args),
         Some(other) => bail!("unknown subcommand {other:?}; \
-                              try train|exp|agent|viz|devices|info"),
+                              try train|fleet|exp|agent|viz|devices|info"),
         None => {
             print_help();
             Ok(())
@@ -200,8 +203,15 @@ fn print_help() {
                      --attn mea|naive --shard --device D --energy-k K\n\
                      --energy-mu F --energy-rho F --virtual-clock\n\
                      --out DIR --init-from CKPT --seed N\n\
+           fleet     federated fine-tuning over a simulated device fleet\n\
+                     --clients N --rounds R --local-steps E --window N\n\
+                     --dirichlet-alpha F --agg fedavg|median|trimmed-mean\n\
+                     --select all|resource|random --random-k K --mu F\n\
+                     --rho F --straggler-factor F --battery-min F\n\
+                     --battery-max F --out DIR --seed N\n\
            exp       regenerate a paper experiment:\n\
-                     fig9 table4 table5 fig10 table6 table7 fig11 table8 fig12\n\
+                     fig9 table4 table5 fig10 table6 table7 fig11 table8\n\
+                     fig12 fleet\n\
            agent     campus health-agent case study (train/ask)\n\
            viz       terminal dashboard over a run dir\n\
            devices   list simulated device profiles\n\

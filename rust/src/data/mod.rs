@@ -12,8 +12,10 @@
 
 pub mod corpus;
 pub mod loader;
+pub mod partition;
 pub mod tasks;
 
 pub use corpus::synthetic_corpus;
 pub use loader::{Batch, DataLoader, Split};
+pub use partition::{dirichlet_shards, split_articles};
 pub use tasks::{McExample, TaskData, TaskKind};

@@ -184,6 +184,54 @@ mod tests {
     }
 
     #[test]
+    fn throttle_delay_matches_period_formula() {
+        // below mu the step *period* must become period / (1 - rho), i.e.
+        // the injected delay is step * rho / (1 - rho), for any rho.
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        b.set_level_frac(0.2);
+        for rho in [0.1f64, 0.25, 0.5, 0.75, 0.9] {
+            let mut s = EnergyScheduler::new(1, 0.6, rho);
+            let step_s = 2.0;
+            let delay = s.after_step(&b, &clock, step_s);
+            let expect = step_s * rho / (1.0 - rho);
+            assert!((delay - expect).abs() < 1e-12,
+                    "rho {rho}: delay {delay} != {expect}");
+            let period = step_s + delay;
+            assert!((period - step_s / (1.0 - rho)).abs() < 1e-9,
+                    "rho {rho}: period {period}");
+        }
+    }
+
+    #[test]
+    fn no_throttle_just_above_threshold() {
+        // the threshold is strict (level < mu throttles): a battery
+        // marginally above mu runs at full frequency, marginally below
+        // pays the full rho / (1 - rho) delay.
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        let mut s = EnergyScheduler::new(1, 0.6, 0.5);
+        b.set_level_frac(0.601);
+        assert_eq!(s.after_step(&b, &clock, 1.0), 0.0);
+        assert!(!s.is_throttled());
+        b.set_level_frac(0.599);
+        assert!((s.after_step(&b, &clock, 1.0) - 1.0).abs() < 1e-9);
+        assert!(s.is_throttled());
+    }
+
+    #[test]
+    fn zero_rho_throttles_without_delay() {
+        // rho = 0: the monitor can flag the state but injects no delay
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        b.set_level_frac(0.1);
+        let mut s = EnergyScheduler::new(1, 0.6, 0.0);
+        assert_eq!(s.after_step(&b, &clock, 1.0), 0.0);
+        assert!(s.is_throttled());
+        assert_eq!(clock.now_s(), 0.0);
+    }
+
+    #[test]
     fn paper_fig11_shape() {
         // K=1, mu=60%, rho=50%: per-step interval doubles at the threshold
         // (paper: 0.081 h -> 0.164 h).

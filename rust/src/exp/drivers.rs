@@ -27,8 +27,10 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("fig11") => fig11(args),
         Some("table8") => table8(args),
         Some("fig12") => crate::agent::cmd_agent(args),
+        Some("fleet") => fleet_sweep(args),
         Some(other) => bail!("unknown experiment {other:?}; have \
-            bases fig9 table4 table5 fig10 table6 table7 fig11 table8 fig12"),
+            bases fig9 table4 table5 fig10 table6 table7 fig11 table8 \
+            fig12 fleet"),
         None => bail!("usage: mft exp <id> [flags]"),
     }
 }
@@ -614,6 +616,56 @@ fn fig11(args: &Args) -> Result<()> {
         ("ratio", Json::from(ma / mb.max(1e-12))),
         ("summary", res.summary.clone()),
     ]))
+}
+
+// ===========================================================================
+// Fleet sweep — federated fine-tuning: size x non-IID skew x selection
+// (artifact-free; runs in-process on the fleet's reference objective)
+// ===========================================================================
+
+fn fleet_sweep(args: &Args) -> Result<()> {
+    use crate::fleet::{run_fleet, FleetConfig, SelectPolicy};
+
+    let rounds = args.get_parse("rounds", 5usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    println!("Fleet — federated LoRA over simulated devices \
+              ({rounds} rounds/cell)");
+    println!("{:<8} {:>7} {:>9} | {:>8} {:>8} {:>7} {:>6} {:>6} {:>8}",
+             "clients", "alpha", "policy", "nll0", "nll", "Δnll",
+             "part%", "late", "energy");
+    let mut rows = Vec::new();
+    for &n_clients in &[8usize, 16] {
+        for &alpha in &[100.0f64, 0.1] {
+            for policy in ["all", "resource"] {
+                let mut cfg = FleetConfig::default();
+                cfg.n_clients = n_clients;
+                cfg.rounds = rounds;
+                cfg.dirichlet_alpha = alpha;
+                cfg.policy = SelectPolicy::parse(policy, n_clients / 2)?;
+                cfg.seed = seed;
+                if let Some(out) = args.get("out") {
+                    cfg.out_dir = Some(format!(
+                        "{out}/fleet_c{n_clients}_a{alpha}_{policy}"));
+                }
+                let res = run_fleet(&cfg)?;
+                let g = |k: &str| sum_f(&res.summary, k);
+                println!("{:<8} {:>7} {:>9} | {:>8.4} {:>8.4} {:>7.4} \
+                          {:>5.0}% {:>6.0} {:>6.1}kJ",
+                         n_clients, alpha, policy,
+                         g("initial_nll"), g("final_nll"),
+                         g("nll_improvement"),
+                         g("mean_participation") * 100.0,
+                         g("total_stragglers"), g("total_energy_kj"));
+                rows.push(Json::obj(vec![
+                    ("clients", Json::from(n_clients)),
+                    ("alpha", Json::from(alpha)),
+                    ("policy", Json::from(policy)),
+                    ("summary", res.summary),
+                ]));
+            }
+        }
+    }
+    write_results(args, "fleet", &Json::Arr(rows))
 }
 
 // ===========================================================================

@@ -28,10 +28,19 @@ use crate::util::json::Json;
 /// scale reported times to device-equivalents.  Override with
 /// MFT_HOST_GFLOPS.
 pub fn host_gflops() -> f64 {
-    std::env::var("MFT_HOST_GFLOPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(30.0)
+    const DEFAULT: f64 = 30.0;
+    match std::env::var("MFT_HOST_GFLOPS") {
+        Err(_) => DEFAULT,
+        Ok(v) => match v.parse::<f64>() {
+            Ok(g) if g.is_finite() && g > 0.0 => g,
+            _ => {
+                eprintln!(
+                    "[mft] warning: MFT_HOST_GFLOPS={v:?} is not a positive \
+                     number; falling back to {DEFAULT} GFLOP/s");
+                DEFAULT
+            }
+        },
+    }
 }
 
 #[derive(Debug, Clone)]

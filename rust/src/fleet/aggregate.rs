@@ -1,0 +1,249 @@
+//! Adapter-delta aggregation strategies.
+//!
+//! The coordinator combines per-client LoRA deltas into one global update
+//! through the [`Aggregator`] trait, so aggregation policy is pluggable:
+//! [`FedAvg`] (sample-count-weighted mean — McMahan et al.) is the
+//! default; [`CoordMedian`] and [`TrimmedMean`] are the classic
+//! robust-statistics variants that survive a few corrupted or divergent
+//! clients; PAE-MobiLLM-style privacy-aware additive side-tuning slots in
+//! as another impl without touching the round loop.
+
+use anyhow::{bail, Result};
+
+/// What one client hands back after a local round.
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    pub client_id: usize,
+    /// (ctx, next) pairs processed — the FedAvg weight
+    pub n_samples: usize,
+    /// adapter delta per tensor, canonical (manifest) order
+    pub delta: Vec<Vec<f32>>,
+    pub train_loss: f64,
+    /// virtual seconds the local round took on the device
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+pub trait Aggregator {
+    fn name(&self) -> &'static str;
+    /// Combine updates into one delta per tensor (canonical order).
+    fn aggregate(&self, updates: &[&ClientUpdate]) -> Result<Vec<Vec<f32>>>;
+}
+
+fn validate(updates: &[&ClientUpdate]) -> Result<()> {
+    let Some(first) = updates.first() else {
+        bail!("no client updates to aggregate");
+    };
+    for u in updates.iter().skip(1) {
+        if u.delta.len() != first.delta.len()
+            || u.delta
+                .iter()
+                .zip(&first.delta)
+                .any(|(a, b)| a.len() != b.len())
+        {
+            bail!("client {} update shape mismatch", u.client_id);
+        }
+    }
+    Ok(())
+}
+
+/// FedAvg: mean weighted by per-client sample count.
+pub struct FedAvg;
+
+impl Aggregator for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate(&self, updates: &[&ClientUpdate]) -> Result<Vec<Vec<f32>>> {
+        validate(updates)?;
+        let total: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
+        if total <= 0.0 {
+            bail!("fedavg: zero total samples");
+        }
+        let mut out: Vec<Vec<f32>> = updates[0]
+            .delta
+            .iter()
+            .map(|t| vec![0.0f32; t.len()])
+            .collect();
+        for u in updates {
+            let w = (u.n_samples as f64 / total) as f32;
+            for (o, d) in out.iter_mut().zip(&u.delta) {
+                for (x, &y) in o.iter_mut().zip(d) {
+                    *x += w * y;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Coordinate-wise median (unweighted): tolerant of a minority of wild
+/// updates at the cost of ignoring sample counts.
+pub struct CoordMedian;
+
+impl Aggregator for CoordMedian {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn aggregate(&self, updates: &[&ClientUpdate]) -> Result<Vec<Vec<f32>>> {
+        validate(updates)?;
+        let n = updates.len();
+        let mut out = Vec::with_capacity(updates[0].delta.len());
+        let mut vals = vec![0.0f32; n];
+        for ti in 0..updates[0].delta.len() {
+            let len = updates[0].delta[ti].len();
+            let mut t = vec![0.0f32; len];
+            for (i, x) in t.iter_mut().enumerate() {
+                for (j, u) in updates.iter().enumerate() {
+                    vals[j] = u.delta[ti][i];
+                }
+                // total_cmp: a NaN delta from a diverged client must be
+                // trimmed, not panic the coordinator
+                vals.sort_by(|a, b| a.total_cmp(b));
+                *x = if n % 2 == 1 {
+                    vals[n / 2]
+                } else {
+                    0.5 * (vals[n / 2 - 1] + vals[n / 2])
+                };
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+/// Coordinate-wise trimmed mean: drop the `trim_frac` fraction from each
+/// tail, average the rest.
+pub struct TrimmedMean {
+    pub trim_frac: f64,
+}
+
+impl Aggregator for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+
+    fn aggregate(&self, updates: &[&ClientUpdate]) -> Result<Vec<Vec<f32>>> {
+        validate(updates)?;
+        let n = updates.len();
+        let mut k = (n as f64 * self.trim_frac).floor() as usize;
+        while 2 * k >= n {
+            k -= 1;
+        }
+        let mut out = Vec::with_capacity(updates[0].delta.len());
+        let mut vals = vec![0.0f32; n];
+        for ti in 0..updates[0].delta.len() {
+            let len = updates[0].delta[ti].len();
+            let mut t = vec![0.0f32; len];
+            for (i, x) in t.iter_mut().enumerate() {
+                for (j, u) in updates.iter().enumerate() {
+                    vals[j] = u.delta[ti][i];
+                }
+                vals.sort_by(|a, b| a.total_cmp(b));
+                let kept = &vals[k..n - k];
+                *x = kept.iter().sum::<f32>() / kept.len() as f32;
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+pub fn make_aggregator(name: &str, trim_frac: f64)
+                       -> Result<Box<dyn Aggregator>> {
+    match name {
+        "fedavg" => Ok(Box::new(FedAvg)),
+        "median" => Ok(Box::new(CoordMedian)),
+        "trimmed-mean" => Ok(Box::new(TrimmedMean { trim_frac })),
+        _ => bail!("aggregator must be fedavg|median|trimmed-mean, \
+                    got {name:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(id: usize, n: usize, vals: Vec<f32>) -> ClientUpdate {
+        ClientUpdate {
+            client_id: id,
+            n_samples: n,
+            delta: vec![vals],
+            train_loss: 0.0,
+            time_s: 1.0,
+            energy_j: 1.0,
+        }
+    }
+
+    #[test]
+    fn fedavg_weights_by_samples() {
+        let a = upd(0, 3, vec![1.0, 0.0]);
+        let b = upd(1, 1, vec![-1.0, 4.0]);
+        let out = FedAvg.aggregate(&[&a, &b]).unwrap();
+        // weights 0.75 / 0.25
+        assert!((out[0][0] - 0.5).abs() < 1e-6);
+        assert!((out[0][1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_ignores_outlier() {
+        let a = upd(0, 1, vec![1.0]);
+        let b = upd(1, 1, vec![1.1]);
+        let c = upd(2, 1, vec![1000.0]); // corrupted client
+        let out = CoordMedian.aggregate(&[&a, &b, &c]).unwrap();
+        assert!((out[0][0] - 1.1).abs() < 1e-6);
+        // even count: mean of the middle two
+        let out = CoordMedian.aggregate(&[&a, &b]).unwrap();
+        assert!((out[0][0] - 1.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_survives_nan_update() {
+        // a diverged client (NaN delta) must be trimmed, not panic
+        let a = upd(0, 1, vec![1.0]);
+        let b = upd(1, 1, vec![1.1]);
+        let c = upd(2, 1, vec![f32::NAN]);
+        let out = CoordMedian.aggregate(&[&a, &b, &c]).unwrap();
+        assert!((out[0][0] - 1.1).abs() < 1e-6, "got {}", out[0][0]);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_tails() {
+        let us: Vec<ClientUpdate> = vec![
+            upd(0, 1, vec![-100.0]),
+            upd(1, 1, vec![1.0]),
+            upd(2, 1, vec![2.0]),
+            upd(3, 1, vec![3.0]),
+            upd(4, 1, vec![100.0]),
+        ];
+        let refs: Vec<&ClientUpdate> = us.iter().collect();
+        let out = TrimmedMean { trim_frac: 0.2 }.aggregate(&refs).unwrap();
+        assert!((out[0][0] - 2.0).abs() < 1e-6, "got {}", out[0][0]);
+    }
+
+    #[test]
+    fn trimmed_mean_never_trims_everything() {
+        let a = upd(0, 1, vec![2.0]);
+        let out = TrimmedMean { trim_frac: 0.49 }.aggregate(&[&a]).unwrap();
+        assert_eq!(out[0][0], 2.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = upd(0, 1, vec![1.0, 2.0]);
+        let b = upd(1, 1, vec![1.0]);
+        assert!(FedAvg.aggregate(&[&a, &b]).is_err());
+        assert!(FedAvg.aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn factory_parses_names() {
+        assert_eq!(make_aggregator("fedavg", 0.1).unwrap().name(), "fedavg");
+        assert_eq!(make_aggregator("median", 0.1).unwrap().name(), "median");
+        assert_eq!(make_aggregator("trimmed-mean", 0.1).unwrap().name(),
+                   "trimmed-mean");
+        assert!(make_aggregator("blockchain", 0.1).is_err());
+    }
+}

@@ -1,0 +1,283 @@
+//! One simulated fleet device: profile + battery + virtual clock + local
+//! LoRA adapter and Adam moments + a non-IID corpus shard.
+//!
+//! A client's life per round: the coordinator loads the global adapter
+//! into it, the client runs E local AdamW steps on micro-batches sampled
+//! from its private shard, and hands back the adapter *delta* plus its
+//! sample count — the FedAvg contract.  Energy and time are simulated
+//! exactly like the single-device trainer: each step charges the target
+//! model's per-token FLOPs against the device's sustained GFLOP/s, drains
+//! the battery, and runs the paper's PowerMonitor throttle
+//! ([`EnergyScheduler`]) — so a low-battery client visibly slows down and
+//! can miss the round deadline.
+
+use anyhow::{bail, Result};
+
+use crate::config::manifest::ModelInfo;
+use crate::energy::{BatteryModel, EnergyScheduler};
+use crate::fleet::aggregate::ClientUpdate;
+use crate::fleet::model::BigramRef;
+use crate::fleet::FleetConfig;
+use crate::sim::DeviceProfile;
+use crate::train::lora::LoraState;
+use crate::train::optimizer::AdamW;
+use crate::util::clock::Clock;
+use crate::util::rng::Pcg;
+
+/// What the selector sees of a client at round start.
+#[derive(Debug, Clone)]
+pub struct ClientStatus {
+    pub id: usize,
+    pub battery_frac: f64,
+    /// simulated free RAM after background apps (budget - background)
+    pub free_ram_bytes: u64,
+}
+
+pub struct FleetClient {
+    pub id: usize,
+    pub device: &'static DeviceProfile,
+    pub battery: BatteryModel,
+    pub clock: Clock,
+    pub scheduler: EnergyScheduler,
+    /// local adapter; tensors are overwritten by the global at round
+    /// start, Adam moments persist client-side across rounds
+    pub adapter: LoraState,
+    pub opt: AdamW,
+    shard: Vec<u32>,
+    rng: Pcg,
+    bg_rng: Pcg,
+    global_names: Vec<String>,
+    global_snapshot: Vec<Vec<f32>>,
+}
+
+impl FleetClient {
+    pub fn new(id: usize, device: &'static DeviceProfile, shard: Vec<u32>,
+               info: &ModelInfo, cfg: &FleetConfig, battery_frac: f64,
+               root: &mut Pcg) -> Result<FleetClient> {
+        let mut battery = BatteryModel::from_mah(
+            device.battery_mah, device.battery_volts,
+            device.p_idle, device.p_compute);
+        battery.set_level_frac(battery_frac);
+        let scheduler = if cfg.rho > 0.0 {
+            EnergyScheduler::new(1, cfg.mu, cfg.rho)
+        } else {
+            EnergyScheduler::disabled()
+        };
+        let adapter = LoraState::init(info, cfg.rank,
+                                      cfg.seed.wrapping_add(id as u64))?;
+        Ok(FleetClient {
+            id,
+            device,
+            battery,
+            clock: Clock::virtual_clock(),
+            scheduler,
+            adapter,
+            opt: AdamW::new(cfg.lr, 0.0),
+            shard,
+            rng: root.fork(id as u64 * 2 + 1),
+            bg_rng: root.fork(id as u64 * 2 + 2),
+            global_names: Vec::new(),
+            global_snapshot: Vec::new(),
+        })
+    }
+
+    pub fn shard_tokens(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Sample the client's round-start status (battery + free RAM after
+    /// this round's simulated background apps).
+    pub fn sample_status(&mut self) -> ClientStatus {
+        let bg = self.bg_rng.range_f64(0.2, 0.95);
+        let free = ((1.0 - bg) * self.device.ram_budget_bytes as f64) as u64;
+        ClientStatus {
+            id: self.id,
+            battery_frac: self.battery.level_frac(),
+            free_ram_bytes: free,
+        }
+    }
+
+    /// Overwrite the local adapter with the global tensors (Adam moments
+    /// stay local) and remember the snapshot for the end-of-round delta.
+    pub fn load_global(&mut self, names: &[String], global: &[Vec<f32>])
+                       -> Result<()> {
+        if names.len() != global.len() {
+            bail!("global adapter: {} names vs {} tensors",
+                  names.len(), global.len());
+        }
+        for (name, g) in names.iter().zip(global) {
+            let (p, _, _) = self.adapter.param_and_state(name)?;
+            if p.len() != g.len() {
+                bail!("client {}: global tensor {name:?} has {} values, \
+                       local expects {}", self.id, g.len(), p.len());
+            }
+            p.copy_from_slice(g);
+        }
+        self.global_names = names.to_vec();
+        self.global_snapshot = global.to_vec();
+        Ok(())
+    }
+
+    /// Run `cfg.local_steps` AdamW steps on shard micro-batches and
+    /// return the adapter delta + resource accounting.
+    pub fn local_round(&mut self, model: &BigramRef, cfg: &FleetConfig)
+                       -> Result<ClientUpdate> {
+        if self.shard.len() < 2 {
+            bail!("client {}: shard too small ({} tokens)",
+                  self.id, self.shard.len());
+        }
+        if self.global_snapshot.is_empty() {
+            bail!("client {}: load_global before local_round", self.id);
+        }
+        let mut ga = vec![0.0f32; model.vocab * model.rank];
+        let mut gb = vec![0.0f32; model.rank * model.vocab];
+        let mut pairs: Vec<(u32, u32)> =
+            Vec::with_capacity(cfg.micro_batch * cfg.window);
+        let t_start = self.clock.now_s();
+        let mut energy = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut n_samples = 0usize;
+        for _ in 0..cfg.local_steps {
+            // micro-batch: `micro_batch` windows of consecutive
+            // (ctx, next) pairs, cyclic over the shard
+            pairs.clear();
+            for _ in 0..cfg.micro_batch {
+                let start = self.rng.below(self.shard.len());
+                for i in 0..cfg.window {
+                    let c = self.shard[(start + i) % self.shard.len()];
+                    let t = self.shard[(start + i + 1) % self.shard.len()];
+                    pairs.push((c, t));
+                }
+            }
+            ga.iter_mut().for_each(|x| *x = 0.0);
+            gb.iter_mut().for_each(|x| *x = 0.0);
+            let a = self.adapter.get(crate::fleet::model::LORA_A)?
+                .as_f32()?.to_vec();
+            let b = self.adapter.get(crate::fleet::model::LORA_B)?
+                .as_f32()?.to_vec();
+            loss_sum += model.loss_and_grad(&pairs, &a, &b, &mut ga, &mut gb);
+            n_samples += pairs.len();
+            self.opt.next_step();
+            {
+                let (p, m, v) =
+                    self.adapter.param_and_state(crate::fleet::model::LORA_A)?;
+                self.opt.update(p, &ga, m, v);
+            }
+            {
+                let (p, m, v) =
+                    self.adapter.param_and_state(crate::fleet::model::LORA_B)?;
+                self.opt.update(p, &gb, m, v);
+            }
+            // virtual device time: charge the *target* model's per-token
+            // training cost against this device's sustained throughput
+            let step_s = pairs.len() as f64 * cfg.flops_per_token
+                / (self.device.cpu_gflops * 1e9);
+            self.clock.advance_work(step_s);
+            energy += self.battery.drain(step_s, 0.0);
+            let delay =
+                self.scheduler.after_step(&self.battery, &self.clock, step_s);
+            if delay > 0.0 {
+                energy += self.battery.drain(0.0, delay);
+            }
+        }
+        let time_s = self.clock.now_s() - t_start;
+        let mut delta = Vec::with_capacity(self.global_names.len());
+        for (i, name) in self.global_names.iter().enumerate() {
+            let local = self.adapter.get(name)?.as_f32()?;
+            let d: Vec<f32> = local
+                .iter()
+                .zip(&self.global_snapshot[i])
+                .map(|(l, g)| l - g)
+                .collect();
+            delta.push(d);
+        }
+        Ok(ClientUpdate {
+            client_id: self.id,
+            n_samples,
+            delta,
+            train_loss: loss_sum / cfg.local_steps.max(1) as f64,
+            time_s,
+            energy_j: energy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::model::{LORA_A, LORA_B};
+    use crate::sim;
+
+    fn setup() -> (BigramRef, FleetConfig, FleetClient) {
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let model = BigramRef::new(&tokens, 8, 2, 2.0);
+        let mut cfg = FleetConfig::default();
+        cfg.rank = 2;
+        cfg.local_steps = 3;
+        cfg.micro_batch = 2;
+        cfg.window = 16;
+        let mut root = Pcg::new(5);
+        let client = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        (model, cfg, client)
+    }
+
+    #[test]
+    fn round_produces_delta_and_accounting() {
+        let (model, cfg, mut c) = setup();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let a0 = c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec();
+        let b0 = c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec();
+        c.load_global(&names, &[a0.clone(), b0.clone()]).unwrap();
+        let up = c.local_round(&model, &cfg).unwrap();
+        assert_eq!(up.client_id, 0);
+        assert_eq!(up.n_samples, 3 * 2 * 16);
+        assert_eq!(up.delta.len(), 2);
+        assert_eq!(up.delta[0].len(), 8 * 2);
+        assert_eq!(up.delta[1].len(), 2 * 8);
+        // training moved the adapter
+        let moved: f32 = up.delta.iter()
+            .flat_map(|d| d.iter())
+            .map(|x| x.abs())
+            .sum();
+        assert!(moved > 0.0, "adapter did not move");
+        // resource accounting: positive virtual time + energy, battery down
+        assert!(up.time_s > 0.0);
+        assert!(up.energy_j > 0.0);
+        assert!(c.battery.level_frac() < 0.9);
+        // expected virtual time: tokens * flops_per_token / device rate
+        let expect = (3.0 * 2.0 * 16.0) * cfg.flops_per_token
+            / (c.device.cpu_gflops * 1e9);
+        assert!((up.time_s - expect).abs() < 1e-9 * expect.max(1.0),
+                "time {} vs {expect}", up.time_s);
+    }
+
+    #[test]
+    fn low_battery_client_is_throttled_and_slower() {
+        let (model, cfg, mut c) = setup();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        c.load_global(&names, &g).unwrap();
+        let fast = c.local_round(&model, &cfg).unwrap();
+        // same device, battery below mu: period doubles at rho = 0.5
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut slow_c = FleetClient::new(
+            1, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.2,
+            &mut root).unwrap();
+        slow_c.load_global(&names, &g).unwrap();
+        let slow = slow_c.local_round(&model, &cfg).unwrap();
+        assert!(slow.time_s > fast.time_s * 1.9,
+                "throttle missing: {} vs {}", slow.time_s, fast.time_s);
+    }
+
+    #[test]
+    fn requires_load_global_first() {
+        let (model, cfg, mut c) = setup();
+        assert!(c.local_round(&model, &cfg).is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! The federated round loop + the `mft fleet` CLI entry point.
+//!
+//! One run: generate the corpus, hold out an eval tail, partition the
+//! rest into non-IID shards (Dirichlet label skew), build a heterogeneous
+//! client fleet over the paper's Tab. 3 device profiles (battery levels
+//! evenly spaced over the configured range — deterministic
+//! heterogeneity), then iterate rounds:
+//!
+//!   select -> local rounds on each selected client -> drop stragglers
+//!   past the virtual deadline -> aggregate the surviving deltas ->
+//!   apply to the global adapter -> evaluate on the held-out stream.
+//!
+//! Every round appends a [`RoundRecord`] to `rounds.jsonl` (the fleet viz
+//! panel tails it) and the final merged adapter exports to safetensors
+//! via the standard [`LoraState`] path.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cli::Args;
+use crate::data::corpus::synthetic_corpus;
+use crate::data::partition::{dirichlet_shards, split_articles};
+use crate::fleet::aggregate::{make_aggregator, ClientUpdate};
+use crate::fleet::client::{ClientStatus, FleetClient};
+use crate::fleet::model::{BigramRef, LORA_A, LORA_B};
+use crate::fleet::select::{select_clients, SelectPolicy};
+use crate::fleet::FleetConfig;
+use crate::metrics::{append_round, RoundRecord};
+use crate::sim;
+use crate::tokenizer::Tokenizer;
+use crate::train::lora::LoraState;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+const MIB: u64 = 1024 * 1024;
+
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub summary: Json,
+    pub rounds: Vec<RoundRecord>,
+}
+
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
+    cfg.validate()?;
+
+    // corpus with a held-out eval tail
+    let corpus = synthetic_corpus(cfg.seed, cfg.corpus_bytes);
+    let eval_bytes = (corpus.len() as f64 * cfg.eval_frac) as usize;
+    let mut split = corpus.len().saturating_sub(eval_bytes).max(1);
+    while !corpus.is_char_boundary(split) {
+        split -= 1;
+    }
+    let (train_text, eval_text) = corpus.split_at(split);
+
+    let tok = Tokenizer::train(train_text, cfg.vocab)
+        .context("train fleet tokenizer")?;
+    let vocab = tok.vocab_size();
+
+    // non-IID shards, one per client; every client needs at least one
+    // article or its shard tokenizes empty and the round loop would fail
+    // with a confusing per-client error much later
+    let n_articles = split_articles(train_text).len();
+    if n_articles < cfg.n_clients {
+        anyhow::bail!(
+            "corpus has {n_articles} articles for {} clients; raise \
+             --corpus-bytes or lower --clients", cfg.n_clients);
+    }
+    let shard_texts = dirichlet_shards(train_text, cfg.n_clients,
+                                       cfg.dirichlet_alpha,
+                                       cfg.seed.wrapping_add(1));
+    let shards: Vec<Vec<u32>> =
+        shard_texts.iter().map(|s| tok.encode(s)).collect();
+    let eval_tokens = tok.encode(eval_text);
+    let all_tokens: Vec<u32> = shards.iter().flatten().copied().collect();
+
+    // frozen base + global adapter (standard LoraState template)
+    let model = BigramRef::new(&all_tokens, vocab, cfg.rank,
+                               cfg.lora_alpha / cfg.rank as f32);
+    let info = model.lora_info();
+    let template = LoraState::init(&info, cfg.rank, cfg.seed)?;
+    let names: Vec<String> =
+        template.names_lens().iter().map(|(n, _)| n.clone()).collect();
+    let mut global: Vec<Vec<f32>> = names
+        .iter()
+        .map(|n| Ok(template.get(n)?.as_f32()?.to_vec()))
+        .collect::<Result<_>>()?;
+    let ia = names.iter().position(|n| n == LORA_A)
+        .ok_or_else(|| anyhow!("adapter missing {LORA_A}"))?;
+    let ib = names.iter().position(|n| n == LORA_B)
+        .ok_or_else(|| anyhow!("adapter missing {LORA_B}"))?;
+    let adapter_bytes: u64 =
+        (global.iter().map(|g| g.len()).sum::<usize>() * 4) as u64;
+
+    // heterogeneous clients: Tab. 3 devices round-robin, battery levels
+    // evenly spaced over [battery_min, battery_max]
+    let mut root_rng = Pcg::new(cfg.seed.wrapping_add(99));
+    let mut clients: Vec<FleetClient> = Vec::with_capacity(cfg.n_clients);
+    for (i, shard) in shards.into_iter().enumerate() {
+        let device = &sim::DEVICES[i % sim::DEVICES.len()];
+        let frac = if cfg.n_clients > 1 {
+            i as f64 / (cfg.n_clients - 1) as f64
+        } else {
+            1.0
+        };
+        let battery =
+            cfg.battery_min + (cfg.battery_max - cfg.battery_min) * frac;
+        clients.push(FleetClient::new(i, device, shard, &info, cfg, battery,
+                                      &mut root_rng)?);
+    }
+
+    let agg = make_aggregator(&cfg.aggregator, cfg.trim_frac)?;
+    let out_dir = cfg.out_dir.as_ref().map(PathBuf::from);
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+        let _ = std::fs::remove_file(d.join("rounds.jsonl"));
+    }
+
+    // straggler deadline: factor x the fastest client's expected round
+    let tokens_per_round =
+        (cfg.local_steps * cfg.micro_batch * cfg.window) as f64;
+    let max_gflops = clients
+        .iter()
+        .map(|c| c.device.cpu_gflops)
+        .fold(0.0f64, f64::max);
+    let deadline_s = cfg.straggler_factor * tokens_per_round
+        * cfg.flops_per_token / (max_gflops * 1e9);
+
+    let mut records: Vec<RoundRecord> = Vec::new();
+    let mut cum_energy = 0.0f64;
+
+    // round 0: the untouched global adapter (B = 0 => base model)
+    let nll0 = model.eval_nll(&eval_tokens, &global[ia], &global[ib]);
+    let rec0 = RoundRecord {
+        round: 0,
+        eval_nll: nll0,
+        eval_ppl: nll0.exp(),
+        min_battery_selected: 1.0,
+        ..Default::default()
+    };
+    if let Some(d) = &out_dir {
+        append_round(d, &rec0)?;
+    }
+    records.push(rec0);
+
+    let mut select_rng = Pcg::new(cfg.seed.wrapping_add(7));
+    for round in 1..=cfg.rounds {
+        // background drain between rounds
+        for c in clients.iter_mut() {
+            cum_energy += c.battery.drain(0.0, cfg.round_idle_s);
+        }
+        let statuses: Vec<ClientStatus> =
+            clients.iter_mut().map(|c| c.sample_status()).collect();
+        let sel = select_clients(&cfg.policy, cfg.mu, cfg.ram_required_bytes,
+                                 &statuses, &mut select_rng);
+        let min_batt = sel
+            .selected
+            .iter()
+            .map(|&id| statuses[id].battery_frac)
+            .fold(1.0f64, f64::min);
+
+        let mut updates: Vec<ClientUpdate> =
+            Vec::with_capacity(sel.selected.len());
+        for &id in &sel.selected {
+            let c = &mut clients[id];
+            c.load_global(&names, &global)?;
+            updates.push(c.local_round(&model, cfg)?);
+        }
+        let (ontime, late): (Vec<&ClientUpdate>, Vec<&ClientUpdate>) =
+            updates.iter().partition(|u| u.time_s <= deadline_s);
+        cum_energy += updates.iter().map(|u| u.energy_j).sum::<f64>();
+
+        let mut mean_loss = 0.0f64;
+        if !ontime.is_empty() {
+            let delta = agg.aggregate(&ontime)?;
+            for (g, d) in global.iter_mut().zip(&delta) {
+                for (x, &y) in g.iter_mut().zip(d) {
+                    *x += y;
+                }
+            }
+            mean_loss = ontime.iter().map(|u| u.train_loss).sum::<f64>()
+                / ontime.len() as f64;
+        }
+        let nll = model.eval_nll(&eval_tokens, &global[ia], &global[ib]);
+        let rec = RoundRecord {
+            round,
+            eval_nll: nll,
+            eval_ppl: nll.exp(),
+            n_selected: sel.selected.len(),
+            n_aggregated: ontime.len(),
+            n_skipped_battery: sel.skipped_battery.len(),
+            n_skipped_ram: sel.skipped_ram.len(),
+            n_stragglers: late.len(),
+            mean_train_loss: mean_loss,
+            energy_j: cum_energy,
+            bytes_up: adapter_bytes * ontime.len() as u64,
+            time_s: updates.iter().map(|u| u.time_s).fold(0.0f64, f64::max),
+            participants: ontime.iter().map(|u| u.client_id).collect(),
+            min_battery_selected: if sel.selected.is_empty() {
+                1.0
+            } else {
+                min_batt
+            },
+        };
+        if let Some(d) = &out_dir {
+            append_round(d, &rec)?;
+        }
+        records.push(rec);
+    }
+
+    // export the merged global adapter through the standard path
+    if let Some(d) = &out_dir {
+        let mut merged = LoraState::init(&info, cfg.rank, cfg.seed)?;
+        for (n, g) in names.iter().zip(&global) {
+            let (p, _, _) = merged.param_and_state(n)?;
+            p.copy_from_slice(g);
+        }
+        merged.export(&d.join("adapter.safetensors"), "fleet-bigram",
+                      cfg.lora_alpha)?;
+    }
+
+    let first = &records[0];
+    let last = &records[records.len() - 1];
+    let train_rounds = &records[1..];
+    let mean_participation = train_rounds
+        .iter()
+        .map(|r| r.n_aggregated as f64 / cfg.n_clients as f64)
+        .sum::<f64>()
+        / train_rounds.len().max(1) as f64;
+    let summary = Json::obj(vec![
+        ("n_clients", Json::from(cfg.n_clients)),
+        ("rounds", Json::from(cfg.rounds)),
+        ("local_steps", Json::from(cfg.local_steps)),
+        ("vocab", Json::from(vocab)),
+        ("rank", Json::from(cfg.rank)),
+        ("dirichlet_alpha", Json::from(cfg.dirichlet_alpha)),
+        ("aggregator", Json::from(agg.name())),
+        ("policy", Json::from(cfg.policy.as_str())),
+        ("mu", Json::from(cfg.mu)),
+        ("rho", Json::from(cfg.rho)),
+        ("initial_nll", Json::from(first.eval_nll)),
+        ("final_nll", Json::from(last.eval_nll)),
+        ("initial_ppl", Json::from(first.eval_ppl)),
+        ("final_ppl", Json::from(last.eval_ppl)),
+        ("nll_improvement", Json::from(first.eval_nll - last.eval_nll)),
+        ("mean_participation", Json::from(mean_participation)),
+        ("total_stragglers", Json::from(
+            train_rounds.iter().map(|r| r.n_stragglers).sum::<usize>())),
+        ("total_skipped_battery", Json::from(
+            train_rounds.iter().map(|r| r.n_skipped_battery).sum::<usize>())),
+        ("total_skipped_ram", Json::from(
+            train_rounds.iter().map(|r| r.n_skipped_ram).sum::<usize>())),
+        ("total_energy_kj", Json::from(cum_energy / 1000.0)),
+        ("adapter_bytes", Json::from(adapter_bytes)),
+        ("total_bytes_up", Json::from(
+            train_rounds.iter().map(|r| r.bytes_up).sum::<u64>())),
+        ("deadline_s", Json::from(deadline_s)),
+    ]);
+    if let Some(d) = &out_dir {
+        std::fs::write(d.join("summary.json"), summary.to_string())?;
+    }
+    Ok(FleetResult { summary, rounds: records })
+}
+
+/// Build a [`FleetConfig`] from `mft fleet` flags.
+pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
+    let mut cfg = FleetConfig::default();
+    cfg.n_clients = args.get_parse("clients", cfg.n_clients)?;
+    cfg.rounds = args.get_parse("rounds", cfg.rounds)?;
+    cfg.local_steps = args.get_parse("local-steps", cfg.local_steps)?;
+    cfg.micro_batch = args.get_parse("micro-batch", cfg.micro_batch)?;
+    cfg.window = args.get_parse("window", cfg.window)?;
+    cfg.vocab = args.get_parse("vocab", cfg.vocab)?;
+    cfg.rank = args.get_parse("lora-rank", cfg.rank)?;
+    cfg.lora_alpha = args.get_parse("lora-alpha", cfg.lora_alpha)?;
+    cfg.lr = args.get_parse("lr", cfg.lr)?;
+    cfg.dirichlet_alpha =
+        args.get_parse("dirichlet-alpha", cfg.dirichlet_alpha)?;
+    cfg.aggregator = args.get("agg").unwrap_or("fedavg").to_string();
+    cfg.trim_frac = args.get_parse("trim-frac", cfg.trim_frac)?;
+    let k = args.get_parse("random-k", (cfg.n_clients + 1) / 2)?;
+    cfg.policy = SelectPolicy::parse(args.get("select").unwrap_or("resource"),
+                                     k)?;
+    cfg.mu = args.get_parse("mu", cfg.mu)?;
+    cfg.rho = args.get_parse("rho", cfg.rho)?;
+    cfg.straggler_factor =
+        args.get_parse("straggler-factor", cfg.straggler_factor)?;
+    cfg.flops_per_token =
+        args.get_parse("flops-per-token", cfg.flops_per_token)?;
+    cfg.round_idle_s = args.get_parse("idle-s", cfg.round_idle_s)?;
+    cfg.corpus_bytes = args.get_parse("corpus-bytes", cfg.corpus_bytes)?;
+    cfg.eval_frac = args.get_parse("eval-frac", cfg.eval_frac)?;
+    cfg.ram_required_bytes =
+        args.get_parse("ram-required-mb", cfg.ram_required_bytes / MIB)? * MIB;
+    cfg.battery_min = args.get_parse("battery-min", cfg.battery_min)?;
+    cfg.battery_max = args.get_parse("battery-max", cfg.battery_max)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.out_dir = args.get("out").map(String::from);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = fleet_config(args)?;
+    eprintln!("fleet: {} clients, {} rounds, alpha {}, agg {}, policy {}",
+              cfg.n_clients, cfg.rounds, cfg.dirichlet_alpha, cfg.aggregator,
+              cfg.policy.as_str());
+    let res = run_fleet(&cfg)?;
+    for r in &res.rounds {
+        if r.round == 0 {
+            eprintln!("round {:>3}  nll {:.4} (ppl {:>7.1})  [baseline]",
+                      r.round, r.eval_nll, r.eval_ppl);
+        } else {
+            eprintln!(
+                "round {:>3}  nll {:.4} (ppl {:>7.1})  agg {}/{} sel  \
+                 skip bat {} ram {}  late {}  E {:.2} kJ  up {} KiB",
+                r.round, r.eval_nll, r.eval_ppl, r.n_aggregated,
+                r.n_selected, r.n_skipped_battery, r.n_skipped_ram,
+                r.n_stragglers, r.energy_j / 1000.0, r.bytes_up / 1024);
+        }
+    }
+    println!("{}", res.summary);
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! `fleet` — federated multi-device orchestration for on-device LoRA
+//! fine-tuning.
+//!
+//! The paper fine-tunes one phone; this subsystem composes N of them into
+//! round-based federated training, the natural next layer toward the
+//! millions-of-devices north star (cf. MobiLLM's server-assisted
+//! side-tuning and PAE MobiLLM's privacy-aware additive aggregation):
+//!
+//! * [`client`] — one simulated device: [`sim::DeviceProfile`] +
+//!   [`energy::BatteryModel`] + virtual [`util::clock::Clock`] + a local
+//!   [`train::lora::LoraState`] (tensors and Adam moments), training E
+//!   local steps per round on a non-IID shard from
+//!   [`data::partition`];
+//! * [`aggregate`] — the pluggable [`Aggregator`] trait with FedAvg
+//!   (sample-weighted), coordinate-median and trimmed-mean strategies;
+//! * [`select`] — energy- and memory-aware per-round client selection
+//!   (skip below battery threshold mu or over the RAM budget), plus the
+//!   straggler deadline the driver enforces;
+//! * [`model`] — the artifact-free local objective (frozen log-unigram
+//!   base + trainable low-rank bigram delta) that lets the whole fleet
+//!   run end-to-end with no XLA artifacts;
+//! * [`driver`] — the round loop: select -> local rounds -> straggler
+//!   drop -> aggregate -> global eval, emitting per-round
+//!   [`metrics::RoundRecord`]s and exporting the merged adapter to
+//!   safetensors.
+//!
+//! Surfaced as `mft fleet` (CLI), `mft exp fleet` (the fleet-size x
+//! non-IID-skew x selection-policy sweep) and a `rounds.jsonl` panel in
+//! `mft viz`.
+//!
+//! [`sim::DeviceProfile`]: crate::sim::DeviceProfile
+//! [`energy::BatteryModel`]: crate::energy::BatteryModel
+//! [`util::clock::Clock`]: crate::util::clock::Clock
+//! [`train::lora::LoraState`]: crate::train::lora::LoraState
+//! [`data::partition`]: crate::data::partition
+//! [`metrics::RoundRecord`]: crate::metrics::RoundRecord
+
+pub mod aggregate;
+pub mod client;
+pub mod driver;
+pub mod model;
+pub mod select;
+
+pub use aggregate::{make_aggregator, Aggregator, ClientUpdate, CoordMedian,
+                    FedAvg, TrimmedMean};
+pub use client::{ClientStatus, FleetClient};
+pub use driver::{cmd_fleet, run_fleet, FleetResult};
+pub use model::BigramRef;
+pub use select::{select_clients, SelectPolicy, SelectionOutcome};
+
+use anyhow::{bail, Result};
+
+const MIB: u64 = 1024 * 1024;
+
+/// Everything needed to run one federated fine-tuning simulation.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub n_clients: usize,
+    pub rounds: usize,
+    /// E local optimizer steps per client per round
+    pub local_steps: usize,
+    /// windows per local micro-batch
+    pub micro_batch: usize,
+    /// consecutive (ctx, next) pairs per window
+    pub window: usize,
+    /// tokenizer vocabulary target (>= 259)
+    pub vocab: usize,
+    pub rank: usize,
+    pub lora_alpha: f32,
+    pub lr: f32,
+    /// Dirichlet concentration of the non-IID partitioner (small = more
+    /// topic skew per client)
+    pub dirichlet_alpha: f64,
+    /// "fedavg" | "median" | "trimmed-mean"
+    pub aggregator: String,
+    pub trim_frac: f64,
+    pub policy: SelectPolicy,
+    /// battery threshold for selection AND the per-client PowerMonitor
+    pub mu: f64,
+    /// PowerMonitor frequency reduction below mu
+    pub rho: f64,
+    /// round deadline = factor x the fastest client's expected round
+    /// time; slower updates are dropped as stragglers
+    pub straggler_factor: f64,
+    /// training FLOPs charged per token (the *target* model's cost; the
+    /// default approximates a ~1B-parameter model)
+    pub flops_per_token: f64,
+    /// virtual idle seconds between rounds (background battery drain)
+    pub round_idle_s: f64,
+    pub corpus_bytes: usize,
+    /// tail fraction of the corpus held out for global evaluation
+    pub eval_frac: f64,
+    /// simulated RAM footprint of the on-device trainer
+    pub ram_required_bytes: u64,
+    /// client initial battery levels are evenly spaced over
+    /// [battery_min, battery_max] (deterministic heterogeneity)
+    pub battery_min: f64,
+    pub battery_max: f64,
+    pub seed: u64,
+    pub out_dir: Option<String>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_clients: 8,
+            rounds: 5,
+            local_steps: 4,
+            micro_batch: 8,
+            window: 32,
+            vocab: 512,
+            rank: 8,
+            lora_alpha: 16.0,
+            lr: 0.02,
+            dirichlet_alpha: 0.5,
+            aggregator: "fedavg".to_string(),
+            trim_frac: 0.1,
+            policy: SelectPolicy::Resource,
+            mu: 0.6,
+            rho: 0.5,
+            straggler_factor: 10.0,
+            flops_per_token: 6e9,
+            round_idle_s: 600.0,
+            corpus_bytes: 120_000,
+            eval_frac: 0.15,
+            ram_required_bytes: 256 * MIB,
+            battery_min: 0.15,
+            battery_max: 1.0,
+            seed: 42,
+            out_dir: None,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_clients == 0 || self.rounds == 0 || self.local_steps == 0
+            || self.micro_batch == 0 || self.window == 0 || self.rank == 0 {
+            bail!("fleet sizes (clients/rounds/steps/batch/window/rank) \
+                   must be positive");
+        }
+        if self.vocab < 259 {
+            bail!("vocab must be >= 259 (tokenizer byte table)");
+        }
+        if !(0.0..=1.0).contains(&self.mu) {
+            bail!("battery threshold mu must be in [0,1]");
+        }
+        if !(0.0..1.0).contains(&self.rho) {
+            bail!("frequency reduction rho must be in [0,1)");
+        }
+        if !(0.0..0.5).contains(&self.trim_frac) {
+            bail!("trim_frac must be in [0,0.5)");
+        }
+        if !(0.0..=0.5).contains(&self.eval_frac) || self.eval_frac == 0.0 {
+            bail!("eval_frac must be in (0,0.5]");
+        }
+        if self.dirichlet_alpha <= 0.0 {
+            bail!("dirichlet_alpha must be positive");
+        }
+        if self.straggler_factor <= 0.0 || self.flops_per_token <= 0.0 {
+            bail!("straggler_factor and flops_per_token must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.battery_min)
+            || !(0.0..=1.0).contains(&self.battery_max)
+            || self.battery_min > self.battery_max {
+            bail!("battery range must satisfy 0 <= min <= max <= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        FleetConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = FleetConfig::default();
+        c.n_clients = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = FleetConfig::default();
+        c.vocab = 100;
+        assert!(c.validate().is_err());
+
+        let mut c = FleetConfig::default();
+        c.rho = 1.0;
+        assert!(c.validate().is_err());
+
+        let mut c = FleetConfig::default();
+        c.battery_min = 0.9;
+        c.battery_max = 0.2;
+        assert!(c.validate().is_err());
+
+        let mut c = FleetConfig::default();
+        c.eval_frac = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Energy- and memory-aware client selection.
+//!
+//! Per round the coordinator sees each client's battery fraction and
+//! simulated free RAM ([`ClientStatus`]) and picks participants:
+//!
+//! * [`SelectPolicy::All`] — every client with a live battery trains
+//!   (the naive baseline; low-battery clients throttle and straggle);
+//! * [`SelectPolicy::Resource`] — skip clients below the battery
+//!   threshold mu (the paper's PowerMonitor threshold, applied at the
+//!   fleet level) or without enough free RAM for the training footprint;
+//! * [`SelectPolicy::RandomK`] — classic FedAvg uniform sampling.
+//!
+//! Clients with an empty battery can never train under any policy.
+
+use anyhow::{bail, Result};
+
+use crate::fleet::client::ClientStatus;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SelectPolicy {
+    All,
+    Resource,
+    RandomK { k: usize },
+}
+
+impl SelectPolicy {
+    pub fn parse(s: &str, k: usize) -> Result<SelectPolicy> {
+        match s {
+            "all" => Ok(SelectPolicy::All),
+            "resource" => Ok(SelectPolicy::Resource),
+            "random" => Ok(SelectPolicy::RandomK { k }),
+            _ => bail!("selection policy must be all|resource|random, \
+                        got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SelectPolicy::All => "all",
+            SelectPolicy::Resource => "resource",
+            SelectPolicy::RandomK { .. } => "random",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SelectionOutcome {
+    pub selected: Vec<usize>,
+    pub skipped_battery: Vec<usize>,
+    pub skipped_ram: Vec<usize>,
+}
+
+pub fn select_clients(policy: &SelectPolicy, mu: f64, ram_required: u64,
+                      statuses: &[ClientStatus], rng: &mut Pcg)
+                      -> SelectionOutcome {
+    let mut out = SelectionOutcome::default();
+    match policy {
+        SelectPolicy::All => {
+            for s in statuses {
+                if s.battery_frac <= 0.0 {
+                    out.skipped_battery.push(s.id);
+                } else {
+                    out.selected.push(s.id);
+                }
+            }
+        }
+        SelectPolicy::Resource => {
+            for s in statuses {
+                // the <= 0.0 arm keeps the no-dead-battery invariant even
+                // when mu is configured to 0
+                if s.battery_frac <= 0.0 || s.battery_frac < mu {
+                    out.skipped_battery.push(s.id);
+                } else if s.free_ram_bytes < ram_required {
+                    out.skipped_ram.push(s.id);
+                } else {
+                    out.selected.push(s.id);
+                }
+            }
+        }
+        SelectPolicy::RandomK { k } => {
+            let alive: Vec<usize> = statuses
+                .iter()
+                .filter(|s| s.battery_frac > 0.0)
+                .map(|s| s.id)
+                .collect();
+            for s in statuses {
+                if s.battery_frac <= 0.0 {
+                    out.skipped_battery.push(s.id);
+                }
+            }
+            let k = (*k).min(alive.len());
+            let mut picks = rng.sample_indices(alive.len(), k);
+            picks.sort_unstable();
+            out.selected = picks.into_iter().map(|i| alive[i]).collect();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIB: u64 = 1024 * 1024;
+
+    fn status(id: usize, battery: f64, free_mb: u64) -> ClientStatus {
+        ClientStatus { id, battery_frac: battery,
+                       free_ram_bytes: free_mb * MIB }
+    }
+
+    #[test]
+    fn resource_policy_skips_low_battery_and_low_ram() {
+        let statuses = vec![
+            status(0, 0.9, 400),  // healthy
+            status(1, 0.3, 400),  // low battery
+            status(2, 0.8, 100),  // low RAM
+            status(3, 0.59, 400), // just under mu
+            status(4, 0.61, 300), // just over mu
+        ];
+        let mut rng = Pcg::new(1);
+        let out = select_clients(&SelectPolicy::Resource, 0.6, 256 * MIB,
+                                 &statuses, &mut rng);
+        assert_eq!(out.selected, vec![0, 4]);
+        assert_eq!(out.skipped_battery, vec![1, 3]);
+        assert_eq!(out.skipped_ram, vec![2]);
+    }
+
+    #[test]
+    fn resource_policy_never_selects_dead_battery_even_at_mu_zero() {
+        let statuses = vec![status(0, 0.0, 500), status(1, 0.4, 500)];
+        let mut rng = Pcg::new(3);
+        let out = select_clients(&SelectPolicy::Resource, 0.0, 0,
+                                 &statuses, &mut rng);
+        assert_eq!(out.selected, vec![1]);
+        assert_eq!(out.skipped_battery, vec![0]);
+    }
+
+    #[test]
+    fn all_policy_only_skips_dead_batteries() {
+        let statuses = vec![
+            status(0, 0.05, 10),
+            status(1, 0.0, 500),
+            status(2, 1.0, 500),
+        ];
+        let mut rng = Pcg::new(1);
+        let out = select_clients(&SelectPolicy::All, 0.6, 256 * MIB,
+                                 &statuses, &mut rng);
+        assert_eq!(out.selected, vec![0, 2]);
+        assert_eq!(out.skipped_battery, vec![1]);
+        assert!(out.skipped_ram.is_empty());
+    }
+
+    #[test]
+    fn random_k_samples_exactly_k_alive() {
+        let statuses: Vec<ClientStatus> =
+            (0..10).map(|i| status(i, 1.0, 500)).collect();
+        let mut rng = Pcg::new(9);
+        let out = select_clients(&SelectPolicy::RandomK { k: 4 }, 0.6,
+                                 256 * MIB, &statuses, &mut rng);
+        assert_eq!(out.selected.len(), 4);
+        let mut uniq = out.selected.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4, "duplicates in {:?}", out.selected);
+        // deterministic per seed
+        let mut rng2 = Pcg::new(9);
+        let out2 = select_clients(&SelectPolicy::RandomK { k: 4 }, 0.6,
+                                  256 * MIB, &statuses, &mut rng2);
+        assert_eq!(out.selected, out2.selected);
+    }
+
+    #[test]
+    fn random_k_caps_at_alive_count() {
+        let statuses = vec![status(0, 1.0, 500), status(1, 0.0, 500)];
+        let mut rng = Pcg::new(2);
+        let out = select_clients(&SelectPolicy::RandomK { k: 5 }, 0.6,
+                                 256 * MIB, &statuses, &mut rng);
+        assert_eq!(out.selected, vec![0]);
+        assert_eq!(out.skipped_battery, vec![1]);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(SelectPolicy::parse("all", 3).unwrap(), SelectPolicy::All);
+        assert_eq!(SelectPolicy::parse("resource", 3).unwrap(),
+                   SelectPolicy::Resource);
+        assert_eq!(SelectPolicy::parse("random", 3).unwrap(),
+                   SelectPolicy::RandomK { k: 3 });
+        assert!(SelectPolicy::parse("vip", 3).is_err());
+    }
+}

@@ -12,11 +12,17 @@
 //! the PJRT CPU client ([`runtime`]); Python never runs on the training
 //! path.
 //!
-//! Layer map (paper Fig. 3 — four-layer architecture):
+//! Layer map (paper Fig. 3 — four-layer architecture, plus the fleet
+//! layer this repo grows on top):
 //! * Basic layer       -> [`tensor`], [`runtime`], [`util`]
 //! * Intermediate      -> the AOT artifacts (python/compile) + [`model`]
 //! * Abstract layer    -> [`train`] (optimizers, trainers), [`memopt`]
 //! * Application layer -> [`cli`], [`exp`], [`agent`], [`viz`]
+//! * Fleet layer       -> [`fleet`]: round-based federated fine-tuning
+//!   over N simulated devices — non-IID sharding ([`data::partition`]),
+//!   energy/RAM-aware selection ([`fleet::select`]), pluggable
+//!   aggregation ([`fleet::Aggregator`]: FedAvg / median / trimmed-mean)
+//!   and per-round metrics ([`metrics::RoundRecord`])
 
 pub mod agent;
 pub mod cli;
@@ -25,6 +31,7 @@ pub mod data;
 pub mod energy;
 pub mod eval;
 pub mod exp;
+pub mod fleet;
 pub mod memopt;
 pub mod metrics;
 pub mod model;

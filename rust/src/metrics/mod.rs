@@ -76,6 +76,118 @@ impl StepRecord {
     }
 }
 
+/// One federated-fleet round (see [`crate::fleet`]): the coordinator-side
+/// analogue of [`StepRecord`].  `rounds.jsonl` is tailed by the fleet viz
+/// panel exactly like `steps.jsonl` is by the single-device one.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// global-model eval NLL after this round's aggregation (round 0 =
+    /// the untouched base adapter)
+    pub eval_nll: f64,
+    pub eval_ppl: f64,
+    /// clients that ran local training this round
+    pub n_selected: usize,
+    /// clients whose updates survived the straggler deadline
+    pub n_aggregated: usize,
+    pub n_skipped_battery: usize,
+    pub n_skipped_ram: usize,
+    pub n_stragglers: usize,
+    /// mean local train loss over aggregated clients
+    pub mean_train_loss: f64,
+    /// cumulative fleet energy (J) through this round
+    pub energy_j: f64,
+    /// adapter bytes that would be uploaded this round
+    pub bytes_up: u64,
+    /// virtual wall time of the round (slowest aggregated client)
+    pub time_s: f64,
+    /// ids of aggregated clients
+    pub participants: Vec<usize>,
+    /// lowest battery fraction among selected clients (1.0 if none)
+    pub min_battery_selected: f64,
+}
+
+impl RoundRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::from(self.round)),
+            ("eval_nll", Json::from(self.eval_nll)),
+            ("eval_ppl", Json::from(self.eval_ppl)),
+            ("n_selected", Json::from(self.n_selected)),
+            ("n_aggregated", Json::from(self.n_aggregated)),
+            ("n_skipped_battery", Json::from(self.n_skipped_battery)),
+            ("n_skipped_ram", Json::from(self.n_skipped_ram)),
+            ("n_stragglers", Json::from(self.n_stragglers)),
+            ("mean_train_loss", Json::from(self.mean_train_loss)),
+            ("energy_j", Json::from(self.energy_j)),
+            ("bytes_up", Json::from(self.bytes_up)),
+            ("time_s", Json::from(self.time_s)),
+            ("participants", Json::Arr(
+                self.participants.iter().map(|&p| Json::from(p)).collect())),
+            ("min_battery_selected", Json::from(self.min_battery_selected)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RoundRecord> {
+        let opt_f = |k: &str| -> Result<f64> {
+            Ok(j.get(k).map(|v| v.as_f64()).transpose()?.unwrap_or(0.0))
+        };
+        let opt_u = |k: &str| -> Result<usize> {
+            Ok(j.get(k).map(|v| v.as_usize()).transpose()?.unwrap_or(0))
+        };
+        Ok(RoundRecord {
+            round: j.req("round")?.as_usize()?,
+            eval_nll: j.req("eval_nll")?.as_f64()?,
+            eval_ppl: opt_f("eval_ppl")?,
+            n_selected: opt_u("n_selected")?,
+            n_aggregated: opt_u("n_aggregated")?,
+            n_skipped_battery: opt_u("n_skipped_battery")?,
+            n_skipped_ram: opt_u("n_skipped_ram")?,
+            n_stragglers: opt_u("n_stragglers")?,
+            mean_train_loss: opt_f("mean_train_loss")?,
+            energy_j: opt_f("energy_j")?,
+            bytes_up: opt_u("bytes_up")? as u64,
+            time_s: opt_f("time_s")?,
+            participants: match j.get("participants") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+            min_battery_selected: j
+                .get("min_battery_selected")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(1.0),
+        })
+    }
+}
+
+/// Append fleet round records to `<dir>/rounds.jsonl`.
+pub fn append_round(dir: &Path, rec: &RoundRecord) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("rounds.jsonl"))?;
+    let mut line = String::new();
+    rec.to_json().write(&mut line);
+    line.push('\n');
+    f.write_all(line.as_bytes())?;
+    Ok(())
+}
+
+/// Read back a fleet run's round records.
+pub fn read_rounds(dir: &Path) -> Result<Vec<RoundRecord>> {
+    let text = std::fs::read_to_string(dir.join("rounds.jsonl"))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| RoundRecord::from_json(&Json::parse(l)?))
+        .collect()
+}
+
 /// Appends step records to `<dir>/steps.jsonl` and writes
 /// `<dir>/summary.json` at the end of the run.
 pub struct Observer {
@@ -193,6 +305,34 @@ mod tests {
         ])).unwrap();
         let s = read_summary(&dir).unwrap();
         assert_eq!(s.get("final_loss").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn round_record_roundtrip() {
+        let dir = tdir("rounds");
+        let recs: Vec<RoundRecord> = (0..3)
+            .map(|r| RoundRecord {
+                round: r,
+                eval_nll: 5.0 - r as f64 * 0.2,
+                eval_ppl: (5.0 - r as f64 * 0.2).exp(),
+                n_selected: 6,
+                n_aggregated: 5,
+                n_skipped_battery: 2,
+                n_skipped_ram: 0,
+                n_stragglers: 1,
+                mean_train_loss: 4.0,
+                energy_j: 100.0 * r as f64,
+                bytes_up: 4096,
+                time_s: 12.5,
+                participants: vec![0, 2, 4, 5, 7],
+                min_battery_selected: 0.72,
+            })
+            .collect();
+        for r in &recs {
+            append_round(&dir, r).unwrap();
+        }
+        let got = read_rounds(&dir).unwrap();
+        assert_eq!(got, recs);
     }
 
     #[test]

@@ -112,6 +112,81 @@ impl LoraState {
         write_safetensors(path, &tensors, &meta)
     }
 
+    /// Save a resumable checkpoint: adapter tensors **and** Adam moments
+    /// plus the optimizer step counter, so an interrupted run (battery
+    /// death, OS kill, fleet round boundary) continues bit-for-bit where
+    /// it stopped.  `opt_m.*` / `opt_v.*` tensors ride in the same
+    /// safetensors file; `opt_step` travels in the metadata.
+    pub fn save_checkpoint(&self, path: &Path, opt_step: u64) -> Result<()> {
+        let mut tensors: Vec<(String, HostTensor)> = Vec::new();
+        for s in &self.specs {
+            tensors.push((s.name.clone(), self.tensors[&s.name].clone()));
+        }
+        for s in &self.specs {
+            tensors.push((format!("opt_m.{}", s.name),
+                          HostTensor::from_f32(&s.shape, self.m[&s.name].clone())?));
+            tensors.push((format!("opt_v.{}", s.name),
+                          HostTensor::from_f32(&s.shape, self.v[&s.name].clone())?));
+        }
+        let meta = vec![
+            ("format".to_string(), "mft-lora-ckpt-v1".to_string()),
+            ("lora_rank".to_string(), self.rank.to_string()),
+            ("opt_step".to_string(), opt_step.to_string()),
+        ];
+        write_safetensors(path, &tensors, &meta)
+    }
+
+    /// Load a checkpoint written by [`LoraState::save_checkpoint`].
+    /// Returns the adapter (tensors + Adam moments restored) and the
+    /// optimizer step counter to resume from.
+    pub fn load_checkpoint(info: &ModelInfo, rank: usize, path: &Path)
+                           -> Result<(LoraState, u64)> {
+        let mut st = LoraState::init(info, rank, 0)?;
+        let (tensors, meta) = read_safetensors(path)?;
+        let opt_step: u64 = meta
+            .get("opt_step")
+            .ok_or_else(|| anyhow!("checkpoint missing opt_step metadata"))?
+            .parse()
+            .map_err(|e| anyhow!("bad opt_step in checkpoint: {e}"))?;
+        // every param plus its two moment tensors must be present — a
+        // partial checkpoint would silently resume from init values
+        if tensors.len() != 3 * st.specs.len() {
+            anyhow::bail!(
+                "checkpoint has {} tensors, expected {} ({} params + Adam \
+                 m/v each)", tensors.len(), 3 * st.specs.len(),
+                st.specs.len());
+        }
+        for (name, t) in tensors {
+            let (slot, base) = if let Some(b) = name.strip_prefix("opt_m.") {
+                ("m", b.to_string())
+            } else if let Some(b) = name.strip_prefix("opt_v.") {
+                ("v", b.to_string())
+            } else {
+                ("p", name.clone())
+            };
+            let spec = st
+                .specs
+                .iter()
+                .find(|s| s.name == base)
+                .ok_or_else(|| anyhow!("unexpected checkpoint tensor {name:?}"))?;
+            if t.shape() != spec.shape.as_slice() {
+                anyhow::bail!("checkpoint {name:?} shape mismatch");
+            }
+            match slot {
+                "m" => {
+                    st.m.insert(base, t.as_f32()?.to_vec());
+                }
+                "v" => {
+                    st.v.insert(base, t.as_f32()?.to_vec());
+                }
+                _ => {
+                    st.tensors.insert(base, t);
+                }
+            }
+        }
+        Ok((st, opt_step))
+    }
+
     pub fn load(info: &ModelInfo, rank: usize, path: &Path) -> Result<LoraState> {
         let mut st = LoraState::init(info, rank, 0)?;
         let (tensors, _) = read_safetensors(path)?;
@@ -191,5 +266,81 @@ mod tests {
     #[test]
     fn missing_rank_errors() {
         assert!(LoraState::init(&info(), 8, 0).is_err());
+    }
+
+    /// Deterministic synthetic gradient for the resume test.
+    fn fake_grad(step: u64, n: usize, salt: u64) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((step * 31 + i as u64 * 7 + salt) % 13) as f32 * 0.1 - 0.6)
+            .collect()
+    }
+
+    fn adamw_steps(st: &mut LoraState, opt: &mut crate::train::optimizer::AdamW,
+                   from: u64, to: u64) {
+        let names: Vec<(String, usize)> = st.names_lens();
+        for step in from..to {
+            opt.next_step();
+            for (salt, (name, n)) in names.iter().enumerate() {
+                let g = fake_grad(step, *n, salt as u64);
+                let (p, m, v) = st.param_and_state(name).unwrap();
+                opt.update(p, &g, m, v);
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted() {
+        use crate::train::optimizer::AdamW;
+        let dir = std::env::temp_dir()
+            .join(format!("mft-lora-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ckpt.safetensors");
+
+        // uninterrupted: 10 AdamW steps
+        let mut full = LoraState::init(&info(), 4, 9).unwrap();
+        let mut opt_full = AdamW::new(0.01, 0.01);
+        adamw_steps(&mut full, &mut opt_full, 0, 10);
+
+        // interrupted: 5 steps, checkpoint, reload, 5 more
+        let mut half = LoraState::init(&info(), 4, 9).unwrap();
+        let mut opt_half = AdamW::new(0.01, 0.01);
+        adamw_steps(&mut half, &mut opt_half, 0, 5);
+        half.save_checkpoint(&p, opt_half.t).unwrap();
+
+        let (mut resumed, t) = LoraState::load_checkpoint(&info(), 4, &p).unwrap();
+        assert_eq!(t, 5);
+        let mut opt_res = AdamW::new(0.01, 0.01);
+        opt_res.t = t;
+        adamw_steps(&mut resumed, &mut opt_res, 5, 10);
+
+        // bitwise identical trajectory: params AND moments must match
+        for (name, _) in full.names_lens() {
+            assert_eq!(full.get(&name).unwrap(), resumed.get(&name).unwrap(),
+                       "param {name} diverged after resume");
+            let (_, fm, fv) = full.param_and_state(&name).unwrap();
+            let (fm, fv) = (fm.to_vec(), fv.to_vec());
+            let (_, rm, rv) = resumed.param_and_state(&name).unwrap();
+            assert_eq!(fm, rm.to_vec(), "Adam m diverged for {name}");
+            assert_eq!(fv, rv.to_vec(), "Adam v diverged for {name}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_foreign_tensor() {
+        let dir = std::env::temp_dir()
+            .join(format!("mft-lora-ckpt-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.safetensors");
+        let st = LoraState::init(&info(), 4, 1).unwrap();
+        st.save_checkpoint(&p, 3).unwrap();
+        // a plain export (no moments, no opt_step) must not load as ckpt
+        let pe = dir.join("plain.safetensors");
+        st.export(&pe, "t", 16.0).unwrap();
+        assert!(LoraState::load_checkpoint(&info(), 4, &pe).is_err());
+        // but the real checkpoint round-trips
+        let (st2, t) = LoraState::load_checkpoint(&info(), 4, &p).unwrap();
+        assert_eq!(t, 3);
+        assert_eq!(st2.get("blocks.0.lora_q_a").unwrap(),
+                   st.get("blocks.0.lora_q_a").unwrap());
     }
 }

@@ -102,6 +102,44 @@ impl Pcg {
         idx.truncate(k);
         idx
     }
+
+    /// Gamma(shape, scale 1) via Marsaglia-Tsang squeeze; the shape < 1
+    /// case uses the boost Gamma(k) = Gamma(k+1) * U^(1/k).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            let u = self.uniform().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) draw over `n` components (the non-IID
+    /// shard partitioner's per-label client distribution).  Small alpha
+    /// concentrates mass on few components; large alpha approaches
+    /// uniform.
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        debug_assert!(n > 0 && alpha > 0.0);
+        let mut v: Vec<f64> = (0..n).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let total: f64 = v.iter().sum();
+        for x in &mut v {
+            *x /= total;
+        }
+        v
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +224,62 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        // E[Gamma(k, 1)] = k; 20k draws put the sample mean well inside
+        // +-0.1 of k for these shapes.
+        let mut r = Pcg::new(17);
+        for shape in [0.5f64, 2.5, 8.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.1 * shape.max(1.0),
+                    "shape {shape}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_a_distribution() {
+        let mut r = Pcg::new(23);
+        for alpha in [0.05f64, 1.0, 100.0] {
+            let p = r.dirichlet(alpha, 8);
+            assert_eq!(p.len(), 8);
+            assert!(p.iter().all(|&x| x > 0.0));
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_concentration() {
+        // mean max-component over 200 draws: near 1 for tiny alpha, near
+        // 1/n for huge alpha
+        let mut r = Pcg::new(29);
+        let mean_max = |r: &mut Pcg, alpha: f64| -> f64 {
+            (0..200)
+                .map(|_| {
+                    r.dirichlet(alpha, 8)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                })
+                .sum::<f64>()
+                / 200.0
+        };
+        let peaked = mean_max(&mut r, 0.05);
+        let flat = mean_max(&mut r, 100.0);
+        assert!(peaked > 0.6, "peaked {peaked}");
+        assert!(flat < 0.3, "flat {flat}");
+        assert!(peaked > flat);
+    }
+
+    #[test]
+    fn gamma_deterministic() {
+        let mut a = Pcg::new(31);
+        let mut b = Pcg::new(31);
+        for _ in 0..50 {
+            assert_eq!(a.gamma(1.7), b.gamma(1.7));
+        }
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //! loss/PPL sparklines, learning metrics, peak RSS and the live log —
 //! the same panels as the paper's Android visualizer, in a terminal.
 //! `--follow` keeps refreshing while a training process writes.
+//!
+//! Fleet runs are detected by the presence of `rounds.jsonl` and get the
+//! federated panel instead: round-level eval curve, participation,
+//! skip/straggler counts and fleet energy.
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
-use crate::metrics::{read_steps, StepRecord};
+use crate::metrics::{read_rounds, read_steps, RoundRecord, StepRecord};
 
 const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
 
@@ -75,19 +79,63 @@ pub fn render(recs: &[StepRecord], total_steps: Option<usize>) -> String {
     out
 }
 
+/// Render the federated-fleet dashboard for a set of round records.
+pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
+                    -> String {
+    let mut out = String::new();
+    let Some(last) = recs.last() else {
+        return "no rounds logged yet\n".into();
+    };
+    let nlls: Vec<f64> = recs.iter().map(|r| r.eval_nll).collect();
+    let parts: Vec<f64> =
+        recs.iter().skip(1).map(|r| r.n_aggregated as f64).collect();
+
+    let total = total_rounds.unwrap_or(last.round);
+    let frac = (last.round as f64 / total.max(1) as f64).clamp(0.0, 1.0);
+    let fill = (frac * 30.0) as usize;
+    out.push_str(&format!(
+        "MobileFineTuner fleet  round {}/{}  [{}{}] {:.0}%\n",
+        last.round, total, "█".repeat(fill), "░".repeat(30 - fill),
+        frac * 100.0));
+    out.push_str(&format!("eval  {:>9.4}  {}   ppl {:.1}\n",
+                          last.eval_nll, sparkline(&nlls, 40),
+                          last.eval_ppl));
+    if let Some(first) = recs.first() {
+        out.push_str(&format!("Δnll  {:>9.4}  (round 0: {:.4})\n",
+                              first.eval_nll - last.eval_nll,
+                              first.eval_nll));
+    }
+    out.push_str(&format!(
+        "agg   {:>4}/{:<4}  {}   skip bat {} ram {}  late {}\n",
+        last.n_aggregated, last.n_selected, sparkline(&parts, 40),
+        last.n_skipped_battery, last.n_skipped_ram, last.n_stragglers));
+    out.push_str(&format!(
+        "fleet {:>7.2} kJ   up {:>8} B   round t {:.1}s   min-bat {:.0}%\n",
+        last.energy_j / 1000.0, last.bytes_up, last.time_s,
+        last.min_battery_selected * 100.0));
+    out
+}
+
 pub fn cmd_viz(args: &Args) -> Result<()> {
     let Some(dir) = args.pos(1) else {
-        bail!("usage: mft viz <run-dir> [--follow] [--steps N]");
+        bail!("usage: mft viz <run-dir> [--follow] [--steps N] [--rounds N]");
     };
     let dir = Path::new(dir);
     let total = args.get("steps").and_then(|s| s.parse().ok());
+    let total_rounds = args.get("rounds").and_then(|s| s.parse().ok());
     let follow = args.has("follow");
     loop {
-        let recs = read_steps(dir).unwrap_or_default();
+        let is_fleet = dir.join("rounds.jsonl").exists();
         if follow {
             print!("\x1b[2J\x1b[H"); // clear screen
         }
-        print!("{}", render(&recs, total));
+        if is_fleet {
+            let recs = read_rounds(dir).unwrap_or_default();
+            print!("{}", render_fleet(&recs, total_rounds));
+        } else {
+            let recs = read_steps(dir).unwrap_or_default();
+            print!("{}", render(&recs, total));
+        }
         if !follow {
             break;
         }
@@ -125,6 +173,40 @@ mod tests {
     #[test]
     fn sparkline_empty() {
         assert_eq!(sparkline(&[], 10), "");
+    }
+
+    #[test]
+    fn render_fleet_empty_and_nonempty() {
+        assert!(render_fleet(&[], None).contains("no rounds"));
+        let recs = vec![
+            RoundRecord {
+                round: 0,
+                eval_nll: 5.0,
+                eval_ppl: 148.4,
+                min_battery_selected: 1.0,
+                ..Default::default()
+            },
+            RoundRecord {
+                round: 2,
+                eval_nll: 4.5,
+                eval_ppl: 90.0,
+                n_selected: 6,
+                n_aggregated: 5,
+                n_skipped_battery: 2,
+                n_stragglers: 1,
+                energy_j: 1500.0,
+                bytes_up: 32768,
+                time_s: 42.0,
+                min_battery_selected: 0.8,
+                ..Default::default()
+            },
+        ];
+        let s = render_fleet(&recs, Some(4));
+        assert!(s.contains("round 2/4"), "{s}");
+        assert!(s.contains("eval"), "{s}");
+        assert!(s.contains("5/6"), "{s}");
+        assert!(s.contains("skip bat 2"), "{s}");
+        assert!(s.contains("late 1"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Fleet-layer microbenchmarks (artifact-free): the context-grouped
+//! LoRA-bigram kernel vs its per-pair oracle, the cached eval path, the
+//! select-nth aggregators, and the multi-threaded federated round loop.
+//!
+//! Workloads come from `mft::bench::kernel_scenario` /
+//! `round_loop_config` — the exact scenarios `mft bench fleet` measures
+//! and emits as `BENCH_fleet.json` (schema in benches/README.md) — so
+//! this harness and the in-binary one cannot drift apart; this one adds
+//! min/median/p95 spread via the shared `common.rs` mini-harness.
+
+include!("common.rs");
+
+use mft::bench::{kernel_scenario, round_loop_config};
+use mft::fleet::model::GradScratch;
+use mft::fleet::{run_fleet, Aggregator, ClientUpdate, CoordMedian,
+                 TrimmedMean};
+
+fn main() {
+    let sc = kernel_scenario(512, 8, 50_000);
+    let vocab = sc.model.vocab;
+    let rank = sc.model.rank;
+
+    // kernel: repeated contexts (the client micro-batch shape, sampled
+    // by the client's own code) and the all-distinct worst case,
+    // grouped-with-scratch (the real hot path) vs naive oracle
+    let mut ga = vec![0.0f32; vocab * rank];
+    let mut gb = vec![0.0f32; rank * vocab];
+    let mut scratch = GradScratch::default();
+    for (tag, pairs) in [("repeated-ctx", &sc.repeated),
+                         ("distinct-ctx", &sc.distinct)] {
+        let g = bench(&format!("loss_and_grad grouped {tag} ({} pairs)",
+                               pairs.len()), 2, 15, || {
+            ga.iter_mut().for_each(|x| *x = 0.0);
+            gb.iter_mut().for_each(|x| *x = 0.0);
+            std::hint::black_box(sc.model.loss_and_grad_scratch(
+                pairs, &sc.a, &sc.b, &mut ga, &mut gb, &mut scratch));
+        });
+        let n = bench(&format!("loss_and_grad naive   {tag} ({} pairs)",
+                               pairs.len()), 2, 15, || {
+            ga.iter_mut().for_each(|x| *x = 0.0);
+            gb.iter_mut().for_each(|x| *x = 0.0);
+            std::hint::black_box(sc.model.loss_and_grad_naive(
+                pairs, &sc.a, &sc.b, &mut ga, &mut gb));
+        });
+        println!("  -> {tag}: {:.2}x, {:.2} Mtok/s grouped",
+                 n.median_s / g.median_s,
+                 pairs.len() as f64 / g.median_s / 1e6);
+    }
+
+    // eval: per-run bigram-count cache vs rebuilding per call
+    let mut cache = sc.model.eval_cache(&sc.eval_stream);
+    let c = bench("eval_nll cached (50k tokens)", 2, 15, || {
+        std::hint::black_box(
+            sc.model.eval_nll_cached(&mut cache, &sc.a, &sc.b));
+    });
+    let u = bench("eval_nll one-shot (50k tokens)", 2, 15, || {
+        std::hint::black_box(sc.model.eval_nll(&sc.eval_stream, &sc.a,
+                                               &sc.b));
+    });
+    println!("  -> cache reuse: {:.2}x", u.median_s / c.median_s);
+
+    // aggregation: select-nth median / trimmed mean over adapter deltas
+    let coords = 2 * vocab * rank;
+    let refs: Vec<&ClientUpdate> = sc.updates.iter().collect();
+    bench(&format!("coord-median {} clients x {coords} coords",
+                   sc.updates.len()), 2, 15, || {
+        std::hint::black_box(CoordMedian.aggregate(&refs).unwrap());
+    });
+    bench(&format!("trimmed-mean {} clients x {coords} coords",
+                   sc.updates.len()), 2, 15, || {
+        std::hint::black_box(
+            TrimmedMean { trim_frac: 0.2 }.aggregate(&refs).unwrap());
+    });
+
+    // round loop: federated wall time vs coordinator threads (output is
+    // bitwise identical across thread counts; only wall time may move)
+    let cfg = round_loop_config(3);
+    let mut base = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let mut c = cfg.clone();
+        c.threads = threads;
+        let r = bench(&format!("fleet round loop (8 clients, 3 rounds, \
+                                {threads} thr)"), 1, 5, || {
+            std::hint::black_box(run_fleet(&c).unwrap());
+        });
+        if threads == 1 {
+            base = r.median_s;
+        }
+        println!("  -> {:.2} rounds/s, {:.2}x vs 1 thread",
+                 3.0 / r.median_s, base / r.median_s);
+    }
+}

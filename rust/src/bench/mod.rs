@@ -1,0 +1,315 @@
+//! `mft bench` — in-binary perf benchmarks that seed the BENCH
+//! trajectory.
+//!
+//! `mft bench fleet` measures the fleet-layer hot paths this repo
+//! optimizes (context-grouped [`BigramRef::loss_and_grad_scratch`], the
+//! cached eval path, select-nth aggregation, and the multi-threaded
+//! round loop) and emits a machine-readable `BENCH_fleet.json` — schema
+//! in `rust/benches/README.md`.  CI runs it with `--quick` as a smoke
+//! step and uploads the JSON as an artifact.
+//!
+//! The standalone harness `rust/benches/bench_fleet.rs` reports
+//! min/median/p95 over the **same workloads**: both call
+//! [`kernel_scenario`] / [`round_loop_config`] here, so the two
+//! harnesses cannot drift apart.
+//!
+//! Everything here is artifact-free: no XLA artifacts, no model files,
+//! only the fleet's reference objective.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::fleet::model::{fill_window_pairs, BigramRef, GradScratch};
+use crate::fleet::{run_fleet, Aggregator, ClientUpdate, CoordMedian,
+                   FleetConfig};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Pcg;
+
+/// Adapter rank every kernel benchmark uses.
+pub const KERNEL_RANK: usize = 8;
+/// Pairs per sampled window in the repeated-context batch.
+pub const KERNEL_WINDOW: usize = 256;
+
+/// The deterministic workload both bench harnesses measure.
+pub struct KernelScenario {
+    pub model: BigramRef,
+    /// adapter tensors (A, B)
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    /// client-shaped micro-batch (heavy context repetition) sampled via
+    /// the client's own [`fill_window_pairs`]
+    pub repeated: Vec<(u32, u32)>,
+    /// grouping worst case: every context distinct
+    pub distinct: Vec<(u32, u32)>,
+    /// held-out stream for the eval-cache benchmark
+    pub eval_stream: Vec<u32>,
+    /// adapter-sized deltas for the aggregation benchmark
+    pub updates: Vec<ClientUpdate>,
+}
+
+/// Build the seeded kernel/eval/aggregation workload: a hot 64-token
+/// stream (so contexts repeat), a LoRA-bigram model over `vocab`, one
+/// repeated-context batch of `n_windows` windows, the all-distinct
+/// batch, an `eval_tokens`-long eval stream, and 9 client deltas.
+pub fn kernel_scenario(vocab: usize, n_windows: usize,
+                       eval_tokens: usize) -> KernelScenario {
+    let rank = KERNEL_RANK;
+    let mut rng = Pcg::new(1);
+    let stream: Vec<u32> =
+        (0..20_000).map(|_| rng.below(64.min(vocab)) as u32).collect();
+    let model = BigramRef::new(&stream, vocab, rank, 2.0);
+    let a: Vec<f32> =
+        (0..vocab * rank).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect();
+    let b: Vec<f32> =
+        (0..rank * vocab).map(|_| rng.normal_ms(0.0, 0.05) as f32).collect();
+    let mut repeated = Vec::new();
+    fill_window_pairs(&stream, n_windows, KERNEL_WINDOW, &mut rng,
+                      &mut repeated);
+    let distinct: Vec<(u32, u32)> = (0..vocab)
+        .map(|c| (c as u32, ((c * 7 + 1) % vocab) as u32))
+        .collect();
+    let eval_stream: Vec<u32> =
+        (0..eval_tokens).map(|_| rng.below(vocab) as u32).collect();
+    let coords = 2 * vocab * rank;
+    let updates: Vec<ClientUpdate> = (0..9usize)
+        .map(|id| ClientUpdate {
+            client_id: id,
+            n_samples: 100,
+            delta: vec![(0..coords)
+                .map(|_| rng.normal_ms(0.0, 0.01) as f32)
+                .collect()],
+            train_loss: 1.0,
+            time_s: 1.0,
+            energy_j: 1.0,
+        })
+        .collect();
+    KernelScenario { model, a, b, repeated, distinct, eval_stream, updates }
+}
+
+/// The round-loop benchmark fleet: 8 healthy clients (full
+/// participation, no straggler drops) on the default seed.  12 local
+/// steps keep the per-round parallel region in the multi-millisecond
+/// range so the pool's per-round thread-spawn cost (~tens of µs per
+/// worker) does not distort the measured speedup.
+pub fn round_loop_config(rounds: usize) -> FleetConfig {
+    FleetConfig {
+        n_clients: 8,
+        rounds,
+        local_steps: 12,
+        micro_batch: 8,
+        window: 32,
+        vocab: 384,
+        rank: 4,
+        corpus_bytes: 50_000,
+        battery_min: 0.9,
+        battery_max: 1.0,
+        ram_required_bytes: 0,
+        ..FleetConfig::default()
+    }
+}
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        Some("fleet") => bench_fleet(args),
+        Some(other) => bail!("unknown bench {other:?}; have: fleet"),
+        None => bail!("usage: mft bench fleet [--quick] [--out FILE]"),
+    }
+}
+
+/// Median wall seconds of `f` over `iters` runs after `warmup` runs.
+fn median_secs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ts = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        ts.push(t.elapsed().as_secs_f64());
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn distinct_contexts(pairs: &[(u32, u32)], vocab: usize) -> usize {
+    let mut seen = vec![false; vocab];
+    let mut n = 0;
+    for &(c, _) in pairs {
+        if !seen[c as usize] {
+            seen[c as usize] = true;
+            n += 1;
+        }
+    }
+    n
+}
+
+fn bench_fleet(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let out_path =
+        PathBuf::from(args.get("out").unwrap_or("BENCH_fleet.json"));
+    let host_threads = pool::threads_from_env();
+    eprintln!("[bench] fleet hot paths ({} mode, host threads {})",
+              if quick { "quick" } else { "full" }, host_threads);
+
+    // -- kernel: context-grouped loss_and_grad vs the per-pair oracle --
+    let sc = if quick {
+        kernel_scenario(256, 4, 10_000)
+    } else {
+        kernel_scenario(512, 8, 50_000)
+    };
+    let vocab = sc.model.vocab;
+    let rank = sc.model.rank;
+    let (warm, iters) = if quick { (1, 5) } else { (2, 15) };
+    let mut ga = vec![0.0f32; vocab * rank];
+    let mut gb = vec![0.0f32; rank * vocab];
+    let mut scratch = GradScratch::default();
+    let mut run_kernel = |pairs: &[(u32, u32)], naive: bool| -> f64 {
+        median_secs(warm, iters, || {
+            ga.iter_mut().for_each(|x| *x = 0.0);
+            gb.iter_mut().for_each(|x| *x = 0.0);
+            // scratch variant = the client's actual hot path
+            let l = if naive {
+                sc.model.loss_and_grad_naive(pairs, &sc.a, &sc.b, &mut ga,
+                                             &mut gb)
+            } else {
+                sc.model.loss_and_grad_scratch(pairs, &sc.a, &sc.b, &mut ga,
+                                               &mut gb, &mut scratch)
+            };
+            std::hint::black_box(l);
+        })
+    };
+    let rep_grouped = run_kernel(&sc.repeated, false);
+    let rep_naive = run_kernel(&sc.repeated, true);
+    let dis_grouped = run_kernel(&sc.distinct, false);
+    let dis_naive = run_kernel(&sc.distinct, true);
+    let rep_ctx = distinct_contexts(&sc.repeated, vocab);
+    eprintln!(
+        "[bench] loss_and_grad  repeated-ctx ({} pairs / {} ctx): \
+         grouped {:.3}ms vs naive {:.3}ms ({:.1}x, {:.2} Mtok/s)",
+        sc.repeated.len(), rep_ctx, rep_grouped * 1e3, rep_naive * 1e3,
+        rep_naive / rep_grouped,
+        sc.repeated.len() as f64 / rep_grouped / 1e6);
+    eprintln!(
+        "[bench] loss_and_grad  distinct-ctx ({} pairs): grouped {:.3}ms \
+         vs naive {:.3}ms ({:.2}x)",
+        sc.distinct.len(), dis_grouped * 1e3, dis_naive * 1e3,
+        dis_naive / dis_grouped);
+
+    // -- eval: per-run bigram-count cache vs rebuild-per-call --
+    let mut cache = sc.model.eval_cache(&sc.eval_stream);
+    let cached_s = median_secs(warm, iters, || {
+        std::hint::black_box(
+            sc.model.eval_nll_cached(&mut cache, &sc.a, &sc.b));
+    });
+    let uncached_s = median_secs(warm, iters, || {
+        std::hint::black_box(sc.model.eval_nll(&sc.eval_stream, &sc.a,
+                                               &sc.b));
+    });
+    eprintln!(
+        "[bench] eval_nll       {} tokens: cached {:.3}ms vs one-shot \
+         {:.3}ms ({:.1}x)",
+        sc.eval_stream.len(), cached_s * 1e3, uncached_s * 1e3,
+        uncached_s / cached_s);
+
+    // -- aggregation: select-nth coordinate median --
+    let coords = 2 * vocab * rank;
+    let refs: Vec<&ClientUpdate> = sc.updates.iter().collect();
+    let median_s = median_secs(warm, iters, || {
+        std::hint::black_box(CoordMedian.aggregate(&refs).unwrap());
+    });
+    eprintln!(
+        "[bench] median agg     {} clients x {} coords: {:.3}ms \
+         ({:.1} Mcoord/s)",
+        sc.updates.len(), coords, median_s * 1e3,
+        coords as f64 / median_s / 1e6);
+
+    // -- round loop: wall time vs coordinator threads --
+    let fleet_cfg = round_loop_config(if quick { 2 } else { 3 });
+    // even quick mode warms once and takes a median of 3: a cold
+    // single-shot threads=1 baseline would bias every speedup it seeds
+    let (rwarm, riters) = if quick { (1, 3) } else { (1, 5) };
+    let mut cells: Vec<Json> = Vec::new();
+    let mut base_wall = 0.0f64;
+    let mut nll_bits: Option<u64> = None;
+    let mut deterministic = true;
+    for &threads in &[1usize, 2, 4] {
+        let mut cfg = fleet_cfg.clone();
+        cfg.threads = threads;
+        let mut last_nll = 0.0f64;
+        let wall = median_secs(rwarm, riters, || {
+            let res = run_fleet(&cfg).expect("bench fleet run failed");
+            last_nll = res.rounds.last().unwrap().eval_nll;
+        });
+        match nll_bits {
+            None => nll_bits = Some(last_nll.to_bits()),
+            Some(bits) => deterministic &= bits == last_nll.to_bits(),
+        }
+        if threads == 1 {
+            base_wall = wall;
+        }
+        let speedup = base_wall / wall;
+        eprintln!(
+            "[bench] round loop     threads {threads}: {:.1}ms \
+             ({:.2} rounds/s, {:.2}x vs 1 thread)",
+            wall * 1e3, cfg.rounds as f64 / wall, speedup);
+        cells.push(Json::obj(vec![
+            ("threads", Json::from(threads)),
+            ("wall_s", Json::from(wall)),
+            ("rounds_per_s", Json::from(cfg.rounds as f64 / wall)),
+            ("speedup", Json::from(speedup)),
+        ]));
+    }
+    if !deterministic {
+        bail!("round loop diverged across thread counts — determinism \
+               contract broken");
+    }
+
+    let j = Json::obj(vec![
+        ("bench", Json::from("fleet")),
+        ("quick", Json::from(quick)),
+        ("host_threads", Json::from(host_threads)),
+        ("kernel_loss_grad", Json::obj(vec![
+            ("vocab", Json::from(vocab)),
+            ("rank", Json::from(rank)),
+            ("repeated", Json::obj(vec![
+                ("pairs", Json::from(sc.repeated.len())),
+                ("distinct_ctx", Json::from(rep_ctx)),
+                ("grouped_s", Json::from(rep_grouped)),
+                ("naive_s", Json::from(rep_naive)),
+                ("speedup", Json::from(rep_naive / rep_grouped)),
+                ("tokens_per_s",
+                 Json::from(sc.repeated.len() as f64 / rep_grouped)),
+            ])),
+            ("distinct", Json::obj(vec![
+                ("pairs", Json::from(sc.distinct.len())),
+                ("grouped_s", Json::from(dis_grouped)),
+                ("naive_s", Json::from(dis_naive)),
+                ("speedup", Json::from(dis_naive / dis_grouped)),
+            ])),
+        ])),
+        ("eval_nll", Json::obj(vec![
+            ("eval_tokens", Json::from(sc.eval_stream.len())),
+            ("cached_s", Json::from(cached_s)),
+            ("one_shot_s", Json::from(uncached_s)),
+            ("speedup", Json::from(uncached_s / cached_s)),
+        ])),
+        ("aggregate_median", Json::obj(vec![
+            ("clients", Json::from(sc.updates.len())),
+            ("coords", Json::from(coords)),
+            ("time_s", Json::from(median_s)),
+        ])),
+        ("round_loop", Json::obj(vec![
+            ("clients", Json::from(fleet_cfg.n_clients)),
+            ("rounds", Json::from(fleet_cfg.rounds)),
+            ("deterministic", Json::from(deterministic)),
+            ("cells", Json::Arr(cells)),
+        ])),
+    ]);
+    std::fs::write(&out_path, j.to_string())?;
+    println!("[bench] wrote {}", out_path.display());
+    Ok(())
+}

@@ -7,6 +7,7 @@
 //!   mft exp <id> [flags]     regenerate a paper table/figure (launcher:
 //!                            spawns `mft train` workers for clean RSS)
 //!   mft agent [flags]        the campus health-agent case study
+//!   mft bench fleet [flags]  fleet perf benchmarks -> BENCH_fleet.json
 //!   mft viz <run-dir>        terminal training visualizer
 //!   mft devices              list simulated device profiles
 //!   mft info                 manifest/artifact inventory
@@ -132,11 +133,12 @@ pub fn main() -> Result<()> {
         Some("fleet") => crate::fleet::cmd_fleet(&args),
         Some("exp") => crate::exp::drivers::dispatch(&args),
         Some("agent") => crate::agent::cmd_agent(&args),
+        Some("bench") => crate::bench::dispatch(&args),
         Some("viz") => crate::viz::cmd_viz(&args),
         Some("devices") => cmd_devices(),
         Some("info") => cmd_info(&args),
-        Some(other) => bail!("unknown subcommand {other:?}; \
-                              try train|fleet|exp|agent|viz|devices|info"),
+        Some(other) => bail!("unknown subcommand {other:?}; try \
+                              train|fleet|exp|agent|bench|viz|devices|info"),
         None => {
             print_help();
             Ok(())
@@ -208,11 +210,14 @@ fn print_help() {
                      --dirichlet-alpha F --agg fedavg|median|trimmed-mean\n\
                      --select all|resource|random --random-k K --mu F\n\
                      --rho F --straggler-factor F --battery-min F\n\
-                     --battery-max F --out DIR --seed N\n\
+                     --battery-max F --threads N (0 = MFT_THREADS/auto;\n\
+                     output is identical for any value) --out DIR --seed N\n\
            exp       regenerate a paper experiment:\n\
                      fig9 table4 table5 fig10 table6 table7 fig11 table8\n\
                      fig12 fleet\n\
            agent     campus health-agent case study (train/ask)\n\
+           bench     perf benchmarks: `bench fleet [--quick] [--out F]`\n\
+                     writes BENCH_fleet.json (kernel + round-loop numbers)\n\
            viz       terminal dashboard over a run dir\n\
            devices   list simulated device profiles\n\
            info      artifact inventory"

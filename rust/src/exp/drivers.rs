@@ -620,50 +620,67 @@ fn fig11(args: &Args) -> Result<()> {
 
 // ===========================================================================
 // Fleet sweep — federated fine-tuning: size x non-IID skew x selection
-// (artifact-free; runs in-process on the fleet's reference objective)
+// (artifact-free; runs in-process on the fleet's reference objective).
+// Cells are independent simulations, so the grid fans out over
+// coordinator threads (util::pool) and results merge in cell order —
+// the table and results JSON are identical for any MFT_THREADS.
 // ===========================================================================
 
 fn fleet_sweep(args: &Args) -> Result<()> {
     use crate::fleet::{run_fleet, FleetConfig, SelectPolicy};
+    use crate::util::pool;
 
     let rounds = args.get_parse("rounds", 5usize)?;
     let seed = args.get_parse("seed", 42u64)?;
-    println!("Fleet — federated LoRA over simulated devices \
-              ({rounds} rounds/cell)");
-    println!("{:<8} {:>7} {:>9} | {:>8} {:>8} {:>7} {:>6} {:>6} {:>8}",
-             "clients", "alpha", "policy", "nll0", "nll", "Δnll",
-             "part%", "late", "energy");
-    let mut rows = Vec::new();
+    let mut cells: Vec<(usize, f64, &str, FleetConfig)> = Vec::new();
     for &n_clients in &[8usize, 16] {
         for &alpha in &[100.0f64, 0.1] {
             for policy in ["all", "resource"] {
-                let mut cfg = FleetConfig::default();
-                cfg.n_clients = n_clients;
-                cfg.rounds = rounds;
-                cfg.dirichlet_alpha = alpha;
-                cfg.policy = SelectPolicy::parse(policy, n_clients / 2)?;
-                cfg.seed = seed;
-                if let Some(out) = args.get("out") {
-                    cfg.out_dir = Some(format!(
-                        "{out}/fleet_c{n_clients}_a{alpha}_{policy}"));
-                }
-                let res = run_fleet(&cfg)?;
-                let g = |k: &str| sum_f(&res.summary, k);
-                println!("{:<8} {:>7} {:>9} | {:>8.4} {:>8.4} {:>7.4} \
-                          {:>5.0}% {:>6.0} {:>6.1}kJ",
-                         n_clients, alpha, policy,
-                         g("initial_nll"), g("final_nll"),
-                         g("nll_improvement"),
-                         g("mean_participation") * 100.0,
-                         g("total_stragglers"), g("total_energy_kj"));
-                rows.push(Json::obj(vec![
-                    ("clients", Json::from(n_clients)),
-                    ("alpha", Json::from(alpha)),
-                    ("policy", Json::from(policy)),
-                    ("summary", res.summary),
-                ]));
+                let cfg = FleetConfig {
+                    n_clients,
+                    rounds,
+                    dirichlet_alpha: alpha,
+                    policy: SelectPolicy::parse(policy, n_clients / 2)?,
+                    seed,
+                    // the sweep already saturates cores at the cell
+                    // level; single-threaded cells avoid
+                    // oversubscription and are bitwise identical to any
+                    // other thread count anyway
+                    threads: 1,
+                    out_dir: args.get("out").map(|out| format!(
+                        "{out}/fleet_c{n_clients}_a{alpha}_{policy}")),
+                    ..FleetConfig::default()
+                };
+                cells.push((n_clients, alpha, policy, cfg));
             }
         }
+    }
+    let threads = pool::resolve_threads(0).min(cells.len());
+    println!("Fleet — federated LoRA over simulated devices \
+              ({rounds} rounds/cell, {} cells on {threads} threads)",
+             cells.len());
+    println!("{:<8} {:>7} {:>9} | {:>8} {:>8} {:>7} {:>6} {:>6} {:>8}",
+             "clients", "alpha", "policy", "nll0", "nll", "Δnll",
+             "part%", "late", "energy");
+    let results = pool::ordered_map(&cells, threads,
+                                    |_, (_, _, _, cfg)| run_fleet(cfg));
+    let mut rows = Vec::new();
+    for ((n_clients, alpha, policy, _), res) in cells.iter().zip(results) {
+        let res = res?;
+        let g = |k: &str| sum_f(&res.summary, k);
+        println!("{:<8} {:>7} {:>9} | {:>8.4} {:>8.4} {:>7.4} \
+                  {:>5.0}% {:>6.0} {:>6.1}kJ",
+                 n_clients, alpha, policy,
+                 g("initial_nll"), g("final_nll"),
+                 g("nll_improvement"),
+                 g("mean_participation") * 100.0,
+                 g("total_stragglers"), g("total_energy_kj"));
+        rows.push(Json::obj(vec![
+            ("clients", Json::from(*n_clients)),
+            ("alpha", Json::from(*alpha)),
+            ("policy", Json::from(*policy)),
+            ("summary", res.summary),
+        ]));
     }
     write_results(args, "fleet", &Json::Arr(rows))
 }

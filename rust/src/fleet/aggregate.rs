@@ -80,6 +80,11 @@ impl Aggregator for FedAvg {
 
 /// Coordinate-wise median (unweighted): tolerant of a minority of wild
 /// updates at the cost of ignoring sample counts.
+///
+/// Uses `select_nth_unstable_by` (linear-time order statistics) instead
+/// of fully sorting every coordinate — the aggregation cost per
+/// coordinate is O(clients), not O(clients·log clients), which matters
+/// when adapters have hundreds of thousands of coordinates per round.
 pub struct CoordMedian;
 
 impl Aggregator for CoordMedian {
@@ -90,6 +95,7 @@ impl Aggregator for CoordMedian {
     fn aggregate(&self, updates: &[&ClientUpdate]) -> Result<Vec<Vec<f32>>> {
         validate(updates)?;
         let n = updates.len();
+        let mid = n / 2;
         let mut out = Vec::with_capacity(updates[0].delta.len());
         let mut vals = vec![0.0f32; n];
         for ti in 0..updates[0].delta.len() {
@@ -100,12 +106,26 @@ impl Aggregator for CoordMedian {
                     vals[j] = u.delta[ti][i];
                 }
                 // total_cmp: a NaN delta from a diverged client must be
-                // trimmed, not panic the coordinator
-                vals.sort_by(|a, b| a.total_cmp(b));
+                // pushed to the tail and trimmed, not panic the
+                // coordinator (total order sorts NaN past +inf)
+                let (lo, m, _) =
+                    vals.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
                 *x = if n % 2 == 1 {
-                    vals[n / 2]
+                    *m
                 } else {
-                    0.5 * (vals[n / 2 - 1] + vals[n / 2])
+                    // lower middle = max of the left partition
+                    let lower = lo
+                        .iter()
+                        .copied()
+                        .reduce(|p, q| {
+                            if p.total_cmp(&q) == std::cmp::Ordering::Less {
+                                q
+                            } else {
+                                p
+                            }
+                        })
+                        .unwrap_or(*m);
+                    0.5 * (lower + *m)
                 };
             }
             out.push(t);
@@ -115,7 +135,9 @@ impl Aggregator for CoordMedian {
 }
 
 /// Coordinate-wise trimmed mean: drop the `trim_frac` fraction from each
-/// tail, average the rest.
+/// tail, average the rest.  Like [`CoordMedian`], partitions with
+/// `select_nth_unstable_by` instead of sorting: two selections isolate
+/// the kept middle ranks `[k, n-k)` in linear time per coordinate.
 pub struct TrimmedMean {
     pub trim_frac: f64,
 }
@@ -132,6 +154,7 @@ impl Aggregator for TrimmedMean {
         while 2 * k >= n {
             k -= 1;
         }
+        let kept_n = n - 2 * k; // >= 1 by the loop above
         let mut out = Vec::with_capacity(updates[0].delta.len());
         let mut vals = vec![0.0f32; n];
         for ti in 0..updates[0].delta.len() {
@@ -141,9 +164,19 @@ impl Aggregator for TrimmedMean {
                 for (j, u) in updates.iter().enumerate() {
                     vals[j] = u.delta[ti][i];
                 }
-                vals.sort_by(|a, b| a.total_cmp(b));
-                let kept = &vals[k..n - k];
-                *x = kept.iter().sum::<f32>() / kept.len() as f32;
+                let sum: f32 = if k == 0 {
+                    vals.iter().sum()
+                } else {
+                    // drop the k smallest: pivot at rank k-1, keep right
+                    let (_, _, rest) = vals
+                        .select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+                    // within the rest, keep the kept_n smallest (ranks
+                    // k..n-k of the full set); NaNs land past the pivot
+                    let (lo, piv, _) = rest.select_nth_unstable_by(
+                        kept_n - 1, |a, b| a.total_cmp(b));
+                    lo.iter().sum::<f32>() + *piv
+                };
+                *x = sum / kept_n as f32;
             }
             out.push(t);
         }
@@ -207,6 +240,87 @@ mod tests {
         let c = upd(2, 1, vec![f32::NAN]);
         let out = CoordMedian.aggregate(&[&a, &b, &c]).unwrap();
         assert!((out[0][0] - 1.1).abs() < 1e-6, "got {}", out[0][0]);
+    }
+
+    /// Full-sort reference medians/trimmed means (the pre-select_nth
+    /// implementation) for the property tests below.
+    fn sorted_median(mut vals: Vec<f32>) -> f32 {
+        let n = vals.len();
+        vals.sort_by(|a, b| a.total_cmp(b));
+        if n % 2 == 1 {
+            vals[n / 2]
+        } else {
+            0.5 * (vals[n / 2 - 1] + vals[n / 2])
+        }
+    }
+
+    fn sorted_trimmed_mean(mut vals: Vec<f32>, k: usize) -> f32 {
+        let n = vals.len();
+        vals.sort_by(|a, b| a.total_cmp(b));
+        let kept = &vals[k..n - k];
+        kept.iter().sum::<f32>() / kept.len() as f32
+    }
+
+    #[test]
+    fn select_nth_median_matches_full_sort_including_nan() {
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::new(77);
+        for n in [1usize, 2, 3, 4, 5, 8, 9] {
+            for trial in 0..40 {
+                let us: Vec<ClientUpdate> = (0..n)
+                    .map(|id| {
+                        let mut v =
+                            (rng.range_f64(-10.0, 10.0) * 1e3).round() as f32
+                                / 1e3;
+                        // a diverged client every few trials
+                        if trial % 5 == 0 && id == n / 2 {
+                            v = f32::NAN;
+                        }
+                        upd(id, 1, vec![v])
+                    })
+                    .collect();
+                let refs: Vec<&ClientUpdate> = us.iter().collect();
+                let got = CoordMedian.aggregate(&refs).unwrap()[0][0];
+                let want = sorted_median(
+                    us.iter().map(|u| u.delta[0][0]).collect());
+                assert_eq!(got.to_bits(), want.to_bits(),
+                           "n={n} trial={trial}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_nth_trimmed_mean_matches_full_sort_including_nan() {
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::new(99);
+        for n in [1usize, 3, 5, 8, 11] {
+            for trial in 0..40 {
+                let us: Vec<ClientUpdate> = (0..n)
+                    .map(|id| {
+                        let mut v = rng.range_f64(-5.0, 5.0) as f32;
+                        if trial % 7 == 0 && id == 0 {
+                            v = f32::NAN;
+                        }
+                        upd(id, 1, vec![v])
+                    })
+                    .collect();
+                let refs: Vec<&ClientUpdate> = us.iter().collect();
+                let trim_frac = 0.25;
+                let got = TrimmedMean { trim_frac }.aggregate(&refs)
+                    .unwrap()[0][0];
+                let mut k = (n as f64 * trim_frac).floor() as usize;
+                while 2 * k >= n {
+                    k -= 1;
+                }
+                let want = sorted_trimmed_mean(
+                    us.iter().map(|u| u.delta[0][0]).collect(), k);
+                // kept-set equality: the sums may round differently
+                // (partition order vs sorted order), so compare values
+                let ok = (got - want).abs() <= 1e-5 * want.abs().max(1.0)
+                    || (got.is_nan() && want.is_nan());
+                assert!(ok, "n={n} trial={trial}: {got} vs {want}");
+            }
+        }
     }
 
     #[test]

@@ -118,6 +118,18 @@ impl FleetClient {
         Ok(())
     }
 
+    /// One full coordinator hand-off: load the global adapter, run the
+    /// local round.  This is the unit the driver fans out across worker
+    /// threads ([`crate::util::pool::ordered_map_mut`]) — each selected
+    /// client touches only its own state, so concurrent rounds are
+    /// deterministic by construction.
+    pub fn run_round(&mut self, names: &[String], global: &[Vec<f32>],
+                     model: &BigramRef, cfg: &FleetConfig)
+                     -> Result<ClientUpdate> {
+        self.load_global(names, global)?;
+        self.local_round(model, cfg)
+    }
+
     /// Run `cfg.local_steps` AdamW steps on shard micro-batches and
     /// return the adapter delta + resource accounting.
     pub fn local_round(&mut self, model: &BigramRef, cfg: &FleetConfig)
@@ -133,29 +145,31 @@ impl FleetClient {
         let mut gb = vec![0.0f32; model.rank * model.vocab];
         let mut pairs: Vec<(u32, u32)> =
             Vec::with_capacity(cfg.micro_batch * cfg.window);
+        let mut scratch = crate::fleet::model::GradScratch::default();
         let t_start = self.clock.now_s();
         let mut energy = 0.0f64;
         let mut loss_sum = 0.0f64;
         let mut n_samples = 0usize;
         for _ in 0..cfg.local_steps {
             // micro-batch: `micro_batch` windows of consecutive
-            // (ctx, next) pairs, cyclic over the shard
-            pairs.clear();
-            for _ in 0..cfg.micro_batch {
-                let start = self.rng.below(self.shard.len());
-                for i in 0..cfg.window {
-                    let c = self.shard[(start + i) % self.shard.len()];
-                    let t = self.shard[(start + i + 1) % self.shard.len()];
-                    pairs.push((c, t));
-                }
-            }
+            // (ctx, next) pairs, cyclic over the shard (the shared
+            // sampler keeps the benchmarks in the same batch shape)
+            crate::fleet::model::fill_window_pairs(
+                &self.shard, cfg.micro_batch, cfg.window, &mut self.rng,
+                &mut pairs);
             ga.iter_mut().for_each(|x| *x = 0.0);
             gb.iter_mut().for_each(|x| *x = 0.0);
-            let a = self.adapter.get(crate::fleet::model::LORA_A)?
-                .as_f32()?.to_vec();
-            let b = self.adapter.get(crate::fleet::model::LORA_B)?
-                .as_f32()?.to_vec();
-            loss_sum += model.loss_and_grad(&pairs, &a, &b, &mut ga, &mut gb);
+            // borrow the adapter tensors in place (no per-step copies;
+            // the borrows end before the optimizer takes &mut) and
+            // reuse the kernel scratch across steps (no allocations)
+            loss_sum += {
+                let a = self.adapter.get(crate::fleet::model::LORA_A)?
+                    .as_f32()?;
+                let b = self.adapter.get(crate::fleet::model::LORA_B)?
+                    .as_f32()?;
+                model.loss_and_grad_scratch(&pairs, a, b, &mut ga, &mut gb,
+                                            &mut scratch)
+            };
             n_samples += pairs.len();
             self.opt.next_step();
             {
@@ -279,5 +293,25 @@ mod tests {
     fn requires_load_global_first() {
         let (model, cfg, mut c) = setup();
         assert!(c.local_round(&model, &cfg).is_err());
+    }
+
+    #[test]
+    fn run_round_equals_load_then_round() {
+        let (model, cfg, mut c) = setup();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let up = c.run_round(&names, &g, &model, &cfg).unwrap();
+        assert_eq!(up.client_id, 0);
+        assert_eq!(up.n_samples, 3 * 2 * 16);
+    }
+
+    #[test]
+    fn fleet_client_is_send() {
+        // the driver moves &mut FleetClient into scoped worker threads
+        fn assert_send<T: Send>() {}
+        assert_send::<FleetClient>();
     }
 }

@@ -6,9 +6,19 @@
 //! evenly spaced over the configured range — deterministic
 //! heterogeneity), then iterate rounds:
 //!
-//!   select -> local rounds on each selected client -> drop stragglers
-//!   past the virtual deadline -> aggregate the surviving deltas ->
-//!   apply to the global adapter -> evaluate on the held-out stream.
+//!   select -> local rounds on the selected clients, fanned out over
+//!   coordinator worker threads -> drop stragglers past the virtual
+//!   deadline -> aggregate the surviving deltas -> apply to the global
+//!   adapter -> evaluate on the held-out stream.
+//!
+//! The fan-out uses [`pool::ordered_map_mut`]: each worker gets
+//! exclusive `&mut` access to a disjoint set of clients and results are
+//! merged back in client-id order, so `rounds.jsonl`, `summary.json`
+//! and the exported adapter are **bitwise identical for any thread
+//! count** (`MFT_THREADS=1/2/8` all agree per seed).  Held-out
+//! evaluation runs against a bigram-count cache built once per run
+//! ([`BigramRef::eval_cache`]), so per-round eval cost is independent
+//! of the eval-corpus length.
 //!
 //! Every round appends a [`RoundRecord`] to `rounds.jsonl` (the fleet viz
 //! panel tails it) and the final merged adapter exports to safetensors
@@ -31,6 +41,7 @@ use crate::sim;
 use crate::tokenizer::Tokenizer;
 use crate::train::lora::LoraState;
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::rng::Pcg;
 
 const MIB: u64 = 1024 * 1024;
@@ -126,11 +137,17 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let deadline_s = cfg.straggler_factor * tokens_per_round
         * cfg.flops_per_token / (max_gflops * 1e9);
 
+    let threads = pool::resolve_threads(cfg.threads);
     let mut records: Vec<RoundRecord> = Vec::new();
     let mut cum_energy = 0.0f64;
 
+    // eval statistics are fixed for the run: collapse the held-out
+    // stream to a bigram count matrix once, reuse every round
+    let mut eval_cache = model.eval_cache(&eval_tokens);
+
     // round 0: the untouched global adapter (B = 0 => base model)
-    let nll0 = model.eval_nll(&eval_tokens, &global[ia], &global[ib]);
+    let nll0 = model.eval_nll_cached(&mut eval_cache, &global[ia],
+                                     &global[ib]);
     let rec0 = RoundRecord {
         round: 0,
         eval_nll: nll0,
@@ -159,12 +176,25 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             .map(|&id| statuses[id].battery_frac)
             .fold(1.0f64, f64::min);
 
-        let mut updates: Vec<ClientUpdate> =
-            Vec::with_capacity(sel.selected.len());
+        // fan the selected clients' local rounds out over worker
+        // threads; `selected` is ascending and `run` preserves it, so
+        // the merged updates come back in client-id order regardless of
+        // scheduling — the determinism contract
+        let mut in_round = vec![false; clients.len()];
         for &id in &sel.selected {
-            let c = &mut clients[id];
-            c.load_global(&names, &global)?;
-            updates.push(c.local_round(&model, cfg)?);
+            in_round[id] = true;
+        }
+        let mut run: Vec<&mut FleetClient> = clients
+            .iter_mut()
+            .filter(|c| in_round[c.id])
+            .collect();
+        let results = pool::ordered_map_mut(&mut run, threads, |_, c| {
+            c.run_round(&names, &global, &model, cfg)
+        });
+        let mut updates: Vec<ClientUpdate> =
+            Vec::with_capacity(results.len());
+        for r in results {
+            updates.push(r?);
         }
         let (ontime, late): (Vec<&ClientUpdate>, Vec<&ClientUpdate>) =
             updates.iter().partition(|u| u.time_s <= deadline_s);
@@ -181,7 +211,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             mean_loss = ontime.iter().map(|u| u.train_loss).sum::<f64>()
                 / ontime.len() as f64;
         }
-        let nll = model.eval_nll(&eval_tokens, &global[ia], &global[ib]);
+        let nll = model.eval_nll_cached(&mut eval_cache, &global[ia],
+                                        &global[ib]);
         let rec = RoundRecord {
             round,
             eval_nll: nll,
@@ -194,7 +225,18 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             mean_train_loss: mean_loss,
             energy_j: cum_energy,
             bytes_up: adapter_bytes * ontime.len() as u64,
-            time_s: updates.iter().map(|u| u.time_s).fold(0.0f64, f64::max),
+            // on-time makespan: the round's virtual wall time is set by
+            // the slowest client that made the deadline — dropped
+            // stragglers don't gate the round, they are reported apart.
+            // If *everyone* blew the deadline the coordinator still
+            // waited it out, so an all-late round costs deadline_s.
+            time_s: if ontime.is_empty() && !late.is_empty() {
+                deadline_s
+            } else {
+                ontime.iter().map(|u| u.time_s).fold(0.0f64, f64::max)
+            },
+            straggler_time_s:
+                late.iter().map(|u| u.time_s).fold(0.0f64, f64::max),
             participants: ontime.iter().map(|u| u.client_id).collect(),
             min_battery_selected: if sel.selected.is_empty() {
                 1.0
@@ -294,6 +336,7 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
         args.get_parse("ram-required-mb", cfg.ram_required_bytes / MIB)? * MIB;
     cfg.battery_min = args.get_parse("battery-min", cfg.battery_min)?;
     cfg.battery_max = args.get_parse("battery-max", cfg.battery_max)?;
+    cfg.threads = args.get_parse("threads", cfg.threads)?;
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.out_dir = args.get("out").map(String::from);
     cfg.validate()?;

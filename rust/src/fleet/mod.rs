@@ -19,7 +19,10 @@
 //! * [`model`] — the artifact-free local objective (frozen log-unigram
 //!   base + trainable low-rank bigram delta) that lets the whole fleet
 //!   run end-to-end with no XLA artifacts;
-//! * [`driver`] — the round loop: select -> local rounds -> straggler
+//! * [`driver`] — the round loop: select -> local rounds (fanned out
+//!   over coordinator threads via
+//!   [`util::pool`](crate::util::pool), merged in client-id order so
+//!   output is bitwise identical for any `MFT_THREADS`) -> straggler
 //!   drop -> aggregate -> global eval, emitting per-round
 //!   [`metrics::RoundRecord`]s and exporting the merged adapter to
 //!   safetensors.
@@ -96,6 +99,11 @@ pub struct FleetConfig {
     /// [battery_min, battery_max] (deterministic heterogeneity)
     pub battery_min: f64,
     pub battery_max: f64,
+    /// coordinator worker threads for the per-round client fan-out
+    /// (0 = auto: `MFT_THREADS` env, else host parallelism).  Output is
+    /// bitwise identical for any value — updates always merge in
+    /// client-id order ([`util::pool`](crate::util::pool)).
+    pub threads: usize,
     pub seed: u64,
     pub out_dir: Option<String>,
 }
@@ -126,6 +134,7 @@ impl Default for FleetConfig {
             ram_required_bytes: 256 * MIB,
             battery_min: 0.15,
             battery_max: 1.0,
+            threads: 0,
             seed: 42,
             out_dir: None,
         }

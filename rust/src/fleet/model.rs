@@ -107,12 +107,128 @@ impl BigramRef {
 
     /// Mean NLL over (ctx, next) pairs; accumulates the mean gradient
     /// into `ga` / `gb` (callers zero them per micro-step).
+    ///
+    /// Hot path of every client's local round.  Pairs are grouped by
+    /// context (a stable counting sort), so each distinct context's
+    /// logits/softmax is computed **once per micro-batch** and the
+    /// gradient accumulates via one rank × vocab pass over the group's
+    /// summed dlogits: `O(distinct_ctx · rank · vocab)` instead of the
+    /// naive `O(pairs · rank · vocab)`.  Window-sampled micro-batches
+    /// repeat contexts heavily, so this is a large constant-factor win
+    /// (see `mft bench fleet`).  [`Self::loss_and_grad_naive`] is the
+    /// per-pair oracle it is tested against.
+    ///
+    /// Allocates a fresh [`GradScratch`] per call; hot loops (the
+    /// client's local steps, the benchmarks) should hold one and call
+    /// [`Self::loss_and_grad_scratch`] instead — allocation-free after
+    /// the first step.
     pub fn loss_and_grad(&self, pairs: &[(u32, u32)], a: &[f32], b: &[f32],
                          ga: &mut [f32], gb: &mut [f32]) -> f64 {
+        let mut scratch = GradScratch::default();
+        self.loss_and_grad_scratch(pairs, a, b, ga, gb, &mut scratch)
+    }
+
+    /// [`Self::loss_and_grad`] with caller-owned scratch buffers.
+    pub fn loss_and_grad_scratch(&self, pairs: &[(u32, u32)], a: &[f32],
+                                 b: &[f32], ga: &mut [f32], gb: &mut [f32],
+                                 scratch: &mut GradScratch) -> f64 {
         debug_assert_eq!(a.len(), self.vocab * self.rank);
         debug_assert_eq!(b.len(), self.rank * self.vocab);
         debug_assert_eq!(ga.len(), a.len());
         debug_assert_eq!(gb.len(), b.len());
+        if pairs.is_empty() {
+            return 0.0;
+        }
+        let v = self.vocab;
+        let r = self.rank;
+        let inv = 1.0 / pairs.len() as f32;
+
+        // counting sort: group targets by context (deterministic
+        // order).  After the placement pass `cursor[c]` is the *end* of
+        // group c, so group c spans targets[prev_end..cursor[c]].
+        let GradScratch { cursor, targets, logits, d } = scratch;
+        cursor.clear();
+        cursor.resize(v + 1, 0);
+        for &(c, _) in pairs {
+            debug_assert!((c as usize) < v);
+            cursor[c as usize + 1] += 1;
+        }
+        for c in 0..v {
+            cursor[c + 1] += cursor[c];
+        }
+        targets.clear();
+        targets.resize(pairs.len(), 0);
+        for &(c, t) in pairs {
+            debug_assert!((t as usize) < v);
+            targets[cursor[c as usize]] = t;
+            cursor[c as usize] += 1;
+        }
+        logits.resize(v, 0.0);
+        d.resize(v, 0.0); // softmax, then summed dlogits
+
+        let mut nll = 0.0f64;
+        let mut start = 0usize;
+        for c in 0..v {
+            let end = cursor[c];
+            let group = &targets[start..end];
+            start = end;
+            if group.is_empty() {
+                continue;
+            }
+            self.row_logits(c, a, b, logits);
+            let max = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut z = 0.0f32;
+            for (dj, &l) in d.iter_mut().zip(logits.iter()) {
+                let e = (l - max).exp();
+                *dj = e;
+                z += e;
+            }
+            let zinv = 1.0 / z;
+            for dj in d.iter_mut() {
+                *dj *= zinv;
+            }
+            for &t in group {
+                nll -= ((d[t as usize]).max(1e-30) as f64).ln();
+            }
+            // summed dlogits over the group:
+            //   d <- n_c * softmax - sum_i onehot(target_i)
+            let nc = group.len() as f32;
+            if group.len() > 1 {
+                for dj in d.iter_mut() {
+                    *dj *= nc;
+                }
+            }
+            for &t in group {
+                d[t as usize] -= 1.0;
+            }
+            // one rank x vocab pass per distinct context
+            let ar = &a[c * r..(c + 1) * r];
+            let gar = &mut ga[c * r..(c + 1) * r];
+            for k in 0..r {
+                let brow = &b[k * v..(k + 1) * v];
+                let gbrow = &mut gb[k * v..(k + 1) * v];
+                let wa = self.scale * ar[k] * inv;
+                let mut dot = 0.0f32;
+                for (j, &dj) in d.iter().enumerate() {
+                    dot += dj * brow[j];
+                    gbrow[j] += wa * dj;
+                }
+                gar[k] += self.scale * dot * inv;
+            }
+        }
+        nll / pairs.len() as f64
+    }
+
+    /// The original per-pair implementation, kept off the hot path as the
+    /// numerical oracle for [`Self::loss_and_grad`] (unit tests) and as
+    /// the baseline the fleet benchmarks measure the grouped kernel
+    /// against.  Semantically identical up to f32 accumulation order.
+    #[doc(hidden)]
+    pub fn loss_and_grad_naive(&self, pairs: &[(u32, u32)], a: &[f32],
+                               b: &[f32], ga: &mut [f32], gb: &mut [f32])
+                               -> f64 {
+        debug_assert_eq!(a.len(), self.vocab * self.rank);
+        debug_assert_eq!(b.len(), self.rank * self.vocab);
         if pairs.is_empty() {
             return 0.0;
         }
@@ -154,34 +270,133 @@ impl BigramRef {
         nll / pairs.len() as f64
     }
 
-    /// Mean NLL of a token stream under base + adapter.  Materializes the
-    /// full log-softmax table once (O(vocab^2 * rank)), then streams.
+    /// Precompute the bigram statistics of a fixed eval stream: distinct
+    /// (ctx, next) pairs with occurrence counts, grouped by context, plus
+    /// a persistent logits scratch row.  Built **once per run**; every
+    /// per-round [`Self::eval_nll_cached`] call then costs
+    /// `O(distinct_ctx · rank · vocab)` — independent of the eval
+    /// corpus length — where the old path re-materialized a full
+    /// `O(vocab² · rank)` log-softmax table and re-streamed every token.
+    pub fn eval_cache(&self, tokens: &[u32]) -> EvalCache {
+        let v = self.vocab;
+        let mut counts: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+        let mut n_pairs = 0usize;
+        for w in tokens.windows(2) {
+            let (c, t) = (w[0], w[1]);
+            if (c as usize) < v && (t as usize) < v {
+                *counts.entry((c, t)).or_insert(0) += 1;
+                n_pairs += 1;
+            }
+        }
+        let mut ctxs: Vec<u32> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        let mut entries: Vec<(u32, f64)> = Vec::with_capacity(counts.len());
+        for ((c, t), k) in counts {
+            if ctxs.last() != Some(&c) {
+                ctxs.push(c);
+                spans.push((entries.len(), entries.len()));
+            }
+            entries.push((t, k as f64));
+            spans.last_mut().unwrap().1 = entries.len();
+        }
+        EvalCache { ctxs, spans, entries, n_pairs, row: vec![0.0f32; v] }
+    }
+
+    /// Mean NLL of the cached eval stream under base + adapter.  The
+    /// cache's scratch row is reused across rounds (zero allocation).
+    pub fn eval_nll_cached(&self, cache: &mut EvalCache, a: &[f32],
+                           b: &[f32]) -> f64 {
+        if cache.n_pairs == 0 {
+            return f64::NAN;
+        }
+        let EvalCache { ctxs, spans, entries, n_pairs, row } = cache;
+        let mut nll = 0.0f64;
+        for (i, &c) in ctxs.iter().enumerate() {
+            self.row_logits(c as usize, a, b, row);
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let z: f32 = row.iter().map(|&x| (x - max).exp()).sum();
+            let lse = (max + z.ln()) as f64;
+            let (s, e) = spans[i];
+            for &(t, k) in &entries[s..e] {
+                nll -= k * (row[t as usize] as f64 - lse);
+            }
+        }
+        nll / *n_pairs as f64
+    }
+
+    /// Mean NLL of a token stream under base + adapter.  One-shot
+    /// convenience over [`Self::eval_cache`] + [`Self::eval_nll_cached`];
+    /// round loops that evaluate the same stream repeatedly should build
+    /// the cache once instead.
     pub fn eval_nll(&self, tokens: &[u32], a: &[f32], b: &[f32]) -> f64 {
         if tokens.len() < 2 {
             return f64::NAN;
         }
-        let v = self.vocab;
-        let mut logp = vec![0.0f32; v * v];
-        let mut row = vec![0.0f32; v];
-        for c in 0..v {
-            self.row_logits(c, a, b, &mut row);
-            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-            let z: f32 = row.iter().map(|&x| (x - max).exp()).sum();
-            let lse = max + z.ln();
-            for (j, &x) in row.iter().enumerate() {
-                logp[c * v + j] = x - lse;
-            }
+        let mut cache = self.eval_cache(tokens);
+        self.eval_nll_cached(&mut cache, a, b)
+    }
+}
+
+/// Reusable scratch buffers for
+/// [`BigramRef::loss_and_grad_scratch`]: the counting-sort cursor and
+/// grouped-target arrays plus the logits / summed-dlogits rows.  Hold
+/// one per hot loop (the fleet client keeps one per local round) so
+/// the kernel is allocation-free after the first step.
+#[derive(Debug, Clone, Default)]
+pub struct GradScratch {
+    cursor: Vec<usize>,
+    targets: Vec<u32>,
+    logits: Vec<f32>,
+    d: Vec<f32>,
+}
+
+/// Fill `out` with a client-shaped micro-batch: `windows` windows of
+/// `window` consecutive (ctx, next) pairs sampled cyclically from
+/// `stream`.  This is the exact sampling shape of
+/// [`FleetClient::local_round`](crate::fleet::client::FleetClient) —
+/// shared so the fleet benchmarks (`mft bench fleet`,
+/// `benches/bench_fleet.rs`) measure the real workload and cannot
+/// drift from it.
+pub fn fill_window_pairs(stream: &[u32], windows: usize, window: usize,
+                         rng: &mut crate::util::rng::Pcg,
+                         out: &mut Vec<(u32, u32)>) {
+    out.clear();
+    out.reserve(windows * window);
+    for _ in 0..windows {
+        let start = rng.below(stream.len());
+        for i in 0..window {
+            let c = stream[(start + i) % stream.len()];
+            let t = stream[(start + i + 1) % stream.len()];
+            out.push((c, t));
         }
-        let mut nll = 0.0f64;
-        let mut n = 0usize;
-        for w in tokens.windows(2) {
-            let (c, t) = (w[0] as usize, w[1] as usize);
-            if c < v && t < v {
-                nll -= logp[c * v + t] as f64;
-                n += 1;
-            }
-        }
-        nll / n.max(1) as f64
+    }
+}
+
+/// Precomputed per-run eval statistics for [`BigramRef::eval_nll_cached`]:
+/// the eval stream collapsed to a sparse bigram count matrix (grouped by
+/// context) plus a persistent scratch row, so per-round evaluation cost
+/// does not depend on how long the eval corpus is.
+#[derive(Debug, Clone)]
+pub struct EvalCache {
+    /// distinct contexts present in the stream, ascending
+    ctxs: Vec<u32>,
+    /// per-context [start, end) range into `entries`
+    spans: Vec<(usize, usize)>,
+    /// (target, occurrence count) — ascending target within a context
+    entries: Vec<(u32, f64)>,
+    /// total in-vocab (ctx, next) pairs (the NLL denominator)
+    n_pairs: usize,
+    /// persistent logits scratch (vocab-sized)
+    row: Vec<f32>,
+}
+
+impl EvalCache {
+    pub fn n_pairs(&self) -> usize {
+        self.n_pairs
+    }
+
+    pub fn distinct_contexts(&self) -> usize {
+        self.ctxs.len()
     }
 }
 
@@ -235,6 +450,93 @@ mod tests {
             assert!((fd - ga[i] as f64).abs() < 5e-3,
                     "dA[{i}]: fd {fd} vs analytic {}", ga[i]);
         }
+    }
+
+    #[test]
+    fn grouped_kernel_matches_naive_oracle() {
+        // heavy context repetition (the case the grouping optimizes) plus
+        // a few singleton contexts; loss and both gradients must match
+        // the per-pair oracle to within f32 accumulation order
+        let m = tiny_model();
+        let (na, nb) = (6 * 2, 2 * 6);
+        let a: Vec<f32> = (0..na).map(|i| 0.07 * ((i % 5) as f32 - 2.0)).collect();
+        let b: Vec<f32> = (0..nb).map(|i| 0.05 * ((i % 7) as f32 - 3.0)).collect();
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        for i in 0..48u32 {
+            pairs.push((i % 3, (i * 5 + 1) % 6)); // ctx 0..2 repeated 16x
+        }
+        pairs.push((4, 2)); // singleton contexts
+        pairs.push((5, 0));
+        let mut ga = vec![0.0f32; na];
+        let mut gb = vec![0.0f32; nb];
+        let l = m.loss_and_grad(&pairs, &a, &b, &mut ga, &mut gb);
+        let mut ga_ref = vec![0.0f32; na];
+        let mut gb_ref = vec![0.0f32; nb];
+        let l_ref = m.loss_and_grad_naive(&pairs, &a, &b, &mut ga_ref,
+                                          &mut gb_ref);
+        assert!((l - l_ref).abs() < 1e-6, "loss {l} vs oracle {l_ref}");
+        for (i, (g, r)) in ga.iter().zip(&ga_ref).enumerate() {
+            assert!((g - r).abs() < 1e-5, "ga[{i}]: {g} vs {r}");
+        }
+        for (i, (g, r)) in gb.iter().zip(&gb_ref).enumerate() {
+            assert!((g - r).abs() < 1e-5, "gb[{i}]: {g} vs {r}");
+        }
+    }
+
+    #[test]
+    fn grouped_kernel_gradient_accumulates_like_naive() {
+        // callers accumulate into non-zero grads (grad accumulation);
+        // the grouped path must add, not overwrite
+        let m = tiny_model();
+        let a = vec![0.1f32; 6 * 2];
+        let b = vec![0.05f32; 2 * 6];
+        let pairs = vec![(0u32, 1u32), (0, 2), (0, 1)];
+        let mut ga = vec![1.0f32; 12];
+        let mut gb = vec![-1.0f32; 12];
+        m.loss_and_grad(&pairs, &a, &b, &mut ga, &mut gb);
+        let mut ga2 = vec![1.0f32; 12];
+        let mut gb2 = vec![-1.0f32; 12];
+        m.loss_and_grad_naive(&pairs, &a, &b, &mut ga2, &mut gb2);
+        for (g, r) in ga.iter().zip(&ga2) {
+            assert!((g - r).abs() < 1e-5);
+        }
+        for (g, r) in gb.iter().zip(&gb2) {
+            assert!((g - r).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn eval_cache_matches_one_shot_and_is_reusable() {
+        let m = tiny_model();
+        let a: Vec<f32> = (0..12).map(|i| 0.03 * (i as f32 - 5.0)).collect();
+        let b: Vec<f32> = (0..12).map(|i| 0.04 * ((i % 5) as f32 - 2.0)).collect();
+        let stream: Vec<u32> =
+            (0..300).map(|i| ((i * 7 + i / 3) % 6) as u32).collect();
+        let one_shot = m.eval_nll(&stream, &a, &b);
+        let mut cache = m.eval_cache(&stream);
+        assert_eq!(cache.n_pairs(), stream.len() - 1);
+        assert!(cache.distinct_contexts() <= 6);
+        // bitwise identical to the one-shot path, and stable across
+        // repeated reuse of the same cache (scratch row is reset per ctx)
+        let c1 = m.eval_nll_cached(&mut cache, &a, &b);
+        let c2 = m.eval_nll_cached(&mut cache, &a, &b);
+        assert_eq!(one_shot.to_bits(), c1.to_bits());
+        assert_eq!(c1.to_bits(), c2.to_bits());
+        // out-of-vocab tokens are skipped, not counted
+        let with_oov: Vec<u32> = stream.iter().copied()
+            .chain([99u32, 3, 2].into_iter()).collect();
+        let cache2 = m.eval_cache(&with_oov);
+        assert_eq!(cache2.n_pairs(), stream.len() - 1 + 1); // only (3,2) added
+    }
+
+    #[test]
+    fn eval_empty_stream_is_nan() {
+        let m = tiny_model();
+        let a = vec![0.0f32; 12];
+        let b = vec![0.0f32; 12];
+        assert!(m.eval_nll(&[1], &a, &b).is_nan());
+        let mut cache = m.eval_cache(&[]);
+        assert!(m.eval_nll_cached(&mut cache, &a, &b).is_nan());
     }
 
     #[test]

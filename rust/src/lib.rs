@@ -14,17 +14,25 @@
 //!
 //! Layer map (paper Fig. 3 — four-layer architecture, plus the fleet
 //! layer this repo grows on top):
-//! * Basic layer       -> [`tensor`], [`runtime`], [`util`]
+//! * Basic layer       -> [`tensor`], [`runtime`], [`util`] (JSON, RNG,
+//!   clocks, and [`util::pool`] — deterministic scoped-thread fan-out;
+//!   worker count from `MFT_THREADS`, results always merged in item
+//!   order so parallel output is bitwise identical per seed)
 //! * Intermediate      -> the AOT artifacts (python/compile) + [`model`]
 //! * Abstract layer    -> [`train`] (optimizers, trainers), [`memopt`]
-//! * Application layer -> [`cli`], [`exp`], [`agent`], [`viz`]
+//! * Application layer -> [`cli`], [`exp`], [`agent`], [`viz`],
+//!   [`bench`] (`mft bench fleet` emits machine-readable
+//!   `BENCH_fleet.json` perf baselines; schema in `benches/README.md`)
 //! * Fleet layer       -> [`fleet`]: round-based federated fine-tuning
 //!   over N simulated devices — non-IID sharding ([`data::partition`]),
 //!   energy/RAM-aware selection ([`fleet::select`]), pluggable
-//!   aggregation ([`fleet::Aggregator`]: FedAvg / median / trimmed-mean)
-//!   and per-round metrics ([`metrics::RoundRecord`])
+//!   aggregation ([`fleet::Aggregator`]: FedAvg / median / trimmed-mean,
+//!   both robust variants on linear-time `select_nth` order statistics),
+//!   local rounds fanned out across coordinator threads, and per-round
+//!   metrics ([`metrics::RoundRecord`])
 
 pub mod agent;
+pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod data;

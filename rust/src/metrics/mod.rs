@@ -99,8 +99,14 @@ pub struct RoundRecord {
     pub energy_j: f64,
     /// adapter bytes that would be uploaded this round
     pub bytes_up: u64,
-    /// virtual wall time of the round (slowest aggregated client)
+    /// on-time makespan: virtual wall time of the round as gated by the
+    /// slowest client that made the deadline (dropped stragglers do not
+    /// extend the round; if every selected client was late, the
+    /// coordinator waited out the deadline, so this is the deadline)
     pub time_s: f64,
+    /// slowest dropped straggler's virtual time (0 when none were late);
+    /// the viz panel shows it next to `time_s`
+    pub straggler_time_s: f64,
     /// ids of aggregated clients
     pub participants: Vec<usize>,
     /// lowest battery fraction among selected clients (1.0 if none)
@@ -122,6 +128,7 @@ impl RoundRecord {
             ("energy_j", Json::from(self.energy_j)),
             ("bytes_up", Json::from(self.bytes_up)),
             ("time_s", Json::from(self.time_s)),
+            ("straggler_time_s", Json::from(self.straggler_time_s)),
             ("participants", Json::Arr(
                 self.participants.iter().map(|&p| Json::from(p)).collect())),
             ("min_battery_selected", Json::from(self.min_battery_selected)),
@@ -148,6 +155,7 @@ impl RoundRecord {
             energy_j: opt_f("energy_j")?,
             bytes_up: opt_u("bytes_up")? as u64,
             time_s: opt_f("time_s")?,
+            straggler_time_s: opt_f("straggler_time_s")?,
             participants: match j.get("participants") {
                 Some(arr) => arr
                     .as_arr()?
@@ -324,6 +332,7 @@ mod tests {
                 energy_j: 100.0 * r as f64,
                 bytes_up: 4096,
                 time_s: 12.5,
+                straggler_time_s: 91.25,
                 participants: vec![0, 2, 4, 5, 7],
                 min_battery_selected: 0.72,
             })

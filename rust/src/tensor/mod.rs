@@ -131,15 +131,24 @@ impl HostTensor {
     }
 
     /// Raw little-endian bytes (for safetensors / shard files).
+    /// Preallocates the exact byte length and extends from 4-byte
+    /// chunks — the per-element `flat_map().collect()` it replaces
+    /// reallocated repeatedly on multi-MB shard writes.
     pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * self.dtype().size());
         match self {
             HostTensor::F32 { data, .. } => {
-                data.iter().flat_map(|v| v.to_le_bytes()).collect()
+                for v in data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
             }
             HostTensor::I32 { data, .. } => {
-                data.iter().flat_map(|v| v.to_le_bytes()).collect()
+                for v in data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
             }
         }
+        out
     }
 
     pub fn from_le_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<Self> {
@@ -216,6 +225,22 @@ mod tests {
         let t = HostTensor::from_i32(&[2, 2], vec![1, -2, 3, i32::MAX]).unwrap();
         let b = t.to_le_bytes();
         let t2 = HostTensor::from_le_bytes(DType::I32, &[2, 2], &b).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn le_bytes_large_tensor_length_and_roundtrip() {
+        // ~1M elements: buffer must be exactly len * dtype.size() bytes
+        // (and, with preallocation, capacity should not balloon past it)
+        let n = 1 << 20;
+        let data: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let t = HostTensor::from_f32(&[n], data).unwrap();
+        let b = t.to_le_bytes();
+        assert_eq!(b.len(), n * 4);
+        assert_eq!(b.len(), t.size_bytes());
+        assert!(b.capacity() >= b.len() && b.capacity() <= n * 4 + 64,
+                "capacity {} for {} bytes", b.capacity(), b.len());
+        let t2 = HostTensor::from_le_bytes(DType::F32, &[n], &b).unwrap();
         assert_eq!(t, t2);
     }
 

@@ -1,7 +1,9 @@
-//! Shared substrate: JSON, seeded RNG, virtual clock, small helpers.
+//! Shared substrate: JSON, seeded RNG, virtual clock, deterministic
+//! thread pool, small helpers.
 
 pub mod clock;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 /// Format a byte count as a human-readable string (MiB with 1 decimal).

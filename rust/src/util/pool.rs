@@ -1,0 +1,223 @@
+//! Deterministic parallel fan-out over scoped threads (no crate deps).
+//!
+//! The coordinator's round loop and the experiment sweep grids are
+//! embarrassingly parallel across clients / cells, but the whole system
+//! promises bit-for-bit reproducibility per seed (EXPERIMENTS.md).  The
+//! two map combinators here keep that promise under any thread count by
+//! construction: workers never share mutable state, and results are
+//! merged back **in item order**, so the caller-observable outcome is
+//! identical whether the map ran on 1 thread or 16.  The only thing
+//! threads may change is wall-clock time.
+//!
+//! Thread count resolution (see [`resolve_threads`]):
+//!   explicit caller value > 0  >  `MFT_THREADS` env  >  host parallelism.
+//!
+//! Built on `std::thread::scope`, so borrowed inputs (`&BigramRef`,
+//! `&FleetConfig`, slices of clients) flow into workers without `Arc`
+//! plumbing and a worker panic propagates to the caller.
+//!
+//! Cost model: each call spawns and joins fresh scoped threads
+//! (~tens of µs per worker), so it is meant for fan-outs whose items
+//! do milliseconds of work or more — the fleet's local rounds and
+//! sweep cells qualify.  A persistent worker pool that keeps one scope
+//! alive across rounds would shave the per-call spawn cost; that is an
+//! open ROADMAP item, not worth the channel plumbing yet.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Environment variable overriding the default worker-thread count.
+pub const ENV_THREADS: &str = "MFT_THREADS";
+
+/// Worker-thread count from `MFT_THREADS`, falling back to the host's
+/// available parallelism.  Mirrors the `MFT_HOST_GFLOPS` contract: an
+/// invalid value warns and falls back instead of erroring mid-run.
+pub fn threads_from_env() -> usize {
+    let default = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    match std::env::var(ENV_THREADS) {
+        Err(_) => default,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!(
+                    "[mft] warning: {ENV_THREADS}={v:?} is not a positive \
+                     integer; falling back to {default} thread(s)");
+                default
+            }
+        },
+    }
+}
+
+/// Resolve an explicit thread-count request (`0` = auto) against the
+/// environment: callers pass e.g. `FleetConfig::threads` straight in.
+pub fn resolve_threads(explicit: usize) -> usize {
+    if explicit > 0 {
+        explicit
+    } else {
+        threads_from_env()
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped workers and return the
+/// results **in item order**.  Work is distributed by an atomic cursor
+/// (cheap stealing — good when per-item cost varies, e.g. sweep cells),
+/// but each result lands in the slot of its input index, so the output is
+/// independent of scheduling.  A worker panic propagates to the caller.
+pub fn ordered_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut got: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i, &items[i])));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("pool worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("pool left an item unprocessed"))
+        .collect()
+}
+
+/// Like [`ordered_map`] but hands each worker **exclusive `&mut` access**
+/// to its items (the fleet's clients mutate adapter, optimizer moments,
+/// battery and RNG during a local round).  Items are split into at most
+/// `threads` contiguous chunks via `chunks_mut` — disjoint borrows, no
+/// locks — and per-chunk results are concatenated in chunk order, which
+/// is item order.
+pub fn ordered_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F)
+                                -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = n / threads + usize::from(n % threads != 0); // ceil
+    let mut out: Vec<Vec<R>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ci, slab) in items.chunks_mut(chunk).enumerate() {
+            let base = ci * chunk;
+            let fr = &f;
+            handles.push(s.spawn(move || {
+                slab.iter_mut()
+                    .enumerate()
+                    .map(|(j, t)| fr(base + j, t))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        for h in handles {
+            out.push(h.join().expect("pool worker panicked"));
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_map_preserves_order() {
+        let items: Vec<usize> = (0..37).collect();
+        for threads in [1, 2, 4, 8, 64] {
+            let out = ordered_map(&items, threads, |i, &x| {
+                assert_eq!(i, x);
+                x * 10
+            });
+            assert_eq!(out, (0..37).map(|x| x * 10).collect::<Vec<_>>(),
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ordered_map_mut_mutates_in_place_and_orders_results() {
+        for threads in [1, 2, 3, 16] {
+            let mut items: Vec<usize> = (0..10).collect();
+            let out = ordered_map_mut(&mut items, threads, |i, x| {
+                *x += 100;
+                i
+            });
+            assert_eq!(out, (0..10).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(items, (100..110).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        // same closure, any thread count -> bitwise identical output
+        let items: Vec<u64> = (0..100).map(|i| i * 7 + 3).collect();
+        let run = |threads| {
+            ordered_map(&items, threads, |i, &x| {
+                (x as f64 * 0.1 + i as f64).sin()
+            })
+        };
+        let base = run(1);
+        for threads in [2, 3, 8] {
+            let got = run(threads);
+            assert_eq!(base.len(), got.len());
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(ordered_map(&empty, 4, |_, &x| x).is_empty());
+        let mut one = vec![5u32];
+        assert_eq!(ordered_map_mut(&mut one, 4, |_, x| *x * 2), vec![10]);
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit() {
+        assert_eq!(resolve_threads(3), 3);
+        // 0 = auto: whatever the env/host gives, it is at least one
+        assert!(resolve_threads(0) >= 1);
+        assert!(threads_from_env() >= 1);
+    }
+
+    #[test]
+    fn errors_flow_back_in_order() {
+        // Result-returning closures: caller sees the first failure by
+        // item order, not by completion order
+        let items: Vec<usize> = (0..8).collect();
+        let out = ordered_map(&items, 4, |_, &x| -> Result<usize, String> {
+            if x % 3 == 2 { Err(format!("item {x}")) } else { Ok(x) }
+        });
+        let first_err = out.into_iter().find_map(|r| r.err()).unwrap();
+        assert_eq!(first_err, "item 2");
+    }
+}

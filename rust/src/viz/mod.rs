@@ -109,8 +109,14 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
         "agg   {:>4}/{:<4}  {}   skip bat {} ram {}  late {}\n",
         last.n_aggregated, last.n_selected, sparkline(&parts, 40),
         last.n_skipped_battery, last.n_skipped_ram, last.n_stragglers));
+    let late_t = if last.straggler_time_s > 0.0 {
+        format!("   late t {:.1}s", last.straggler_time_s)
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "fleet {:>7.2} kJ   up {:>8} B   round t {:.1}s   min-bat {:.0}%\n",
+        "fleet {:>7.2} kJ   up {:>8} B   round t {:.1}s{late_t}   \
+         min-bat {:.0}%\n",
         last.energy_j / 1000.0, last.bytes_up, last.time_s,
         last.min_battery_selected * 100.0));
     out
@@ -197,6 +203,7 @@ mod tests {
                 energy_j: 1500.0,
                 bytes_up: 32768,
                 time_s: 42.0,
+                straggler_time_s: 97.5,
                 min_battery_selected: 0.8,
                 ..Default::default()
             },
@@ -207,6 +214,11 @@ mod tests {
         assert!(s.contains("5/6"), "{s}");
         assert!(s.contains("skip bat 2"), "{s}");
         assert!(s.contains("late 1"), "{s}");
+        assert!(s.contains("late t 97.5s"), "{s}");
+        // no stragglers -> no late-time clutter
+        let mut quiet = recs.clone();
+        quiet[1].straggler_time_s = 0.0;
+        assert!(!render_fleet(&quiet, Some(4)).contains("late t"));
     }
 
     #[test]

@@ -148,6 +148,102 @@ fn stragglers_are_dropped_from_aggregation() {
     assert_eq!(r.n_aggregated + r.n_stragglers, r.n_selected);
     assert!(!r.participants.contains(&1), "nova9 client 1 aggregated");
     assert!(!r.participants.contains(&5), "nova9 client 5 aggregated");
+    // time_s is the on-time makespan; the dropped stragglers' slower
+    // time is reported separately and never gates the round
+    let deadline = res.summary.get("deadline_s").unwrap().as_f64().unwrap();
+    assert!(r.time_s > 0.0 && r.time_s <= deadline,
+            "on-time makespan {} exceeds deadline {deadline}", r.time_s);
+    assert!(r.straggler_time_s > deadline,
+            "straggler time {} should exceed deadline {deadline}",
+            r.straggler_time_s);
+    assert!(r.straggler_time_s > r.time_s);
+}
+
+#[test]
+fn all_late_round_costs_the_deadline() {
+    // every battery below mu -> everyone throttles 2x (rho 0.5); with a
+    // straggler factor of 1.5 even the fastest client runs ~1.33x the
+    // deadline, so the whole round is dropped and the coordinator's
+    // wall time is the deadline it waited out, not zero
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.policy = SelectPolicy::All;
+    cfg.battery_min = 0.3;
+    cfg.battery_max = 0.3;
+    cfg.mu = 0.6;
+    cfg.rho = 0.5;
+    cfg.straggler_factor = 1.5;
+    let res = run_fleet(&cfg).unwrap();
+    let r = &res.rounds[1];
+    assert_eq!(r.n_selected, 8, "{r:?}");
+    assert_eq!(r.n_aggregated, 0, "{r:?}");
+    assert_eq!(r.n_stragglers, 8, "{r:?}");
+    let deadline = res.summary.get("deadline_s").unwrap().as_f64().unwrap();
+    assert_eq!(r.time_s.to_bits(), deadline.to_bits(),
+               "all-late round: time_s {} != deadline {deadline}", r.time_s);
+    assert!(r.straggler_time_s > deadline);
+    // nothing aggregated -> the global adapter (and its eval) is
+    // unchanged from the round-0 baseline
+    assert_eq!(r.eval_nll.to_bits(), res.rounds[0].eval_nll.to_bits());
+}
+
+#[test]
+fn no_stragglers_means_zero_straggler_time() {
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.battery_min = 0.9;
+    cfg.battery_max = 1.0;
+    cfg.ram_required_bytes = 0;
+    cfg.straggler_factor = 1e6; // nobody can be late
+    let res = run_fleet(&cfg).unwrap();
+    let r = &res.rounds[1];
+    assert_eq!(r.n_stragglers, 0);
+    assert_eq!(r.straggler_time_s, 0.0);
+    assert!(r.time_s > 0.0);
+}
+
+/// The tentpole determinism contract: the whole run — every RoundRecord
+/// field, the JSONL/summary bytes on disk, and the exported merged
+/// adapter — is bitwise identical whether the coordinator fans local
+/// rounds out over 1 thread or many.
+#[test]
+fn fleet_is_bitwise_identical_across_thread_counts() {
+    let run_with = |threads: usize, tag: &str| {
+        let dir = tdir(&format!("thr{tag}"));
+        let mut cfg = small_cfg();
+        cfg.rounds = 2;
+        cfg.battery_min = 0.5;
+        cfg.battery_max = 1.0;
+        cfg.threads = threads;
+        cfg.out_dir = Some(dir.display().to_string());
+        let res = run_fleet(&cfg).unwrap();
+        (dir, res)
+    };
+    let (dir1, res1) = run_with(1, "1");
+    for threads in [2usize, 4] {
+        let (dirn, resn) = run_with(threads, &threads.to_string());
+        // in-memory records: every field bitwise equal (f64 via to_bits)
+        assert_eq!(res1.rounds.len(), resn.rounds.len());
+        for (a, b) in res1.rounds.iter().zip(&resn.rounds) {
+            assert_eq!(a.eval_nll.to_bits(), b.eval_nll.to_bits(),
+                       "round {} nll diverged at {threads} threads", a.round);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+            assert_eq!(a.straggler_time_s.to_bits(),
+                       b.straggler_time_s.to_bits());
+            assert_eq!(a.mean_train_loss.to_bits(),
+                       b.mean_train_loss.to_bits());
+            assert_eq!(a.participants, b.participants);
+            assert_eq!(a, b, "round {} diverged at {threads} threads",
+                       a.round);
+        }
+        // on-disk artifacts: byte-for-byte equal
+        for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
+            let x = std::fs::read(dir1.join(f)).unwrap();
+            let y = std::fs::read(dirn.join(f)).unwrap();
+            assert_eq!(x, y, "{f} differs at {threads} threads");
+        }
+    }
 }
 
 #[test]

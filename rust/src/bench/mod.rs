@@ -85,6 +85,7 @@ pub fn kernel_scenario(vocab: usize, n_windows: usize,
             train_loss: 1.0,
             time_s: 1.0,
             energy_j: 1.0,
+            ..ClientUpdate::default()
         })
         .collect();
     KernelScenario { model, a, b, repeated, distinct, eval_stream, updates }
@@ -268,6 +269,41 @@ fn bench_fleet(args: &Args) -> Result<()> {
                contract broken");
     }
 
+    // -- round loop with the transport model: link time + failure draws
+    // ride the same loop; the overhead must be noise-level and the
+    // thread-count determinism contract must hold here too --
+    let mut tr_cells: Vec<Json> = Vec::new();
+    let mut tr_bits: Option<u64> = None;
+    let mut tr_deterministic = true;
+    for &threads in &[1usize, 4] {
+        let mut cfg = fleet_cfg.clone();
+        cfg.transport = true;
+        cfg.upload_fail_prob = 0.1;
+        cfg.threads = threads;
+        let mut last_nll = 0.0f64;
+        let wall = median_secs(rwarm, riters, || {
+            let res = run_fleet(&cfg).expect("bench transport run failed");
+            last_nll = res.rounds.last().unwrap().eval_nll;
+        });
+        match tr_bits {
+            None => tr_bits = Some(last_nll.to_bits()),
+            Some(bits) => tr_deterministic &= bits == last_nll.to_bits(),
+        }
+        eprintln!(
+            "[bench] round loop+tx  threads {threads}: {:.1}ms \
+             ({:.2} rounds/s)",
+            wall * 1e3, cfg.rounds as f64 / wall);
+        tr_cells.push(Json::obj(vec![
+            ("threads", Json::from(threads)),
+            ("wall_s", Json::from(wall)),
+            ("rounds_per_s", Json::from(cfg.rounds as f64 / wall)),
+        ]));
+    }
+    if !tr_deterministic {
+        bail!("transport round loop diverged across thread counts — \
+               determinism contract broken");
+    }
+
     let j = Json::obj(vec![
         ("bench", Json::from("fleet")),
         ("quick", Json::from(quick)),
@@ -307,6 +343,13 @@ fn bench_fleet(args: &Args) -> Result<()> {
             ("rounds", Json::from(fleet_cfg.rounds)),
             ("deterministic", Json::from(deterministic)),
             ("cells", Json::Arr(cells)),
+        ])),
+        ("round_loop_transport", Json::obj(vec![
+            ("clients", Json::from(fleet_cfg.n_clients)),
+            ("rounds", Json::from(fleet_cfg.rounds)),
+            ("upload_fail_prob", Json::from(0.1)),
+            ("deterministic", Json::from(tr_deterministic)),
+            ("cells", Json::Arr(tr_cells)),
         ])),
     ]);
     std::fs::write(&out_path, j.to_string())?;

@@ -212,6 +212,10 @@ fn print_help() {
                      --rho F --straggler-factor F --battery-min F\n\
                      --battery-max F --threads N (0 = MFT_THREADS/auto;\n\
                      output is identical for any value) --out DIR --seed N\n\
+                     --transport (per-device link model: down/upload cost\n\
+                     time+energy, deadline judged on compute+upload)\n\
+                     --upload-fail-prob F --resume (continue a killed run\n\
+                     from <out>/fleet_ckpt.json, bit-for-bit)\n\
            exp       regenerate a paper experiment:\n\
                      fig9 table4 table5 fig10 table6 table7 fig11 table8\n\
                      fig12 fleet\n\

@@ -46,13 +46,23 @@ impl BatteryModel {
         e
     }
 
+    /// Drain `secs` seconds at `p_idle + p_extra` watts — the path the
+    /// fleet transport model uses for radio transfers, where the extra
+    /// draw is the link's radio power, not the compute power.  Returns
+    /// the energy consumed (J).
+    pub fn drain_with(&mut self, secs: f64, p_extra: f64) -> f64 {
+        let e = (self.p_idle + p_extra) * secs.max(0.0);
+        self.level_j = (self.level_j - e).max(0.0);
+        e
+    }
+
     pub fn is_empty(&self) -> bool {
         self.level_j <= 0.0
     }
 }
 
 /// PowerMonitor + dynamic computation scheduling (Fig. 6).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct EnergyScheduler {
     /// check battery every K steps (0 = disabled)
     pub k: usize,
@@ -76,6 +86,19 @@ impl EnergyScheduler {
 
     pub fn is_throttled(&self) -> bool {
         self.throttled
+    }
+
+    /// Internal monitor state (throttle flag, steps since last battery
+    /// check) for fleet checkpointing.
+    pub fn monitor_state(&self) -> (bool, usize) {
+        (self.throttled, self.steps_since_check)
+    }
+
+    /// Restore the state captured by [`Self::monitor_state`].
+    pub fn restore_monitor_state(&mut self, throttled: bool,
+                                 steps_since_check: usize) {
+        self.throttled = throttled;
+        self.steps_since_check = steps_since_check;
     }
 
     /// Called after each fine-tuning step with the step's compute time.
@@ -122,6 +145,30 @@ mod tests {
         let e = b.drain(10.0, 5.0); // 10s at 5W + 5s at 1W = 55 J
         assert!((e - 55.0).abs() < 1e-9);
         assert!(b.level_frac() < 1.0);
+    }
+
+    #[test]
+    fn drain_with_uses_extra_power_not_compute() {
+        let mut b = BatteryModel::from_mah(1000.0, 3.7, 1.0, 4.0);
+        // 10s of radio at p_idle 1W + p_radio 1.5W = 25 J, not 50 J
+        let e = b.drain_with(10.0, 1.5);
+        assert!((e - 25.0).abs() < 1e-9);
+        assert_eq!(b.drain_with(-5.0, 1.5), 0.0);
+    }
+
+    #[test]
+    fn monitor_state_roundtrip() {
+        let clock = Clock::virtual_clock();
+        let mut b = BatteryModel::from_mah(4000.0, 3.7, 0.5, 3.0);
+        b.set_level_frac(0.2);
+        let mut s = EnergyScheduler::new(1, 0.6, 0.5);
+        s.after_step(&b, &clock, 1.0);
+        let (thr, steps) = s.monitor_state();
+        assert!(thr);
+        let mut s2 = EnergyScheduler::new(1, 0.6, 0.5);
+        s2.restore_monitor_state(thr, steps);
+        assert_eq!(s2.monitor_state(), s.monitor_state());
+        assert!(s2.is_throttled());
     }
 
     #[test]

@@ -632,6 +632,14 @@ fn fleet_sweep(args: &Args) -> Result<()> {
 
     let rounds = args.get_parse("rounds", 5usize)?;
     let seed = args.get_parse("seed", 42u64)?;
+    // transport knobs apply to every cell: the link model changes who
+    // makes the deadline (compute + upload) and adds failed uploads /
+    // wasted radio bytes to the table
+    let transport = args.has("transport");
+    // same default as `mft fleet` (0.0), so a sweep cell reproduces the
+    // equivalent standalone run flag-for-flag; FleetConfig::validate
+    // rejects a failure probability without the link model
+    let upload_fail_prob: f64 = args.get_parse("upload-fail-prob", 0.0)?;
     let mut cells: Vec<(usize, f64, &str, FleetConfig)> = Vec::new();
     for &n_clients in &[8usize, 16] {
         for &alpha in &[100.0f64, 0.1] {
@@ -642,6 +650,8 @@ fn fleet_sweep(args: &Args) -> Result<()> {
                     dirichlet_alpha: alpha,
                     policy: SelectPolicy::parse(policy, n_clients / 2)?,
                     seed,
+                    transport,
+                    upload_fail_prob,
                     // the sweep already saturates cores at the cell
                     // level; single-threaded cells avoid
                     // oversubscription and are bitwise identical to any
@@ -651,17 +661,26 @@ fn fleet_sweep(args: &Args) -> Result<()> {
                         "{out}/fleet_c{n_clients}_a{alpha}_{policy}")),
                     ..FleetConfig::default()
                 };
+                // fail fast (e.g. --upload-fail-prob without
+                // --transport) before the grid spins up
+                cfg.validate()?;
                 cells.push((n_clients, alpha, policy, cfg));
             }
         }
     }
     let threads = pool::resolve_threads(0).min(cells.len());
     println!("Fleet — federated LoRA over simulated devices \
-              ({rounds} rounds/cell, {} cells on {threads} threads)",
-             cells.len());
-    println!("{:<8} {:>7} {:>9} | {:>8} {:>8} {:>7} {:>6} {:>6} {:>8}",
+              ({rounds} rounds/cell, {} cells on {threads} threads{})",
+             cells.len(),
+             if transport {
+                 format!(", transport on, upload fail p={upload_fail_prob}")
+             } else {
+                 String::new()
+             });
+    println!("{:<8} {:>7} {:>9} | {:>8} {:>8} {:>7} {:>6} {:>5} \
+              {:>5} {:>8} {:>9}",
              "clients", "alpha", "policy", "nll0", "nll", "Δnll",
-             "part%", "late", "energy");
+             "part%", "late", "fail", "energy", "wasteKiB");
     let results = pool::ordered_map(&cells, threads,
                                     |_, (_, _, _, cfg)| run_fleet(cfg));
     let mut rows = Vec::new();
@@ -669,12 +688,15 @@ fn fleet_sweep(args: &Args) -> Result<()> {
         let res = res?;
         let g = |k: &str| sum_f(&res.summary, k);
         println!("{:<8} {:>7} {:>9} | {:>8.4} {:>8.4} {:>7.4} \
-                  {:>5.0}% {:>6.0} {:>6.1}kJ",
+                  {:>5.0}% {:>5.0} {:>5.0} {:>6.1}kJ {:>9.0}",
                  n_clients, alpha, policy,
                  g("initial_nll"), g("final_nll"),
                  g("nll_improvement"),
                  g("mean_participation") * 100.0,
-                 g("total_stragglers"), g("total_energy_kj"));
+                 g("total_stragglers"),
+                 g("total_failed") + g("total_failed_upload"),
+                 g("total_energy_kj"),
+                 g("total_bytes_up_wasted") / 1024.0);
         rows.push(Json::obj(vec![
             ("clients", Json::from(*n_clients)),
             ("alpha", Json::from(*alpha)),

@@ -10,18 +10,63 @@
 
 use anyhow::{bail, Result};
 
+/// Why a client's round produced no usable update.  The driver records
+/// these per round instead of aborting the run — one dead battery or
+/// flaky uplink must never kill a 100-round fleet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientFailure {
+    /// battery hit zero mid-round; the partial local work is rolled back
+    /// (the client resumes next round from its last good optimizer state)
+    BatteryDead,
+    /// the delta upload failed on the link (transport model draw); the
+    /// local training stands, the radio bytes and energy are wasted
+    UploadFailed,
+    /// the local round errored (degenerate shard, shape mismatch, ...)
+    Error(String),
+}
+
+impl ClientFailure {
+    /// `true` for failures that happen on the device itself (battery,
+    /// local error) as opposed to on the link.
+    pub fn is_local(&self) -> bool {
+        !matches!(self, ClientFailure::UploadFailed)
+    }
+}
+
 /// What one client hands back after a local round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ClientUpdate {
     pub client_id: usize,
     /// (ctx, next) pairs processed — the FedAvg weight
     pub n_samples: usize,
-    /// adapter delta per tensor, canonical (manifest) order
+    /// adapter delta per tensor, canonical (manifest) order; empty when
+    /// `failure` is set
     pub delta: Vec<Vec<f32>>,
     pub train_loss: f64,
-    /// virtual seconds the local round took on the device
+    /// virtual seconds of deadline-relevant work: local compute plus (with
+    /// the transport model) the delta upload — the coordinator can overlap
+    /// its broadcast, so the download is tracked apart
     pub time_s: f64,
     pub energy_j: f64,
+    /// virtual seconds spent downloading the global adapter (transport
+    /// model only; advances the client clock and battery, not `time_s`)
+    pub download_s: f64,
+    /// virtual seconds spent uploading the delta (transport model only)
+    pub upload_s: f64,
+    /// bytes the client put on the radio for its upload attempt (the
+    /// driver splits these into delivered vs wasted)
+    pub bytes_up: u64,
+    /// set when the round produced no usable update
+    pub failure: Option<ClientFailure>,
+}
+
+impl ClientUpdate {
+    /// An update carrying only a failure (no delta, no accounting beyond
+    /// what the caller fills in).
+    pub fn failed(client_id: usize, failure: ClientFailure) -> ClientUpdate {
+        ClientUpdate { client_id, failure: Some(failure),
+                       ..ClientUpdate::default() }
+    }
 }
 
 pub trait Aggregator {
@@ -61,20 +106,27 @@ impl Aggregator for FedAvg {
         if total <= 0.0 {
             bail!("fedavg: zero total samples");
         }
-        let mut out: Vec<Vec<f32>> = updates[0]
+        // accumulate per coordinate in f64 and cast once at the end: the
+        // old f32 running sum let the effective weights drift off 1 and
+        // lost low bits on large fleets (weights rounded to f32, then
+        // client-count many f32 adds)
+        let mut acc: Vec<Vec<f64>> = updates[0]
             .delta
             .iter()
-            .map(|t| vec![0.0f32; t.len()])
+            .map(|t| vec![0.0f64; t.len()])
             .collect();
         for u in updates {
-            let w = (u.n_samples as f64 / total) as f32;
-            for (o, d) in out.iter_mut().zip(&u.delta) {
+            let w = u.n_samples as f64 / total;
+            for (o, d) in acc.iter_mut().zip(&u.delta) {
                 for (x, &y) in o.iter_mut().zip(d) {
-                    *x += w * y;
+                    *x += w * y as f64;
                 }
             }
         }
-        Ok(out)
+        Ok(acc
+            .into_iter()
+            .map(|t| t.into_iter().map(|x| x as f32).collect())
+            .collect())
     }
 }
 
@@ -207,6 +259,7 @@ mod tests {
             train_loss: 0.0,
             time_s: 1.0,
             energy_j: 1.0,
+            ..ClientUpdate::default()
         }
     }
 
@@ -218,6 +271,40 @@ mod tests {
         // weights 0.75 / 0.25
         assert!((out[0][0] - 0.5).abs() < 1e-6);
         assert!((out[0][1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_of_identical_deltas_is_the_delta() {
+        // the f64-accumulation contract: N clients reporting the same
+        // delta (any sample counts) must aggregate to exactly that
+        // delta, bitwise — the f64 weight-sum error (~1e-16 relative) is
+        // far below half an f32 ulp, so the final cast lands on the
+        // input value
+        let vals = vec![0.1f32, -3.25, 1e-7, 42.0, -0.333_333_34, 7.5e-3];
+        for counts in [vec![1usize, 1, 1], vec![3, 7, 11, 2, 5]] {
+            let us: Vec<ClientUpdate> = counts
+                .iter()
+                .enumerate()
+                .map(|(id, &n)| upd(id, n, vals.clone()))
+                .collect();
+            let refs: Vec<&ClientUpdate> = us.iter().collect();
+            let out = FedAvg.aggregate(&refs).unwrap();
+            for (got, want) in out[0].iter().zip(&vals) {
+                assert_eq!(got.to_bits(), want.to_bits(),
+                           "{counts:?}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn client_failure_locality() {
+        assert!(ClientFailure::BatteryDead.is_local());
+        assert!(ClientFailure::Error("x".into()).is_local());
+        assert!(!ClientFailure::UploadFailed.is_local());
+        let f = ClientUpdate::failed(3, ClientFailure::UploadFailed);
+        assert_eq!(f.client_id, 3);
+        assert!(f.delta.is_empty());
+        assert_eq!(f.failure, Some(ClientFailure::UploadFailed));
     }
 
     #[test]

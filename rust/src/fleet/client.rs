@@ -1,22 +1,33 @@
 //! One simulated fleet device: profile + battery + virtual clock + local
 //! LoRA adapter and Adam moments + a non-IID corpus shard.
 //!
-//! A client's life per round: the coordinator loads the global adapter
-//! into it, the client runs E local AdamW steps on micro-batches sampled
-//! from its private shard, and hands back the adapter *delta* plus its
-//! sample count — the FedAvg contract.  Energy and time are simulated
-//! exactly like the single-device trainer: each step charges the target
-//! model's per-token FLOPs against the device's sustained GFLOP/s, drains
-//! the battery, and runs the paper's PowerMonitor throttle
-//! ([`EnergyScheduler`]) — so a low-battery client visibly slows down and
-//! can miss the round deadline.
+//! A client's life per round: the coordinator hands it the global adapter
+//! (with the transport model enabled, the download costs link time and
+//! radio energy first), the client runs E local AdamW steps on
+//! micro-batches sampled from its private shard, then uploads the adapter
+//! *delta* plus its sample count — the FedAvg contract.  Energy and time
+//! are simulated exactly like the single-device trainer: each step
+//! charges the target model's per-token FLOPs against the device's
+//! sustained GFLOP/s, drains the battery, and runs the paper's
+//! PowerMonitor throttle ([`EnergyScheduler`]) — so a low-battery client
+//! visibly slows down and can miss the round deadline, which is judged on
+//! compute **plus upload** time.
+//!
+//! Rounds fail, they don't abort: a battery that empties mid-round or a
+//! local training error comes back as a [`ClientFailure`]-carrying
+//! update, with the client's optimizer moments, step counter and RNG
+//! rolled back to the round start (checkpoint semantics — a crashed
+//! client resumes from its last good round, not from the global init).
+//! A failed *upload* keeps the local training (the work happened; only
+//! the radio lost it).
 
 use anyhow::{bail, Result};
 
 use crate::config::manifest::ModelInfo;
 use crate::energy::{BatteryModel, EnergyScheduler};
-use crate::fleet::aggregate::ClientUpdate;
+use crate::fleet::aggregate::{ClientFailure, ClientUpdate};
 use crate::fleet::model::BigramRef;
+use crate::fleet::transport::{link_for, LinkProfile};
 use crate::fleet::FleetConfig;
 use crate::sim::DeviceProfile;
 use crate::train::lora::LoraState;
@@ -33,9 +44,40 @@ pub struct ClientStatus {
     pub free_ram_bytes: u64,
 }
 
+/// Scalar client state the fleet checkpoint serializes alongside the
+/// adapter safetensors: battery and clock (f64 bits — JSON numbers are
+/// f64 and cannot carry u64 bits exactly, so these travel as strings),
+/// the optimizer step, all three RNG streams, and the PowerMonitor
+/// state.  Restoring this plus the adapter checkpoint reproduces the
+/// client bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientPersist {
+    pub id: usize,
+    pub battery_bits: u64,
+    pub clock_bits: u64,
+    pub opt_t: u64,
+    pub rng: (u64, u64),
+    pub bg_rng: (u64, u64),
+    pub net_rng: (u64, u64),
+    pub sched_throttled: bool,
+    pub sched_steps: usize,
+}
+
+/// Round-start snapshot for the failure rollback path: a failed local
+/// round must leave the client's trainable state exactly as it was
+/// (battery drain and clock time are physical and stand).
+struct RoundSnapshot {
+    opt: AdamW,
+    /// (name, m, v) per adapter tensor
+    moments: Vec<(String, Vec<f32>, Vec<f32>)>,
+    rng: Pcg,
+    scheduler: EnergyScheduler,
+}
+
 pub struct FleetClient {
     pub id: usize,
     pub device: &'static DeviceProfile,
+    pub link: &'static LinkProfile,
     pub battery: BatteryModel,
     pub clock: Clock,
     pub scheduler: EnergyScheduler,
@@ -46,6 +88,8 @@ pub struct FleetClient {
     shard: Vec<u32>,
     rng: Pcg,
     bg_rng: Pcg,
+    /// private stream for link-failure draws (one per upload attempt)
+    net_rng: Pcg,
     global_names: Vec<String>,
     global_snapshot: Vec<Vec<f32>>,
 }
@@ -68,17 +112,82 @@ impl FleetClient {
         Ok(FleetClient {
             id,
             device,
+            link: link_for(device),
             battery,
             clock: Clock::virtual_clock(),
             scheduler,
             adapter,
             opt: AdamW::new(cfg.lr, 0.0),
             shard,
-            rng: root.fork(id as u64 * 2 + 1),
-            bg_rng: root.fork(id as u64 * 2 + 2),
+            rng: root.fork(id as u64 * 3 + 1),
+            bg_rng: root.fork(id as u64 * 3 + 2),
+            net_rng: root.fork(id as u64 * 3 + 3),
             global_names: Vec::new(),
             global_snapshot: Vec::new(),
         })
+    }
+
+    /// Capture the scalar state the fleet checkpoint needs (the adapter
+    /// tensors + Adam moments travel via [`LoraState::save_checkpoint`]).
+    pub fn persist_state(&self) -> ClientPersist {
+        let (thr, steps) = self.scheduler.monitor_state();
+        ClientPersist {
+            id: self.id,
+            battery_bits: self.battery.level_j.to_bits(),
+            clock_bits: self.clock.now_s().to_bits(),
+            opt_t: self.opt.t,
+            rng: self.rng.state_parts(),
+            bg_rng: self.bg_rng.state_parts(),
+            net_rng: self.net_rng.state_parts(),
+            sched_throttled: thr,
+            sched_steps: steps,
+        }
+    }
+
+    /// Restore [`Self::persist_state`] output — together with loading the
+    /// adapter checkpoint this resumes the client bit-for-bit.
+    pub fn restore_persist(&mut self, p: &ClientPersist) {
+        self.battery.level_j = f64::from_bits(p.battery_bits);
+        self.clock = Clock::virtual_clock();
+        self.clock.sleep(f64::from_bits(p.clock_bits));
+        self.opt.t = p.opt_t;
+        self.rng = Pcg::from_parts(p.rng.0, p.rng.1);
+        self.bg_rng = Pcg::from_parts(p.bg_rng.0, p.bg_rng.1);
+        self.net_rng = Pcg::from_parts(p.net_rng.0, p.net_rng.1);
+        self.scheduler
+            .restore_monitor_state(p.sched_throttled, p.sched_steps);
+    }
+
+    fn snapshot(&mut self) -> Result<RoundSnapshot> {
+        let names: Vec<String> = self
+            .adapter
+            .names_lens()
+            .into_iter()
+            .map(|(n, _)| n)
+            .collect();
+        let mut moments = Vec::with_capacity(names.len());
+        for n in names {
+            let (_, m, v) = self.adapter.param_and_state(&n)?;
+            moments.push((n, m.to_vec(), v.to_vec()));
+        }
+        Ok(RoundSnapshot {
+            opt: self.opt.clone(),
+            moments,
+            rng: self.rng.clone(),
+            scheduler: self.scheduler.clone(),
+        })
+    }
+
+    fn restore(&mut self, snap: RoundSnapshot) {
+        self.opt = snap.opt;
+        self.rng = snap.rng;
+        self.scheduler = snap.scheduler;
+        for (n, sm, sv) in snap.moments {
+            if let Ok((_, m, v)) = self.adapter.param_and_state(&n) {
+                m.copy_from_slice(&sm);
+                v.copy_from_slice(&sv);
+            }
+        }
     }
 
     pub fn shard_tokens(&self) -> usize {
@@ -118,20 +227,108 @@ impl FleetClient {
         Ok(())
     }
 
-    /// One full coordinator hand-off: load the global adapter, run the
-    /// local round.  This is the unit the driver fans out across worker
-    /// threads ([`crate::util::pool::ordered_map_mut`]) — each selected
-    /// client touches only its own state, so concurrent rounds are
+    /// One full coordinator hand-off: download (transport model) and load
+    /// the global adapter, run the local round, upload the delta.  This
+    /// is the unit the driver fans out across worker threads
+    /// ([`crate::util::pool::ordered_map_mut`]) — each selected client
+    /// touches only its own state, so concurrent rounds are
     /// deterministic by construction.
+    ///
+    /// Never aborts the run: internal errors and mid-round battery
+    /// deaths come back as [`ClientFailure`]-carrying updates, with the
+    /// client's optimizer moments, step counter and batch RNG rolled
+    /// back to the round start (the client "resumes from its last
+    /// round").  A failed upload keeps the local training.
     pub fn run_round(&mut self, names: &[String], global: &[Vec<f32>],
-                     model: &BigramRef, cfg: &FleetConfig)
-                     -> Result<ClientUpdate> {
+                     model: &BigramRef, cfg: &FleetConfig) -> ClientUpdate {
+        let snap = match self.snapshot() {
+            Ok(s) => s,
+            Err(e) => {
+                return ClientUpdate::failed(
+                    self.id, ClientFailure::Error(e.to_string()));
+            }
+        };
+        match self.round_inner(names, global, model, cfg) {
+            Ok(u) => {
+                if matches!(u.failure,
+                            Some(ClientFailure::BatteryDead)
+                            | Some(ClientFailure::Error(_))) {
+                    self.restore(snap);
+                }
+                u
+            }
+            Err(e) => {
+                self.restore(snap);
+                ClientUpdate::failed(self.id,
+                                     ClientFailure::Error(e.to_string()))
+            }
+        }
+    }
+
+    fn round_inner(&mut self, names: &[String], global: &[Vec<f32>],
+                   model: &BigramRef, cfg: &FleetConfig)
+                   -> Result<ClientUpdate> {
+        let adapter_bytes: u64 =
+            (global.iter().map(|g| g.len()).sum::<usize>() * 4) as u64;
+        // download the global adapter (the coordinator broadcast can
+        // overlap waiting, so this advances the client's clock and
+        // battery but not the deadline-relevant time_s)
+        let mut download_s = 0.0f64;
+        let mut transfer_energy = 0.0f64;
+        if cfg.transport {
+            download_s = self.link.download_s(adapter_bytes);
+            self.clock.sleep(download_s);
+            transfer_energy +=
+                self.battery.drain_with(download_s, self.link.p_radio);
+            if self.battery.is_empty() {
+                let mut u = ClientUpdate::failed(self.id,
+                                                 ClientFailure::BatteryDead);
+                u.download_s = download_s;
+                u.energy_j = transfer_energy;
+                return Ok(u);
+            }
+        }
         self.load_global(names, global)?;
-        self.local_round(model, cfg)
+        let mut u = self.local_round(model, cfg)?;
+        u.download_s = download_s;
+        u.energy_j += transfer_energy;
+        if u.failure.is_some() {
+            return Ok(u);
+        }
+        if cfg.transport {
+            // upload the delta: link time counts against the straggler
+            // deadline (compute + upload), the radio drains the battery,
+            // and the transfer can fail outright (seeded per-client draw)
+            let upload_s = self.link.upload_s(adapter_bytes);
+            self.clock.sleep(upload_s);
+            u.energy_j += self.battery.drain_with(upload_s,
+                                                  self.link.p_radio);
+            u.upload_s = upload_s;
+            u.time_s += upload_s;
+            u.bytes_up = adapter_bytes;
+            if self.battery.is_empty() {
+                u.failure = Some(ClientFailure::BatteryDead);
+                u.delta.clear();
+            } else if self.net_rng.uniform() < cfg.upload_fail_prob {
+                u.failure = Some(ClientFailure::UploadFailed);
+                u.delta.clear();
+            }
+        } else {
+            // no link model: the would-be upload still carries its size
+            // so the driver's delivered/wasted accounting stays uniform
+            u.bytes_up = adapter_bytes;
+        }
+        Ok(u)
     }
 
     /// Run `cfg.local_steps` AdamW steps on shard micro-batches and
-    /// return the adapter delta + resource accounting.
+    /// return the adapter delta + resource accounting.  A battery that
+    /// empties mid-round aborts the round with a
+    /// [`ClientFailure::BatteryDead`] partial update (the old loop kept
+    /// "training" on a dead battery — `BatteryModel::drain` clamps at
+    /// zero but nothing ever checked the level); callers going through
+    /// [`Self::run_round`] additionally get the optimizer state rolled
+    /// back.
     pub fn local_round(&mut self, model: &BigramRef, cfg: &FleetConfig)
                        -> Result<ClientUpdate> {
         if self.shard.len() < 2 {
@@ -193,6 +390,17 @@ impl FleetClient {
             if delay > 0.0 {
                 energy += self.battery.drain(0.0, delay);
             }
+            if self.battery.is_empty() {
+                // the device died mid-round: report the partial round as
+                // a failure (time and energy were really spent; the
+                // half-trained state is discarded by the caller)
+                let mut u = ClientUpdate::failed(self.id,
+                                                 ClientFailure::BatteryDead);
+                u.n_samples = n_samples;
+                u.time_s = self.clock.now_s() - t_start;
+                u.energy_j = energy;
+                return Ok(u);
+            }
         }
         let time_s = self.clock.now_s() - t_start;
         let mut delta = Vec::with_capacity(self.global_names.len());
@@ -212,6 +420,7 @@ impl FleetClient {
             train_loss: loss_sum / cfg.local_steps.max(1) as f64,
             time_s,
             energy_j: energy,
+            ..ClientUpdate::default()
         })
     }
 }
@@ -303,9 +512,149 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg).unwrap();
+        let up = c.run_round(&names, &g, &model, &cfg);
         assert_eq!(up.client_id, 0);
+        assert_eq!(up.failure, None);
         assert_eq!(up.n_samples, 3 * 2 * 16);
+        // no transport: no link legs, but the would-be upload size rides
+        // along for the driver's byte accounting
+        assert_eq!(up.download_s, 0.0);
+        assert_eq!(up.upload_s, 0.0);
+        assert_eq!(up.bytes_up, (8 * 2 + 2 * 8) as u64 * 4);
+    }
+
+    #[test]
+    fn transport_round_adds_link_time_and_energy() {
+        let (model, mut cfg, mut c) = setup();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        // baseline without transport
+        let base = c.run_round(&names, &g, &model, &cfg);
+        assert_eq!(base.failure, None);
+
+        cfg.transport = true;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut tc = FleetClient::new(
+            1, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        let up = tc.run_round(&names, &g, &model, &cfg);
+        assert_eq!(up.failure, None);
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        assert_eq!(up.bytes_up, bytes);
+        let want_up = tc.link.upload_s(bytes);
+        let want_down = tc.link.download_s(bytes);
+        assert!((up.upload_s - want_up).abs() < 1e-12, "{}", up.upload_s);
+        assert!((up.download_s - want_down).abs() < 1e-12);
+        // the deadline-relevant time is compute + upload (not download)
+        assert!((up.time_s - (base.time_s + want_up)).abs()
+                    < 1e-9 * up.time_s.max(1.0),
+                "time {} vs compute {} + upload {want_up}",
+                up.time_s, base.time_s);
+        // the radio drained the battery on top of the compute draw
+        assert!(up.energy_j > base.energy_j);
+    }
+
+    #[test]
+    fn upload_failure_keeps_local_training() {
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        cfg.upload_fail_prob = 1.0;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let up = c.run_round(&names, &g, &model, &cfg);
+        assert_eq!(up.failure, Some(ClientFailure::UploadFailed));
+        assert!(up.delta.is_empty(), "failed upload must deliver nothing");
+        assert!(up.bytes_up > 0, "the radio bytes were still burned");
+        // the local training stands: optimizer stepped, moments moved
+        assert_eq!(c.opt.t, cfg.local_steps as u64);
+    }
+
+    #[test]
+    fn battery_death_mid_round_fails_and_rolls_back() {
+        let (model, cfg, _) = setup();
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        // ~0.1% battery on a nova9: the first step's drain (~12.8 s of
+        // compute at ~5.6 W) empties it
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.001,
+            &mut root).unwrap();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let up = c.run_round(&names, &g, &model, &cfg);
+        assert_eq!(up.failure, Some(ClientFailure::BatteryDead));
+        assert!(up.delta.is_empty());
+        assert!(up.time_s > 0.0 && up.energy_j > 0.0,
+                "the partial round burned real time/energy: {up:?}");
+        assert!(c.battery.is_empty());
+        // rollback: optimizer step counter and Adam moments are back at
+        // their round-start values
+        assert_eq!(c.opt.t, 0, "opt step not rolled back");
+        for n in [LORA_A, LORA_B] {
+            let (_, m, v) = c.adapter.param_and_state(n).unwrap();
+            assert!(m.iter().all(|&x| x == 0.0), "{n}: m not rolled back");
+            assert!(v.iter().all(|&x| x == 0.0), "{n}: v not rolled back");
+        }
+    }
+
+    #[test]
+    fn persist_state_roundtrip_resumes_bitwise() {
+        let (model, cfg, mut c) = setup();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        // advance the client one round, capture its post-round state
+        let _ = c.run_round(&names, &g, &model, &cfg);
+        let persist = c.persist_state();
+        let moments: Vec<(Vec<f32>, Vec<f32>)> = [LORA_A, LORA_B]
+            .iter()
+            .map(|n| {
+                let (_, m, v) = c.adapter.param_and_state(n).unwrap();
+                (m.to_vec(), v.to_vec())
+            })
+            .collect();
+        // round 2 on the live client
+        let a = c.run_round(&names, &g, &model, &cfg);
+
+        // rebuild a fresh client, restore scalars + moments (the driver
+        // restores moments via the safetensors checkpoint), rerun round 2
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut c2 = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        c2.restore_persist(&persist);
+        for (n, (sm, sv)) in [LORA_A, LORA_B].iter().zip(&moments) {
+            let (_, m2, v2) = c2.adapter.param_and_state(n).unwrap();
+            m2.copy_from_slice(sm);
+            v2.copy_from_slice(sv);
+        }
+        let b = c2.run_round(&names, &g, &model, &cfg);
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert!(!a.delta.is_empty());
+        for (da, db) in a.delta.iter().zip(&b.delta) {
+            for (x, y) in da.iter().zip(db) {
+                assert_eq!(x.to_bits(), y.to_bits(), "delta diverged");
+            }
+        }
     }
 
     #[test]

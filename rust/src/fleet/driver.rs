@@ -7,9 +7,19 @@
 //! heterogeneity), then iterate rounds:
 //!
 //!   select -> local rounds on the selected clients, fanned out over
-//!   coordinator worker threads -> drop stragglers past the virtual
-//!   deadline -> aggregate the surviving deltas -> apply to the global
+//!   coordinator worker threads (with the transport model, each round
+//!   also pays adapter download/upload link time and radio energy) ->
+//!   classify the results (on-time / straggler / failed locally / failed
+//!   upload) -> aggregate the surviving deltas -> apply to the global
 //!   adapter -> evaluate on the held-out stream.
+//!
+//! Faults never abort the run: [`FleetClient::run_round`] converts local
+//! errors and mid-round battery deaths into [`ClientFailure`]-carrying
+//! updates, the round records them under per-reason counters, and the
+//! loop continues — one degenerate shard or flaky uplink cannot kill a
+//! 100-round fleet.  Upload bytes are split into delivered (reached
+//! aggregation) vs wasted (stragglers and failed uploads burned the
+//! radio too).
 //!
 //! The fan-out uses [`pool::ordered_map_mut`]: each worker gets
 //! exclusive `&mut` access to a disjoint set of clients and results are
@@ -20,19 +30,32 @@
 //! ([`BigramRef::eval_cache`]), so per-round eval cost is independent
 //! of the eval-corpus length.
 //!
+//! When an out dir is set, every round additionally checkpoints each
+//! client's adapter + Adam moments through the standard
+//! [`LoraState::save_checkpoint`] path plus the coordinator scalars
+//! (RNG streams, batteries, clocks, cumulative energy) to
+//! `fleet_ckpt.json` — f64s travel as bit strings because JSON numbers
+//! cannot carry u64 exactly.  Checkpoints are transactional: new
+//! round-tagged generation files are written first, the atomic
+//! `fleet_ckpt.json` rename commits them, and only then are superseded
+//! generations deleted — a crash at any point leaves a consistent
+//! previous checkpoint.  `--resume` then continues a killed run from
+//! its last committed round, bit-for-bit identical to a run that was
+//! never interrupted.
+//!
 //! Every round appends a [`RoundRecord`] to `rounds.jsonl` (the fleet viz
 //! panel tails it) and the final merged adapter exports to safetensors
 //! via the standard [`LoraState`] path.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cli::Args;
 use crate::data::corpus::synthetic_corpus;
 use crate::data::partition::{dirichlet_shards, split_articles};
-use crate::fleet::aggregate::{make_aggregator, ClientUpdate};
-use crate::fleet::client::{ClientStatus, FleetClient};
+use crate::fleet::aggregate::{make_aggregator, ClientFailure, ClientUpdate};
+use crate::fleet::client::{ClientPersist, ClientStatus, FleetClient};
 use crate::fleet::model::{BigramRef, LORA_A, LORA_B};
 use crate::fleet::select::{select_clients, SelectPolicy};
 use crate::fleet::FleetConfig;
@@ -46,21 +69,261 @@ use crate::util::rng::Pcg;
 
 const MIB: u64 = 1024 * 1024;
 
+/// Checkpoint format tag for `fleet_ckpt.json`.
+const CKPT_FORMAT: &str = "mft-fleet-ckpt-v1";
+/// Smallest train split the tokenizer + sharder can do anything useful
+/// with; checked up front so a tiny corpus fails with the flag names
+/// instead of a confusing tokenizer error later.
+const MIN_TRAIN_BYTES: usize = 1024;
+const MIN_EVAL_BYTES: usize = 16;
+
 #[derive(Debug, Clone)]
 pub struct FleetResult {
     pub summary: Json,
     pub rounds: Vec<RoundRecord>,
 }
 
+/// Everything about a config that must match for a checkpoint to be
+/// resumable.  Derived mechanically from the whole config (Debug of a
+/// clone with the legitimately-variable fields normalized away) so a
+/// future `FleetConfig` field can never be forgotten here: rounds may
+/// grow (that is the point of resuming), thread count never changes
+/// results, and out_dir/resume are where/how, not what.
+fn config_fingerprint(cfg: &FleetConfig) -> String {
+    let mut c = cfg.clone();
+    c.rounds = 0;
+    c.threads = 0;
+    c.out_dir = None;
+    c.resume = false;
+    format!("v2|{c:?}")
+}
+
+fn bits_json(x: u64) -> Json {
+    Json::from(x.to_string())
+}
+
+fn bits_parse(j: &Json) -> Result<u64> {
+    j.as_str()?
+        .parse::<u64>()
+        .map_err(|e| anyhow!("bad u64 bits in checkpoint: {e}"))
+}
+
+fn pair_json(p: (u64, u64)) -> Json {
+    Json::Arr(vec![bits_json(p.0), bits_json(p.1)])
+}
+
+fn pair_parse(j: &Json) -> Result<(u64, u64)> {
+    let a = j.as_arr()?;
+    if a.len() != 2 {
+        bail!("checkpoint rng state must be a [state, inc] pair");
+    }
+    Ok((bits_parse(&a[0])?, bits_parse(&a[1])?))
+}
+
+/// Atomically replace `path` with `bytes`: write `<stem>.tmp`, fsync,
+/// rename.  A crash — even a power loss — leaves either the previous
+/// file or the complete new one, never a torn file.  Safetensors writes
+/// don't need this: `write_safetensors` already does tmp + fsync +
+/// rename internally.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Copy the in-memory global adapter into `state`'s tensors and export
+/// to `path` (shared by the per-round `ckpt_global_r<N>.safetensors`
+/// generations and the final `adapter.safetensors`; `state` is a
+/// scratch LoraState whose moments are never written).
+fn export_global(state: &mut LoraState, names: &[String],
+                 global: &[Vec<f32>], path: &Path, alpha: f32)
+                 -> Result<()> {
+    for (n, g) in names.iter().zip(global) {
+        let (p, _, _) = state.param_and_state(n)?;
+        p.copy_from_slice(g);
+    }
+    state.export(path, "fleet-bigram", alpha)
+}
+
+/// Which checkpoint files are current on disk.  `fleet_ckpt.json` names
+/// them explicitly (client/global files are round-tagged generations),
+/// so the atomic json rename is the single commit point: a crash
+/// anywhere in a checkpoint write leaves the previous generation's
+/// files intact and still referenced.  Uncommitted new-generation files
+/// are harmless orphans (overwritten on retry, swept on fresh starts).
+struct CkptState {
+    /// current committed safetensors file per client (indexed by id)
+    client_files: Vec<String>,
+    global_file: String,
+    /// every client has a file written by this run's lineage; until
+    /// then the next save writes all clients, not just the changed ones
+    files_complete: bool,
+}
+
+impl CkptState {
+    fn fresh(n_clients: usize) -> CkptState {
+        CkptState {
+            client_files: vec![String::new(); n_clients],
+            global_file: String::new(),
+            files_complete: false,
+        }
+    }
+}
+
+/// Persist the full resumable state after a completed round: per-client
+/// adapter + Adam moments via [`LoraState::save_checkpoint`], the merged
+/// global adapter, and the coordinator scalars.
+///
+/// Only the clients in `changed` (the ones a round actually trained)
+/// need a new file — a rolled-back or unselected client's committed
+/// file is already current, and its changing scalars (battery, clock,
+/// RNGs) travel in `fleet_ckpt.json`.  The first checkpoint of a fresh
+/// run writes every client regardless.  New generations are written
+/// under round-tagged names, the json commit flips the references, and
+/// only then are the superseded generations deleted.
+#[allow(clippy::too_many_arguments)]
+fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
+                   ckpt: &mut CkptState, round: usize, cum_energy: f64,
+                   select_rng: &Pcg, clients: &[FleetClient],
+                   changed: &[usize], names: &[String],
+                   global: &[Vec<f32>]) -> Result<()> {
+    let mut superseded: Vec<String> = Vec::new();
+    for c in clients {
+        if ckpt.files_complete && !changed.contains(&c.id) {
+            continue;
+        }
+        let fname = format!("ckpt_client_{}_r{round}.safetensors", c.id);
+        c.adapter
+            .save_checkpoint(&dir.join(&fname), c.opt.t)
+            .with_context(|| format!("checkpoint client {}", c.id))?;
+        let old = std::mem::replace(&mut ckpt.client_files[c.id], fname);
+        if !old.is_empty() && old != ckpt.client_files[c.id] {
+            superseded.push(old);
+        }
+    }
+    let gname = format!("ckpt_global_r{round}.safetensors");
+    export_global(scratch, names, global, &dir.join(&gname),
+                  cfg.lora_alpha)?;
+    let gold = std::mem::replace(&mut ckpt.global_file, gname);
+    if !gold.is_empty() && gold != ckpt.global_file {
+        superseded.push(gold);
+    }
+    let clients_json: Vec<Json> = clients
+        .iter()
+        .map(|c| {
+            let p = c.persist_state();
+            Json::obj(vec![
+                ("id", Json::from(p.id)),
+                ("ckpt", Json::from(ckpt.client_files[c.id].clone())),
+                ("battery", bits_json(p.battery_bits)),
+                ("clock", bits_json(p.clock_bits)),
+                ("opt_t", bits_json(p.opt_t)),
+                ("rng", pair_json(p.rng)),
+                ("bg_rng", pair_json(p.bg_rng)),
+                ("net_rng", pair_json(p.net_rng)),
+                ("sched_throttled", Json::from(p.sched_throttled)),
+                ("sched_steps", Json::from(p.sched_steps)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("format", Json::from(CKPT_FORMAT)),
+        ("config", Json::from(config_fingerprint(cfg))),
+        ("round", Json::from(round)),
+        ("cum_energy", bits_json(cum_energy.to_bits())),
+        ("select_rng", pair_json(select_rng.state_parts())),
+        ("global_ckpt", Json::from(ckpt.global_file.clone())),
+        ("clients", Json::Arr(clients_json)),
+    ]);
+    // the commit point: an atomic rename switches every reference at
+    // once; a crash before it leaves the previous json + its files
+    write_atomic(&dir.join("fleet_ckpt.json"), j.to_string().as_bytes())?;
+    ckpt.files_complete = true;
+    // garbage-collect the superseded generations only after the commit
+    // (a crash in here just leaves orphans, never a broken checkpoint)
+    for f in superseded {
+        let _ = std::fs::remove_file(dir.join(f));
+    }
+    Ok(())
+}
+
+struct ResumeState {
+    round: usize,
+    cum_energy: f64,
+    select_rng: (u64, u64),
+    clients: Vec<ClientPersist>,
+    /// committed safetensors file per client, from the json
+    client_files: Vec<String>,
+    global_file: String,
+}
+
+fn load_fleet_ckpt(dir: &Path, cfg: &FleetConfig)
+                   -> Result<Option<ResumeState>> {
+    let p = dir.join("fleet_ckpt.json");
+    if !p.exists() {
+        return Ok(None);
+    }
+    let j = Json::parse(&std::fs::read_to_string(&p)?)
+        .with_context(|| format!("parse {}", p.display()))?;
+    if j.req("format")?.as_str()? != CKPT_FORMAT {
+        bail!("unknown fleet checkpoint format in {}", p.display());
+    }
+    if j.req("config")?.as_str()? != config_fingerprint(cfg) {
+        bail!("fleet checkpoint in {} was written by a different config; \
+               delete it or rerun without --resume", dir.display());
+    }
+    let mut clients = Vec::new();
+    let mut client_files = Vec::new();
+    for cj in j.req("clients")?.as_arr()? {
+        clients.push(ClientPersist {
+            id: cj.req("id")?.as_usize()?,
+            battery_bits: bits_parse(cj.req("battery")?)?,
+            clock_bits: bits_parse(cj.req("clock")?)?,
+            opt_t: bits_parse(cj.req("opt_t")?)?,
+            rng: pair_parse(cj.req("rng")?)?,
+            bg_rng: pair_parse(cj.req("bg_rng")?)?,
+            net_rng: pair_parse(cj.req("net_rng")?)?,
+            sched_throttled: cj.req("sched_throttled")?.as_bool()?,
+            sched_steps: cj.req("sched_steps")?.as_usize()?,
+        });
+        client_files.push(cj.req("ckpt")?.as_str()?.to_string());
+    }
+    Ok(Some(ResumeState {
+        round: j.req("round")?.as_usize()?,
+        cum_energy: f64::from_bits(bits_parse(j.req("cum_energy")?)?),
+        select_rng: pair_parse(j.req("select_rng")?)?,
+        clients,
+        client_files,
+        global_file: j.req("global_ckpt")?.as_str()?.to_string(),
+    }))
+}
+
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     cfg.validate()?;
 
-    // corpus with a held-out eval tail
+    // corpus with a held-out eval tail; validate the split up front so a
+    // tiny corpus / aggressive eval fraction fails with the flag names
+    // instead of an empty-train tokenizer error much later
     let corpus = synthetic_corpus(cfg.seed, cfg.corpus_bytes);
     let eval_bytes = (corpus.len() as f64 * cfg.eval_frac) as usize;
-    let mut split = corpus.len().saturating_sub(eval_bytes).max(1);
-    while !corpus.is_char_boundary(split) {
+    let mut split = corpus.len().saturating_sub(eval_bytes);
+    while split > 0 && !corpus.is_char_boundary(split) {
         split -= 1;
+    }
+    if eval_bytes < MIN_EVAL_BYTES || split < MIN_TRAIN_BYTES {
+        bail!(
+            "--corpus-bytes {} with --eval-frac {} leaves {split} train \
+             bytes and {eval_bytes} eval bytes (need at least \
+             {MIN_TRAIN_BYTES} train / {MIN_EVAL_BYTES} eval); raise \
+             --corpus-bytes or adjust --eval-frac",
+            cfg.corpus_bytes, cfg.eval_frac);
     }
     let (train_text, eval_text) = corpus.split_at(split);
 
@@ -80,8 +343,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let shard_texts = dirichlet_shards(train_text, cfg.n_clients,
                                        cfg.dirichlet_alpha,
                                        cfg.seed.wrapping_add(1));
-    let shards: Vec<Vec<u32>> =
+    let mut shards: Vec<Vec<u32>> =
         shard_texts.iter().map(|s| tok.encode(s)).collect();
+    if let Some(i) = cfg.inject_empty_shard {
+        if i < shards.len() {
+            // fault-injection hook: a one-token shard makes this
+            // client's every local round fail (shard too small)
+            shards[i] = vec![0];
+        }
+    }
     let eval_tokens = tok.encode(eval_text);
     let all_tokens: Vec<u32> = shards.iter().flatten().copied().collect();
 
@@ -89,7 +359,10 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let model = BigramRef::new(&all_tokens, vocab, cfg.rank,
                                cfg.lora_alpha / cfg.rank as f32);
     let info = model.lora_info();
-    let template = LoraState::init(&info, cfg.rank, cfg.seed)?;
+    // also reused as the tensor scratch for every global export
+    // (per-round checkpoint + final adapter) — its moments are never
+    // written, only its tensors are overwritten before each export
+    let mut template = LoraState::init(&info, cfg.rank, cfg.seed)?;
     let names: Vec<String> =
         template.names_lens().iter().map(|(n, _)| n.clone()).collect();
     let mut global: Vec<Vec<f32>> = names
@@ -122,10 +395,6 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
 
     let agg = make_aggregator(&cfg.aggregator, cfg.trim_frac)?;
     let out_dir = cfg.out_dir.as_ref().map(PathBuf::from);
-    if let Some(d) = &out_dir {
-        std::fs::create_dir_all(d)?;
-        let _ = std::fs::remove_file(d.join("rounds.jsonl"));
-    }
 
     // straggler deadline: factor x the fastest client's expected round
     let tokens_per_round =
@@ -138,30 +407,136 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         * cfg.flops_per_token / (max_gflops * 1e9);
 
     let threads = pool::resolve_threads(cfg.threads);
+    let mut select_rng = Pcg::new(cfg.seed.wrapping_add(7));
     let mut records: Vec<RoundRecord> = Vec::new();
     let mut cum_energy = 0.0f64;
+    let mut start_round = 1usize;
+    let mut ckpt = CkptState::fresh(cfg.n_clients);
 
     // eval statistics are fixed for the run: collapse the held-out
     // stream to a bigram count matrix once, reuse every round
     let mut eval_cache = model.eval_cache(&eval_tokens);
 
-    // round 0: the untouched global adapter (B = 0 => base model)
-    let nll0 = model.eval_nll_cached(&mut eval_cache, &global[ia],
-                                     &global[ib]);
-    let rec0 = RoundRecord {
-        round: 0,
-        eval_nll: nll0,
-        eval_ppl: nll0.exp(),
-        min_battery_selected: 1.0,
-        ..Default::default()
+    let resume_state = match (&out_dir, cfg.resume) {
+        (Some(d), true) => {
+            let rs = load_fleet_ckpt(d, cfg)?;
+            // --resume on a dir with records but no checkpoint must not
+            // fall through to the fresh path, which would wipe them
+            if rs.is_none() && d.join("rounds.jsonl").exists() {
+                bail!("--resume: {} has rounds.jsonl but no \
+                       fleet_ckpt.json (a pre-checkpoint run?); rerun \
+                       without --resume to start over", d.display());
+            }
+            rs
+        }
+        _ => None,
     };
-    if let Some(d) = &out_dir {
-        append_round(d, &rec0)?;
+    if let (Some(d), Some(rs)) = (&out_dir, &resume_state) {
+        // restore the coordinator scalars and every client's state; the
+        // corpus/shards/model above were rebuilt deterministically from
+        // the (fingerprint-checked) config
+        if rs.clients.len() != clients.len() {
+            bail!("fleet checkpoint has {} clients, config has {}",
+                  rs.clients.len(), clients.len());
+        }
+        cum_energy = rs.cum_energy;
+        select_rng = Pcg::from_parts(rs.select_rng.0, rs.select_rng.1);
+        for ((c, p), f) in
+            clients.iter_mut().zip(&rs.clients).zip(&rs.client_files)
+        {
+            if c.id != p.id {
+                bail!("fleet checkpoint client order mismatch");
+            }
+            c.restore_persist(p);
+            let (adapter, t) =
+                LoraState::load_checkpoint(&info, cfg.rank, &d.join(f))
+                    .with_context(|| format!("resume client {}", c.id))?;
+            // the json commit names exactly the files it was written
+            // with, so this can only trip on external tampering — keep
+            // it as a cheap integrity check
+            if t != p.opt_t {
+                bail!("client {} checkpoint {f:?} is at opt step {t} but \
+                       fleet_ckpt.json recorded {}; the out dir is \
+                       inconsistent — rerun without --resume to start \
+                       over", c.id, p.opt_t);
+            }
+            c.adapter = adapter;
+            c.opt.t = t;
+        }
+        let gstate = LoraState::load(&info, cfg.rank,
+                                     &d.join(&rs.global_file))?;
+        for (g, n) in global.iter_mut().zip(&names) {
+            g.copy_from_slice(gstate.get(n)?.as_f32()?);
+        }
+        // read only the rounds the checkpoint committed: a crash between
+        // the jsonl append and the checkpoint write can leave one extra
+        // (possibly torn) trailing line, which must not kill the resume
+        let text = std::fs::read_to_string(d.join("rounds.jsonl"))
+            .context("resume: read rounds.jsonl")?;
+        records = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .take(rs.round + 1)
+            .map(|l| RoundRecord::from_json(&Json::parse(l)?))
+            .collect::<Result<_>>()
+            .context("resume: parse rounds.jsonl")?;
+        if records.len() < rs.round + 1 {
+            bail!("rounds.jsonl has {} records but the checkpoint is at \
+                   round {}; the out dir is inconsistent",
+                  records.len(), rs.round);
+        }
+        // rewrite the file to exactly the committed records (drops any
+        // torn/extra trailing line)
+        let mut kept = String::new();
+        for r in &records {
+            r.to_json().write(&mut kept);
+            kept.push('\n');
+        }
+        write_atomic(&d.join("rounds.jsonl"), kept.as_bytes())?;
+        start_round = rs.round + 1;
+        // the committed generation files are on disk and current
+        ckpt = CkptState {
+            client_files: rs.client_files.clone(),
+            global_file: rs.global_file.clone(),
+            files_complete: true,
+        };
+        eprintln!("fleet: resuming from round {} in {}", rs.round,
+                  d.display());
+    } else {
+        if let Some(d) = &out_dir {
+            std::fs::create_dir_all(d)?;
+            let _ = std::fs::remove_file(d.join("rounds.jsonl"));
+            // stale checkpoint state from an earlier run in the same
+            // dir — the json, committed generations, and any crash
+            // orphans — must not survive a fresh (non-resume) start
+            let _ = std::fs::remove_file(d.join("fleet_ckpt.json"));
+            if let Ok(rd) = std::fs::read_dir(d) {
+                for e in rd.flatten() {
+                    let name = e.file_name().to_string_lossy().to_string();
+                    if name.starts_with("ckpt_client_")
+                        || name.starts_with("ckpt_global") {
+                        let _ = std::fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+        // round 0: the untouched global adapter (B = 0 => base model)
+        let nll0 = model.eval_nll_cached(&mut eval_cache, &global[ia],
+                                         &global[ib]);
+        let rec0 = RoundRecord {
+            round: 0,
+            eval_nll: nll0,
+            eval_ppl: nll0.exp(),
+            min_battery_selected: 1.0,
+            ..Default::default()
+        };
+        if let Some(d) = &out_dir {
+            append_round(d, &rec0)?;
+        }
+        records.push(rec0);
     }
-    records.push(rec0);
 
-    let mut select_rng = Pcg::new(cfg.seed.wrapping_add(7));
-    for round in 1..=cfg.rounds {
+    for round in start_round..=cfg.rounds {
         // background drain between rounds
         for c in clients.iter_mut() {
             cum_energy += c.battery.drain(0.0, cfg.round_idle_s);
@@ -177,28 +552,59 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             .fold(1.0f64, f64::min);
 
         // fan the selected clients' local rounds out over worker
-        // threads; `selected` is ascending and `run` preserves it, so
-        // the merged updates come back in client-id order regardless of
-        // scheduling — the determinism contract
-        let mut in_round = vec![false; clients.len()];
-        for &id in &sel.selected {
-            in_round[id] = true;
+        // threads; `selected` is ascending and the chunked fan-out
+        // preserves it, so the merged updates come back in client-id
+        // order regardless of scheduling — the determinism contract.
+        // run_round never errors the run: faults come back as
+        // ClientFailure-carrying updates.
+        let results: Vec<ClientUpdate> = {
+            let mut in_round = vec![false; clients.len()];
+            for &id in &sel.selected {
+                in_round[id] = true;
+            }
+            let mut run: Vec<&mut FleetClient> = clients
+                .iter_mut()
+                .filter(|c| in_round[c.id])
+                .collect();
+            pool::ordered_map_mut(&mut run, threads, |_, c| {
+                c.run_round(&names, &global, &model, cfg)
+            })
+        };
+        cum_energy += results.iter().map(|u| u.energy_j).sum::<f64>();
+
+        // classify: delivered on time / straggler / failed locally /
+        // failed on the link.  Stragglers and failed uploads burned the
+        // radio for nothing.
+        let mut ontime: Vec<&ClientUpdate> = Vec::new();
+        let mut late: Vec<&ClientUpdate> = Vec::new();
+        let mut n_failed = 0usize;
+        let mut n_failed_upload = 0usize;
+        let mut bytes_delivered = 0u64;
+        let mut bytes_wasted = 0u64;
+        for u in &results {
+            match &u.failure {
+                Some(ClientFailure::UploadFailed) => {
+                    n_failed_upload += 1;
+                    bytes_wasted += u.bytes_up;
+                }
+                Some(_) => {
+                    n_failed += 1;
+                    bytes_wasted += u.bytes_up;
+                }
+                None if u.time_s <= deadline_s => {
+                    bytes_delivered += u.bytes_up;
+                    ontime.push(u);
+                }
+                None => {
+                    // without the link model no radio ran: a straggler's
+                    // would-be upload is not "wasted radio bytes"
+                    if cfg.transport {
+                        bytes_wasted += u.bytes_up;
+                    }
+                    late.push(u);
+                }
+            }
         }
-        let mut run: Vec<&mut FleetClient> = clients
-            .iter_mut()
-            .filter(|c| in_round[c.id])
-            .collect();
-        let results = pool::ordered_map_mut(&mut run, threads, |_, c| {
-            c.run_round(&names, &global, &model, cfg)
-        });
-        let mut updates: Vec<ClientUpdate> =
-            Vec::with_capacity(results.len());
-        for r in results {
-            updates.push(r?);
-        }
-        let (ontime, late): (Vec<&ClientUpdate>, Vec<&ClientUpdate>) =
-            updates.iter().partition(|u| u.time_s <= deadline_s);
-        cum_energy += updates.iter().map(|u| u.energy_j).sum::<f64>();
 
         let mut mean_loss = 0.0f64;
         if !ontime.is_empty() {
@@ -222,15 +628,19 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             n_skipped_battery: sel.skipped_battery.len(),
             n_skipped_ram: sel.skipped_ram.len(),
             n_stragglers: late.len(),
+            n_failed,
+            n_failed_upload,
             mean_train_loss: mean_loss,
             energy_j: cum_energy,
-            bytes_up: adapter_bytes * ontime.len() as u64,
+            bytes_up: bytes_delivered,
+            bytes_up_wasted: bytes_wasted,
             // on-time makespan: the round's virtual wall time is set by
             // the slowest client that made the deadline — dropped
             // stragglers don't gate the round, they are reported apart.
-            // If *everyone* blew the deadline the coordinator still
-            // waited it out, so an all-late round costs deadline_s.
-            time_s: if ontime.is_empty() && !late.is_empty() {
+            // If *nothing* came back usable (everyone late, failed, or
+            // their uploads lost) the coordinator still waited the
+            // deadline out, so such a round costs deadline_s.
+            time_s: if ontime.is_empty() && !sel.selected.is_empty() {
                 deadline_s
             } else {
                 ontime.iter().map(|u| u.time_s).fold(0.0f64, f64::max)
@@ -248,17 +658,30 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             append_round(d, &rec)?;
         }
         records.push(rec);
+        if let Some(d) = &out_dir {
+            // only clients whose adapter/moments changed need their
+            // safetensors rewritten: trained clients (even ones whose
+            // upload was lost — the local work stands), not rolled-back
+            // failures or unselected clients.  The first checkpoint of a
+            // fresh run writes everyone so stale files can't linger.
+            let changed: Vec<usize> = results
+                .iter()
+                .filter(|u| !matches!(
+                    u.failure,
+                    Some(ClientFailure::BatteryDead)
+                    | Some(ClientFailure::Error(_))))
+                .map(|u| u.client_id)
+                .collect();
+            save_fleet_ckpt(d, cfg, &mut template, &mut ckpt, round,
+                            cum_energy, &select_rng, &clients, &changed,
+                            &names, &global)?;
+        }
     }
 
     // export the merged global adapter through the standard path
     if let Some(d) = &out_dir {
-        let mut merged = LoraState::init(&info, cfg.rank, cfg.seed)?;
-        for (n, g) in names.iter().zip(&global) {
-            let (p, _, _) = merged.param_and_state(n)?;
-            p.copy_from_slice(g);
-        }
-        merged.export(&d.join("adapter.safetensors"), "fleet-bigram",
-                      cfg.lora_alpha)?;
+        export_global(&mut template, &names, &global,
+                      &d.join("adapter.safetensors"), cfg.lora_alpha)?;
     }
 
     let first = &records[0];
@@ -280,6 +703,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         ("policy", Json::from(cfg.policy.as_str())),
         ("mu", Json::from(cfg.mu)),
         ("rho", Json::from(cfg.rho)),
+        ("transport", Json::from(cfg.transport)),
+        ("upload_fail_prob", Json::from(cfg.upload_fail_prob)),
         ("initial_nll", Json::from(first.eval_nll)),
         ("final_nll", Json::from(last.eval_nll)),
         ("initial_ppl", Json::from(first.eval_ppl)),
@@ -288,14 +713,20 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         ("mean_participation", Json::from(mean_participation)),
         ("total_stragglers", Json::from(
             train_rounds.iter().map(|r| r.n_stragglers).sum::<usize>())),
+        ("total_failed", Json::from(
+            train_rounds.iter().map(|r| r.n_failed).sum::<usize>())),
+        ("total_failed_upload", Json::from(
+            train_rounds.iter().map(|r| r.n_failed_upload).sum::<usize>())),
         ("total_skipped_battery", Json::from(
             train_rounds.iter().map(|r| r.n_skipped_battery).sum::<usize>())),
         ("total_skipped_ram", Json::from(
             train_rounds.iter().map(|r| r.n_skipped_ram).sum::<usize>())),
         ("total_energy_kj", Json::from(cum_energy / 1000.0)),
         ("adapter_bytes", Json::from(adapter_bytes)),
-        ("total_bytes_up", Json::from(
+        ("total_bytes_up_delivered", Json::from(
             train_rounds.iter().map(|r| r.bytes_up).sum::<u64>())),
+        ("total_bytes_up_wasted", Json::from(
+            train_rounds.iter().map(|r| r.bytes_up_wasted).sum::<u64>())),
         ("deadline_s", Json::from(deadline_s)),
     ]);
     if let Some(d) = &out_dir {
@@ -337,6 +768,10 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
     cfg.battery_min = args.get_parse("battery-min", cfg.battery_min)?;
     cfg.battery_max = args.get_parse("battery-max", cfg.battery_max)?;
     cfg.threads = args.get_parse("threads", cfg.threads)?;
+    cfg.transport = args.has("transport");
+    cfg.upload_fail_prob =
+        args.get_parse("upload-fail-prob", cfg.upload_fail_prob)?;
+    cfg.resume = args.has("resume");
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.out_dir = args.get("out").map(String::from);
     cfg.validate()?;
@@ -345,9 +780,15 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
 
 pub fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = fleet_config(args)?;
-    eprintln!("fleet: {} clients, {} rounds, alpha {}, agg {}, policy {}",
+    eprintln!("fleet: {} clients, {} rounds, alpha {}, agg {}, policy {}{}",
               cfg.n_clients, cfg.rounds, cfg.dirichlet_alpha, cfg.aggregator,
-              cfg.policy.as_str());
+              cfg.policy.as_str(),
+              if cfg.transport {
+                  format!(", transport on (upload fail p={})",
+                          cfg.upload_fail_prob)
+              } else {
+                  String::new()
+              });
     let res = run_fleet(&cfg)?;
     for r in &res.rounds {
         if r.round == 0 {
@@ -356,10 +797,13 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
         } else {
             eprintln!(
                 "round {:>3}  nll {:.4} (ppl {:>7.1})  agg {}/{} sel  \
-                 skip bat {} ram {}  late {}  E {:.2} kJ  up {} KiB",
+                 skip bat {} ram {}  late {}  fail {}+{}up  E {:.2} kJ  \
+                 up {} KiB (waste {} KiB)",
                 r.round, r.eval_nll, r.eval_ppl, r.n_aggregated,
                 r.n_selected, r.n_skipped_battery, r.n_skipped_ram,
-                r.n_stragglers, r.energy_j / 1000.0, r.bytes_up / 1024);
+                r.n_stragglers, r.n_failed, r.n_failed_upload,
+                r.energy_j / 1000.0, r.bytes_up / 1024,
+                r.bytes_up_wasted / 1024);
         }
     }
     println!("{}", res.summary);

@@ -19,13 +19,25 @@
 //! * [`model`] — the artifact-free local objective (frozen log-unigram
 //!   base + trainable low-rank bigram delta) that lets the whole fleet
 //!   run end-to-end with no XLA artifacts;
+//! * [`transport`] — the deterministic per-device link model: adapter
+//!   download/upload cost link time and radio energy, the straggler
+//!   deadline is judged on compute + upload, and uploads can fail
+//!   (seeded per-client draws), splitting `bytes_up` into delivered vs
+//!   wasted;
 //! * [`driver`] — the round loop: select -> local rounds (fanned out
 //!   over coordinator threads via
 //!   [`util::pool`](crate::util::pool), merged in client-id order so
 //!   output is bitwise identical for any `MFT_THREADS`) -> straggler
 //!   drop -> aggregate -> global eval, emitting per-round
 //!   [`metrics::RoundRecord`]s and exporting the merged adapter to
-//!   safetensors.
+//!   safetensors.  Faults never abort the run: a client whose round
+//!   errors or whose battery empties is recorded as a per-round failure
+//!   and rolled back to its round-start optimizer state, and (with an
+//!   out dir) every round checkpoints each client's adapter + Adam
+//!   moments ([`LoraState::save_checkpoint`]) plus the coordinator
+//!   scalars, so `--resume` continues a killed run bit-for-bit.
+//!
+//! [`LoraState::save_checkpoint`]: crate::train::lora::LoraState::save_checkpoint
 //!
 //! Surfaced as `mft fleet` (CLI), `mft exp fleet` (the fleet-size x
 //! non-IID-skew x selection-policy sweep) and a `rounds.jsonl` panel in
@@ -43,13 +55,15 @@ pub mod client;
 pub mod driver;
 pub mod model;
 pub mod select;
+pub mod transport;
 
-pub use aggregate::{make_aggregator, Aggregator, ClientUpdate, CoordMedian,
-                    FedAvg, TrimmedMean};
+pub use aggregate::{make_aggregator, Aggregator, ClientFailure,
+                    ClientUpdate, CoordMedian, FedAvg, TrimmedMean};
 pub use client::{ClientStatus, FleetClient};
 pub use driver::{cmd_fleet, run_fleet, FleetResult};
 pub use model::BigramRef;
 pub use select::{select_clients, SelectPolicy, SelectionOutcome};
+pub use transport::{link_for, LinkProfile};
 
 use anyhow::{bail, Result};
 
@@ -104,6 +118,19 @@ pub struct FleetConfig {
     /// bitwise identical for any value — updates always merge in
     /// client-id order ([`util::pool`](crate::util::pool)).
     pub threads: usize,
+    /// enable the per-device link model ([`transport`]): adapter
+    /// download/upload cost link time + radio energy, the straggler
+    /// deadline is judged on compute + upload, and uploads can fail
+    pub transport: bool,
+    /// per-upload failure probability (transport model; seeded
+    /// per-client draws, deterministic for any thread count)
+    pub upload_fail_prob: f64,
+    /// resume from `<out_dir>/fleet_ckpt.json` if present (requires
+    /// `out_dir`); a fresh run writes the checkpoint every round
+    pub resume: bool,
+    /// fault-injection hook for tests/chaos runs: replace this client's
+    /// shard with a single token so its local round always fails
+    pub inject_empty_shard: Option<usize>,
     pub seed: u64,
     pub out_dir: Option<String>,
 }
@@ -135,6 +162,10 @@ impl Default for FleetConfig {
             battery_min: 0.15,
             battery_max: 1.0,
             threads: 0,
+            transport: false,
+            upload_fail_prob: 0.0,
+            resume: false,
+            inject_empty_shard: None,
             seed: 42,
             out_dir: None,
         }
@@ -174,6 +205,15 @@ impl FleetConfig {
             || self.battery_min > self.battery_max {
             bail!("battery range must satisfy 0 <= min <= max <= 1");
         }
+        if !(0.0..=1.0).contains(&self.upload_fail_prob) {
+            bail!("upload_fail_prob must be in [0,1]");
+        }
+        if self.upload_fail_prob > 0.0 && !self.transport {
+            bail!("upload_fail_prob needs the transport model (--transport)");
+        }
+        if self.resume && self.out_dir.is_none() {
+            bail!("--resume needs --out (checkpoints live in the out dir)");
+        }
         Ok(())
     }
 }
@@ -209,5 +249,24 @@ mod tests {
         let mut c = FleetConfig::default();
         c.eval_frac = 0.0;
         assert!(c.validate().is_err());
+
+        let mut c = FleetConfig::default();
+        c.upload_fail_prob = 1.5;
+        assert!(c.validate().is_err());
+
+        // failure probability without the link model is a config error
+        let mut c = FleetConfig::default();
+        c.upload_fail_prob = 0.5;
+        c.transport = false;
+        assert!(c.validate().is_err());
+        c.transport = true;
+        assert!(c.validate().is_ok());
+
+        // resume needs somewhere to find the checkpoint
+        let mut c = FleetConfig::default();
+        c.resume = true;
+        assert!(c.validate().is_err());
+        c.out_dir = Some("/tmp/x".into());
+        assert!(c.validate().is_ok());
     }
 }

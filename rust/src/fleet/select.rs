@@ -11,6 +11,13 @@
 //! * [`SelectPolicy::RandomK`] — classic FedAvg uniform sampling.
 //!
 //! Clients with an empty battery can never train under any policy.
+//!
+//! Selection-time skips (battery / RAM) are complemented by the driver's
+//! *round-time* failure reasons ([`ClientFailure`]): a client that passes
+//! selection can still die mid-round, error on its shard, or lose its
+//! upload on the link — all recorded per round, never aborting the run.
+//!
+//! [`ClientFailure`]: crate::fleet::aggregate::ClientFailure
 
 use anyhow::{bail, Result};
 

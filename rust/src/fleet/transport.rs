@@ -1,0 +1,139 @@
+//! Deterministic per-device link model for the fleet's radio traffic.
+//!
+//! PR 1/2 counted `bytes_up` as "would-be uploads": the coordinator
+//! pretended every adapter delta teleported to the server for free.  Real
+//! federated deployments are bounded by the uplink — MobiLLM's
+//! server-assisted split and PAE MobiLLM's additive side-tuning both
+//! exist *because* device→server transmission is expensive — so the
+//! round loop now charges the radio like it charges the CPU:
+//!
+//! * downloading the global adapter and uploading the delta advance the
+//!   client's virtual clock by `bytes / bandwidth` and drain its battery
+//!   at `p_idle + p_radio` watts ([`crate::energy::BatteryModel::drain_with`]);
+//! * the straggler deadline is judged on **compute + upload** time, so a
+//!   fast CPU behind a slow uplink can still miss the round;
+//! * each upload attempt draws a per-round failure from the client's
+//!   private seeded RNG stream ([`FleetConfig::upload_fail_prob`]) — a
+//!   failed upload burned radio time, energy and bytes but delivers
+//!   nothing, and is reported under its own skip reason.
+//!
+//! Link profiles are keyed by [`sim::DeviceProfile`] name (paper Tab. 3
+//! devices get plausible sustained cellular/Wi-Fi rates; unknown devices
+//! fall back to [`DEFAULT_LINK`]).  Everything here is pure arithmetic
+//! over config + static tables, so transport-enabled runs stay bitwise
+//! identical for any `MFT_THREADS`.
+//!
+//! [`FleetConfig::upload_fail_prob`]: crate::fleet::FleetConfig::upload_fail_prob
+//! [`sim::DeviceProfile`]: crate::sim::DeviceProfile
+
+use crate::sim::DeviceProfile;
+
+/// Sustained link rates + radio power for one device profile.
+#[derive(Debug, Clone)]
+pub struct LinkProfile {
+    /// device name this profile belongs to ([`DeviceProfile::name`])
+    pub device: &'static str,
+    /// sustained uplink rate (Mbit/s)
+    pub up_mbps: f64,
+    /// sustained downlink rate (Mbit/s)
+    pub down_mbps: f64,
+    /// extra power draw while the radio transfers (W), on top of idle
+    pub p_radio: f64,
+}
+
+/// Per-device links for the paper Tab. 3 fleet.  The phones carry
+/// asymmetric cellular-class rates (uplink well below downlink, slower
+/// SoCs pair with slower modems); the laptop gets Wi-Fi-class rates.
+pub const LINKS: &[LinkProfile] = &[
+    LinkProfile { device: "p50-pro", up_mbps: 20.0, down_mbps: 80.0,
+                  p_radio: 1.2 },
+    LinkProfile { device: "nova9-pro", up_mbps: 15.0, down_mbps: 60.0,
+                  p_radio: 1.1 },
+    LinkProfile { device: "iqoo15", up_mbps: 50.0, down_mbps: 200.0,
+                  p_radio: 1.4 },
+    LinkProfile { device: "macbook-air-m2", up_mbps: 100.0,
+                  down_mbps: 400.0, p_radio: 2.0 },
+];
+
+/// Conservative fallback for devices without a profiled link.
+pub static DEFAULT_LINK: LinkProfile = LinkProfile {
+    device: "default",
+    up_mbps: 10.0,
+    down_mbps: 40.0,
+    p_radio: 1.0,
+};
+
+/// The link profile for a device (by name; unknown devices fall back to
+/// [`DEFAULT_LINK`]).
+pub fn link_for(device: &DeviceProfile) -> &'static LinkProfile {
+    LINKS
+        .iter()
+        .find(|l| l.device == device.name)
+        .unwrap_or(&DEFAULT_LINK)
+}
+
+impl LinkProfile {
+    /// Virtual seconds to upload `bytes` over this link.
+    pub fn upload_s(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / (self.up_mbps * 1e6)
+    }
+
+    /// Virtual seconds to download `bytes` over this link.
+    pub fn download_s(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / (self.down_mbps * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim;
+
+    #[test]
+    fn every_tab3_device_has_a_link() {
+        for d in sim::DEVICES {
+            let l = link_for(d);
+            assert_eq!(l.device, d.name, "no dedicated link for {}", d.name);
+            assert!(l.up_mbps > 0.0 && l.down_mbps > 0.0 && l.p_radio > 0.0);
+            // asymmetric links: uplink no faster than downlink
+            assert!(l.up_mbps <= l.down_mbps, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn unknown_device_falls_back() {
+        let ghost = DeviceProfile {
+            name: "ghost-phone",
+            os: "?",
+            soc: "?",
+            ram_gb: 1.0,
+            ram_budget_bytes: 1,
+            cpu_gflops: 1.0,
+            battery_mah: 1000.0,
+            battery_volts: 3.7,
+            p_idle: 0.5,
+            p_compute: 1.0,
+        };
+        assert_eq!(link_for(&ghost).device, "default");
+    }
+
+    #[test]
+    fn transfer_time_math() {
+        let l = LinkProfile { device: "t", up_mbps: 8.0, down_mbps: 80.0,
+                              p_radio: 1.0 };
+        // 1 MB over 8 Mbit/s = 1 second up, 0.1 s down
+        assert!((l.upload_s(1_000_000) - 1.0).abs() < 1e-12);
+        assert!((l.download_s(1_000_000) - 0.1).abs() < 1e-12);
+        assert_eq!(l.upload_s(0), 0.0);
+    }
+
+    #[test]
+    fn slower_soc_pairs_with_slower_uplink() {
+        // the ordering the straggler tests lean on: nova9 is the slowest
+        // radio in the fleet, the macbook the fastest
+        let nova = link_for(crate::sim::device("nova9-pro").unwrap());
+        let mac = link_for(crate::sim::device("macbook-air-m2").unwrap());
+        assert!(nova.up_mbps < mac.up_mbps);
+        assert!(nova.upload_s(10_000) > mac.upload_s(10_000));
+    }
+}

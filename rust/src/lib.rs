@@ -25,11 +25,17 @@
 //!   `BENCH_fleet.json` perf baselines; schema in `benches/README.md`)
 //! * Fleet layer       -> [`fleet`]: round-based federated fine-tuning
 //!   over N simulated devices — non-IID sharding ([`data::partition`]),
-//!   energy/RAM-aware selection ([`fleet::select`]), pluggable
-//!   aggregation ([`fleet::Aggregator`]: FedAvg / median / trimmed-mean,
-//!   both robust variants on linear-time `select_nth` order statistics),
-//!   local rounds fanned out across coordinator threads, and per-round
-//!   metrics ([`metrics::RoundRecord`])
+//!   energy/RAM-aware selection ([`fleet::select`]), a deterministic
+//!   per-device link model ([`fleet::transport`]: download/upload cost
+//!   link time + radio energy, deadlines judged on compute + upload,
+//!   seeded upload failures, delivered-vs-wasted byte accounting),
+//!   pluggable aggregation ([`fleet::Aggregator`]: FedAvg in f64 /
+//!   median / trimmed-mean, robust variants on linear-time `select_nth`
+//!   order statistics), local rounds fanned out across coordinator
+//!   threads with per-round fault recording (battery deaths and local
+//!   errors never abort the run), round-granular crash checkpoints
+//!   (`--resume` continues bit-for-bit), and per-round metrics
+//!   ([`metrics::RoundRecord`])
 
 pub mod agent;
 pub mod bench;

@@ -93,12 +93,22 @@ pub struct RoundRecord {
     pub n_skipped_battery: usize,
     pub n_skipped_ram: usize,
     pub n_stragglers: usize,
+    /// clients whose local round failed (battery died mid-round, or the
+    /// round errored); the driver records these and keeps going
+    pub n_failed: usize,
+    /// clients whose delta upload failed on the link (transport model)
+    pub n_failed_upload: usize,
     /// mean local train loss over aggregated clients
     pub mean_train_loss: f64,
     /// cumulative fleet energy (J) through this round
     pub energy_j: f64,
-    /// adapter bytes that would be uploaded this round
+    /// upload bytes that reached aggregation (on-time, successful;
+    /// without the transport model this is the would-be upload size)
     pub bytes_up: u64,
+    /// upload bytes burned for nothing — stragglers and failed uploads
+    /// used the radio too (always 0 without the transport model: no
+    /// radio ran, so nothing was wasted)
+    pub bytes_up_wasted: u64,
     /// on-time makespan: virtual wall time of the round as gated by the
     /// slowest client that made the deadline (dropped stragglers do not
     /// extend the round; if every selected client was late, the
@@ -124,9 +134,12 @@ impl RoundRecord {
             ("n_skipped_battery", Json::from(self.n_skipped_battery)),
             ("n_skipped_ram", Json::from(self.n_skipped_ram)),
             ("n_stragglers", Json::from(self.n_stragglers)),
+            ("n_failed", Json::from(self.n_failed)),
+            ("n_failed_upload", Json::from(self.n_failed_upload)),
             ("mean_train_loss", Json::from(self.mean_train_loss)),
             ("energy_j", Json::from(self.energy_j)),
             ("bytes_up", Json::from(self.bytes_up)),
+            ("bytes_up_wasted", Json::from(self.bytes_up_wasted)),
             ("time_s", Json::from(self.time_s)),
             ("straggler_time_s", Json::from(self.straggler_time_s)),
             ("participants", Json::Arr(
@@ -151,9 +164,12 @@ impl RoundRecord {
             n_skipped_battery: opt_u("n_skipped_battery")?,
             n_skipped_ram: opt_u("n_skipped_ram")?,
             n_stragglers: opt_u("n_stragglers")?,
+            n_failed: opt_u("n_failed")?,
+            n_failed_upload: opt_u("n_failed_upload")?,
             mean_train_loss: opt_f("mean_train_loss")?,
             energy_j: opt_f("energy_j")?,
             bytes_up: opt_u("bytes_up")? as u64,
+            bytes_up_wasted: opt_u("bytes_up_wasted")? as u64,
             time_s: opt_f("time_s")?,
             straggler_time_s: opt_f("straggler_time_s")?,
             participants: match j.get("participants") {
@@ -328,9 +344,12 @@ mod tests {
                 n_skipped_battery: 2,
                 n_skipped_ram: 0,
                 n_stragglers: 1,
+                n_failed: 1,
+                n_failed_upload: 2,
                 mean_train_loss: 4.0,
                 energy_j: 100.0 * r as f64,
                 bytes_up: 4096,
+                bytes_up_wasted: 12288,
                 time_s: 12.5,
                 straggler_time_s: 91.25,
                 participants: vec![0, 2, 4, 5, 7],

@@ -33,6 +33,17 @@ impl Pcg {
         Pcg::with_stream(seed, tag | 1)
     }
 
+    /// The raw generator state `(state, inc)` — the fleet checkpoint
+    /// serializes this so a resumed run replays the exact stream.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Self::state_parts`] output.
+    pub fn from_parts(state: u64, inc: u64) -> Pcg {
+        Pcg { state, inc }
+    }
+
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(MUL).wrapping_add(self.inc);
@@ -279,6 +290,19 @@ mod tests {
         let mut b = Pcg::new(31);
         for _ in 0..50 {
             assert_eq!(a.gamma(1.7), b.gamma(1.7));
+        }
+    }
+
+    #[test]
+    fn state_parts_roundtrip_resumes_the_stream() {
+        let mut a = Pcg::new(91);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let (s, i) = a.state_parts();
+        let mut b = Pcg::from_parts(s, i);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
         }
     }
 

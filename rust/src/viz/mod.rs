@@ -105,8 +105,13 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
                               first.eval_nll - last.eval_nll,
                               first.eval_nll));
     }
+    let fails = if last.n_failed > 0 || last.n_failed_upload > 0 {
+        format!("  fail {} up-fail {}", last.n_failed, last.n_failed_upload)
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "agg   {:>4}/{:<4}  {}   skip bat {} ram {}  late {}\n",
+        "agg   {:>4}/{:<4}  {}   skip bat {} ram {}  late {}{fails}\n",
         last.n_aggregated, last.n_selected, sparkline(&parts, 40),
         last.n_skipped_battery, last.n_skipped_ram, last.n_stragglers));
     let late_t = if last.straggler_time_s > 0.0 {
@@ -114,8 +119,13 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     } else {
         String::new()
     };
+    let waste = if last.bytes_up_wasted > 0 {
+        format!(" (waste {} B)", last.bytes_up_wasted)
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "fleet {:>7.2} kJ   up {:>8} B   round t {:.1}s{late_t}   \
+        "fleet {:>7.2} kJ   up {:>8} B{waste}   round t {:.1}s{late_t}   \
          min-bat {:.0}%\n",
         last.energy_j / 1000.0, last.bytes_up, last.time_s,
         last.min_battery_selected * 100.0));
@@ -200,8 +210,11 @@ mod tests {
                 n_aggregated: 5,
                 n_skipped_battery: 2,
                 n_stragglers: 1,
+                n_failed: 1,
+                n_failed_upload: 2,
                 energy_j: 1500.0,
                 bytes_up: 32768,
+                bytes_up_wasted: 8192,
                 time_s: 42.0,
                 straggler_time_s: 97.5,
                 min_battery_selected: 0.8,
@@ -214,11 +227,19 @@ mod tests {
         assert!(s.contains("5/6"), "{s}");
         assert!(s.contains("skip bat 2"), "{s}");
         assert!(s.contains("late 1"), "{s}");
+        assert!(s.contains("fail 1 up-fail 2"), "{s}");
+        assert!(s.contains("waste 8192 B"), "{s}");
         assert!(s.contains("late t 97.5s"), "{s}");
-        // no stragglers -> no late-time clutter
+        // no stragglers/failures -> no clutter
         let mut quiet = recs.clone();
         quiet[1].straggler_time_s = 0.0;
-        assert!(!render_fleet(&quiet, Some(4)).contains("late t"));
+        quiet[1].n_failed = 0;
+        quiet[1].n_failed_upload = 0;
+        quiet[1].bytes_up_wasted = 0;
+        let qs = render_fleet(&quiet, Some(4));
+        assert!(!qs.contains("late t"));
+        assert!(!qs.contains("fail"), "{qs}");
+        assert!(!qs.contains("waste"), "{qs}");
     }
 
     #[test]

@@ -4,11 +4,17 @@
 //! These pin the fleet subsystem's central claims:
 //!   * a small heterogeneous fleet trains end-to-end and the aggregated
 //!     adapter's held-out eval loss improves on the round-0 baseline;
-//!   * the whole simulation is deterministic per seed;
+//!   * the whole simulation is deterministic per seed — with and without
+//!     the transport model, for any coordinator thread count;
 //!   * energy-aware selection demonstrably skips low-battery clients
 //!     (client battery levels are evenly spaced, so the skip set is
 //!     exact, not probabilistic);
-//!   * stragglers past the virtual deadline are dropped from aggregation;
+//!   * stragglers past the virtual deadline are dropped from aggregation,
+//!     and with the transport model the deadline is judged on compute
+//!     **plus upload** (a slow uplink flips an on-time client late);
+//!   * faults never abort the run: degenerate shards, mid-round battery
+//!     deaths and failed uploads become per-round failure counts;
+//!   * a killed run resumes from its checkpoint bit-for-bit;
 //!   * every aggregation strategy runs through the same round loop.
 
 use std::path::PathBuf;
@@ -244,6 +250,247 @@ fn fleet_is_bitwise_identical_across_thread_counts() {
             assert_eq!(x, y, "{f} differs at {threads} threads");
         }
     }
+}
+
+#[test]
+fn degenerate_shard_fails_per_round_without_aborting_the_run() {
+    // regression: the driver used to `?` the first client error and kill
+    // the whole run.  A client with a one-token shard fails every round;
+    // the other seven keep aggregating.
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.battery_min = 0.9;
+    cfg.battery_max = 1.0;
+    cfg.ram_required_bytes = 0;
+    cfg.inject_empty_shard = Some(2);
+    let res = run_fleet(&cfg).expect("one bad shard must not abort the run");
+    for r in &res.rounds[1..] {
+        assert_eq!(r.n_selected, 8, "round {}: {r:?}", r.round);
+        assert_eq!(r.n_failed, 1, "round {}: {r:?}", r.round);
+        assert_eq!(r.n_aggregated, 7, "round {}: {r:?}", r.round);
+        assert!(!r.participants.contains(&2),
+                "round {}: degenerate client aggregated", r.round);
+        assert_eq!(r.n_aggregated + r.n_stragglers + r.n_failed
+                       + r.n_failed_upload,
+                   r.n_selected);
+    }
+    // the healthy majority still learns
+    let nll0 = res.rounds[0].eval_nll;
+    let nll_last = res.rounds.last().unwrap().eval_nll;
+    assert!(nll_last < nll0, "{nll0} -> {nll_last}");
+    assert_eq!(res.summary.get("total_failed").unwrap()
+                   .as_f64().unwrap() as usize,
+               cfg.rounds);
+}
+
+#[test]
+fn battery_death_mid_round_is_a_failure_not_an_abort() {
+    // 2% batteries under the All policy: the phones die mid-round (the
+    // old loop kept "training" on a clamped-at-zero battery), the
+    // efficient macbooks survive and still aggregate.
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.policy = SelectPolicy::All;
+    cfg.battery_min = 0.02;
+    cfg.battery_max = 0.02;
+    let res = run_fleet(&cfg).expect("battery deaths must not abort");
+    let r = &res.rounds[1];
+    assert_eq!(r.n_selected, 8, "{r:?}");
+    assert!(r.n_failed >= 4, "expected the phones to die mid-round: {r:?}");
+    assert!(r.n_aggregated >= 1, "the macbooks should survive: {r:?}");
+    for id in &r.participants {
+        assert!(*id == 3 || *id == 7,
+                "only the macbook clients (3, 7) can survive 2%: {r:?}");
+    }
+    assert_eq!(r.n_aggregated + r.n_stragglers + r.n_failed
+                   + r.n_failed_upload,
+               r.n_selected);
+    assert!(r.energy_j > 0.0, "the partial rounds burned energy");
+}
+
+#[test]
+fn tiny_corpus_eval_split_is_rejected_up_front() {
+    let mut cfg = small_cfg();
+    cfg.corpus_bytes = 1500;
+    cfg.eval_frac = 0.5;
+    let err = run_fleet(&cfg).unwrap_err().to_string();
+    assert!(err.contains("--corpus-bytes") && err.contains("--eval-frac"),
+            "error must name the flags to fix: {err}");
+}
+
+/// Small transport-enabled config where upload time is material: tiny
+/// per-token FLOPs make compute cheap, so the link dominates for slow
+/// uplinks.
+fn transport_cfg() -> FleetConfig {
+    let mut cfg = small_cfg();
+    cfg.transport = true;
+    cfg.battery_min = 0.9;
+    cfg.battery_max = 1.0;
+    cfg.ram_required_bytes = 0;
+    cfg.flops_per_token = 1e5;
+    cfg.straggler_factor = 8.0;
+    cfg
+}
+
+#[test]
+fn slow_uplink_flips_on_time_client_to_straggler() {
+    // without transport every device beats the 8x-fastest deadline (the
+    // slowest CPU, nova9, runs 7.3x).  With the link model the deadline
+    // is judged on compute + upload, and the nova9's 15 Mbit/s uplink
+    // pushes it past the same deadline.
+    let mut plain = transport_cfg();
+    plain.transport = false;
+    plain.rounds = 1;
+    let res = run_fleet(&plain).unwrap();
+    let r = &res.rounds[1];
+    assert_eq!(r.n_stragglers, 0, "all on-time without transport: {r:?}");
+    assert_eq!(r.n_aggregated, 8);
+    assert_eq!(r.bytes_up_wasted, 0);
+
+    let mut tx = transport_cfg();
+    tx.rounds = 1;
+    let res = run_fleet(&tx).unwrap();
+    let r = &res.rounds[1];
+    assert!(r.n_stragglers >= 2, "nova9 clients must miss on upload: {r:?}");
+    assert!(!r.participants.contains(&1), "nova9 client 1 aggregated: {r:?}");
+    assert!(!r.participants.contains(&5), "nova9 client 5 aggregated: {r:?}");
+    // iqoo15 and macbook (fast links) still make it
+    assert!(r.participants.contains(&2) && r.participants.contains(&3),
+            "fast-link clients should stay on time: {r:?}");
+    // the stragglers burned the radio for nothing
+    let adapter_bytes = res.summary.get("adapter_bytes").unwrap()
+        .as_f64().unwrap() as u64;
+    assert_eq!(r.bytes_up, adapter_bytes * r.n_aggregated as u64);
+    assert_eq!(r.bytes_up_wasted, adapter_bytes * r.n_stragglers as u64);
+}
+
+#[test]
+fn all_uploads_failed_round_changes_nothing_and_costs_the_deadline() {
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.transport = true;
+    cfg.upload_fail_prob = 1.0;
+    cfg.battery_min = 0.9;
+    cfg.battery_max = 1.0;
+    cfg.ram_required_bytes = 0;
+    let res = run_fleet(&cfg).unwrap();
+    let r = &res.rounds[1];
+    assert_eq!(r.n_selected, 8, "{r:?}");
+    assert_eq!(r.n_failed_upload, 8, "{r:?}");
+    assert_eq!(r.n_aggregated, 0, "{r:?}");
+    // nothing delivered: the global adapter (and its eval) is unchanged
+    assert_eq!(r.eval_nll.to_bits(), res.rounds[0].eval_nll.to_bits());
+    // the coordinator waited the deadline out
+    let deadline = res.summary.get("deadline_s").unwrap().as_f64().unwrap();
+    assert_eq!(r.time_s.to_bits(), deadline.to_bits());
+    // every byte hit the radio, none arrived
+    let adapter_bytes = res.summary.get("adapter_bytes").unwrap()
+        .as_f64().unwrap() as u64;
+    assert_eq!(r.bytes_up, 0);
+    assert_eq!(r.bytes_up_wasted, adapter_bytes * 8);
+    assert_eq!(res.summary.get("total_bytes_up_delivered").unwrap()
+                   .as_f64().unwrap(), 0.0);
+}
+
+/// The determinism contract extended to the transport model: link legs,
+/// failure draws and fault rollbacks are all client-local, so records
+/// and on-disk artifacts stay bitwise identical for any thread count.
+#[test]
+fn transport_run_is_bitwise_identical_across_thread_counts() {
+    let run_with = |threads: usize, tag: &str| {
+        let dir = tdir(&format!("tx-thr{tag}"));
+        let mut cfg = small_cfg();
+        cfg.rounds = 2;
+        cfg.transport = true;
+        // high failure probability: 12 seeded draws at p=0.6 make the
+        // "did the failure path fire at all" check essentially certain
+        cfg.upload_fail_prob = 0.6;
+        cfg.battery_min = 0.5;
+        cfg.battery_max = 1.0;
+        cfg.ram_required_bytes = 0;
+        cfg.threads = threads;
+        cfg.out_dir = Some(dir.display().to_string());
+        let res = run_fleet(&cfg).unwrap();
+        (dir, res)
+    };
+    let (dir1, res1) = run_with(1, "1");
+    // the failure path must actually fire for this to test anything
+    let total_upfail: usize = res1.rounds.iter()
+        .map(|r| r.n_failed_upload).sum();
+    assert!(total_upfail > 0, "upload-fail path never fired");
+    for threads in [2usize, 4] {
+        let (dirn, resn) = run_with(threads, &threads.to_string());
+        assert_eq!(res1.rounds.len(), resn.rounds.len());
+        for (a, b) in res1.rounds.iter().zip(&resn.rounds) {
+            assert_eq!(a, b, "round {} diverged at {threads} threads",
+                       a.round);
+            assert_eq!(a.eval_nll.to_bits(), b.eval_nll.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        }
+        for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
+            let x = std::fs::read(dir1.join(f)).unwrap();
+            let y = std::fs::read(dirn.join(f)).unwrap();
+            assert_eq!(x, y, "{f} differs at {threads} threads");
+        }
+    }
+}
+
+/// Crash recovery: kill a transport-enabled run after round 2 (the
+/// injected crash), resume it, and the completed run must be bitwise
+/// identical — records and artifacts — to one that never crashed.
+#[test]
+fn checkpoint_resume_matches_uninterrupted_run() {
+    let base = |dir: &PathBuf| {
+        let mut cfg = small_cfg();
+        cfg.rounds = 4;
+        cfg.transport = true;
+        cfg.upload_fail_prob = 0.25;
+        cfg.battery_min = 0.4;
+        cfg.battery_max = 1.0;
+        cfg.out_dir = Some(dir.display().to_string());
+        cfg
+    };
+    // straight: 4 rounds, no interruption
+    let dir_a = tdir("resume-straight");
+    let res_a = run_fleet(&base(&dir_a)).unwrap();
+
+    // crashed: stop after round 2, then resume to 4
+    let dir_b = tdir("resume-crashed");
+    let mut first = base(&dir_b);
+    first.rounds = 2;
+    run_fleet(&first).unwrap();
+    let mut second = base(&dir_b);
+    second.resume = true;
+    let res_b = run_fleet(&second).unwrap();
+
+    assert_eq!(res_a.rounds.len(), res_b.rounds.len());
+    for (a, b) in res_a.rounds.iter().zip(&res_b.rounds) {
+        assert_eq!(a, b, "round {} diverged after resume", a.round);
+        assert_eq!(a.eval_nll.to_bits(), b.eval_nll.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+    for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
+        let x = std::fs::read(dir_a.join(f)).unwrap();
+        let y = std::fs::read(dir_b.join(f)).unwrap();
+        assert_eq!(x, y, "{f} differs between straight and resumed runs");
+    }
+    assert_eq!(res_a.summary.to_string(), res_b.summary.to_string());
+}
+
+#[test]
+fn resume_rejects_a_different_config() {
+    let dir = tdir("resume-mismatch");
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.out_dir = Some(dir.display().to_string());
+    run_fleet(&cfg).unwrap();
+    // same dir, different seed: the checkpoint must refuse to resume
+    let mut other = cfg.clone();
+    other.seed = 43;
+    other.resume = true;
+    let err = run_fleet(&other).unwrap_err().to_string();
+    assert!(err.contains("different config"), "{err}");
 }
 
 #[test]

@@ -269,9 +269,10 @@ fn bench_fleet(args: &Args) -> Result<()> {
                contract broken");
     }
 
-    // -- round loop with the transport model: link time + failure draws
-    // ride the same loop; the overhead must be noise-level and the
-    // thread-count determinism contract must hold here too --
+    // -- round loop with the transport model: link time, per-round
+    // bandwidth draws and failure draws ride the same loop; the overhead
+    // must be noise-level and the thread-count determinism contract must
+    // hold here too --
     let mut tr_cells: Vec<Json> = Vec::new();
     let mut tr_bits: Option<u64> = None;
     let mut tr_deterministic = true;
@@ -279,6 +280,7 @@ fn bench_fleet(args: &Args) -> Result<()> {
         let mut cfg = fleet_cfg.clone();
         cfg.transport = true;
         cfg.upload_fail_prob = 0.1;
+        cfg.link_var = 0.5;
         cfg.threads = threads;
         let mut last_nll = 0.0f64;
         let wall = median_secs(rwarm, riters, || {
@@ -348,6 +350,7 @@ fn bench_fleet(args: &Args) -> Result<()> {
             ("clients", Json::from(fleet_cfg.n_clients)),
             ("rounds", Json::from(fleet_cfg.rounds)),
             ("upload_fail_prob", Json::from(0.1)),
+            ("link_var", Json::from(0.5)),
             ("deterministic", Json::from(tr_deterministic)),
             ("cells", Json::Arr(tr_cells)),
         ])),

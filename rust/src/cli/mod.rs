@@ -208,14 +208,19 @@ fn print_help() {
            fleet     federated fine-tuning over a simulated device fleet\n\
                      --clients N --rounds R --local-steps E --window N\n\
                      --dirichlet-alpha F --agg fedavg|median|trimmed-mean\n\
-                     --select all|resource|random --random-k K --mu F\n\
+                     --select all|resource|random|bandwidth (bandwidth =\n\
+                     Oort-style: skip clients whose est. compute+upload\n\
+                     cannot make the deadline) --random-k K --mu F\n\
                      --rho F --straggler-factor F --battery-min F\n\
                      --battery-max F --threads N (0 = MFT_THREADS/auto;\n\
                      output is identical for any value) --out DIR --seed N\n\
                      --transport (per-device link model: down/upload cost\n\
-                     time+energy, deadline judged on compute+upload)\n\
-                     --upload-fail-prob F --resume (continue a killed run\n\
-                     from <out>/fleet_ckpt.json, bit-for-bit)\n\
+                     time+energy, deadline judged on compute+upload,\n\
+                     interrupted uploads resume from a byte offset)\n\
+                     --upload-fail-prob F --link-var V (per-round\n\
+                     log-uniform bandwidth draws in [1/(1+V), 1+V])\n\
+                     --resume (continue a killed run from\n\
+                     <out>/fleet_ckpt.json, bit-for-bit)\n\
            exp       regenerate a paper experiment:\n\
                      fig9 table4 table5 fig10 table6 table7 fig11 table8\n\
                      fig12 fleet\n\

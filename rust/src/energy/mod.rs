@@ -59,6 +59,19 @@ impl BatteryModel {
     pub fn is_empty(&self) -> bool {
         self.level_j <= 0.0
     }
+
+    /// How long the battery can sustain `p_idle + p_extra` watts before
+    /// emptying — the transport model uses this to cut a radio transfer
+    /// short at the exact moment the battery dies, so a partial transfer
+    /// charges only the time and bytes that really happened.
+    pub fn seconds_until_empty(&self, p_extra: f64) -> f64 {
+        let p = self.p_idle + p_extra;
+        if p <= 0.0 {
+            f64::INFINITY
+        } else {
+            (self.level_j / p).max(0.0)
+        }
+    }
 }
 
 /// PowerMonitor + dynamic computation scheduling (Fig. 6).
@@ -169,6 +182,22 @@ mod tests {
         s2.restore_monitor_state(thr, steps);
         assert_eq!(s2.monitor_state(), s.monitor_state());
         assert!(s2.is_throttled());
+    }
+
+    #[test]
+    fn seconds_until_empty_matches_drain() {
+        let mut b = BatteryModel::from_mah(1000.0, 3.7, 1.0, 4.0);
+        b.set_level_frac(0.5);
+        let t = b.seconds_until_empty(1.5); // level / (1.0 + 1.5) W
+        assert!((t - b.level_j / 2.5).abs() < 1e-9);
+        // draining exactly that long at that power empties the battery
+        // (up to f64 rounding of the division)
+        b.drain_with(t, 1.5);
+        assert!(b.level_j < 1e-6, "residual {}", b.level_j);
+        // zero net power never empties
+        let z = BatteryModel { capacity_j: 10.0, level_j: 10.0,
+                               p_idle: 0.0, p_compute: 0.0 };
+        assert_eq!(z.seconds_until_empty(0.0), f64::INFINITY);
     }
 
     #[test]

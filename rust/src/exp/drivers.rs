@@ -2,8 +2,21 @@
 //!
 //! Drivers act as the *launcher*: memory-sensitive cells spawn `mft train`
 //! worker subprocesses so each measurement gets a private, monotonic
-//! VmHWM; convergence-only cells run in-process.  Every driver writes its
-//! rows to `results/<id>.json` and prints the paper-shaped table.
+//! VmHWM; convergence-only cells run in-process.  Grid-shaped drivers
+//! (`table4`, `fig10`, `table6`, `fleet`) fan their independent cells out
+//! over [`crate::util::pool::ordered_map`] — subprocess spawns included,
+//! since process isolation is exactly what keeps concurrent RSS probes
+//! *valid* — and always merge results in cell order, so the tables and
+//! results JSON that come out are identical for any worker count.
+//! Capacity is the caller's dial, not the measurements': N concurrent
+//! probe processes need N times the RSS, so on a small host pass
+//! `--threads N` (explicit value wins over `MFT_THREADS`/host
+//! parallelism; `--threads 1` restores the old sequential behavior).
+//! Host pressure cannot silently corrupt a cell: a *simulated* OOM is
+//! reported by the worker itself (`ok: false` in its summary), while a
+//! probe killed by the host produces no summary at all and
+//! [`spawn_train`] fails the whole grid loudly.  Every driver writes
+//! its rows to `results/<id>.json` and prints the paper-shaped table.
 
 use std::path::PathBuf;
 use std::process::Command;
@@ -80,6 +93,16 @@ fn sum_f(j: &Json, k: &str) -> f64 {
 
 fn sum_ok(j: &Json) -> bool {
     j.get("ok").and_then(|v| v.as_bool().ok()).unwrap_or(false)
+}
+
+/// Worker count for a grid driver's cell fan-out: an explicit
+/// `--threads` wins, else `MFT_THREADS` / host parallelism
+/// ([`crate::util::pool::resolve_threads`]).  `--threads 1` restores
+/// the old sequential behavior — N concurrent probe processes need N
+/// times the RSS.  `ordered_map` clamps to the cell count internally.
+fn grid_threads(args: &Args) -> Result<usize> {
+    Ok(crate::util::pool::resolve_threads(
+        args.get_parse("threads", 0usize)?))
 }
 
 // ===========================================================================
@@ -231,10 +254,16 @@ fn table4(args: &Args) -> Result<()> {
         None => T4_TASKS.iter().map(|s| s.to_string()).collect(),
     };
 
-    let mut rows: Vec<Json> = Vec::new();
+    // build the grid up front; the workers are separate processes (each
+    // measurement needs a private, monotonic VmHWM) so the fan-out
+    // happens at the spawn level — pool threads launch and wait on the
+    // subprocesses concurrently, and results merge in cell order, so
+    // the printed table and the results JSON match a sequential run
+    type Cell = (String, String, Vec<(&'static str, String)>,
+                 Vec<(&'static str, String)>);
+    let mut cells: Vec<Cell> = Vec::new();
     for task in &tasks {
         for model in &models {
-            eprintln!("== Table 4: {model} @ {task} (seq{seq}) ==");
             let mut common = vec![
                 ("model", model.clone()),
                 ("task", task.clone()),
@@ -254,34 +283,45 @@ fn table4(args: &Args) -> Result<()> {
             mft_flags.push(("exec", "fused".into()));
             mft_flags.push(("attn", "mea".into()));
             mft_flags.push(("seed", "42".into()));
-            let mft = spawn_train(args, &mft_flags, &[])?;
             // Reference trainer: fused naive (server-side PyTorch stand-in)
             let mut ref_flags = common.to_vec();
             ref_flags.push(("exec", "fused".into()));
             ref_flags.push(("attn", "naive".into()));
             ref_flags.push(("seed", "43".into()));
-            let rf = spawn_train(args, &ref_flags, &[])?;
-
-            println!(
-                "{model:<18} {task:<9} | M loss {:.3}->{:.3} acc {:.1}->{:.1}% \
-                 ppl {:.1}->{:.1} | P loss ->{:.3} acc ->{:.1}% | \
-                 {:.2}h {:.1}kJ {:.0}MiB",
-                sum_f(&mft, "initial_nll"), sum_f(&mft, "final_loss"),
-                sum_f(&mft, "initial_acc") * 100.0,
-                sum_f(&mft, "best_acc") * 100.0,
-                sum_f(&mft, "initial_ppl"), sum_f(&mft, "best_ppl"),
-                sum_f(&rf, "final_loss"), sum_f(&rf, "best_acc") * 100.0,
-                sum_f(&mft, "time_device_s") / 3600.0,
-                sum_f(&mft, "energy_kj"), sum_f(&mft, "peak_rss_mb"));
-
-            rows.push(Json::obj(vec![
-                ("model", Json::from(model.as_str())),
-                ("task", Json::from(task.as_str())),
-                ("seq", Json::from(seq)),
-                ("mft", mft),
-                ("reference", rf),
-            ]));
+            cells.push((model.clone(), task.clone(), mft_flags, ref_flags));
         }
+    }
+    let threads = grid_threads(args)?;
+    let results = crate::util::pool::ordered_map(
+        &cells, threads, |_, (model, task, mft_flags, ref_flags)| {
+            eprintln!("== Table 4: {model} @ {task} (seq{seq}) ==");
+            let mft = spawn_train(args, mft_flags, &[])?;
+            let rf = spawn_train(args, ref_flags, &[])?;
+            Ok::<_, anyhow::Error>((mft, rf))
+        });
+
+    let mut rows: Vec<Json> = Vec::new();
+    for ((model, task, _, _), res) in cells.iter().zip(results) {
+        let (mft, rf) = res?;
+        println!(
+            "{model:<18} {task:<9} | M loss {:.3}->{:.3} acc {:.1}->{:.1}% \
+             ppl {:.1}->{:.1} | P loss ->{:.3} acc ->{:.1}% | \
+             {:.2}h {:.1}kJ {:.0}MiB",
+            sum_f(&mft, "initial_nll"), sum_f(&mft, "final_loss"),
+            sum_f(&mft, "initial_acc") * 100.0,
+            sum_f(&mft, "best_acc") * 100.0,
+            sum_f(&mft, "initial_ppl"), sum_f(&mft, "best_ppl"),
+            sum_f(&rf, "final_loss"), sum_f(&rf, "best_acc") * 100.0,
+            sum_f(&mft, "time_device_s") / 3600.0,
+            sum_f(&mft, "energy_kj"), sum_f(&mft, "peak_rss_mb"));
+
+        rows.push(Json::obj(vec![
+            ("model", Json::from(model.as_str())),
+            ("task", Json::from(task.as_str())),
+            ("seq", Json::from(seq)),
+            ("mft", mft),
+            ("reference", rf),
+        ]));
     }
     let name = if seq == 128 { "table4".to_string() }
                else { format!("table4_seq{seq}") };
@@ -417,13 +457,25 @@ fn fig10(args: &Args) -> Result<()> {
               PEFT @ corpus seq{seq} b8");
     println!("{:<18} {:>8} {:>8} {:>8} {:>8} {:>8}", "model",
              "none", "(1)", "(1,2)", "(1-3)", "(1-4)");
+    // one subprocess per (model, chain) cell; the grid fans out at the
+    // spawn level (process isolation keeps every VmHWM private) and
+    // results merge in cell order
+    let grid: Vec<(String, &'static str)> = models
+        .iter()
+        .flat_map(|m| CHAINS.iter().map(move |(c, _)| (m.clone(), *c)))
+        .collect();
+    let threads = grid_threads(args)?;
+    let rss = crate::util::pool::ordered_map(
+        &grid, threads, |_, (model, chain)| {
+            let (f, b) = chain_flags(chain, model, seq, steps);
+            spawn_train(args, &f, &b).map(|j| sum_f(&j, "peak_rss_mb"))
+        });
+    let mut rss = rss.into_iter();
     let mut rows = Vec::new();
     for model in &models {
         let mut cells = Vec::new();
-        for (chain, _) in CHAINS {
-            let (f, b) = chain_flags(chain, model, seq, steps);
-            let j = spawn_train(args, &f, &b)?;
-            cells.push(sum_f(&j, "peak_rss_mb"));
+        for _ in CHAINS {
+            cells.push(rss.next().expect("grid/result length mismatch")?);
         }
         println!("{:<18} {:>8.0} {:>8.0} {:>8.0} {:>8.0} {:>8.0}",
                  model, cells[0], cells[1], cells[2], cells[3], cells[4]);
@@ -451,29 +503,43 @@ fn table6(args: &Args) -> Result<()> {
               fine-tuning (seq{seq} b8); 'any' = runs without optimizations");
     println!("{:<18} {:>14} {:>14} {:>14} {:>14}",
              "model", "p50-pro", "nova9-pro", "iqoo15", "macbook");
-    let chain_label = |c: &str| match c {
-        "none" => "any",
-        "c1" => "(1)",
-        "c12" => "(1,2)",
-        "c123" => "(1-3)",
-        "c1234" => "(1-4)",
-        _ => "?",
-    };
-    let mut rows = Vec::new();
-    for model in &models {
-        let mut cols = Vec::new();
-        for device in T6_DEVICES {
-            let mut found = "OOM".to_string();
+    fn chain_label(c: &str) -> &'static str {
+        match c {
+            "none" => "any",
+            "c1" => "(1)",
+            "c12" => "(1,2)",
+            "c123" => "(1-3)",
+            "c1234" => "(1-4)",
+            _ => "?",
+        }
+    }
+    // each (model, device) cell walks the chain ladder until one fits —
+    // that inner search is inherently sequential (each step depends on
+    // the previous OOM), so the fan-out is across cells, with every
+    // chain probe still its own subprocess
+    let grid: Vec<(String, &'static str)> = models
+        .iter()
+        .flat_map(|m| T6_DEVICES.iter().map(move |d| (m.clone(), *d)))
+        .collect();
+    let threads = grid_threads(args)?;
+    let found = crate::util::pool::ordered_map(
+        &grid, threads, |_, (model, device)| -> Result<String> {
             for (chain, _) in CHAINS {
                 let (mut f, b) = chain_flags(chain, model, seq, steps);
                 f.push(("device", device.to_string()));
                 let j = spawn_train(args, &f, &b)?;
                 if sum_ok(&j) {
-                    found = chain_label(chain).to_string();
-                    break;
+                    return Ok(chain_label(chain).to_string());
                 }
             }
-            cols.push(found);
+            Ok("OOM".to_string())
+        });
+    let mut found = found.into_iter();
+    let mut rows = Vec::new();
+    for model in &models {
+        let mut cols = Vec::new();
+        for _ in T6_DEVICES {
+            cols.push(found.next().expect("grid/result length mismatch")?);
         }
         println!("{:<18} {:>14} {:>14} {:>14} {:>14}",
                  model, cols[0], cols[1], cols[2], cols[3]);
@@ -636,10 +702,11 @@ fn fleet_sweep(args: &Args) -> Result<()> {
     // makes the deadline (compute + upload) and adds failed uploads /
     // wasted radio bytes to the table
     let transport = args.has("transport");
-    // same default as `mft fleet` (0.0), so a sweep cell reproduces the
+    // same defaults as `mft fleet` (0.0), so a sweep cell reproduces the
     // equivalent standalone run flag-for-flag; FleetConfig::validate
-    // rejects a failure probability without the link model
+    // rejects either knob without the link model
     let upload_fail_prob: f64 = args.get_parse("upload-fail-prob", 0.0)?;
+    let link_var: f64 = args.get_parse("link-var", 0.0)?;
     let mut cells: Vec<(usize, f64, &str, FleetConfig)> = Vec::new();
     for &n_clients in &[8usize, 16] {
         for &alpha in &[100.0f64, 0.1] {
@@ -652,6 +719,7 @@ fn fleet_sweep(args: &Args) -> Result<()> {
                     seed,
                     transport,
                     upload_fail_prob,
+                    link_var,
                     // the sweep already saturates cores at the cell
                     // level; single-threaded cells avoid
                     // oversubscription and are bitwise identical to any
@@ -668,12 +736,13 @@ fn fleet_sweep(args: &Args) -> Result<()> {
             }
         }
     }
-    let threads = pool::resolve_threads(0).min(cells.len());
+    let threads = grid_threads(args)?.min(cells.len());
     println!("Fleet — federated LoRA over simulated devices \
               ({rounds} rounds/cell, {} cells on {threads} threads{})",
              cells.len(),
              if transport {
-                 format!(", transport on, upload fail p={upload_fail_prob}")
+                 format!(", transport on, upload fail p={upload_fail_prob}, \
+                          link var {link_var}")
              } else {
                  String::new()
              });

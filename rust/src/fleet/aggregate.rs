@@ -51,11 +51,29 @@ pub struct ClientUpdate {
     /// virtual seconds spent downloading the global adapter (transport
     /// model only; advances the client clock and battery, not `time_s`)
     pub download_s: f64,
-    /// virtual seconds spent uploading the delta (transport model only)
+    /// virtual seconds spent uploading this round (transport model only)
     pub upload_s: f64,
-    /// bytes the client put on the radio for its upload attempt (the
-    /// driver splits these into delivered vs wasted)
+    /// fresh-delta bytes the client actually put on the uplink this
+    /// round (the driver splits them into delivered vs wasted; without
+    /// the transport model this is the would-be upload size)
     pub bytes_up: u64,
+    /// resume-backlog bytes flushed on the uplink this round — the
+    /// remainder of an earlier interrupted transfer, retried before the
+    /// fresh delta; always stale by the time they land, so always wasted
+    pub bytes_up_backlog: u64,
+    /// bytes the client actually pulled off the downlink for the global
+    /// adapter broadcast (partial when the battery died mid-download)
+    pub bytes_down: u64,
+    /// the upload was cut short at the coordinator's deadline: the fresh
+    /// delta did not arrive (the client is a straggler even when
+    /// `time_s` sits exactly at the deadline) and the untransferred
+    /// remainder is carried as the client's resume offset
+    pub upload_truncated: bool,
+    /// the failure happened while a radio transfer was in flight (the
+    /// battery died mid-broadcast or mid-upload): the client just went
+    /// silent on the link, so in an all-failed round the coordinator
+    /// still has to wait the deadline out to learn anything
+    pub link_silent: bool,
     /// set when the round produced no usable update
     pub failure: Option<ClientFailure>,
 }

@@ -27,7 +27,8 @@ use crate::config::manifest::ModelInfo;
 use crate::energy::{BatteryModel, EnergyScheduler};
 use crate::fleet::aggregate::{ClientFailure, ClientUpdate};
 use crate::fleet::model::BigramRef;
-use crate::fleet::transport::{link_for, LinkProfile};
+use crate::fleet::transport::{draw_link_scales, link_for, partial_bytes,
+                              LinkProfile};
 use crate::fleet::FleetConfig;
 use crate::sim::DeviceProfile;
 use crate::train::lora::LoraState;
@@ -42,14 +43,20 @@ pub struct ClientStatus {
     pub battery_frac: f64,
     /// simulated free RAM after background apps (budget - background)
     pub free_ram_bytes: u64,
+    /// estimated deadline-relevant round time: nominal compute + (with
+    /// the transport model) the upload leg including any pending resume
+    /// backlog ([`FleetClient::estimate_round_s`]); the `bandwidth`
+    /// selection policy compares this against the straggler deadline
+    pub est_round_s: f64,
 }
 
 /// Scalar client state the fleet checkpoint serializes alongside the
 /// adapter safetensors: battery and clock (f64 bits — JSON numbers are
 /// f64 and cannot carry u64 bits exactly, so these travel as strings),
-/// the optimizer step, all three RNG streams, and the PowerMonitor
-/// state.  Restoring this plus the adapter checkpoint reproduces the
-/// client bit-for-bit.
+/// the optimizer step, all three RNG streams, the PowerMonitor state,
+/// and the upload resume offset (bytes of an interrupted transfer still
+/// owed to the link).  Restoring this plus the adapter checkpoint
+/// reproduces the client bit-for-bit.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClientPersist {
     pub id: usize,
@@ -61,6 +68,7 @@ pub struct ClientPersist {
     pub net_rng: (u64, u64),
     pub sched_throttled: bool,
     pub sched_steps: usize,
+    pub pending_up: u64,
 }
 
 /// Round-start snapshot for the failure rollback path: a failed local
@@ -88,8 +96,13 @@ pub struct FleetClient {
     shard: Vec<u32>,
     rng: Pcg,
     bg_rng: Pcg,
-    /// private stream for link-failure draws (one per upload attempt)
+    /// private stream for link draws: per-round bandwidth scales
+    /// (`link_var`) and upload-failure coin flips
     net_rng: Pcg,
+    /// bytes of an interrupted upload still owed to the link; flushed
+    /// before the next fresh delta (resume-from-offset), persisted by
+    /// the fleet checkpoint
+    pending_up_bytes: u64,
     global_names: Vec<String>,
     global_snapshot: Vec<Vec<f32>>,
 }
@@ -122,6 +135,7 @@ impl FleetClient {
             rng: root.fork(id as u64 * 3 + 1),
             bg_rng: root.fork(id as u64 * 3 + 2),
             net_rng: root.fork(id as u64 * 3 + 3),
+            pending_up_bytes: 0,
             global_names: Vec::new(),
             global_snapshot: Vec::new(),
         })
@@ -141,6 +155,7 @@ impl FleetClient {
             net_rng: self.net_rng.state_parts(),
             sched_throttled: thr,
             sched_steps: steps,
+            pending_up: self.pending_up_bytes,
         }
     }
 
@@ -156,6 +171,53 @@ impl FleetClient {
         self.net_rng = Pcg::from_parts(p.net_rng.0, p.net_rng.1);
         self.scheduler
             .restore_monitor_state(p.sched_throttled, p.sched_steps);
+        self.pending_up_bytes = p.pending_up;
+    }
+
+    /// Expected deadline-relevant round time at nominal rates: full-power
+    /// compute (accumulated stepwise, mirroring the client clock's own
+    /// rounding) plus, with the transport model, the fresh delta's upload
+    /// at the nominal link rate.  The driver derives the straggler
+    /// deadline from the *fastest* client's value, which pins the
+    /// invariant that a `straggler_factor >= 1` deadline is achievable.
+    pub fn nominal_round_s(&self, cfg: &FleetConfig, adapter_bytes: u64)
+                           -> f64 {
+        let step_s = (cfg.micro_batch * cfg.window) as f64
+            * cfg.flops_per_token / (self.device.cpu_gflops * 1e9);
+        let mut t = 0.0;
+        for _ in 0..cfg.local_steps {
+            t += step_s;
+        }
+        if cfg.transport {
+            t += self.link.upload_s(adapter_bytes);
+        }
+        t
+    }
+
+    /// What the `bandwidth` selection policy compares against the
+    /// deadline: [`Self::nominal_round_s`] plus the time to flush this
+    /// client's pending upload backlog first.  Optimistic by design
+    /// (no throttling, median link draw) — it gates the predictably
+    /// infeasible, not all risk.
+    pub fn estimate_round_s(&self, cfg: &FleetConfig, adapter_bytes: u64)
+                            -> f64 {
+        let mut t = self.nominal_round_s(cfg, adapter_bytes);
+        if cfg.transport && self.pending_up_bytes > 0 {
+            t += self.link.upload_s(self.pending_up_bytes);
+        }
+        t
+    }
+
+    /// Drop a dangling upload offset.  The driver calls this when the
+    /// client is passed over for a round: the coordinator-side partial
+    /// blob belongs to a round that is finished, so there is nothing
+    /// left to resume — and an undrainable backlog must not inflate the
+    /// bandwidth policy's estimate past the deadline forever (a skipped
+    /// client never runs the upload leg, the only place a backlog can
+    /// shrink, so without this one truncated upload could starve a
+    /// healthy client for the rest of the run).
+    pub fn abandon_pending_upload(&mut self) {
+        self.pending_up_bytes = 0;
     }
 
     fn snapshot(&mut self) -> Result<RoundSnapshot> {
@@ -195,14 +257,17 @@ impl FleetClient {
     }
 
     /// Sample the client's round-start status (battery + free RAM after
-    /// this round's simulated background apps).
-    pub fn sample_status(&mut self) -> ClientStatus {
+    /// this round's simulated background apps + the estimated round time
+    /// the bandwidth policy gates on).
+    pub fn sample_status(&mut self, cfg: &FleetConfig, adapter_bytes: u64)
+                         -> ClientStatus {
         let bg = self.bg_rng.range_f64(0.2, 0.95);
         let free = ((1.0 - bg) * self.device.ram_budget_bytes as f64) as u64;
         ClientStatus {
             id: self.id,
             battery_frac: self.battery.level_frac(),
             free_ram_bytes: free,
+            est_round_s: self.estimate_round_s(cfg, adapter_bytes),
         }
     }
 
@@ -232,7 +297,10 @@ impl FleetClient {
     /// is the unit the driver fans out across worker threads
     /// ([`crate::util::pool::ordered_map_mut`]) — each selected client
     /// touches only its own state, so concurrent rounds are
-    /// deterministic by construction.
+    /// deterministic by construction.  `deadline_s` is the coordinator's
+    /// straggler deadline: the upload stops there (the server hung up),
+    /// and whatever did not make it over the link is carried as the
+    /// client's resume offset.
     ///
     /// Never aborts the run: internal errors and mid-round battery
     /// deaths come back as [`ClientFailure`]-carrying updates, with the
@@ -240,7 +308,8 @@ impl FleetClient {
     /// back to the round start (the client "resumes from its last
     /// round").  A failed upload keeps the local training.
     pub fn run_round(&mut self, names: &[String], global: &[Vec<f32>],
-                     model: &BigramRef, cfg: &FleetConfig) -> ClientUpdate {
+                     model: &BigramRef, cfg: &FleetConfig, deadline_s: f64)
+                     -> ClientUpdate {
         let snap = match self.snapshot() {
             Ok(s) => s,
             Err(e) => {
@@ -248,7 +317,7 @@ impl FleetClient {
                     self.id, ClientFailure::Error(e.to_string()));
             }
         };
-        match self.round_inner(names, global, model, cfg) {
+        match self.round_inner(names, global, model, cfg, deadline_s) {
             Ok(u) => {
                 if matches!(u.failure,
                             Some(ClientFailure::BatteryDead)
@@ -266,52 +335,131 @@ impl FleetClient {
     }
 
     fn round_inner(&mut self, names: &[String], global: &[Vec<f32>],
-                   model: &BigramRef, cfg: &FleetConfig)
+                   model: &BigramRef, cfg: &FleetConfig, deadline_s: f64)
                    -> Result<ClientUpdate> {
         let adapter_bytes: u64 =
             (global.iter().map(|g| g.len()).sum::<usize>() * 4) as u64;
+        // this round's effective link: nominal rates scaled by the
+        // client-local bandwidth draws (link_var = 0 draws nothing)
+        let link = if cfg.transport {
+            let (up, down) = draw_link_scales(&mut self.net_rng,
+                                              cfg.link_var);
+            self.link.at_scales(up, down)
+        } else {
+            self.link.nominal()
+        };
         // download the global adapter (the coordinator broadcast can
         // overlap waiting, so this advances the client's clock and
         // battery but not the deadline-relevant time_s)
         let mut download_s = 0.0f64;
+        let mut bytes_down = 0u64;
         let mut transfer_energy = 0.0f64;
         if cfg.transport {
-            download_s = self.link.download_s(adapter_bytes);
-            self.clock.sleep(download_s);
-            transfer_energy +=
-                self.battery.drain_with(download_s, self.link.p_radio);
+            let needed = link.download_s(adapter_bytes);
+            let limit = self.battery.seconds_until_empty(link.p_radio);
+            if limit < needed {
+                // died mid-download: only the seconds and bytes that
+                // really happened are charged (the old model drained the
+                // full transfer from an already-flat battery and
+                // reported zero radio bytes)
+                self.clock.sleep(limit);
+                let e = self.battery.drain_with(limit, link.p_radio);
+                self.battery.set_level_frac(0.0);
+                let mut u = ClientUpdate::failed(self.id,
+                                                 ClientFailure::BatteryDead);
+                u.download_s = limit;
+                u.bytes_down = partial_bytes(adapter_bytes, limit, needed);
+                u.energy_j = e;
+                u.link_silent = true;
+                return Ok(u);
+            }
+            download_s = needed;
+            bytes_down = adapter_bytes;
+            self.clock.sleep(needed);
+            transfer_energy += self.battery.drain_with(needed, link.p_radio);
             if self.battery.is_empty() {
                 let mut u = ClientUpdate::failed(self.id,
                                                  ClientFailure::BatteryDead);
                 u.download_s = download_s;
+                u.bytes_down = bytes_down;
                 u.energy_j = transfer_energy;
+                u.link_silent = true;
                 return Ok(u);
             }
         }
-        self.load_global(names, global)?;
-        let mut u = self.local_round(model, cfg)?;
+        // local failures past this point (degenerate shard, tensor
+        // mismatch, mid-compute battery death) must still carry the
+        // broadcast the battery already paid for — an Err that bubbled
+        // straight to run_round would zero out the accounting
+        let mut u = match self
+            .load_global(names, global)
+            .and_then(|()| self.local_round(model, cfg))
+        {
+            Ok(u) => u,
+            Err(e) => {
+                let mut u = ClientUpdate::failed(
+                    self.id, ClientFailure::Error(e.to_string()));
+                u.download_s = download_s;
+                u.bytes_down = bytes_down;
+                u.energy_j = transfer_energy;
+                return Ok(u);
+            }
+        };
         u.download_s = download_s;
+        u.bytes_down = bytes_down;
         u.energy_j += transfer_energy;
         if u.failure.is_some() {
             return Ok(u);
         }
         if cfg.transport {
-            // upload the delta: link time counts against the straggler
-            // deadline (compute + upload), the radio drains the battery,
-            // and the transfer can fail outright (seeded per-client draw)
-            let upload_s = self.link.upload_s(adapter_bytes);
-            self.clock.sleep(upload_s);
-            u.energy_j += self.battery.drain_with(upload_s,
-                                                  self.link.p_radio);
-            u.upload_s = upload_s;
-            u.time_s += upload_s;
-            u.bytes_up = adapter_bytes;
-            if self.battery.is_empty() {
-                u.failure = Some(ClientFailure::BatteryDead);
+            // upload: any resume backlog is flushed first, then the
+            // fresh delta.  Link time counts against the straggler
+            // deadline (compute + upload) and the radio drains the
+            // battery.  The transfer is cut short by whichever comes
+            // first — the coordinator's deadline (the server stops
+            // listening; the client is a straggler) or the battery
+            // dying — and the untransferred remainder becomes the
+            // client's resume offset for next round.  A transfer that
+            // does complete can still fail outright (seeded draw).
+            let backlog = self.pending_up_bytes;
+            let total = backlog + adapter_bytes;
+            let needed = link.upload_s(total);
+            let avail = (deadline_s - u.time_s).max(0.0);
+            let limit = self.battery.seconds_until_empty(link.p_radio);
+            let send_s = needed.min(avail).min(limit);
+            self.clock.sleep(send_s);
+            u.energy_j += self.battery.drain_with(send_s, link.p_radio);
+            u.upload_s = send_s;
+            u.time_s += send_s;
+            let sent = if send_s >= needed {
+                total
+            } else {
+                partial_bytes(total, send_s, needed)
+            };
+            u.bytes_up_backlog = sent.min(backlog);
+            u.bytes_up = sent - u.bytes_up_backlog;
+            if send_s < needed {
+                // interrupted mid-transfer: the remainder is carried and
+                // retried (before the next fresh delta); only the bytes
+                // that hit the air this round are accounted this round
+                self.pending_up_bytes = total - sent;
                 u.delta.clear();
-            } else if self.net_rng.uniform() < cfg.upload_fail_prob {
-                u.failure = Some(ClientFailure::UploadFailed);
-                u.delta.clear();
+                if send_s >= limit {
+                    self.battery.set_level_frac(0.0);
+                    u.failure = Some(ClientFailure::BatteryDead);
+                    u.link_silent = true;
+                } else {
+                    u.upload_truncated = true;
+                }
+            } else {
+                self.pending_up_bytes = 0;
+                if self.battery.is_empty() {
+                    u.failure = Some(ClientFailure::BatteryDead);
+                    u.delta.clear();
+                } else if self.net_rng.uniform() < cfg.upload_fail_prob {
+                    u.failure = Some(ClientFailure::UploadFailed);
+                    u.delta.clear();
+                }
             }
         } else {
             // no link model: the would-be upload still carries its size
@@ -512,7 +660,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg);
+        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         assert_eq!(up.client_id, 0);
         assert_eq!(up.failure, None);
         assert_eq!(up.n_samples, 3 * 2 * 16);
@@ -532,7 +680,7 @@ mod tests {
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
         // baseline without transport
-        let base = c.run_round(&names, &g, &model, &cfg);
+        let base = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         assert_eq!(base.failure, None);
 
         cfg.transport = true;
@@ -541,7 +689,7 @@ mod tests {
         let mut tc = FleetClient::new(
             1, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
             &mut root).unwrap();
-        let up = tc.run_round(&names, &g, &model, &cfg);
+        let up = tc.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         assert_eq!(up.failure, None);
         let bytes = (8 * 2 + 2 * 8) as u64 * 4;
         assert_eq!(up.bytes_up, bytes);
@@ -573,7 +721,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg);
+        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         assert_eq!(up.failure, Some(ClientFailure::UploadFailed));
         assert!(up.delta.is_empty(), "failed upload must deliver nothing");
         assert!(up.bytes_up > 0, "the radio bytes were still burned");
@@ -596,7 +744,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg);
+        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         assert_eq!(up.failure, Some(ClientFailure::BatteryDead));
         assert!(up.delta.is_empty());
         assert!(up.time_s > 0.0 && up.energy_j > 0.0,
@@ -621,7 +769,7 @@ mod tests {
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
         // advance the client one round, capture its post-round state
-        let _ = c.run_round(&names, &g, &model, &cfg);
+        let _ = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         let persist = c.persist_state();
         let moments: Vec<(Vec<f32>, Vec<f32>)> = [LORA_A, LORA_B]
             .iter()
@@ -631,7 +779,7 @@ mod tests {
             })
             .collect();
         // round 2 on the live client
-        let a = c.run_round(&names, &g, &model, &cfg);
+        let a = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
 
         // rebuild a fresh client, restore scalars + moments (the driver
         // restores moments via the safetensors checkpoint), rerun round 2
@@ -646,7 +794,7 @@ mod tests {
             m2.copy_from_slice(sm);
             v2.copy_from_slice(sv);
         }
-        let b = c2.run_round(&names, &g, &model, &cfg);
+        let b = c2.run_round(&names, &g, &model, &cfg, f64::INFINITY);
         assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
         assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
         assert!(!a.delta.is_empty());
@@ -655,6 +803,227 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "delta diverged");
             }
         }
+    }
+
+    #[test]
+    fn deadline_truncates_upload_and_carries_resume_offset() {
+        let (model, mut cfg, mut c) = setup();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        // compute time is deterministic per batch shape, so a plain run
+        // tells us where the upload starts on the deadline clock
+        let base = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        assert_eq!(base.failure, None);
+
+        cfg.transport = true;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut tc = FleetClient::new(
+            1, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        let full_up = tc.link.upload_s(bytes);
+        // the coordinator hangs up 40% of the way through the upload
+        // (0.4 keeps the expected byte count off an integer boundary,
+        // where 1-ulp clock noise could flip the floor)
+        let deadline = base.time_s + full_up * 0.4;
+        let sent = (bytes as f64 * 0.4) as u64;
+        let up = tc.run_round(&names, &g, &model, &cfg, deadline);
+        assert_eq!(up.failure, None, "a truncated upload is a straggler, \
+                                      not a failure: {up:?}");
+        assert!(up.upload_truncated);
+        assert!(up.delta.is_empty(), "the fresh delta never arrived");
+        // 40% of the transfer window -> 40% of the bytes on the air
+        assert_eq!(up.bytes_up, sent);
+        assert_eq!(up.bytes_up_backlog, 0);
+        assert!((up.upload_s - full_up * 0.4).abs() < 1e-9 * full_up,
+                "upload stopped at the deadline: {}", up.upload_s);
+        assert!(up.time_s <= deadline + 1e-12);
+        // the remainder is owed to the link...
+        assert_eq!(tc.persist_state().pending_up, bytes - sent);
+        // ...and the local training stands (straggler, not rollback)
+        assert_eq!(tc.opt.t, cfg.local_steps as u64);
+
+        // next round (roomy deadline): the backlog flushes before the
+        // fresh delta and the offset clears
+        let up2 = tc.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        assert_eq!(up2.failure, None);
+        assert!(!up2.upload_truncated);
+        assert_eq!(up2.bytes_up_backlog, bytes - sent);
+        assert_eq!(up2.bytes_up, bytes);
+        assert!(!up2.delta.is_empty());
+        assert_eq!(tc.persist_state().pending_up, 0);
+        let total2 = bytes + (bytes - sent);
+        assert!((up2.upload_s - tc.link.upload_s(total2)).abs()
+                    < 1e-9 * up2.upload_s,
+                "round 2 pays backlog + fresh: {}", up2.upload_s);
+    }
+
+    #[test]
+    fn battery_death_mid_upload_charges_only_partial_bytes() {
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        // make compute (and its drain) negligible so the battery level
+        // can be tuned to die halfway through the upload leg
+        cfg.flops_per_token = 1.0;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 1.0,
+            &mut root).unwrap();
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        let full_up = c.link.upload_s(bytes);
+        let p_radio_w = c.battery.p_idle + c.link.p_radio;
+        // energy for ~40% of the upload (plus the tiny download leg);
+        // 0.4 keeps the expected byte floor off an integer boundary
+        let level = p_radio_w * full_up * 0.4
+            + p_radio_w * c.link.download_s(bytes);
+        c.battery.level_j = level;
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        assert_eq!(up.failure, Some(ClientFailure::BatteryDead), "{up:?}");
+        assert!(up.link_silent, "a mid-upload death is silent on the link");
+        assert!(c.battery.is_empty());
+        // the PR-3 overcount is gone: dying mid-upload burns only the
+        // transmitted bytes, the rest becomes the resume offset
+        assert!(up.bytes_up > 0 && up.bytes_up < bytes,
+                "partial bytes expected: {}", up.bytes_up);
+        assert_eq!(c.persist_state().pending_up, bytes - up.bytes_up);
+        assert!(up.upload_s > 0.0 && up.upload_s < full_up);
+        // the full download made it before the battery ran down
+        assert_eq!(up.bytes_down, bytes);
+    }
+
+    #[test]
+    fn battery_death_mid_download_reports_partial_down_bytes() {
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        cfg.flops_per_token = 1.0;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 1.0,
+            &mut root).unwrap();
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        let full_down = c.link.download_s(bytes);
+        let p_radio_w = c.battery.p_idle + c.link.p_radio;
+        // enough charge for 40% of the broadcast, then darkness
+        c.battery.level_j = p_radio_w * full_down * 0.4;
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        assert_eq!(up.failure, Some(ClientFailure::BatteryDead));
+        assert!(up.link_silent, "a mid-broadcast death is silent");
+        // the radio bytes it actually burned are visible (PR 3 reported 0)
+        assert_eq!(up.bytes_down, (bytes as f64 * 0.4) as u64);
+        assert!(up.download_s > 0.0 && up.download_s < full_down);
+        assert!(up.energy_j > 0.0);
+        assert_eq!(up.bytes_up, 0);
+        assert!(c.battery.is_empty());
+        // no upload ever started: nothing owed to the link
+        assert_eq!(c.persist_state().pending_up, 0);
+    }
+
+    #[test]
+    fn local_error_after_download_keeps_the_radio_accounting() {
+        // a degenerate shard fails the round *after* the broadcast was
+        // paid for; the failed update must still carry the download
+        // seconds, bytes and energy (an Err bubbling straight out used
+        // to zero them, so summaries undercounted the radio)
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        let mut root = Pcg::new(5);
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], vec![0u32], &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        assert!(matches!(up.failure, Some(ClientFailure::Error(_))),
+                "{up:?}");
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        assert_eq!(up.bytes_down, bytes, "broadcast bytes were burned");
+        assert!(up.download_s > 0.0 && up.energy_j > 0.0, "{up:?}");
+        // a device-side error is not link silence: the client was alive
+        // to report it, so an all-failed round can still charge the
+        // observed failure time
+        assert!(!up.link_silent);
+        assert_eq!(up.bytes_up, 0);
+    }
+
+    #[test]
+    fn link_var_draws_bounded_rates_and_stays_deterministic() {
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        cfg.link_var = 0.9;
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let run = || {
+            let mut root = Pcg::new(5);
+            let tokens: Vec<u32> =
+                (0..4000).map(|i| (i % 7) as u32).collect();
+            let mut c = FleetClient::new(
+                0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+                &mut root).unwrap();
+            let g = vec![
+                c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+                c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+            ];
+            c.run_round(&names, &g, &model, &cfg, f64::INFINITY)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.upload_s.to_bits(), b.upload_s.to_bits(),
+                   "seeded link draws must reproduce bitwise");
+        assert_eq!(a.download_s.to_bits(), b.download_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        // the drawn rates stay inside the log-uniform envelope
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        let nom_up = link_for(&sim::DEVICES[1]).upload_s(bytes);
+        let nom_down = link_for(&sim::DEVICES[1]).download_s(bytes);
+        let v = 1.0 + cfg.link_var;
+        assert!(a.upload_s >= nom_up / v - 1e-12
+                    && a.upload_s <= nom_up * v + 1e-12,
+                "upload {} outside [{}, {}]", a.upload_s, nom_up / v,
+                nom_up * v);
+        assert!(a.download_s >= nom_down / v - 1e-12
+                    && a.download_s <= nom_down * v + 1e-12);
+    }
+
+    #[test]
+    fn estimate_round_s_accounts_upload_and_backlog() {
+        let (_model, mut cfg, c) = setup();
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        let compute_only = c.nominal_round_s(&cfg, bytes);
+        assert!(compute_only > 0.0);
+        assert_eq!(c.estimate_round_s(&cfg, bytes), compute_only);
+
+        cfg.transport = true;
+        let with_link = c.nominal_round_s(&cfg, bytes);
+        assert!((with_link - (compute_only + c.link.upload_s(bytes))).abs()
+                    < 1e-12 * with_link);
+        // a pending backlog pushes the estimate (but not the nominal
+        // deadline base) further out
+        let mut c2 = c;
+        let mut p = c2.persist_state();
+        p.pending_up = bytes * 3;
+        c2.restore_persist(&p);
+        assert_eq!(c2.nominal_round_s(&cfg, bytes), with_link);
+        let est = c2.estimate_round_s(&cfg, bytes);
+        assert!((est - (with_link + c2.link.upload_s(bytes * 3))).abs()
+                    < 1e-12 * est);
     }
 
     #[test]

@@ -6,12 +6,21 @@
 //! evenly spaced over the configured range — deterministic
 //! heterogeneity), then iterate rounds:
 //!
-//!   select -> local rounds on the selected clients, fanned out over
-//!   coordinator worker threads (with the transport model, each round
-//!   also pays adapter download/upload link time and radio energy) ->
-//!   classify the results (on-time / straggler / failed locally / failed
-//!   upload) -> aggregate the surviving deltas -> apply to the global
-//!   adapter -> evaluate on the held-out stream.
+//!   select (battery / RAM / — under the `bandwidth` policy — deadline
+//!   feasibility) -> local rounds on the selected clients, fanned out
+//!   over coordinator worker threads (with the transport model, each
+//!   round also pays adapter download/upload link time and radio energy
+//!   at this round's drawn bandwidth) -> classify the results (on-time /
+//!   straggler / failed locally / failed upload) -> aggregate the
+//!   surviving deltas -> apply to the global adapter -> evaluate on the
+//!   held-out stream.
+//!
+//! The straggler deadline is `straggler_factor` x the *fastest* client's
+//! expected round at the deadline-relevant work — compute plus, with
+//! `--transport`, its upload leg — so a factor >= 1 deadline is always
+//! achievable by the client that sets it.  An upload the deadline cuts
+//! short delivers only the bytes that fit; the remainder becomes the
+//! client's resume offset, flushed before its next fresh delta.
 //!
 //! Faults never abort the run: [`FleetClient::run_round`] converts local
 //! errors and mid-round battery deaths into [`ClientFailure`]-carrying
@@ -69,8 +78,28 @@ use crate::util::rng::Pcg;
 
 const MIB: u64 = 1024 * 1024;
 
-/// Checkpoint format tag for `fleet_ckpt.json`.
-const CKPT_FORMAT: &str = "mft-fleet-ckpt-v1";
+/// Checkpoint format tag for `fleet_ckpt.json` (v2 added the per-client
+/// upload resume offset).
+const CKPT_FORMAT: &str = "mft-fleet-ckpt-v2";
+
+/// Floor of the slack added to the straggler deadline.  The deadline is
+/// derived from the fastest client's *expected* round time, but the
+/// client measures its round against a virtual clock whose base grows
+/// with every round — the subtraction loses up to half an ulp of the
+/// clock value per advance relative to the clean-slate expectation.
+/// The floor covers short runs; a term scaled by the clock horizon
+/// (see the guard computation in [`run_fleet`]) covers arbitrarily
+/// long ones, so the invariant "the fastest client alone is always
+/// on-time at straggler_factor >= 1" holds exactly, not just usually.
+const DEADLINE_GUARD_S: f64 = 1e-9;
+
+/// Round-count bound used to size the deadline guard's scaled term.
+/// The guard must not depend on `cfg.rounds` (resume continues a run
+/// with a larger `--rounds`, and the resumed rounds must classify
+/// against bit-identical deadlines), so the clock horizon is bounded by
+/// this instead — ten million rounds, far beyond any real fleet, still
+/// yields a guard of microseconds against multi-second deadlines.
+const GUARD_HORIZON_ROUNDS: f64 = 1e7;
 /// Smallest train split the tokenizer + sharder can do anything useful
 /// with; checked up front so a tiny corpus fails with the flag names
 /// instead of a confusing tokenizer error later.
@@ -95,7 +124,7 @@ fn config_fingerprint(cfg: &FleetConfig) -> String {
     c.threads = 0;
     c.out_dir = None;
     c.resume = false;
-    format!("v2|{c:?}")
+    format!("v3|{c:?}")
 }
 
 fn bits_json(x: u64) -> Json {
@@ -230,6 +259,7 @@ fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
                 ("net_rng", pair_json(p.net_rng)),
                 ("sched_throttled", Json::from(p.sched_throttled)),
                 ("sched_steps", Json::from(p.sched_steps)),
+                ("pending_up", bits_json(p.pending_up)),
             ])
         })
         .collect();
@@ -292,6 +322,7 @@ fn load_fleet_ckpt(dir: &Path, cfg: &FleetConfig)
             net_rng: pair_parse(cj.req("net_rng")?)?,
             sched_throttled: cj.req("sched_throttled")?.as_bool()?,
             sched_steps: cj.req("sched_steps")?.as_usize()?,
+            pending_up: bits_parse(cj.req("pending_up")?)?,
         });
         client_files.push(cj.req("ckpt")?.as_str()?.to_string());
     }
@@ -396,15 +427,36 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let agg = make_aggregator(&cfg.aggregator, cfg.trim_frac)?;
     let out_dir = cfg.out_dir.as_ref().map(PathBuf::from);
 
-    // straggler deadline: factor x the fastest client's expected round
-    let tokens_per_round =
-        (cfg.local_steps * cfg.micro_batch * cfg.window) as f64;
-    let max_gflops = clients
+    // straggler deadline: factor x the fastest client's expected round.
+    // "Fastest" means fastest at the *deadline-relevant* work — compute
+    // plus, when the link model is on, the delta upload.  PR 3 judged
+    // clients on compute+upload but derived the deadline from compute
+    // alone, so --transport silently tightened --straggler-factor and at
+    // factors near 1 the fastest client missed the deadline its own
+    // speed defines.  The estimate mirrors the client's stepwise clock
+    // accumulation, and the clock-quantization guard absorbs clock-base
+    // rounding, so a straggler_factor >= 1 deadline is always
+    // achievable by the client that sets it *at full power* — a
+    // PowerMonitor-throttled client (battery < mu) runs its compute
+    // 1/(1-rho) slower than its nominal and can legitimately still
+    // miss, which is the throttle doing its job, not a deadline bug.
+    let fastest_round_s = clients
         .iter()
-        .map(|c| c.device.cpu_gflops)
-        .fold(0.0f64, f64::max);
-    let deadline_s = cfg.straggler_factor * tokens_per_round
-        * cfg.flops_per_token / (max_gflops * 1e9);
+        .map(|c| c.nominal_round_s(cfg, adapter_bytes))
+        .fold(f64::INFINITY, f64::min);
+    // guard sizing: each clock advance loses at most half an ulp of the
+    // clock value, the fastest (unthrottled) client performs about
+    // 2*local_steps + 4 advances per round, and its clock travels at
+    // most ~2x its round span per round (client clocks do not advance
+    // during the between-round idle).  Bounded over GUARD_HORIZON_ROUNDS
+    // this stays nanoseconds-to-microseconds — invisible to every
+    // consumer except the fastest-client-on-time invariant it protects.
+    let guard_s = DEADLINE_GUARD_S
+        + (2 * cfg.local_steps + 4) as f64
+            * GUARD_HORIZON_ROUNDS
+            * (2.0 * fastest_round_s + 1.0)
+            * f64::EPSILON;
+    let deadline_s = cfg.straggler_factor * fastest_round_s + guard_s;
 
     let threads = pool::resolve_threads(cfg.threads);
     let mut select_rng = Pcg::new(cfg.seed.wrapping_add(7));
@@ -541,15 +593,35 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         for c in clients.iter_mut() {
             cum_energy += c.battery.drain(0.0, cfg.round_idle_s);
         }
-        let statuses: Vec<ClientStatus> =
-            clients.iter_mut().map(|c| c.sample_status()).collect();
+        let statuses: Vec<ClientStatus> = clients
+            .iter_mut()
+            .map(|c| c.sample_status(cfg, adapter_bytes))
+            .collect();
         let sel = select_clients(&cfg.policy, cfg.mu, cfg.ram_required_bytes,
-                                 &statuses, &mut select_rng);
+                                 deadline_s, &statuses, &mut select_rng);
         let min_batt = sel
             .selected
             .iter()
             .map(|&id| statuses[id].battery_frac)
             .fold(1.0f64, f64::min);
+
+        let mut in_round = vec![false; clients.len()];
+        for &id in &sel.selected {
+            in_round[id] = true;
+        }
+        // a client passed over this round has no transfer left to
+        // resume — the coordinator-side partial blob belongs to a round
+        // that is gone — so its dangling upload offset is abandoned.
+        // Without this, one truncated upload could starve a client under
+        // the bandwidth policy forever: the backlog inflates its
+        // estimate past the (fixed) deadline, it gets skipped, and a
+        // skipped client never reaches the upload leg where a backlog
+        // drains.
+        for c in clients.iter_mut() {
+            if !in_round[c.id] {
+                c.abandon_pending_upload();
+            }
+        }
 
         // fan the selected clients' local rounds out over worker
         // threads; `selected` is ascending and the chunked fan-out
@@ -558,48 +630,57 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         // run_round never errors the run: faults come back as
         // ClientFailure-carrying updates.
         let results: Vec<ClientUpdate> = {
-            let mut in_round = vec![false; clients.len()];
-            for &id in &sel.selected {
-                in_round[id] = true;
-            }
             let mut run: Vec<&mut FleetClient> = clients
                 .iter_mut()
                 .filter(|c| in_round[c.id])
                 .collect();
             pool::ordered_map_mut(&mut run, threads, |_, c| {
-                c.run_round(&names, &global, &model, cfg)
+                c.run_round(&names, &global, &model, cfg, deadline_s)
             })
         };
         cum_energy += results.iter().map(|u| u.energy_j).sum::<f64>();
 
         // classify: delivered on time / straggler / failed locally /
-        // failed on the link.  Stragglers and failed uploads burned the
-        // radio for nothing.
+        // failed on the link.  Only bytes that actually hit the air are
+        // accounted this round: a truncated transfer's remainder rides
+        // the client's resume offset and is charged when retried.
+        // Backlog bytes (an earlier round's interrupted blob) are stale
+        // on arrival, so they are always wasted radio, even when flushed
+        // by an otherwise on-time client.
         let mut ontime: Vec<&ClientUpdate> = Vec::new();
         let mut late: Vec<&ClientUpdate> = Vec::new();
         let mut n_failed = 0usize;
         let mut n_failed_upload = 0usize;
         let mut bytes_delivered = 0u64;
         let mut bytes_wasted = 0u64;
+        let mut bytes_down = 0u64;
+        let mut any_link_silent = false;
         for u in &results {
+            bytes_down += u.bytes_down;
+            // a client that died while a transfer was in flight
+            // ([`ClientUpdate::link_silent`]) just went quiet on the
+            // link; the coordinator can only discover that by waiting
+            // the deadline out
+            any_link_silent |= u.link_silent;
             match &u.failure {
                 Some(ClientFailure::UploadFailed) => {
                     n_failed_upload += 1;
-                    bytes_wasted += u.bytes_up;
+                    bytes_wasted += u.bytes_up + u.bytes_up_backlog;
                 }
                 Some(_) => {
                     n_failed += 1;
-                    bytes_wasted += u.bytes_up;
+                    bytes_wasted += u.bytes_up + u.bytes_up_backlog;
                 }
-                None if u.time_s <= deadline_s => {
+                None if u.time_s <= deadline_s && !u.upload_truncated => {
                     bytes_delivered += u.bytes_up;
+                    bytes_wasted += u.bytes_up_backlog;
                     ontime.push(u);
                 }
                 None => {
                     // without the link model no radio ran: a straggler's
                     // would-be upload is not "wasted radio bytes"
                     if cfg.transport {
-                        bytes_wasted += u.bytes_up;
+                        bytes_wasted += u.bytes_up + u.bytes_up_backlog;
                     }
                     late.push(u);
                 }
@@ -627,6 +708,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             n_aggregated: ontime.len(),
             n_skipped_battery: sel.skipped_battery.len(),
             n_skipped_ram: sel.skipped_ram.len(),
+            n_skipped_link: sel.skipped_link.len(),
             n_stragglers: late.len(),
             n_failed,
             n_failed_upload,
@@ -634,14 +716,34 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             energy_j: cum_energy,
             bytes_up: bytes_delivered,
             bytes_up_wasted: bytes_wasted,
+            bytes_down,
             // on-time makespan: the round's virtual wall time is set by
             // the slowest client that made the deadline — dropped
             // stragglers don't gate the round, they are reported apart.
-            // If *nothing* came back usable (everyone late, failed, or
-            // their uploads lost) the coordinator still waited the
-            // deadline out, so such a round costs deadline_s.
+            // If nothing came back usable the charge depends on *why*:
+            // when someone was late, lost an upload, or went silent
+            // mid-transfer (a battery dying during its upload or during
+            // the broadcast looks like a stalled link — the coordinator
+            // can only wait the deadline out), the round costs
+            // deadline_s; but when every selected client failed
+            // on-device with no transfer in flight (battery deaths in
+            // compute, degenerate shards — failures the device side
+            // reports) the coordinator learned of the last failure then
+            // and moved on, so charging deadline_s would overcount the
+            // round.
             time_s: if ontime.is_empty() && !sel.selected.is_empty() {
-                deadline_s
+                let all_failed_observable = late.is_empty()
+                    && n_failed_upload == 0
+                    && !any_link_silent;
+                if all_failed_observable {
+                    results
+                        .iter()
+                        .map(|u| u.time_s)
+                        .fold(0.0f64, f64::max)
+                        .min(deadline_s)
+                } else {
+                    deadline_s
+                }
             } else {
                 ontime.iter().map(|u| u.time_s).fold(0.0f64, f64::max)
             },
@@ -705,6 +807,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         ("rho", Json::from(cfg.rho)),
         ("transport", Json::from(cfg.transport)),
         ("upload_fail_prob", Json::from(cfg.upload_fail_prob)),
+        ("link_var", Json::from(cfg.link_var)),
         ("initial_nll", Json::from(first.eval_nll)),
         ("final_nll", Json::from(last.eval_nll)),
         ("initial_ppl", Json::from(first.eval_ppl)),
@@ -721,12 +824,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             train_rounds.iter().map(|r| r.n_skipped_battery).sum::<usize>())),
         ("total_skipped_ram", Json::from(
             train_rounds.iter().map(|r| r.n_skipped_ram).sum::<usize>())),
+        ("total_skipped_link", Json::from(
+            train_rounds.iter().map(|r| r.n_skipped_link).sum::<usize>())),
         ("total_energy_kj", Json::from(cum_energy / 1000.0)),
         ("adapter_bytes", Json::from(adapter_bytes)),
         ("total_bytes_up_delivered", Json::from(
             train_rounds.iter().map(|r| r.bytes_up).sum::<u64>())),
         ("total_bytes_up_wasted", Json::from(
             train_rounds.iter().map(|r| r.bytes_up_wasted).sum::<u64>())),
+        ("total_bytes_down", Json::from(
+            train_rounds.iter().map(|r| r.bytes_down).sum::<u64>())),
         ("deadline_s", Json::from(deadline_s)),
     ]);
     if let Some(d) = &out_dir {
@@ -771,6 +878,7 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
     cfg.transport = args.has("transport");
     cfg.upload_fail_prob =
         args.get_parse("upload-fail-prob", cfg.upload_fail_prob)?;
+    cfg.link_var = args.get_parse("link-var", cfg.link_var)?;
     cfg.resume = args.has("resume");
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.out_dir = args.get("out").map(String::from);
@@ -784,8 +892,8 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
               cfg.n_clients, cfg.rounds, cfg.dirichlet_alpha, cfg.aggregator,
               cfg.policy.as_str(),
               if cfg.transport {
-                  format!(", transport on (upload fail p={})",
-                          cfg.upload_fail_prob)
+                  format!(", transport on (upload fail p={}, link var {})",
+                          cfg.upload_fail_prob, cfg.link_var)
               } else {
                   String::new()
               });
@@ -797,13 +905,13 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
         } else {
             eprintln!(
                 "round {:>3}  nll {:.4} (ppl {:>7.1})  agg {}/{} sel  \
-                 skip bat {} ram {}  late {}  fail {}+{}up  E {:.2} kJ  \
-                 up {} KiB (waste {} KiB)",
+                 skip bat {} ram {} link {}  late {}  fail {}+{}up  \
+                 E {:.2} kJ  up {} KiB (waste {} KiB) down {} KiB",
                 r.round, r.eval_nll, r.eval_ppl, r.n_aggregated,
                 r.n_selected, r.n_skipped_battery, r.n_skipped_ram,
-                r.n_stragglers, r.n_failed, r.n_failed_upload,
-                r.energy_j / 1000.0, r.bytes_up / 1024,
-                r.bytes_up_wasted / 1024);
+                r.n_skipped_link, r.n_stragglers, r.n_failed,
+                r.n_failed_upload, r.energy_j / 1000.0, r.bytes_up / 1024,
+                r.bytes_up_wasted / 1024, r.bytes_down / 1024);
         }
     }
     println!("{}", res.summary);

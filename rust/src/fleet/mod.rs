@@ -13,17 +13,24 @@
 //!   [`data::partition`];
 //! * [`aggregate`] — the pluggable [`Aggregator`] trait with FedAvg
 //!   (sample-weighted), coordinate-median and trimmed-mean strategies;
-//! * [`select`] — energy- and memory-aware per-round client selection
-//!   (skip below battery threshold mu or over the RAM budget), plus the
-//!   straggler deadline the driver enforces;
+//! * [`select`] — energy-, memory- and bandwidth-aware per-round client
+//!   selection (skip below battery threshold mu, over the RAM budget,
+//!   or — under the Oort-style `bandwidth` policy — with an estimated
+//!   compute+upload time that cannot make the straggler deadline the
+//!   driver enforces);
 //! * [`model`] — the artifact-free local objective (frozen log-unigram
 //!   base + trainable low-rank bigram delta) that lets the whole fleet
 //!   run end-to-end with no XLA artifacts;
 //! * [`transport`] — the deterministic per-device link model: adapter
 //!   download/upload cost link time and radio energy, the straggler
-//!   deadline is judged on compute + upload, and uploads can fail
-//!   (seeded per-client draws), splitting `bytes_up` into delivered vs
-//!   wasted;
+//!   deadline is judged on compute + upload (and is derived from the
+//!   fastest client's compute **plus** its upload leg, so a
+//!   `straggler_factor >= 1` deadline is always achievable), per-round
+//!   bandwidth draws (`link_var`) vary each client's effective rates,
+//!   uploads can fail (seeded per-client draws), and interrupted
+//!   transfers carry a per-client resume offset that is retried before
+//!   the next fresh delta — `bytes_up` splits into delivered vs wasted,
+//!   and `bytes_down` accounts the broadcast;
 //! * [`driver`] — the round loop: select -> local rounds (fanned out
 //!   over coordinator threads via
 //!   [`util::pool`](crate::util::pool), merged in client-id order so
@@ -63,7 +70,7 @@ pub use client::{ClientStatus, FleetClient};
 pub use driver::{cmd_fleet, run_fleet, FleetResult};
 pub use model::BigramRef;
 pub use select::{select_clients, SelectPolicy, SelectionOutcome};
-pub use transport::{link_for, LinkProfile};
+pub use transport::{draw_link_scales, link_for, LinkProfile, RoundLink};
 
 use anyhow::{bail, Result};
 
@@ -120,11 +127,17 @@ pub struct FleetConfig {
     pub threads: usize,
     /// enable the per-device link model ([`transport`]): adapter
     /// download/upload cost link time + radio energy, the straggler
-    /// deadline is judged on compute + upload, and uploads can fail
+    /// deadline is judged on compute + upload, uploads can fail, and
+    /// transfers cut short resume from a per-client byte offset
     pub transport: bool,
     /// per-upload failure probability (transport model; seeded
     /// per-client draws, deterministic for any thread count)
     pub upload_fail_prob: f64,
+    /// per-round link variability (transport model): each client scales
+    /// this round's up/down rates by a log-uniform factor in
+    /// `[1/(1+link_var), 1+link_var]` drawn from its private net_rng
+    /// stream ([`transport::draw_link_scales`]); 0 = fixed nominal links
+    pub link_var: f64,
     /// resume from `<out_dir>/fleet_ckpt.json` if present (requires
     /// `out_dir`); a fresh run writes the checkpoint every round
     pub resume: bool,
@@ -164,6 +177,7 @@ impl Default for FleetConfig {
             threads: 0,
             transport: false,
             upload_fail_prob: 0.0,
+            link_var: 0.0,
             resume: false,
             inject_empty_shard: None,
             seed: 42,
@@ -210,6 +224,17 @@ impl FleetConfig {
         }
         if self.upload_fail_prob > 0.0 && !self.transport {
             bail!("upload_fail_prob needs the transport model (--transport)");
+        }
+        if !self.link_var.is_finite() || self.link_var < 0.0 {
+            bail!("link_var must be a finite non-negative factor");
+        }
+        if self.link_var > 0.0 && !self.transport {
+            bail!("link_var needs the transport model (--transport)");
+        }
+        if matches!(self.policy, SelectPolicy::Bandwidth) && !self.transport {
+            bail!("the bandwidth selection policy gates on estimated \
+                   compute+upload time and needs the transport model \
+                   (--transport)");
         }
         if self.resume && self.out_dir.is_none() {
             bail!("--resume needs --out (checkpoints live in the out dir)");
@@ -258,6 +283,25 @@ mod tests {
         let mut c = FleetConfig::default();
         c.upload_fail_prob = 0.5;
         c.transport = false;
+        assert!(c.validate().is_err());
+        c.transport = true;
+        assert!(c.validate().is_ok());
+
+        // so is link variability without the link model
+        let mut c = FleetConfig::default();
+        c.link_var = 0.5;
+        assert!(c.validate().is_err());
+        c.transport = true;
+        assert!(c.validate().is_ok());
+        c.link_var = -0.1;
+        assert!(c.validate().is_err());
+        c.link_var = f64::NAN;
+        assert!(c.validate().is_err());
+
+        // bandwidth selection gates on upload estimates, which only
+        // exist with the link model
+        let mut c = FleetConfig::default();
+        c.policy = SelectPolicy::Bandwidth;
         assert!(c.validate().is_err());
         c.transport = true;
         assert!(c.validate().is_ok());

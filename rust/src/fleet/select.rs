@@ -1,21 +1,33 @@
-//! Energy- and memory-aware client selection.
+//! Energy-, memory- and bandwidth-aware client selection.
 //!
-//! Per round the coordinator sees each client's battery fraction and
-//! simulated free RAM ([`ClientStatus`]) and picks participants:
+//! Per round the coordinator sees each client's battery fraction,
+//! simulated free RAM and estimated round time ([`ClientStatus`]) and
+//! picks participants:
 //!
 //! * [`SelectPolicy::All`] — every client with a live battery trains
 //!   (the naive baseline; low-battery clients throttle and straggle);
 //! * [`SelectPolicy::Resource`] — skip clients below the battery
 //!   threshold mu (the paper's PowerMonitor threshold, applied at the
 //!   fleet level) or without enough free RAM for the training footprint;
-//! * [`SelectPolicy::RandomK`] — classic FedAvg uniform sampling.
+//! * [`SelectPolicy::RandomK`] — classic FedAvg uniform sampling;
+//! * [`SelectPolicy::Bandwidth`] — the Oort-style deadline-feasibility
+//!   policy: all of [`SelectPolicy::Resource`]'s gates, plus skip any
+//!   client whose *estimated* compute + upload time (nominal link rate,
+//!   including the time to flush a pending upload backlog) cannot make
+//!   the straggler deadline — selecting it would only buy a dropped
+//!   straggler and wasted radio bytes.  Skips are recorded under the
+//!   `skipped_link` reason.  The estimate is optimistic (full-power
+//!   compute, median link draw), so a selected client can still
+//!   straggle on a bad `link_var` round — the policy removes the
+//!   *predictably* infeasible, not all risk.
 //!
 //! Clients with an empty battery can never train under any policy.
 //!
-//! Selection-time skips (battery / RAM) are complemented by the driver's
-//! *round-time* failure reasons ([`ClientFailure`]): a client that passes
-//! selection can still die mid-round, error on its shard, or lose its
-//! upload on the link — all recorded per round, never aborting the run.
+//! Selection-time skips (battery / RAM / link) are complemented by the
+//! driver's *round-time* failure reasons ([`ClientFailure`]): a client
+//! that passes selection can still die mid-round, error on its shard, or
+//! lose its upload on the link — all recorded per round, never aborting
+//! the run.
 //!
 //! [`ClientFailure`]: crate::fleet::aggregate::ClientFailure
 
@@ -29,6 +41,7 @@ pub enum SelectPolicy {
     All,
     Resource,
     RandomK { k: usize },
+    Bandwidth,
 }
 
 impl SelectPolicy {
@@ -37,8 +50,9 @@ impl SelectPolicy {
             "all" => Ok(SelectPolicy::All),
             "resource" => Ok(SelectPolicy::Resource),
             "random" => Ok(SelectPolicy::RandomK { k }),
-            _ => bail!("selection policy must be all|resource|random, \
-                        got {s:?}"),
+            "bandwidth" => Ok(SelectPolicy::Bandwidth),
+            _ => bail!("selection policy must be \
+                        all|resource|random|bandwidth, got {s:?}"),
         }
     }
 
@@ -47,6 +61,7 @@ impl SelectPolicy {
             SelectPolicy::All => "all",
             SelectPolicy::Resource => "resource",
             SelectPolicy::RandomK { .. } => "random",
+            SelectPolicy::Bandwidth => "bandwidth",
         }
     }
 }
@@ -56,11 +71,16 @@ pub struct SelectionOutcome {
     pub selected: Vec<usize>,
     pub skipped_battery: Vec<usize>,
     pub skipped_ram: Vec<usize>,
+    /// clients whose estimated compute+upload time cannot make the
+    /// deadline ([`SelectPolicy::Bandwidth`] only)
+    pub skipped_link: Vec<usize>,
 }
 
+/// Pick this round's participants.  `deadline_s` is the driver's
+/// straggler deadline — only [`SelectPolicy::Bandwidth`] reads it.
 pub fn select_clients(policy: &SelectPolicy, mu: f64, ram_required: u64,
-                      statuses: &[ClientStatus], rng: &mut Pcg)
-                      -> SelectionOutcome {
+                      deadline_s: f64, statuses: &[ClientStatus],
+                      rng: &mut Pcg) -> SelectionOutcome {
     let mut out = SelectionOutcome::default();
     match policy {
         SelectPolicy::All => {
@@ -72,7 +92,8 @@ pub fn select_clients(policy: &SelectPolicy, mu: f64, ram_required: u64,
                 }
             }
         }
-        SelectPolicy::Resource => {
+        SelectPolicy::Resource | SelectPolicy::Bandwidth => {
+            let gate_link = matches!(policy, SelectPolicy::Bandwidth);
             for s in statuses {
                 // the <= 0.0 arm keeps the no-dead-battery invariant even
                 // when mu is configured to 0
@@ -80,6 +101,8 @@ pub fn select_clients(policy: &SelectPolicy, mu: f64, ram_required: u64,
                     out.skipped_battery.push(s.id);
                 } else if s.free_ram_bytes < ram_required {
                     out.skipped_ram.push(s.id);
+                } else if gate_link && s.est_round_s > deadline_s {
+                    out.skipped_link.push(s.id);
                 } else {
                     out.selected.push(s.id);
                 }
@@ -113,7 +136,13 @@ mod tests {
 
     fn status(id: usize, battery: f64, free_mb: u64) -> ClientStatus {
         ClientStatus { id, battery_frac: battery,
-                       free_ram_bytes: free_mb * MIB }
+                       free_ram_bytes: free_mb * MIB, est_round_s: 1.0 }
+    }
+
+    fn status_est(id: usize, battery: f64, free_mb: u64, est: f64)
+                  -> ClientStatus {
+        ClientStatus { id, battery_frac: battery,
+                       free_ram_bytes: free_mb * MIB, est_round_s: est }
     }
 
     #[test]
@@ -127,17 +156,18 @@ mod tests {
         ];
         let mut rng = Pcg::new(1);
         let out = select_clients(&SelectPolicy::Resource, 0.6, 256 * MIB,
-                                 &statuses, &mut rng);
+                                 10.0, &statuses, &mut rng);
         assert_eq!(out.selected, vec![0, 4]);
         assert_eq!(out.skipped_battery, vec![1, 3]);
         assert_eq!(out.skipped_ram, vec![2]);
+        assert!(out.skipped_link.is_empty());
     }
 
     #[test]
     fn resource_policy_never_selects_dead_battery_even_at_mu_zero() {
         let statuses = vec![status(0, 0.0, 500), status(1, 0.4, 500)];
         let mut rng = Pcg::new(3);
-        let out = select_clients(&SelectPolicy::Resource, 0.0, 0,
+        let out = select_clients(&SelectPolicy::Resource, 0.0, 0, 10.0,
                                  &statuses, &mut rng);
         assert_eq!(out.selected, vec![1]);
         assert_eq!(out.skipped_battery, vec![0]);
@@ -151,11 +181,51 @@ mod tests {
             status(2, 1.0, 500),
         ];
         let mut rng = Pcg::new(1);
-        let out = select_clients(&SelectPolicy::All, 0.6, 256 * MIB,
+        let out = select_clients(&SelectPolicy::All, 0.6, 256 * MIB, 10.0,
                                  &statuses, &mut rng);
         assert_eq!(out.selected, vec![0, 2]);
         assert_eq!(out.skipped_battery, vec![1]);
         assert!(out.skipped_ram.is_empty());
+    }
+
+    #[test]
+    fn bandwidth_policy_skips_infeasible_estimates() {
+        let deadline = 5.0;
+        let statuses = vec![
+            status_est(0, 0.9, 400, 1.0),        // comfortably feasible
+            status_est(1, 0.9, 400, 50.0),       // slow uplink: skipped
+            status_est(2, 0.3, 400, 1.0),        // battery gate still first
+            status_est(3, 0.9, 100, 1.0),        // RAM gate still applies
+            status_est(4, 0.9, 400, deadline),   // exactly at the deadline
+        ];
+        let mut rng = Pcg::new(5);
+        let out = select_clients(&SelectPolicy::Bandwidth, 0.6, 256 * MIB,
+                                 deadline, &statuses, &mut rng);
+        assert_eq!(out.selected, vec![0, 4],
+                   "est == deadline is feasible, not skipped");
+        assert_eq!(out.skipped_link, vec![1]);
+        assert_eq!(out.skipped_battery, vec![2]);
+        assert_eq!(out.skipped_ram, vec![3]);
+    }
+
+    #[test]
+    fn bandwidth_policy_without_link_gate_matches_resource() {
+        // with every estimate feasible, bandwidth degenerates to resource
+        let statuses = vec![
+            status(0, 0.9, 400),
+            status(1, 0.3, 400),
+            status(2, 0.8, 100),
+        ];
+        let mut rng = Pcg::new(6);
+        let b = select_clients(&SelectPolicy::Bandwidth, 0.6, 256 * MIB,
+                               10.0, &statuses, &mut rng);
+        let mut rng = Pcg::new(6);
+        let r = select_clients(&SelectPolicy::Resource, 0.6, 256 * MIB,
+                               10.0, &statuses, &mut rng);
+        assert_eq!(b.selected, r.selected);
+        assert_eq!(b.skipped_battery, r.skipped_battery);
+        assert_eq!(b.skipped_ram, r.skipped_ram);
+        assert!(b.skipped_link.is_empty());
     }
 
     #[test]
@@ -164,7 +234,7 @@ mod tests {
             (0..10).map(|i| status(i, 1.0, 500)).collect();
         let mut rng = Pcg::new(9);
         let out = select_clients(&SelectPolicy::RandomK { k: 4 }, 0.6,
-                                 256 * MIB, &statuses, &mut rng);
+                                 256 * MIB, 10.0, &statuses, &mut rng);
         assert_eq!(out.selected.len(), 4);
         let mut uniq = out.selected.clone();
         uniq.dedup();
@@ -172,7 +242,7 @@ mod tests {
         // deterministic per seed
         let mut rng2 = Pcg::new(9);
         let out2 = select_clients(&SelectPolicy::RandomK { k: 4 }, 0.6,
-                                  256 * MIB, &statuses, &mut rng2);
+                                  256 * MIB, 10.0, &statuses, &mut rng2);
         assert_eq!(out.selected, out2.selected);
     }
 
@@ -181,7 +251,7 @@ mod tests {
         let statuses = vec![status(0, 1.0, 500), status(1, 0.0, 500)];
         let mut rng = Pcg::new(2);
         let out = select_clients(&SelectPolicy::RandomK { k: 5 }, 0.6,
-                                 256 * MIB, &statuses, &mut rng);
+                                 256 * MIB, 10.0, &statuses, &mut rng);
         assert_eq!(out.selected, vec![0]);
         assert_eq!(out.skipped_battery, vec![1]);
     }
@@ -193,6 +263,9 @@ mod tests {
                    SelectPolicy::Resource);
         assert_eq!(SelectPolicy::parse("random", 3).unwrap(),
                    SelectPolicy::RandomK { k: 3 });
+        assert_eq!(SelectPolicy::parse("bandwidth", 3).unwrap(),
+                   SelectPolicy::Bandwidth);
+        assert_eq!(SelectPolicy::Bandwidth.as_str(), "bandwidth");
         assert!(SelectPolicy::parse("vip", 3).is_err());
     }
 }

@@ -15,18 +15,29 @@
 //! * each upload attempt draws a per-round failure from the client's
 //!   private seeded RNG stream ([`FleetConfig::upload_fail_prob`]) — a
 //!   failed upload burned radio time, energy and bytes but delivers
-//!   nothing, and is reported under its own skip reason.
+//!   nothing, and is reported under its own skip reason;
+//! * links are *variable*: with `--link-var V` each client draws this
+//!   round's effective up/down rates from its private `net_rng` stream
+//!   ([`draw_link_scales`]) — log-uniform in `[1/(1+V), 1+V]`, so the
+//!   nominal rate is the median and a halving is as likely as a
+//!   doubling.  `V = 0` draws nothing and leaves the stream untouched;
+//! * transfers are resumable: a client whose upload is cut short (the
+//!   coordinator's deadline passed, or the battery died mid-transfer)
+//!   delivered `elapsed/needed` of its bytes, and the remainder is
+//!   carried as a per-client resume offset that is flushed *before* the
+//!   fresh delta next round ([`crate::fleet::client::FleetClient`]).
 //!
 //! Link profiles are keyed by [`sim::DeviceProfile`] name (paper Tab. 3
 //! devices get plausible sustained cellular/Wi-Fi rates; unknown devices
 //! fall back to [`DEFAULT_LINK`]).  Everything here is pure arithmetic
-//! over config + static tables, so transport-enabled runs stay bitwise
-//! identical for any `MFT_THREADS`.
+//! over config + static tables + client-local RNG streams, so
+//! transport-enabled runs stay bitwise identical for any `MFT_THREADS`.
 //!
 //! [`FleetConfig::upload_fail_prob`]: crate::fleet::FleetConfig::upload_fail_prob
 //! [`sim::DeviceProfile`]: crate::sim::DeviceProfile
 
 use crate::sim::DeviceProfile;
+use crate::util::rng::Pcg;
 
 /// Sustained link rates + radio power for one device profile.
 #[derive(Debug, Clone)]
@@ -44,10 +55,15 @@ pub struct LinkProfile {
 /// Per-device links for the paper Tab. 3 fleet.  The phones carry
 /// asymmetric cellular-class rates (uplink well below downlink, slower
 /// SoCs pair with slower modems); the laptop gets Wi-Fi-class rates.
+/// The nova9's uplink is disproportionately slow relative to its CPU
+/// deficit (a congested mid-band cell, not a slow modem) — it is the
+/// fleet's canonical fast-enough-CPU-behind-a-bad-uplink client, the
+/// case only compute+upload deadlines and bandwidth-aware selection
+/// handle correctly.
 pub const LINKS: &[LinkProfile] = &[
     LinkProfile { device: "p50-pro", up_mbps: 20.0, down_mbps: 80.0,
                   p_radio: 1.2 },
-    LinkProfile { device: "nova9-pro", up_mbps: 15.0, down_mbps: 60.0,
+    LinkProfile { device: "nova9-pro", up_mbps: 2.0, down_mbps: 60.0,
                   p_radio: 1.1 },
     LinkProfile { device: "iqoo15", up_mbps: 50.0, down_mbps: 200.0,
                   p_radio: 1.4 },
@@ -73,15 +89,80 @@ pub fn link_for(device: &DeviceProfile) -> &'static LinkProfile {
 }
 
 impl LinkProfile {
-    /// Virtual seconds to upload `bytes` over this link.
+    /// Virtual seconds to upload `bytes` over this link at nominal rate
+    /// (delegates to [`RoundLink`] so the conversion formula lives once).
+    pub fn upload_s(&self, bytes: u64) -> f64 {
+        self.nominal().upload_s(bytes)
+    }
+
+    /// Virtual seconds to download `bytes` over this link at nominal rate.
+    pub fn download_s(&self, bytes: u64) -> f64 {
+        self.nominal().download_s(bytes)
+    }
+
+    /// This round's effective link at the given bandwidth scale factors
+    /// (from [`draw_link_scales`]).  Radio power is unchanged: a slow
+    /// round burns the radio *longer*, not hotter.
+    pub fn at_scales(&self, up_scale: f64, down_scale: f64) -> RoundLink {
+        RoundLink {
+            up_mbps: self.up_mbps * up_scale,
+            down_mbps: self.down_mbps * down_scale,
+            p_radio: self.p_radio,
+        }
+    }
+
+    /// The link at its nominal rates (no variability draw).
+    pub fn nominal(&self) -> RoundLink {
+        self.at_scales(1.0, 1.0)
+    }
+}
+
+/// One round's effective link: the static [`LinkProfile`] rates scaled
+/// by that round's bandwidth draws.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundLink {
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+    pub p_radio: f64,
+}
+
+impl RoundLink {
+    /// Virtual seconds to upload `bytes` at this round's uplink rate.
     pub fn upload_s(&self, bytes: u64) -> f64 {
         bytes as f64 * 8.0 / (self.up_mbps * 1e6)
     }
 
-    /// Virtual seconds to download `bytes` over this link.
+    /// Virtual seconds to download `bytes` at this round's downlink rate.
     pub fn download_s(&self, bytes: u64) -> f64 {
         bytes as f64 * 8.0 / (self.down_mbps * 1e6)
     }
+}
+
+/// Draw one round's `(up, down)` bandwidth scale factors from a client's
+/// private `net_rng` stream: log-uniform in `[1/(1+link_var),
+/// 1+link_var]`, so the nominal rate is the median and halvings and
+/// doublings of throughput are equally likely.  `link_var <= 0` returns
+/// exact unit scales *without touching the RNG*, so a variability-free
+/// run consumes the same stream as one predating the feature.
+pub fn draw_link_scales(rng: &mut Pcg, link_var: f64) -> (f64, f64) {
+    if link_var <= 0.0 {
+        return (1.0, 1.0);
+    }
+    let span = (1.0 + link_var).ln();
+    let up = (rng.range_f64(-1.0, 1.0) * span).exp();
+    let down = (rng.range_f64(-1.0, 1.0) * span).exp();
+    (up, down)
+}
+
+/// Bytes delivered by a transfer of `total` bytes cut short after
+/// `elapsed` of the `needed` seconds (battery death or the coordinator's
+/// deadline).  The floor keeps the count conservative; a transfer that
+/// ran to completion must use `total` directly, not this.
+pub fn partial_bytes(total: u64, elapsed: f64, needed: f64) -> u64 {
+    if needed <= 0.0 || elapsed <= 0.0 {
+        return 0;
+    }
+    ((total as f64 * (elapsed / needed).min(1.0)).floor() as u64).min(total)
 }
 
 #[cfg(test)]
@@ -135,5 +216,71 @@ mod tests {
         let mac = link_for(crate::sim::device("macbook-air-m2").unwrap());
         assert!(nova.up_mbps < mac.up_mbps);
         assert!(nova.upload_s(10_000) > mac.upload_s(10_000));
+    }
+
+    #[test]
+    fn nova9_uplink_is_disproportionately_slow() {
+        // the bandwidth-aware selection + compute+upload deadline tests
+        // need a client whose uplink deficit exceeds its compute deficit:
+        // nova9 is 110/15 ≈ 7.3x slower than the macbook in compute but
+        // must be strictly worse than that on the uplink
+        let nova = link_for(crate::sim::device("nova9-pro").unwrap());
+        let mac = link_for(crate::sim::device("macbook-air-m2").unwrap());
+        let compute_ratio = 110.0 / 15.0;
+        assert!(mac.up_mbps / nova.up_mbps > compute_ratio,
+                "nova9 uplink deficit {} must exceed its compute deficit \
+                 {compute_ratio}", mac.up_mbps / nova.up_mbps);
+    }
+
+    #[test]
+    fn scaled_link_moves_rates_not_power() {
+        let l = LinkProfile { device: "t", up_mbps: 8.0, down_mbps: 80.0,
+                              p_radio: 1.3 };
+        let r = l.at_scales(0.5, 2.0);
+        assert!((r.upload_s(1_000_000) - 2.0).abs() < 1e-12);
+        assert!((r.download_s(1_000_000) - 0.05).abs() < 1e-12);
+        assert_eq!(r.p_radio, l.p_radio);
+        let n = l.nominal();
+        assert_eq!(n.upload_s(1_000_000).to_bits(),
+                   l.upload_s(1_000_000).to_bits());
+    }
+
+    #[test]
+    fn link_scale_draws_are_bounded_log_uniform() {
+        let mut rng = Pcg::new(7);
+        let v = 0.8f64;
+        let (lo, hi) = (1.0 / (1.0 + v), 1.0 + v);
+        let mut log_sum = 0.0;
+        for _ in 0..2000 {
+            let (u, d) = draw_link_scales(&mut rng, v);
+            assert!(u >= lo - 1e-12 && u <= hi + 1e-12, "up {u}");
+            assert!(d >= lo - 1e-12 && d <= hi + 1e-12, "down {d}");
+            log_sum += u.ln() + d.ln();
+        }
+        // log-uniform around 1: the mean log scale is ~0
+        assert!((log_sum / 4000.0).abs() < 0.05, "biased: {log_sum}");
+    }
+
+    #[test]
+    fn zero_variability_draws_nothing_from_the_stream() {
+        let mut rng = Pcg::new(9);
+        let before = rng.state_parts();
+        assert_eq!(draw_link_scales(&mut rng, 0.0), (1.0, 1.0));
+        assert_eq!(rng.state_parts(), before,
+                   "link_var=0 must not consume the net_rng stream");
+        // and a positive var does consume it
+        let _ = draw_link_scales(&mut rng, 0.5);
+        assert_ne!(rng.state_parts(), before);
+    }
+
+    #[test]
+    fn partial_bytes_is_proportional_and_clamped() {
+        assert_eq!(partial_bytes(1000, 0.0, 10.0), 0);
+        assert_eq!(partial_bytes(1000, 5.0, 10.0), 500);
+        assert_eq!(partial_bytes(1000, 20.0, 10.0), 1000);
+        assert_eq!(partial_bytes(1000, 1.0, 0.0), 0);
+        // one second into a long transfer delivers one second's bytes,
+        // not the whole blob — the PR-3 overcount this replaces
+        assert_eq!(partial_bytes(10_000, 1.0, 100.0), 100);
     }
 }

@@ -25,10 +25,15 @@
 //!   `BENCH_fleet.json` perf baselines; schema in `benches/README.md`)
 //! * Fleet layer       -> [`fleet`]: round-based federated fine-tuning
 //!   over N simulated devices — non-IID sharding ([`data::partition`]),
-//!   energy/RAM-aware selection ([`fleet::select`]), a deterministic
+//!   energy/RAM/bandwidth-aware selection ([`fleet::select`]: the
+//!   Oort-style `bandwidth` policy skips clients whose estimated
+//!   compute+upload time cannot make the deadline), a deterministic
 //!   per-device link model ([`fleet::transport`]: download/upload cost
-//!   link time + radio energy, deadlines judged on compute + upload,
-//!   seeded upload failures, delivered-vs-wasted byte accounting),
+//!   link time + radio energy, deadlines judged on compute + upload
+//!   *and derived from the fastest client's compute + upload*, seeded
+//!   per-round bandwidth draws (`--link-var`), seeded upload failures,
+//!   partial transfers with per-client resume-from-offset, and
+//!   delivered-vs-wasted byte accounting on both link directions),
 //!   pluggable aggregation ([`fleet::Aggregator`]: FedAvg in f64 /
 //!   median / trimmed-mean, robust variants on linear-time `select_nth`
 //!   order statistics), local rounds fanned out across coordinator

@@ -92,6 +92,9 @@ pub struct RoundRecord {
     pub n_aggregated: usize,
     pub n_skipped_battery: usize,
     pub n_skipped_ram: usize,
+    /// clients the `bandwidth` policy skipped because their estimated
+    /// compute+upload time could not make the straggler deadline
+    pub n_skipped_link: usize,
     pub n_stragglers: usize,
     /// clients whose local round failed (battery died mid-round, or the
     /// round errored); the driver records these and keeps going
@@ -105,10 +108,17 @@ pub struct RoundRecord {
     /// upload bytes that reached aggregation (on-time, successful;
     /// without the transport model this is the would-be upload size)
     pub bytes_up: u64,
-    /// upload bytes burned for nothing — stragglers and failed uploads
-    /// used the radio too (always 0 without the transport model: no
-    /// radio ran, so nothing was wasted)
+    /// upload bytes burned for nothing — stragglers' partial transfers,
+    /// failed uploads, and stale resume-backlog flushes used the radio
+    /// too (always 0 without the transport model: no radio ran, so
+    /// nothing was wasted).  Only bytes actually transmitted this round
+    /// count; a cut-short transfer's remainder is charged in the round
+    /// that retries it.
     pub bytes_up_wasted: u64,
+    /// downlink bytes the selected clients actually pulled for the
+    /// global adapter broadcast this round (partial when a battery died
+    /// mid-download; 0 without the transport model)
+    pub bytes_down: u64,
     /// on-time makespan: virtual wall time of the round as gated by the
     /// slowest client that made the deadline (dropped stragglers do not
     /// extend the round; if every selected client was late, the
@@ -133,6 +143,7 @@ impl RoundRecord {
             ("n_aggregated", Json::from(self.n_aggregated)),
             ("n_skipped_battery", Json::from(self.n_skipped_battery)),
             ("n_skipped_ram", Json::from(self.n_skipped_ram)),
+            ("n_skipped_link", Json::from(self.n_skipped_link)),
             ("n_stragglers", Json::from(self.n_stragglers)),
             ("n_failed", Json::from(self.n_failed)),
             ("n_failed_upload", Json::from(self.n_failed_upload)),
@@ -140,6 +151,7 @@ impl RoundRecord {
             ("energy_j", Json::from(self.energy_j)),
             ("bytes_up", Json::from(self.bytes_up)),
             ("bytes_up_wasted", Json::from(self.bytes_up_wasted)),
+            ("bytes_down", Json::from(self.bytes_down)),
             ("time_s", Json::from(self.time_s)),
             ("straggler_time_s", Json::from(self.straggler_time_s)),
             ("participants", Json::Arr(
@@ -163,6 +175,7 @@ impl RoundRecord {
             n_aggregated: opt_u("n_aggregated")?,
             n_skipped_battery: opt_u("n_skipped_battery")?,
             n_skipped_ram: opt_u("n_skipped_ram")?,
+            n_skipped_link: opt_u("n_skipped_link")?,
             n_stragglers: opt_u("n_stragglers")?,
             n_failed: opt_u("n_failed")?,
             n_failed_upload: opt_u("n_failed_upload")?,
@@ -170,6 +183,7 @@ impl RoundRecord {
             energy_j: opt_f("energy_j")?,
             bytes_up: opt_u("bytes_up")? as u64,
             bytes_up_wasted: opt_u("bytes_up_wasted")? as u64,
+            bytes_down: opt_u("bytes_down")? as u64,
             time_s: opt_f("time_s")?,
             straggler_time_s: opt_f("straggler_time_s")?,
             participants: match j.get("participants") {
@@ -343,6 +357,7 @@ mod tests {
                 n_aggregated: 5,
                 n_skipped_battery: 2,
                 n_skipped_ram: 0,
+                n_skipped_link: 3,
                 n_stragglers: 1,
                 n_failed: 1,
                 n_failed_upload: 2,
@@ -350,6 +365,7 @@ mod tests {
                 energy_j: 100.0 * r as f64,
                 bytes_up: 4096,
                 bytes_up_wasted: 12288,
+                bytes_down: 24576,
                 time_s: 12.5,
                 straggler_time_s: 91.25,
                 participants: vec![0, 2, 4, 5, 7],

@@ -110,8 +110,14 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     } else {
         String::new()
     };
+    let link_skips = if last.n_skipped_link > 0 {
+        format!(" link {}", last.n_skipped_link)
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "agg   {:>4}/{:<4}  {}   skip bat {} ram {}  late {}{fails}\n",
+        "agg   {:>4}/{:<4}  {}   skip bat {} ram {}{link_skips}  \
+         late {}{fails}\n",
         last.n_aggregated, last.n_selected, sparkline(&parts, 40),
         last.n_skipped_battery, last.n_skipped_ram, last.n_stragglers));
     let late_t = if last.straggler_time_s > 0.0 {
@@ -124,9 +130,14 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     } else {
         String::new()
     };
+    let down = if last.bytes_down > 0 {
+        format!("   down {} B", last.bytes_down)
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "fleet {:>7.2} kJ   up {:>8} B{waste}   round t {:.1}s{late_t}   \
-         min-bat {:.0}%\n",
+        "fleet {:>7.2} kJ   up {:>8} B{waste}{down}   round t {:.1}s\
+         {late_t}   min-bat {:.0}%\n",
         last.energy_j / 1000.0, last.bytes_up, last.time_s,
         last.min_battery_selected * 100.0));
     out
@@ -209,12 +220,14 @@ mod tests {
                 n_selected: 6,
                 n_aggregated: 5,
                 n_skipped_battery: 2,
+                n_skipped_link: 3,
                 n_stragglers: 1,
                 n_failed: 1,
                 n_failed_upload: 2,
                 energy_j: 1500.0,
                 bytes_up: 32768,
                 bytes_up_wasted: 8192,
+                bytes_down: 65536,
                 time_s: 42.0,
                 straggler_time_s: 97.5,
                 min_battery_selected: 0.8,
@@ -226,20 +239,26 @@ mod tests {
         assert!(s.contains("eval"), "{s}");
         assert!(s.contains("5/6"), "{s}");
         assert!(s.contains("skip bat 2"), "{s}");
+        assert!(s.contains("link 3"), "{s}");
         assert!(s.contains("late 1"), "{s}");
         assert!(s.contains("fail 1 up-fail 2"), "{s}");
         assert!(s.contains("waste 8192 B"), "{s}");
+        assert!(s.contains("down 65536 B"), "{s}");
         assert!(s.contains("late t 97.5s"), "{s}");
-        // no stragglers/failures -> no clutter
+        // no stragglers/failures/skips -> no clutter
         let mut quiet = recs.clone();
         quiet[1].straggler_time_s = 0.0;
         quiet[1].n_failed = 0;
         quiet[1].n_failed_upload = 0;
         quiet[1].bytes_up_wasted = 0;
+        quiet[1].bytes_down = 0;
+        quiet[1].n_skipped_link = 0;
         let qs = render_fleet(&quiet, Some(4));
         assert!(!qs.contains("late t"));
         assert!(!qs.contains("fail"), "{qs}");
         assert!(!qs.contains("waste"), "{qs}");
+        assert!(!qs.contains("down"), "{qs}");
+        assert!(!qs.contains("link"), "{qs}");
     }
 
     #[test]

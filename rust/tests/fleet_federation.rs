@@ -10,8 +10,17 @@
 //!     (client battery levels are evenly spaced, so the skip set is
 //!     exact, not probabilistic);
 //!   * stragglers past the virtual deadline are dropped from aggregation,
-//!     and with the transport model the deadline is judged on compute
-//!     **plus upload** (a slow uplink flips an on-time client late);
+//!     and with the transport model both the clients *and the deadline*
+//!     are judged on compute **plus upload** — the fastest client always
+//!     makes a `straggler_factor >= 1` deadline (the PR-3 regression),
+//!     while a disproportionately slow uplink still flips a client late;
+//!   * uploads the deadline or a dying battery cuts short deliver only
+//!     the bytes that fit; the remainder resumes from a per-client
+//!     offset next round, surviving `--resume` bit-for-bit;
+//!   * per-round bandwidth draws (`--link-var`) keep every determinism
+//!     contract (thread counts, resume);
+//!   * the `bandwidth` selection policy skips clients whose estimated
+//!     compute+upload time cannot make the deadline (`skipped_link`);
 //!   * faults never abort the run: degenerate shards, mid-round battery
 //!     deaths and failed uploads become per-round failure counts;
 //!   * a killed run resumes from its checkpoint bit-for-bit;
@@ -335,9 +344,10 @@ fn transport_cfg() -> FleetConfig {
 #[test]
 fn slow_uplink_flips_on_time_client_to_straggler() {
     // without transport every device beats the 8x-fastest deadline (the
-    // slowest CPU, nova9, runs 7.3x).  With the link model the deadline
-    // is judged on compute + upload, and the nova9's 15 Mbit/s uplink
-    // pushes it past the same deadline.
+    // slowest CPU, nova9, runs 7.3x).  With the link model both sides
+    // move: the deadline grows by the fastest client's upload leg, and
+    // every client pays its own — the nova9's congested 2 Mbit/s uplink
+    // is so far out of proportion to its CPU that it still misses.
     let mut plain = transport_cfg();
     plain.transport = false;
     plain.rounds = 1;
@@ -346,22 +356,178 @@ fn slow_uplink_flips_on_time_client_to_straggler() {
     assert_eq!(r.n_stragglers, 0, "all on-time without transport: {r:?}");
     assert_eq!(r.n_aggregated, 8);
     assert_eq!(r.bytes_up_wasted, 0);
+    assert_eq!(r.bytes_down, 0, "no radio without the link model");
 
     let mut tx = transport_cfg();
     tx.rounds = 1;
     let res = run_fleet(&tx).unwrap();
     let r = &res.rounds[1];
-    assert!(r.n_stragglers >= 2, "nova9 clients must miss on upload: {r:?}");
+    assert_eq!(r.n_stragglers, 2, "nova9 clients must miss on upload: {r:?}");
     assert!(!r.participants.contains(&1), "nova9 client 1 aggregated: {r:?}");
     assert!(!r.participants.contains(&5), "nova9 client 5 aggregated: {r:?}");
-    // iqoo15 and macbook (fast links) still make it
-    assert!(r.participants.contains(&2) && r.participants.contains(&3),
-            "fast-link clients should stay on time: {r:?}");
-    // the stragglers burned the radio for nothing
+    // p50, iqoo15 and macbook still make it under the corrected deadline
+    assert!(r.participants.contains(&0) && r.participants.contains(&2)
+                && r.participants.contains(&3),
+            "proportionate-link clients should stay on time: {r:?}");
     let adapter_bytes = res.summary.get("adapter_bytes").unwrap()
         .as_f64().unwrap() as u64;
     assert_eq!(r.bytes_up, adapter_bytes * r.n_aggregated as u64);
-    assert_eq!(r.bytes_up_wasted, adapter_bytes * r.n_stragglers as u64);
+    // the stragglers were cut off at the deadline mid-upload: they
+    // burned real but *partial* radio bytes (the PR-3 model charged the
+    // full blob), and the remainder rides their resume offsets
+    assert!(r.bytes_up_wasted > 0, "{r:?}");
+    assert!(r.bytes_up_wasted < adapter_bytes * r.n_stragglers as u64,
+            "a cut-short upload must charge only the transmitted bytes: \
+             {r:?}");
+    // every selected client pulled the full broadcast
+    assert_eq!(r.bytes_down, adapter_bytes * r.n_selected as u64);
+}
+
+/// THE regression this PR exists for: with `--transport` the deadline
+/// used to be derived from the fastest client's *compute alone* while
+/// clients were judged on compute + upload, so at factors near 1 the
+/// fastest client missed the deadline its own speed defines and every
+/// transport run silently tightened `--straggler-factor`.
+#[test]
+fn fastest_client_always_on_time_at_straggler_factor_one() {
+    for factor in [1.0f64, 1.25] {
+        let mut cfg = small_cfg();
+        cfg.rounds = 3;
+        cfg.transport = true;
+        cfg.policy = SelectPolicy::All;
+        cfg.battery_min = 0.9;
+        cfg.battery_max = 1.0;
+        cfg.straggler_factor = factor;
+        let res = run_fleet(&cfg).unwrap();
+        for r in &res.rounds[1..] {
+            assert!(r.n_aggregated >= 1,
+                    "factor {factor} round {}: the fastest client must \
+                     make the deadline it defines: {r:?}", r.round);
+            // the macbooks (ids 3 and 7) are the fastest at
+            // compute+upload and set the deadline — both must be in
+            assert!(r.participants.contains(&3)
+                        && r.participants.contains(&7),
+                    "factor {factor} round {}: {r:?}", r.round);
+        }
+    }
+}
+
+/// Oort-style bandwidth-aware selection: the `resource` policy selects
+/// the nova9s (healthy battery + RAM) and watches them straggle on the
+/// uplink every round; the `bandwidth` policy predicts the miss from the
+/// estimated compute+upload time and skips them under `skipped_link`.
+#[test]
+fn bandwidth_policy_skips_slow_uplink_clients_resource_selects() {
+    let mut res_cfg = transport_cfg();
+    res_cfg.rounds = 2;
+    res_cfg.policy = SelectPolicy::Resource;
+    let res = run_fleet(&res_cfg).unwrap();
+    for r in &res.rounds[1..] {
+        assert_eq!(r.n_selected, 8, "resource selects everyone: {r:?}");
+        assert_eq!(r.n_stragglers, 2, "and the nova9s straggle: {r:?}");
+        assert_eq!(r.n_skipped_link, 0);
+        assert!(r.bytes_up_wasted > 0);
+    }
+
+    let mut bw_cfg = res_cfg.clone();
+    bw_cfg.policy = SelectPolicy::Bandwidth;
+    let res = run_fleet(&bw_cfg).unwrap();
+    for r in &res.rounds[1..] {
+        assert_eq!(r.n_skipped_link, 2,
+                   "bandwidth must skip both nova9s: {r:?}");
+        assert_eq!(r.n_selected, 6, "{r:?}");
+        assert_eq!(r.n_stragglers, 0,
+                   "nobody predictably infeasible was selected: {r:?}");
+        assert_eq!(r.n_aggregated, 6, "{r:?}");
+        assert!(!r.participants.contains(&1)
+                    && !r.participants.contains(&5), "{r:?}");
+        assert_eq!(r.bytes_up_wasted, 0,
+                   "no stragglers -> no wasted radio: {r:?}");
+    }
+    assert_eq!(res.summary.get("total_skipped_link").unwrap()
+                   .as_f64().unwrap() as usize,
+               4);
+    assert_eq!(res.summary.get("policy").unwrap().as_str().unwrap(),
+               "bandwidth");
+}
+
+/// A client passed over for a round must abandon its dangling upload
+/// offset (the coordinator-side partial blob belongs to a finished
+/// round; under the bandwidth policy an undrainable backlog would also
+/// inflate the estimate past the fixed deadline forever).  Pinned
+/// through the checkpoint, which persists each client's `pending_up`:
+/// nova9 client 1 starts just above mu, is selected and cut off
+/// mid-upload in round 1 (backlog > 0), then the between-round idle
+/// drain pushes it below mu, round 2 battery-skips it, and being passed
+/// over must zero its offset — while nova9 client 5 (healthy battery)
+/// stays selected, keeps straggling, and keeps a nonzero backlog.
+#[test]
+fn passed_over_client_abandons_upload_backlog() {
+    use mft::util::json::Json;
+    let dir = tdir("abandon");
+    let mut cfg = transport_cfg();
+    cfg.rounds = 2;
+    // battery spacing 0.55 + 0.42*i/7: id1 (nova9) sits at 0.61 — above
+    // mu=0.6 after one idle drain (~0.87%/round), below it after two;
+    // id0 (p50, 0.55) is battery-skipped from the start, everyone else
+    // stays comfortably above mu for both rounds
+    cfg.battery_min = 0.55;
+    cfg.battery_max = 0.97;
+    cfg.out_dir = Some(dir.display().to_string());
+    let res = run_fleet(&cfg).unwrap();
+
+    // round 1: id1 selected and truncated on its congested uplink
+    let r1 = &res.rounds[1];
+    assert_eq!(r1.n_skipped_battery, 1, "only id0 skipped: {r1:?}");
+    assert_eq!(r1.n_selected, 7, "{r1:?}");
+    assert_eq!(r1.n_stragglers, 2, "both nova9s cut off: {r1:?}");
+    // round 2: id1 has drained below mu and is passed over
+    let r2 = &res.rounds[2];
+    assert_eq!(r2.n_skipped_battery, 2, "ids 0 and 1 skipped: {r2:?}");
+    assert_eq!(r2.n_selected, 6, "{r2:?}");
+    assert_eq!(r2.n_stragglers, 1, "only nova9 id5 still late: {r2:?}");
+
+    // the round-2 checkpoint holds the post-abandonment offsets
+    let txt = std::fs::read_to_string(dir.join("fleet_ckpt.json")).unwrap();
+    let j = Json::parse(&txt).unwrap();
+    let mut pending = vec![String::new(); 8];
+    for c in j.req("clients").unwrap().as_arr().unwrap() {
+        let id = c.req("id").unwrap().as_usize().unwrap();
+        pending[id] = c.req("pending_up").unwrap().as_str().unwrap()
+            .to_string();
+    }
+    assert_eq!(pending[1], "0",
+               "passed-over client 1 must abandon its backlog: {pending:?}");
+    assert_ne!(pending[5], "0",
+               "still-selected straggler 5 keeps its backlog: {pending:?}");
+    assert_eq!(pending[0], "0", "never-selected client has no backlog");
+}
+
+/// Satellite fix: a round where *every* selected client failed locally
+/// before the deadline (here: batteries dying in the first step) charges
+/// the coordinator the last observed failure time, not the full deadline
+/// it never had to wait out.
+#[test]
+fn all_failed_local_round_charges_observed_time_not_deadline() {
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.policy = SelectPolicy::All;
+    cfg.battery_min = 0.001;
+    cfg.battery_max = 0.001;
+    // no between-round idle drain: the 0.1% batteries must survive to
+    // selection and die in the first local step instead
+    cfg.round_idle_s = 0.0;
+    let res = run_fleet(&cfg).unwrap();
+    let r = &res.rounds[1];
+    assert_eq!(r.n_selected, 8, "{r:?}");
+    assert_eq!(r.n_failed, 8, "every battery must die mid-round: {r:?}");
+    assert_eq!(r.n_aggregated, 0);
+    assert_eq!(r.n_stragglers, 0);
+    let deadline = res.summary.get("deadline_s").unwrap().as_f64().unwrap();
+    assert!(r.time_s > 0.0, "the failures took real time: {r:?}");
+    assert!(r.time_s < deadline,
+            "all-local-failure round must charge the observed failure \
+             time {}, not the deadline {deadline}", r.time_s);
 }
 
 #[test]
@@ -439,6 +605,8 @@ fn transport_run_is_bitwise_identical_across_thread_counts() {
 /// Crash recovery: kill a transport-enabled run after round 2 (the
 /// injected crash), resume it, and the completed run must be bitwise
 /// identical — records and artifacts — to one that never crashed.
+/// Link variability rides along: the per-client net_rng streams are part
+/// of the checkpoint, so the resumed run replays the same draws.
 #[test]
 fn checkpoint_resume_matches_uninterrupted_run() {
     let base = |dir: &PathBuf| {
@@ -446,6 +614,7 @@ fn checkpoint_resume_matches_uninterrupted_run() {
         cfg.rounds = 4;
         cfg.transport = true;
         cfg.upload_fail_prob = 0.25;
+        cfg.link_var = 0.5;
         cfg.battery_min = 0.4;
         cfg.battery_max = 1.0;
         cfg.out_dir = Some(dir.display().to_string());
@@ -469,6 +638,101 @@ fn checkpoint_resume_matches_uninterrupted_run() {
         assert_eq!(a, b, "round {} diverged after resume", a.round);
         assert_eq!(a.eval_nll.to_bits(), b.eval_nll.to_bits());
         assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+    for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
+        let x = std::fs::read(dir_a.join(f)).unwrap();
+        let y = std::fs::read(dir_b.join(f)).unwrap();
+        assert_eq!(x, y, "{f} differs between straight and resumed runs");
+    }
+    assert_eq!(res_a.summary.to_string(), res_b.summary.to_string());
+}
+
+/// The determinism contract extended to the adaptive-transport layer:
+/// per-round bandwidth draws, deadline-truncated partial uploads and
+/// resume-offset carry-over are all client-local state, so records and
+/// artifacts stay bitwise identical for any thread count.
+#[test]
+fn variable_link_partial_uploads_bitwise_identical_across_threads() {
+    let run_with = |threads: usize, tag: &str| {
+        let dir = tdir(&format!("lv-thr{tag}"));
+        let mut cfg = transport_cfg();
+        cfg.rounds = 3;
+        cfg.link_var = 0.8;
+        cfg.upload_fail_prob = 0.5;
+        // tight deadline: the p50s' uploads are always cut short at the
+        // deadline (partial bytes + resume offsets every round), the
+        // nova9s are late on compute alone, iqoo/macbook complete and
+        // feed the upload-failure draws
+        cfg.straggler_factor = 4.0;
+        cfg.threads = threads;
+        cfg.out_dir = Some(dir.display().to_string());
+        let res = run_fleet(&cfg).unwrap();
+        (dir, res)
+    };
+    let (dir1, res1) = run_with(1, "1");
+    // the paths under test must actually fire
+    let stragglers: usize =
+        res1.rounds.iter().map(|r| r.n_stragglers).sum();
+    let wasted: u64 = res1.rounds.iter().map(|r| r.bytes_up_wasted).sum();
+    let upfail: usize =
+        res1.rounds.iter().map(|r| r.n_failed_upload).sum();
+    assert!(stragglers > 0, "no stragglers — deadline not tight enough");
+    assert!(wasted > 0, "no partial-upload bytes were charged");
+    assert!(upfail > 0, "upload-failure path never fired");
+    for threads in [2usize, 4] {
+        let (dirn, resn) = run_with(threads, &threads.to_string());
+        assert_eq!(res1.rounds.len(), resn.rounds.len());
+        for (a, b) in res1.rounds.iter().zip(&resn.rounds) {
+            assert_eq!(a, b, "round {} diverged at {threads} threads",
+                       a.round);
+            assert_eq!(a.eval_nll.to_bits(), b.eval_nll.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        }
+        for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
+            let x = std::fs::read(dir1.join(f)).unwrap();
+            let y = std::fs::read(dirn.join(f)).unwrap();
+            assert_eq!(x, y, "{f} differs at {threads} threads");
+        }
+    }
+}
+
+/// Partial-upload resume offsets survive `mft fleet --resume`: kill a
+/// run whose clients carry nonzero pending-upload backlogs across the
+/// checkpoint boundary, resume it, and the completed run must match the
+/// uninterrupted one bit-for-bit.  (If the offsets were not persisted,
+/// the resumed rounds would upload less, finish earlier and diverge.)
+#[test]
+fn partial_upload_resume_offsets_survive_fleet_resume() {
+    let base = |dir: &PathBuf| {
+        let mut cfg = transport_cfg();
+        cfg.rounds = 4;
+        cfg.link_var = 0.5;
+        // tight enough that uploads are cut short every round
+        cfg.straggler_factor = 4.0;
+        cfg.out_dir = Some(dir.display().to_string());
+        cfg
+    };
+    let dir_a = tdir("poff-straight");
+    let res_a = run_fleet(&base(&dir_a)).unwrap();
+    // pending offsets must exist at the crash point for this test to
+    // pin anything: the crash-prefix rounds saw cut-short uploads
+    assert!(res_a.rounds[1..=2].iter()
+                .any(|r| r.n_stragglers > 0 && r.bytes_up_wasted > 0),
+            "no partial uploads before the crash point: {:?}",
+            &res_a.rounds[1..=2]);
+
+    let dir_b = tdir("poff-crashed");
+    let mut first = base(&dir_b);
+    first.rounds = 2;
+    run_fleet(&first).unwrap();
+    let mut second = base(&dir_b);
+    second.resume = true;
+    let res_b = run_fleet(&second).unwrap();
+
+    assert_eq!(res_a.rounds.len(), res_b.rounds.len());
+    for (a, b) in res_a.rounds.iter().zip(&res_b.rounds) {
+        assert_eq!(a, b, "round {} diverged after resume", a.round);
     }
     for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
         let x = std::fs::read(dir_a.join(f)).unwrap();

@@ -270,9 +270,10 @@ fn bench_fleet(args: &Args) -> Result<()> {
     }
 
     // -- round loop with the transport model: link time, per-round
-    // bandwidth draws and failure draws ride the same loop; the overhead
-    // must be noise-level and the thread-count determinism contract must
-    // hold here too --
+    // bandwidth draws, the correlated-outage regime chain, the stale
+    // upload queue and failure draws all ride the same loop; the
+    // overhead must be noise-level and the thread-count determinism
+    // contract must hold here too --
     let mut tr_cells: Vec<Json> = Vec::new();
     let mut tr_bits: Option<u64> = None;
     let mut tr_deterministic = true;
@@ -281,6 +282,10 @@ fn bench_fleet(args: &Args) -> Result<()> {
         cfg.transport = true;
         cfg.upload_fail_prob = 0.1;
         cfg.link_var = 0.5;
+        cfg.link_regime = Some(crate::fleet::LinkRegime {
+            p_bad: 0.3,
+            factor: 0.2,
+        });
         cfg.threads = threads;
         let mut last_nll = 0.0f64;
         let wall = median_secs(rwarm, riters, || {
@@ -351,6 +356,10 @@ fn bench_fleet(args: &Args) -> Result<()> {
             ("rounds", Json::from(fleet_cfg.rounds)),
             ("upload_fail_prob", Json::from(0.1)),
             ("link_var", Json::from(0.5)),
+            ("link_regime_p_bad", Json::from(0.3)),
+            ("link_regime_factor", Json::from(0.2)),
+            ("drop_stale_after", Json::from(fleet_cfg.drop_stale_after)),
+            ("stale_weight", Json::from(fleet_cfg.stale_weight)),
             ("deterministic", Json::from(tr_deterministic)),
             ("cells", Json::Arr(tr_cells)),
         ])),

@@ -19,6 +19,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
 
+/// Flags that take *two* space-separated operands (e.g. `--link-regime
+/// P_BAD FACTOR`); the parser joins them into one space-separated value
+/// so the generic `(name, value)` flag shape holds.  `--flag=a,b` works
+/// too — consumers split on comma or whitespace.
+const TWO_VALUE_FLAGS: &[&str] = &["link-regime"];
+
 pub struct Args {
     positional: Vec<String>,
     flags: Vec<(String, Option<String>)>,
@@ -40,7 +46,19 @@ impl Args {
                         .map(|n| !n.starts_with("--"))
                         .unwrap_or(false);
                     if takes_value {
-                        flags.push((name.to_string(), it.pop_front()));
+                        let mut v = it.pop_front().unwrap_or_default();
+                        if TWO_VALUE_FLAGS.contains(&name) {
+                            let second = it
+                                .front()
+                                .map(|n| !n.starts_with("--"))
+                                .unwrap_or(false);
+                            if second {
+                                v.push(' ');
+                                v.push_str(&it.pop_front()
+                                    .unwrap_or_default());
+                            }
+                        }
+                        flags.push((name.to_string(), Some(v)));
                     } else {
                         flags.push((name.to_string(), None));
                     }
@@ -216,9 +234,18 @@ fn print_help() {
                      output is identical for any value) --out DIR --seed N\n\
                      --transport (per-device link model: down/upload cost\n\
                      time+energy, deadline judged on compute+upload,\n\
-                     interrupted uploads resume from a byte offset)\n\
+                     interrupted uploads park on a bounded resume queue)\n\
                      --upload-fail-prob F --link-var V (per-round\n\
                      log-uniform bandwidth draws in [1/(1+V), 1+V])\n\
+                     --link-regime P_BAD FACTOR (correlated outages: a\n\
+                     persistent per-client good/congested chain with\n\
+                     stationary congested prob P_BAD; congested rounds\n\
+                     scale both link directions by FACTOR)\n\
+                     --drop-stale-after K (interrupted-upload blobs may\n\
+                     retry for K rounds, then are evicted; also bounds\n\
+                     the queue at K blobs — default 2)\n\
+                     --stale-weight W (a blob finishing `age` rounds\n\
+                     late aggregates at weight W^age — default 0.5)\n\
                      --resume (continue a killed run from\n\
                      <out>/fleet_ckpt.json, bit-for-bit)\n\
            exp       regenerate a paper experiment:\n\
@@ -288,5 +315,23 @@ mod tests {
     fn last_flag_wins() {
         let a = args("train --steps 3 --steps 9");
         assert_eq!(a.get_parse("steps", 0usize).unwrap(), 9);
+    }
+
+    #[test]
+    fn two_value_flags_collect_both_operands() {
+        // --link-regime P_BAD FACTOR: the second operand must not leak
+        // into the positionals
+        let a = args("fleet --link-regime 0.3 0.2 --rounds 4");
+        assert_eq!(a.get("link-regime"), Some("0.3 0.2"));
+        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 4);
+        assert_eq!(a.pos(0), Some("fleet"));
+        assert_eq!(a.pos(1), None, "operand leaked into positionals");
+        // = form with a comma still works
+        let a = args("fleet --link-regime=0.3,0.2");
+        assert_eq!(a.get("link-regime"), Some("0.3,0.2"));
+        // a lone operand followed by another flag stays a single value
+        let a = args("fleet --link-regime 0.3 --rounds 4");
+        assert_eq!(a.get("link-regime"), Some("0.3"));
+        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 4);
     }
 }

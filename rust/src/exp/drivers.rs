@@ -702,11 +702,29 @@ fn fleet_sweep(args: &Args) -> Result<()> {
     // makes the deadline (compute + upload) and adds failed uploads /
     // wasted radio bytes to the table
     let transport = args.has("transport");
-    // same defaults as `mft fleet` (0.0), so a sweep cell reproduces the
-    // equivalent standalone run flag-for-flag; FleetConfig::validate
-    // rejects either knob without the link model
+    // same defaults as `mft fleet`, so a sweep cell reproduces the
+    // equivalent standalone run flag-for-flag.  FleetConfig::validate
+    // rejects link_var/upload_fail_prob/link_regime without the link
+    // model; the stale knobs have non-zero defaults the config layer
+    // cannot tell apart from "explicitly set", so the
+    // explicit-flag-without-transport check is made here, like in
+    // `mft fleet` itself
     let upload_fail_prob: f64 = args.get_parse("upload-fail-prob", 0.0)?;
     let link_var: f64 = args.get_parse("link-var", 0.0)?;
+    let link_regime = crate::fleet::driver::parse_link_regime(args)?;
+    let base = FleetConfig::default();
+    let drop_stale_after: usize =
+        args.get_parse("drop-stale-after", base.drop_stale_after)?;
+    let stale_weight: f64 =
+        args.get_parse("stale-weight", base.stale_weight)?;
+    if !transport {
+        for f in ["drop-stale-after", "stale-weight"] {
+            if args.has(f) {
+                bail!("--{f} shapes the upload queue, which only exists \
+                       with the transport model (--transport)");
+            }
+        }
+    }
     let mut cells: Vec<(usize, f64, &str, FleetConfig)> = Vec::new();
     for &n_clients in &[8usize, 16] {
         for &alpha in &[100.0f64, 0.1] {
@@ -720,6 +738,9 @@ fn fleet_sweep(args: &Args) -> Result<()> {
                     transport,
                     upload_fail_prob,
                     link_var,
+                    link_regime: link_regime.clone(),
+                    drop_stale_after,
+                    stale_weight,
                     // the sweep already saturates cores at the cell
                     // level; single-threaded cells avoid
                     // oversubscription and are bitwise identical to any
@@ -742,14 +763,21 @@ fn fleet_sweep(args: &Args) -> Result<()> {
              cells.len(),
              if transport {
                  format!(", transport on, upload fail p={upload_fail_prob}, \
-                          link var {link_var}")
+                          link var {link_var}{}, stale: keep \
+                          {drop_stale_after} @ {stale_weight}",
+                         match &link_regime {
+                             Some(r) => format!(", regime p_bad={} x{}",
+                                                r.p_bad, r.factor),
+                             None => String::new(),
+                         })
              } else {
                  String::new()
              });
     println!("{:<8} {:>7} {:>9} | {:>8} {:>8} {:>7} {:>6} {:>5} \
-              {:>5} {:>8} {:>9}",
+              {:>5} {:>5} {:>8} {:>9} {:>8}",
              "clients", "alpha", "policy", "nll0", "nll", "Δnll",
-             "part%", "late", "fail", "energy", "wasteKiB");
+             "part%", "late", "fail", "stale", "energy", "wasteKiB",
+             "dropKiB");
     let results = pool::ordered_map(&cells, threads,
                                     |_, (_, _, _, cfg)| run_fleet(cfg));
     let mut rows = Vec::new();
@@ -757,15 +785,18 @@ fn fleet_sweep(args: &Args) -> Result<()> {
         let res = res?;
         let g = |k: &str| sum_f(&res.summary, k);
         println!("{:<8} {:>7} {:>9} | {:>8.4} {:>8.4} {:>7.4} \
-                  {:>5.0}% {:>5.0} {:>5.0} {:>6.1}kJ {:>9.0}",
+                  {:>5.0}% {:>5.0} {:>5.0} {:>5.0} {:>6.1}kJ {:>9.0} \
+                  {:>8.0}",
                  n_clients, alpha, policy,
                  g("initial_nll"), g("final_nll"),
                  g("nll_improvement"),
                  g("mean_participation") * 100.0,
                  g("total_stragglers"),
                  g("total_failed") + g("total_failed_upload"),
+                 g("total_stale_aggregated"),
                  g("total_energy_kj"),
-                 g("total_bytes_up_wasted") / 1024.0);
+                 g("total_bytes_up_wasted") / 1024.0,
+                 g("total_bytes_dropped_stale") / 1024.0);
         rows.push(Json::obj(vec![
             ("clients", Json::from(*n_clients)),
             ("alpha", Json::from(*alpha)),

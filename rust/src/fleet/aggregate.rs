@@ -7,6 +7,20 @@
 //! robust-statistics variants that survive a few corrupted or divergent
 //! clients; PAE-MobiLLM-style privacy-aware additive side-tuning slots in
 //! as another impl without touching the round loop.
+//!
+//! Late deltas are first-class (FedBuff / MobiLLM-style): an interrupted
+//! upload's blob that finishes within `--drop-stale-after` rounds is
+//! handed back to the aggregation cohort as a [`StaleDelivery`], wrapped
+//! by the driver in a synthetic [`ClientUpdate`] whose
+//! [`ClientUpdate::stale_scale`] carries the staleness discount
+//! `stale_weight^age`.  [`FedAvg`] honors the discount by weighting the
+//! entry `n_samples * stale_scale` against the cohort's *undiscounted*
+//! sample total — so a round with only a stale delivery applies
+//! `stale_weight^age` of the delta, not all of it, and a fresh-only
+//! cohort (every scale = 1) reproduces classic FedAvg bit-for-bit.  The
+//! robust aggregators ([`CoordMedian`], [`TrimmedMean`]) take the late
+//! vote unweighted: per-coordinate order statistics have no weight axis,
+//! and their robustness to a minority of odd votes *is* their discount.
 
 use anyhow::{bail, Result};
 
@@ -33,8 +47,26 @@ impl ClientFailure {
     }
 }
 
-/// What one client hands back after a local round.
+/// A resumed upload blob that finished transferring this round: the
+/// delta of an *earlier* round finally reaching the server.  The driver
+/// tags it with its age and hands it to the aggregator with a staleness
+/// discount instead of discarding it (the blob payload travels with the
+/// queue precisely so late work stays usable).
 #[derive(Debug, Clone, Default)]
+pub struct StaleDelivery {
+    /// round whose local training produced this delta
+    pub origin_round: usize,
+    /// FedAvg weight of the delta (before the staleness discount)
+    pub n_samples: usize,
+    /// full blob size (the bytes were spread over the rounds that
+    /// transmitted them; this is not a this-round radio charge)
+    pub bytes: u64,
+    /// the adapter delta, canonical tensor order
+    pub delta: Vec<Vec<f32>>,
+}
+
+/// What one client hands back after a local round.
+#[derive(Debug, Clone)]
 pub struct ClientUpdate {
     pub client_id: usize,
     /// (ctx, next) pairs processed — the FedAvg weight
@@ -54,12 +86,14 @@ pub struct ClientUpdate {
     /// virtual seconds spent uploading this round (transport model only)
     pub upload_s: f64,
     /// fresh-delta bytes the client actually put on the uplink this
-    /// round (the driver splits them into delivered vs wasted; without
-    /// the transport model this is the would-be upload size)
+    /// round (the driver classifies them as delivered, queued-blob
+    /// progress, or wasted; without the transport model this is the
+    /// would-be upload size)
     pub bytes_up: u64,
-    /// resume-backlog bytes flushed on the uplink this round — the
-    /// remainder of an earlier interrupted transfer, retried before the
-    /// fresh delta; always stale by the time they land, so always wasted
+    /// upload-queue bytes flushed on the uplink this round — the
+    /// remainders of earlier interrupted transfers, retried oldest-first
+    /// before the fresh delta.  No longer auto-wasted: a blob that
+    /// completes is delivered to the aggregator as a [`StaleDelivery`]
     pub bytes_up_backlog: u64,
     /// bytes the client actually pulled off the downlink for the global
     /// adapter broadcast (partial when the battery died mid-download)
@@ -74,8 +108,54 @@ pub struct ClientUpdate {
     /// silent on the link, so in an all-failed round the coordinator
     /// still has to wait the deadline out to learn anything
     pub link_silent: bool,
+    /// queued blobs from earlier rounds that *completed* their transfer
+    /// this round — delivered to the server even when the fresh delta
+    /// did not make it (the client may straggle or die after they land)
+    pub stale_delivered: Vec<StaleDelivery>,
+    /// flushable bytes dropped by the queue's capacity bound this round
+    /// (queueing a truncated fresh delta evicts the oldest blob when
+    /// the queue already holds `drop_stale_after`); the driver adds its
+    /// own round-start age evictions on top
+    pub bytes_dropped_stale: u64,
+    /// bytes that had already been transmitted toward a blob this
+    /// round's capacity bound evicted — they delivered nothing and
+    /// resume nothing, so the driver re-charges them as wasted radio
+    /// (they were provisionally counted as stale progress when sent)
+    pub bytes_wasted_evicted: u64,
+    /// staleness discount the aggregator applies to this update's
+    /// weight: `1.0` for a fresh delta, `stale_weight^age` for the
+    /// synthetic cohort entries the driver builds from
+    /// [`StaleDelivery`]s.  Only [`FedAvg`] reads it (see module docs).
+    pub stale_scale: f64,
     /// set when the round produced no usable update
     pub failure: Option<ClientFailure>,
+}
+
+impl Default for ClientUpdate {
+    fn default() -> Self {
+        ClientUpdate {
+            client_id: 0,
+            n_samples: 0,
+            delta: Vec::new(),
+            train_loss: 0.0,
+            time_s: 0.0,
+            energy_j: 0.0,
+            download_s: 0.0,
+            upload_s: 0.0,
+            bytes_up: 0,
+            bytes_up_backlog: 0,
+            bytes_down: 0,
+            upload_truncated: false,
+            link_silent: false,
+            stale_delivered: Vec::new(),
+            bytes_dropped_stale: 0,
+            bytes_wasted_evicted: 0,
+            // a fresh delta is undiscounted (a derived Default would
+            // zero this and silently erase every fresh update's weight)
+            stale_scale: 1.0,
+            failure: None,
+        }
+    }
 }
 
 impl ClientUpdate {
@@ -134,7 +214,14 @@ impl Aggregator for FedAvg {
             .map(|t| vec![0.0f64; t.len()])
             .collect();
         for u in updates {
-            let w = u.n_samples as f64 / total;
+            // staleness discount: the weight is `n * stale_scale` but
+            // the normalizer stays the undiscounted sample total, so a
+            // late delta contributes `stale_scale` of its FedAvg share
+            // (and a stale-only cohort applies `stale_scale` of the
+            // average, never the full delta).  `n * 1.0 == n` exactly in
+            // f64, so fresh-only cohorts reproduce classic FedAvg
+            // bitwise.
+            let w = u.n_samples as f64 * u.stale_scale / total;
             for (o, d) in acc.iter_mut().zip(&u.delta) {
                 for (x, &y) in o.iter_mut().zip(d) {
                     *x += w * y as f64;
@@ -312,6 +399,37 @@ mod tests {
                            "{counts:?}: {got} vs {want}");
             }
         }
+    }
+
+    #[test]
+    fn fedavg_discounts_stale_entries_against_undiscounted_total() {
+        // fresh client (3 samples) + one-round-late blob (1 sample) at
+        // stale_scale 0.5: weights 3/4 and 0.5*1/4 = 1/8
+        let a = upd(0, 3, vec![1.0, 0.0]);
+        let mut b = upd(1, 1, vec![-1.0, 4.0]);
+        b.stale_scale = 0.5;
+        let out = FedAvg.aggregate(&[&a, &b]).unwrap();
+        assert!((out[0][0] - (0.75 - 0.125)).abs() < 1e-6, "{}", out[0][0]);
+        assert!((out[0][1] - 0.5).abs() < 1e-6, "{}", out[0][1]);
+    }
+
+    #[test]
+    fn fedavg_stale_only_cohort_applies_the_discount_not_the_full_delta() {
+        // a round where only a stale blob arrived must move the global
+        // by stale_scale of the delta — normalizing the weight away
+        // would apply the full (stale) update and defeat the discount
+        let mut a = upd(0, 4, vec![2.0]);
+        a.stale_scale = 0.25;
+        let out = FedAvg.aggregate(&[&a]).unwrap();
+        assert!((out[0][0] - 0.5).abs() < 1e-6, "{}", out[0][0]);
+    }
+
+    #[test]
+    fn default_update_is_fresh() {
+        let u = ClientUpdate::default();
+        assert_eq!(u.stale_scale, 1.0,
+                   "a derived Default would zero every fresh weight");
+        assert!(u.stale_delivered.is_empty());
     }
 
     #[test]

@@ -20,15 +20,30 @@
 //! client resumes from its last good round, not from the global init).
 //! A failed *upload* keeps the local training (the work happened; only
 //! the radio lost it).
+//!
+//! Interrupted uploads live on a **staleness-aware queue**
+//! ([`PendingBlob`]): a transfer the deadline or a dying battery cuts
+//! short parks its remainder *and its delta payload* as a round-tagged
+//! blob, flushed oldest-first before the next fresh delta.  A blob that
+//! completes within `--drop-stale-after` rounds is handed to the server
+//! as a [`StaleDelivery`] and aggregated with a staleness discount;
+//! older blobs are evicted by the driver ([`FleetClient::evict_stale`]),
+//! which bounds the queue at `drop_stale_after` blobs — the fix for the
+//! PR-4 livelock where a perpetually-selected straggler's raw
+//! `pending_up_bytes` counter grew without bound and the client burned
+//! radio every round while never delivering anything again.  A blob
+//! created by a round that *rolls back* (battery death, local error) is
+//! never queued: its delta describes training the rollback erased.
 
 use anyhow::{bail, Result};
 
 use crate::config::manifest::ModelInfo;
 use crate::energy::{BatteryModel, EnergyScheduler};
-use crate::fleet::aggregate::{ClientFailure, ClientUpdate};
+use crate::fleet::aggregate::{ClientFailure, ClientUpdate, StaleDelivery};
 use crate::fleet::model::BigramRef;
-use crate::fleet::transport::{draw_link_scales, link_for, partial_bytes,
-                              LinkProfile};
+use crate::fleet::transport::{draw_link_scales, init_link_regime, link_for,
+                              partial_bytes, step_link_regime, LinkProfile,
+                              LinkRegime};
 use crate::fleet::FleetConfig;
 use crate::sim::DeviceProfile;
 use crate::train::lora::LoraState;
@@ -50,13 +65,47 @@ pub struct ClientStatus {
     pub est_round_s: f64,
 }
 
+/// One interrupted upload awaiting retry: the untransferred remainder of
+/// a delta the deadline cut short, *with its payload*, tagged by the
+/// round that produced it.  The queue is kept oldest-first; the upload
+/// leg drains it before the fresh delta, and the driver evicts blobs
+/// older than `drop_stale_after` rounds.  Carrying the payload is what
+/// makes a late completion aggregatable (FedBuff/MobiLLM-style) instead
+/// of pure radio waste.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingBlob {
+    /// round whose local training produced this delta
+    pub origin_round: usize,
+    /// full blob size (what the fresh upload would have been)
+    pub total_bytes: u64,
+    /// bytes still owed to the link
+    pub bytes_left: u64,
+    /// the delta's FedAvg weight, carried for the stale aggregation
+    pub n_samples: usize,
+    /// adapter delta, canonical tensor order
+    pub delta: Vec<Vec<f32>>,
+}
+
+/// [`PendingBlob`] in checkpoint form: f32 payloads travel as u32 bit
+/// patterns so the struct stays `Eq` and the JSON round-trip is exact
+/// (JSON numbers are f64, which carries u32 — but not u64 or raw f32
+/// NaN payloads — losslessly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlobPersist {
+    pub origin_round: u64,
+    pub total_bytes: u64,
+    pub bytes_left: u64,
+    pub n_samples: u64,
+    pub delta_bits: Vec<Vec<u32>>,
+}
+
 /// Scalar client state the fleet checkpoint serializes alongside the
 /// adapter safetensors: battery and clock (f64 bits — JSON numbers are
 /// f64 and cannot carry u64 bits exactly, so these travel as strings),
 /// the optimizer step, all three RNG streams, the PowerMonitor state,
-/// and the upload resume offset (bytes of an interrupted transfer still
-/// owed to the link).  Restoring this plus the adapter checkpoint
-/// reproduces the client bit-for-bit.
+/// the upload queue (round-tagged blobs with their payloads) and the
+/// correlated-outage link state.  Restoring this plus the adapter
+/// checkpoint reproduces the client bit-for-bit.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClientPersist {
     pub id: usize,
@@ -68,7 +117,8 @@ pub struct ClientPersist {
     pub net_rng: (u64, u64),
     pub sched_throttled: bool,
     pub sched_steps: usize,
-    pub pending_up: u64,
+    pub pending: Vec<BlobPersist>,
+    pub link_bad: bool,
 }
 
 /// Round-start snapshot for the failure rollback path: a failed local
@@ -97,12 +147,16 @@ pub struct FleetClient {
     rng: Pcg,
     bg_rng: Pcg,
     /// private stream for link draws: per-round bandwidth scales
-    /// (`link_var`) and upload-failure coin flips
+    /// (`link_var`), regime-chain steps and upload-failure coin flips
     net_rng: Pcg,
-    /// bytes of an interrupted upload still owed to the link; flushed
-    /// before the next fresh delta (resume-from-offset), persisted by
-    /// the fleet checkpoint
-    pending_up_bytes: u64,
+    /// interrupted uploads still owed to the link, oldest-first; the
+    /// upload leg flushes them before the fresh delta, the driver
+    /// evicts blobs older than `drop_stale_after` rounds, and the whole
+    /// queue (payloads included) persists in the fleet checkpoint
+    pending_up: Vec<PendingBlob>,
+    /// correlated-outage chain state (`--link-regime`): `true` while
+    /// this client's cell is congested
+    link_bad: bool,
     global_names: Vec<String>,
     global_snapshot: Vec<Vec<f32>>,
 }
@@ -122,6 +176,17 @@ impl FleetClient {
         };
         let adapter = LoraState::init(info, cfg.rank,
                                       cfg.seed.wrapping_add(id as u64))?;
+        // fork order is part of the seeded contract (fork advances the
+        // root stream), so the streams keep their PR-1 order
+        let rng = root.fork(id as u64 * 3 + 1);
+        let bg_rng = root.fork(id as u64 * 3 + 2);
+        let mut net_rng = root.fork(id as u64 * 3 + 3);
+        // regime-free runs must leave the stream untouched, so a run
+        // predating the feature replays identically
+        let link_bad = match &cfg.link_regime {
+            Some(r) => init_link_regime(&mut net_rng, r),
+            None => false,
+        };
         Ok(FleetClient {
             id,
             device,
@@ -132,10 +197,11 @@ impl FleetClient {
             adapter,
             opt: AdamW::new(cfg.lr, 0.0),
             shard,
-            rng: root.fork(id as u64 * 3 + 1),
-            bg_rng: root.fork(id as u64 * 3 + 2),
-            net_rng: root.fork(id as u64 * 3 + 3),
-            pending_up_bytes: 0,
+            rng,
+            bg_rng,
+            net_rng,
+            pending_up: Vec::new(),
+            link_bad,
             global_names: Vec::new(),
             global_snapshot: Vec::new(),
         })
@@ -155,7 +221,22 @@ impl FleetClient {
             net_rng: self.net_rng.state_parts(),
             sched_throttled: thr,
             sched_steps: steps,
-            pending_up: self.pending_up_bytes,
+            pending: self
+                .pending_up
+                .iter()
+                .map(|b| BlobPersist {
+                    origin_round: b.origin_round as u64,
+                    total_bytes: b.total_bytes,
+                    bytes_left: b.bytes_left,
+                    n_samples: b.n_samples as u64,
+                    delta_bits: b
+                        .delta
+                        .iter()
+                        .map(|t| t.iter().map(|x| x.to_bits()).collect())
+                        .collect(),
+                })
+                .collect(),
+            link_bad: self.link_bad,
         }
     }
 
@@ -171,7 +252,22 @@ impl FleetClient {
         self.net_rng = Pcg::from_parts(p.net_rng.0, p.net_rng.1);
         self.scheduler
             .restore_monitor_state(p.sched_throttled, p.sched_steps);
-        self.pending_up_bytes = p.pending_up;
+        self.pending_up = p
+            .pending
+            .iter()
+            .map(|b| PendingBlob {
+                origin_round: b.origin_round as usize,
+                total_bytes: b.total_bytes,
+                bytes_left: b.bytes_left,
+                n_samples: b.n_samples as usize,
+                delta: b
+                    .delta_bits
+                    .iter()
+                    .map(|t| t.iter().map(|&x| f32::from_bits(x)).collect())
+                    .collect(),
+            })
+            .collect();
+        self.link_bad = p.link_bad;
     }
 
     /// Expected deadline-relevant round time at nominal rates: full-power
@@ -195,29 +291,89 @@ impl FleetClient {
     }
 
     /// What the `bandwidth` selection policy compares against the
-    /// deadline: [`Self::nominal_round_s`] plus the time to flush this
-    /// client's pending upload backlog first.  Optimistic by design
-    /// (no throttling, median link draw) — it gates the predictably
-    /// infeasible, not all risk.
+    /// deadline: [`Self::nominal_round_s`] plus the time to flush the
+    /// upload queue's flushable total first, plus — when the
+    /// correlated-outage model says this client's cell is currently
+    /// congested — the regime slowdown on the whole upload leg (the
+    /// chain is persistent, so the current state *is* the best
+    /// predictor of this round's link).  Otherwise optimistic by design
+    /// (no throttling, median `link_var` draw) — it gates the
+    /// predictably infeasible, not all risk.
     pub fn estimate_round_s(&self, cfg: &FleetConfig, adapter_bytes: u64)
                             -> f64 {
         let mut t = self.nominal_round_s(cfg, adapter_bytes);
-        if cfg.transport && self.pending_up_bytes > 0 {
-            t += self.link.upload_s(self.pending_up_bytes);
+        if cfg.transport {
+            let backlog = self.pending_total_bytes();
+            if backlog > 0 {
+                t += self.link.upload_s(backlog);
+            }
+            if let Some(r) = &cfg.link_regime {
+                if self.link_bad {
+                    let up = self.link.upload_s(adapter_bytes + backlog);
+                    t += up * (1.0 / r.factor - 1.0);
+                }
+            }
         }
         t
     }
 
-    /// Drop a dangling upload offset.  The driver calls this when the
-    /// client is passed over for a round: the coordinator-side partial
-    /// blob belongs to a round that is finished, so there is nothing
-    /// left to resume — and an undrainable backlog must not inflate the
-    /// bandwidth policy's estimate past the deadline forever (a skipped
-    /// client never runs the upload leg, the only place a backlog can
-    /// shrink, so without this one truncated upload could starve a
-    /// healthy client for the rest of the run).
-    pub fn abandon_pending_upload(&mut self) {
-        self.pending_up_bytes = 0;
+    /// Bytes still owed to the link across the whole upload queue — the
+    /// flushable total the `bandwidth` policy's estimate charges (the
+    /// raw `pending_up_bytes` counter this queue replaces conflated it
+    /// with bytes that had already been dropped).
+    pub fn pending_total_bytes(&self) -> u64 {
+        self.pending_up.iter().map(|b| b.bytes_left).sum()
+    }
+
+    /// Interrupted blobs currently queued.  At most one blob joins per
+    /// round (a truncated fresh delta) and [`Self::evict_stale`] removes
+    /// everything older than `keep_rounds`, so after the driver's
+    /// round-start eviction the length is bounded by `keep_rounds`.
+    pub fn queue_len(&self) -> usize {
+        self.pending_up.len()
+    }
+
+    /// Evict queued blobs older than `keep_rounds` (age = `round` -
+    /// origin round) and return `(untransmitted, transmitted)` bytes of
+    /// the evicted blobs: the untransmitted remainder is the
+    /// `bytes_dropped_stale` charge (work abandoned before it burned
+    /// radio), while the bytes already transmitted toward an evicted
+    /// blob delivered nothing and resume nothing — the driver
+    /// reconciles them into `bytes_up_wasted` in the eviction round
+    /// (they were provisionally counted `bytes_up_stale` when they hit
+    /// the air).  Called by the driver for *every* client at round
+    /// start, selected or not: eviction is what bounds the queue (and
+    /// with it the bandwidth policy's estimate), replacing PR-4's
+    /// blanket abandon-on-skip — a passed-over client's blob now stays
+    /// deliverable for up to `keep_rounds` rounds, because the
+    /// aggregator can still use it.
+    pub fn evict_stale(&mut self, round: usize, keep_rounds: usize)
+                       -> (u64, u64) {
+        let mut dropped = 0u64;
+        let mut transmitted = 0u64;
+        self.pending_up.retain(|b| {
+            let stale = round.saturating_sub(b.origin_round) > keep_rounds;
+            if stale {
+                dropped += b.bytes_left;
+                transmitted += b.total_bytes - b.bytes_left;
+            }
+            !stale
+        });
+        (dropped, transmitted)
+    }
+
+    /// Advance the correlated-outage chain by one round (one `net_rng`
+    /// draw).  The driver steps every client at round start — the cell
+    /// is congested or not regardless of whether the client trains.
+    pub fn advance_link_regime(&mut self, regime: &LinkRegime) {
+        self.link_bad =
+            step_link_regime(&mut self.net_rng, regime, self.link_bad);
+    }
+
+    /// Whether the correlated-outage chain currently has this client's
+    /// cell congested (always `false` without `--link-regime`).
+    pub fn link_congested(&self) -> bool {
+        self.link_bad
     }
 
     fn snapshot(&mut self) -> Result<RoundSnapshot> {
@@ -297,19 +453,24 @@ impl FleetClient {
     /// is the unit the driver fans out across worker threads
     /// ([`crate::util::pool::ordered_map_mut`]) — each selected client
     /// touches only its own state, so concurrent rounds are
-    /// deterministic by construction.  `deadline_s` is the coordinator's
-    /// straggler deadline: the upload stops there (the server hung up),
-    /// and whatever did not make it over the link is carried as the
-    /// client's resume offset.
+    /// deterministic by construction.  `round` tags any blob this round
+    /// leaves on the upload queue (staleness ages count from it);
+    /// `deadline_s` is the coordinator's straggler deadline: the upload
+    /// stops there (the server hung up), and whatever did not make it
+    /// over the link is queued as a round-tagged [`PendingBlob`].
     ///
     /// Never aborts the run: internal errors and mid-round battery
     /// deaths come back as [`ClientFailure`]-carrying updates, with the
     /// client's optimizer moments, step counter and batch RNG rolled
     /// back to the round start (the client "resumes from its last
-    /// round").  A failed upload keeps the local training.
+    /// round").  A rolled-back round never queues a blob — its delta
+    /// describes training the rollback erased — but queued blobs from
+    /// *earlier* rounds keep any transfer progress they made before the
+    /// failure, and ones that completed stay delivered.  A failed
+    /// upload keeps the local training.
     pub fn run_round(&mut self, names: &[String], global: &[Vec<f32>],
-                     model: &BigramRef, cfg: &FleetConfig, deadline_s: f64)
-                     -> ClientUpdate {
+                     model: &BigramRef, cfg: &FleetConfig, round: usize,
+                     deadline_s: f64) -> ClientUpdate {
         let snap = match self.snapshot() {
             Ok(s) => s,
             Err(e) => {
@@ -317,7 +478,8 @@ impl FleetClient {
                     self.id, ClientFailure::Error(e.to_string()));
             }
         };
-        match self.round_inner(names, global, model, cfg, deadline_s) {
+        match self.round_inner(names, global, model, cfg, round, deadline_s)
+        {
             Ok(u) => {
                 if matches!(u.failure,
                             Some(ClientFailure::BatteryDead)
@@ -335,15 +497,23 @@ impl FleetClient {
     }
 
     fn round_inner(&mut self, names: &[String], global: &[Vec<f32>],
-                   model: &BigramRef, cfg: &FleetConfig, deadline_s: f64)
-                   -> Result<ClientUpdate> {
+                   model: &BigramRef, cfg: &FleetConfig, round: usize,
+                   deadline_s: f64) -> Result<ClientUpdate> {
         let adapter_bytes: u64 =
             (global.iter().map(|g| g.len()).sum::<usize>() * 4) as u64;
         // this round's effective link: nominal rates scaled by the
-        // client-local bandwidth draws (link_var = 0 draws nothing)
+        // client-local bandwidth draws (link_var = 0 draws nothing),
+        // further scaled down while the correlated-outage chain has
+        // this client's cell congested
         let link = if cfg.transport {
-            let (up, down) = draw_link_scales(&mut self.net_rng,
-                                              cfg.link_var);
+            let (mut up, mut down) = draw_link_scales(&mut self.net_rng,
+                                                      cfg.link_var);
+            if let Some(r) = &cfg.link_regime {
+                if self.link_bad {
+                    up *= r.factor;
+                    down *= r.factor;
+                }
+            }
             self.link.at_scales(up, down)
         } else {
             self.link.nominal()
@@ -412,16 +582,20 @@ impl FleetClient {
             return Ok(u);
         }
         if cfg.transport {
-            // upload: any resume backlog is flushed first, then the
-            // fresh delta.  Link time counts against the straggler
-            // deadline (compute + upload) and the radio drains the
-            // battery.  The transfer is cut short by whichever comes
-            // first — the coordinator's deadline (the server stops
-            // listening; the client is a straggler) or the battery
-            // dying — and the untransferred remainder becomes the
-            // client's resume offset for next round.  A transfer that
-            // does complete can still fail outright (seeded draw).
-            let backlog = self.pending_up_bytes;
+            // upload: the queue is flushed oldest-first, then the fresh
+            // delta.  Link time counts against the straggler deadline
+            // (compute + upload) and the radio drains the battery.  The
+            // transfer is cut short by whichever comes first — the
+            // coordinator's deadline (the server stops listening; the
+            // client is a straggler) or the battery dying.  Queued
+            // blobs that complete are delivered ([`StaleDelivery`]) —
+            // the server can still use a late delta; a truncated fresh
+            // delta joins the queue as a round-tagged blob *with its
+            // payload*.  A transfer that does complete can still fail
+            // outright (seeded draw), which loses the fresh delta only:
+            // resumed blobs ride the chunked resume path and keep what
+            // landed.
+            let backlog = self.pending_total_bytes();
             let total = backlog + adapter_bytes;
             let needed = link.upload_s(total);
             let avail = (deadline_s - u.time_s).max(0.0);
@@ -436,30 +610,87 @@ impl FleetClient {
             } else {
                 partial_bytes(total, send_s, needed)
             };
-            u.bytes_up_backlog = sent.min(backlog);
-            u.bytes_up = sent - u.bytes_up_backlog;
+            // drain the queue oldest-first with the bytes that hit the
+            // air; blobs that finish are delivered to the server even
+            // if the client straggles or dies afterwards
+            let mut remaining = sent;
+            let mut stale_sent = 0u64;
+            while remaining > 0 {
+                let Some(blob) = self.pending_up.first_mut() else {
+                    break;
+                };
+                let take = blob.bytes_left.min(remaining);
+                blob.bytes_left -= take;
+                remaining -= take;
+                stale_sent += take;
+                if blob.bytes_left == 0 {
+                    let b = self.pending_up.remove(0);
+                    u.stale_delivered.push(StaleDelivery {
+                        origin_round: b.origin_round,
+                        n_samples: b.n_samples,
+                        bytes: b.total_bytes,
+                        delta: b.delta,
+                    });
+                }
+            }
+            u.bytes_up_backlog = stale_sent;
+            u.bytes_up = sent - stale_sent;
             if send_s < needed {
-                // interrupted mid-transfer: the remainder is carried and
-                // retried (before the next fresh delta); only the bytes
-                // that hit the air this round are accounted this round
-                self.pending_up_bytes = total - sent;
-                u.delta.clear();
+                // interrupted mid-transfer: only the bytes that hit the
+                // air this round are accounted this round
                 if send_s >= limit {
+                    // battery death: the round rolls back, so the fresh
+                    // delta is NOT queued — a resumed blob whose
+                    // training the rollback erased would deliver a
+                    // phantom update (the PR-4 counter recorded exactly
+                    // that: pending bytes for a delta that no longer
+                    // existed locally)
+                    u.delta.clear();
                     self.battery.set_level_frac(0.0);
                     u.failure = Some(ClientFailure::BatteryDead);
                     u.link_silent = true;
                 } else {
+                    // straggler: park the fresh remainder (payload
+                    // included) on the queue for the retry rounds.  The
+                    // queue is a bounded buffer of capacity
+                    // `drop_stale_after`: pushing into a full queue
+                    // evicts the oldest blob (it was due to age out at
+                    // the next round-start sweep anyway), so the length
+                    // can never exceed the bound — the invariant the
+                    // livelock fix pins.  `drop_stale_after = 0` means
+                    // no stale tolerance at all: the remainder is
+                    // dropped on the spot.
+                    let fresh_left = adapter_bytes - u.bytes_up;
+                    if cfg.drop_stale_after == 0 {
+                        u.bytes_dropped_stale += fresh_left;
+                        u.delta.clear();
+                    } else {
+                        if self.pending_up.len() >= cfg.drop_stale_after {
+                            let old = self.pending_up.remove(0);
+                            u.bytes_dropped_stale += old.bytes_left;
+                            // the bytes already transmitted toward the
+                            // evicted blob delivered nothing: re-charge
+                            // them as wasted (they were provisionally
+                            // stale-progress when they hit the air)
+                            u.bytes_wasted_evicted +=
+                                old.total_bytes - old.bytes_left;
+                        }
+                        self.pending_up.push(PendingBlob {
+                            origin_round: round,
+                            total_bytes: adapter_bytes,
+                            bytes_left: fresh_left,
+                            n_samples: u.n_samples,
+                            delta: std::mem::take(&mut u.delta),
+                        });
+                    }
                     u.upload_truncated = true;
                 }
-            } else {
-                self.pending_up_bytes = 0;
-                if self.battery.is_empty() {
-                    u.failure = Some(ClientFailure::BatteryDead);
-                    u.delta.clear();
-                } else if self.net_rng.uniform() < cfg.upload_fail_prob {
-                    u.failure = Some(ClientFailure::UploadFailed);
-                    u.delta.clear();
-                }
+            } else if self.battery.is_empty() {
+                u.failure = Some(ClientFailure::BatteryDead);
+                u.delta.clear();
+            } else if self.net_rng.uniform() < cfg.upload_fail_prob {
+                u.failure = Some(ClientFailure::UploadFailed);
+                u.delta.clear();
             }
         } else {
             // no link model: the would-be upload still carries its size
@@ -660,7 +891,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(up.client_id, 0);
         assert_eq!(up.failure, None);
         assert_eq!(up.n_samples, 3 * 2 * 16);
@@ -680,7 +911,7 @@ mod tests {
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
         // baseline without transport
-        let base = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let base = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(base.failure, None);
 
         cfg.transport = true;
@@ -689,7 +920,7 @@ mod tests {
         let mut tc = FleetClient::new(
             1, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
             &mut root).unwrap();
-        let up = tc.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = tc.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(up.failure, None);
         let bytes = (8 * 2 + 2 * 8) as u64 * 4;
         assert_eq!(up.bytes_up, bytes);
@@ -721,7 +952,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(up.failure, Some(ClientFailure::UploadFailed));
         assert!(up.delta.is_empty(), "failed upload must deliver nothing");
         assert!(up.bytes_up > 0, "the radio bytes were still burned");
@@ -744,7 +975,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(up.failure, Some(ClientFailure::BatteryDead));
         assert!(up.delta.is_empty());
         assert!(up.time_s > 0.0 && up.energy_j > 0.0,
@@ -769,7 +1000,7 @@ mod tests {
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
         // advance the client one round, capture its post-round state
-        let _ = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let _ = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         let persist = c.persist_state();
         let moments: Vec<(Vec<f32>, Vec<f32>)> = [LORA_A, LORA_B]
             .iter()
@@ -779,7 +1010,7 @@ mod tests {
             })
             .collect();
         // round 2 on the live client
-        let a = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let a = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
 
         // rebuild a fresh client, restore scalars + moments (the driver
         // restores moments via the safetensors checkpoint), rerun round 2
@@ -794,7 +1025,7 @@ mod tests {
             m2.copy_from_slice(sm);
             v2.copy_from_slice(sv);
         }
-        let b = c2.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let b = c2.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
         assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
         assert!(!a.delta.is_empty());
@@ -815,7 +1046,7 @@ mod tests {
         ];
         // compute time is deterministic per batch shape, so a plain run
         // tells us where the upload starts on the deadline clock
-        let base = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let base = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(base.failure, None);
 
         cfg.transport = true;
@@ -831,7 +1062,7 @@ mod tests {
         // where 1-ulp clock noise could flip the floor)
         let deadline = base.time_s + full_up * 0.4;
         let sent = (bytes as f64 * 0.4) as u64;
-        let up = tc.run_round(&names, &g, &model, &cfg, deadline);
+        let up = tc.run_round(&names, &g, &model, &cfg, 1, deadline);
         assert_eq!(up.failure, None, "a truncated upload is a straggler, \
                                       not a failure: {up:?}");
         assert!(up.upload_truncated);
@@ -839,23 +1070,46 @@ mod tests {
         // 40% of the transfer window -> 40% of the bytes on the air
         assert_eq!(up.bytes_up, sent);
         assert_eq!(up.bytes_up_backlog, 0);
+        assert!(up.stale_delivered.is_empty());
         assert!((up.upload_s - full_up * 0.4).abs() < 1e-9 * full_up,
                 "upload stopped at the deadline: {}", up.upload_s);
         assert!(up.time_s <= deadline + 1e-12);
-        // the remainder is owed to the link...
-        assert_eq!(tc.persist_state().pending_up, bytes - sent);
+        // the remainder rides the queue as a round-tagged blob that
+        // kept its payload...
+        assert_eq!(tc.queue_len(), 1);
+        assert_eq!(tc.pending_total_bytes(), bytes - sent);
+        let persist = tc.persist_state();
+        let blob = &persist.pending[0];
+        assert_eq!(blob.origin_round, 1);
+        assert_eq!(blob.total_bytes, bytes);
+        assert_eq!(blob.bytes_left, bytes - sent);
+        assert!(blob.n_samples > 0, "blob keeps its FedAvg weight");
+        assert!(!blob.delta_bits.is_empty()
+                    && blob.delta_bits.iter().any(|t| !t.is_empty()),
+                "blob must carry the delta payload");
         // ...and the local training stands (straggler, not rollback)
         assert_eq!(tc.opt.t, cfg.local_steps as u64);
 
-        // next round (roomy deadline): the backlog flushes before the
-        // fresh delta and the offset clears
-        let up2 = tc.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        // next round (roomy deadline): the queue flushes oldest-first
+        // before the fresh delta, and the completed blob is *delivered*
+        // (a StaleDelivery the driver aggregates with a discount), not
+        // silently wasted
+        let up2 = tc.run_round(&names, &g, &model, &cfg, 2, f64::INFINITY);
         assert_eq!(up2.failure, None);
         assert!(!up2.upload_truncated);
         assert_eq!(up2.bytes_up_backlog, bytes - sent);
         assert_eq!(up2.bytes_up, bytes);
         assert!(!up2.delta.is_empty());
-        assert_eq!(tc.persist_state().pending_up, 0);
+        assert_eq!(up2.stale_delivered.len(), 1, "{up2:?}");
+        let sd = &up2.stale_delivered[0];
+        assert_eq!(sd.origin_round, 1);
+        assert_eq!(sd.bytes, bytes);
+        assert!(sd.n_samples > 0);
+        assert!(!sd.delta.is_empty()
+                    && sd.delta.iter().any(|t| !t.is_empty()),
+                "the late delta arrived intact");
+        assert_eq!(tc.queue_len(), 0);
+        assert_eq!(tc.pending_total_bytes(), 0);
         let total2 = bytes + (bytes - sent);
         assert!((up2.upload_s - tc.link.upload_s(total2)).abs()
                     < 1e-9 * up2.upload_s,
@@ -887,15 +1141,21 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(up.failure, Some(ClientFailure::BatteryDead), "{up:?}");
         assert!(up.link_silent, "a mid-upload death is silent on the link");
         assert!(c.battery.is_empty());
         // the PR-3 overcount is gone: dying mid-upload burns only the
-        // transmitted bytes, the rest becomes the resume offset
+        // transmitted bytes
         assert!(up.bytes_up > 0 && up.bytes_up < bytes,
                 "partial bytes expected: {}", up.bytes_up);
-        assert_eq!(c.persist_state().pending_up, bytes - up.bytes_up);
+        // and the PR-4 phantom-resume bug with it: the round rolled
+        // back, so the fresh remainder must NOT be queued — the delta
+        // it would resume describes training that no longer exists
+        // locally.  The queue is exactly as it was at round start.
+        assert_eq!(c.queue_len(), 0,
+                   "a rolled-back round must not leave a blob behind");
+        assert_eq!(c.pending_total_bytes(), 0);
         assert!(up.upload_s > 0.0 && up.upload_s < full_up);
         // the full download made it before the battery ran down
         assert_eq!(up.bytes_down, bytes);
@@ -921,7 +1181,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert_eq!(up.failure, Some(ClientFailure::BatteryDead));
         assert!(up.link_silent, "a mid-broadcast death is silent");
         // the radio bytes it actually burned are visible (PR 3 reported 0)
@@ -931,7 +1191,7 @@ mod tests {
         assert_eq!(up.bytes_up, 0);
         assert!(c.battery.is_empty());
         // no upload ever started: nothing owed to the link
-        assert_eq!(c.persist_state().pending_up, 0);
+        assert_eq!(c.queue_len(), 0);
     }
 
     #[test]
@@ -951,7 +1211,7 @@ mod tests {
             c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
             c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
         ];
-        let up = c.run_round(&names, &g, &model, &cfg, f64::INFINITY);
+        let up = c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY);
         assert!(matches!(up.failure, Some(ClientFailure::Error(_))),
                 "{up:?}");
         let bytes = (8 * 2 + 2 * 8) as u64 * 4;
@@ -981,7 +1241,7 @@ mod tests {
                 c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
                 c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
             ];
-            c.run_round(&names, &g, &model, &cfg, f64::INFINITY)
+            c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY)
         };
         let a = run();
         let b = run();
@@ -1014,16 +1274,213 @@ mod tests {
         let with_link = c.nominal_round_s(&cfg, bytes);
         assert!((with_link - (compute_only + c.link.upload_s(bytes))).abs()
                     < 1e-12 * with_link);
-        // a pending backlog pushes the estimate (but not the nominal
-        // deadline base) further out
+        // a queued backlog pushes the estimate (but not the nominal
+        // deadline base) further out by its *flushable* total
         let mut c2 = c;
         let mut p = c2.persist_state();
-        p.pending_up = bytes * 3;
+        p.pending = vec![
+            BlobPersist { origin_round: 1, total_bytes: bytes * 2,
+                          bytes_left: bytes * 2, n_samples: 10,
+                          delta_bits: vec![vec![0; 4]] },
+            BlobPersist { origin_round: 2, total_bytes: bytes * 2,
+                          bytes_left: bytes, n_samples: 10,
+                          delta_bits: vec![vec![0; 4]] },
+        ];
         c2.restore_persist(&p);
+        assert_eq!(c2.pending_total_bytes(), bytes * 3);
         assert_eq!(c2.nominal_round_s(&cfg, bytes), with_link);
         let est = c2.estimate_round_s(&cfg, bytes);
         assert!((est - (with_link + c2.link.upload_s(bytes * 3))).abs()
                     < 1e-12 * est);
+
+        // a congested regime state inflates the whole upload leg by
+        // 1/factor — the persistent chain makes the current state the
+        // right predictor, which is what lets the bandwidth policy skip
+        // clients in a bad stretch
+        cfg.link_regime = Some(LinkRegime { p_bad: 0.3, factor: 0.25 });
+        let mut p_bad_state = c2.persist_state();
+        p_bad_state.link_bad = true;
+        c2.restore_persist(&p_bad_state);
+        let est_bad = c2.estimate_round_s(&cfg, bytes);
+        let want = with_link + c2.link.upload_s(bytes * 3)
+            + c2.link.upload_s(bytes * 4) * 3.0; // (1/0.25 - 1) = 3
+        assert!((est_bad - want).abs() < 1e-9 * want,
+                "congested estimate {est_bad} vs {want}");
+        // the nominal deadline base never sees the regime
+        assert_eq!(c2.nominal_round_s(&cfg, bytes), with_link);
+    }
+
+    #[test]
+    fn evict_stale_bounds_the_queue_and_charges_dropped_bytes() {
+        let (_model, _cfg, mut c) = setup();
+        let mut p = c.persist_state();
+        p.pending = (1..=4u64)
+            .map(|r| BlobPersist {
+                origin_round: r,
+                total_bytes: 100 * r,
+                bytes_left: 10 * r,
+                n_samples: 1,
+                delta_bits: vec![vec![0]],
+            })
+            .collect();
+        c.restore_persist(&p);
+        assert_eq!(c.queue_len(), 4);
+        // at round 5 with K=2, blobs from rounds 1 and 2 (ages 4, 3)
+        // are evicted; rounds 3 and 4 (ages 2, 1) stay deliverable.
+        // The split: untransmitted remainders (10r) are the dropped
+        // charge, while already-transmitted bytes (total - left = 90r)
+        // are returned apart so the driver can re-charge them as
+        // wasted radio
+        let (dropped, transmitted) = c.evict_stale(5, 2);
+        assert_eq!(dropped, 10 + 20);
+        assert_eq!(transmitted, 90 + 180);
+        assert_eq!(c.queue_len(), 2);
+        assert_eq!(c.pending_total_bytes(), 30 + 40);
+        assert_eq!(c.persist_state().pending[0].origin_round, 3);
+        // nothing stale: a second sweep drops nothing
+        assert_eq!(c.evict_stale(5, 2), (0, 0));
+        assert_eq!(c.queue_len(), 2);
+    }
+
+    #[test]
+    fn battery_dead_round_leaves_queue_exactly_as_at_round_start() {
+        // seed a blob by truncating round 1, then kill the battery in
+        // round 2's compute: the rollback must leave the queue exactly
+        // as it was at round start — the old blob intact (its transfer
+        // history is physical), no phantom blob from the dead round
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+            &mut root).unwrap();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        // round 0 (roomy deadline) measures compute + full upload;
+        // round 1's deadline then leaves ~40% of the upload window, so
+        // the fresh delta is truncated and queued
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        let full = c.run_round(&names, &g, &model, &cfg, 0, f64::INFINITY);
+        assert_eq!(full.failure, None);
+        assert_eq!(c.queue_len(), 0);
+        let compute_s = full.time_s - c.link.upload_s(bytes);
+        let deadline = compute_s + c.link.upload_s(bytes) * 0.4;
+        let up1 = c.run_round(&names, &g, &model, &cfg, 1, deadline);
+        assert!(up1.upload_truncated, "{up1:?}");
+        let queue_before = c.persist_state().pending;
+        assert_eq!(queue_before.len(), 1);
+
+        // round 2: battery only survives the download, dies in compute
+        let p_radio_w = c.battery.p_idle + c.link.p_radio;
+        c.battery.level_j = p_radio_w * c.link.download_s(bytes) * 1.5;
+        let up2 = c.run_round(&names, &g, &model, &cfg, 2, f64::INFINITY);
+        assert_eq!(up2.failure, Some(ClientFailure::BatteryDead), "{up2:?}");
+        assert!(up2.stale_delivered.is_empty(),
+                "compute death happens before the upload leg");
+        assert_eq!(c.persist_state().pending, queue_before,
+                   "a BatteryDead round must leave the queue untouched");
+    }
+
+    #[test]
+    fn tight_deadline_queue_stays_bounded_and_delivers_stale() {
+        // the livelock fix at client granularity: a deadline that only
+        // ever fits ~60% of a fresh upload used to grow pending_up_bytes
+        // forever while delivering nothing.  With the queue + round-start
+        // eviction the backlog is bounded by K blobs and every delta
+        // still lands within K rounds as a StaleDelivery.
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        cfg.flops_per_token = 1.0; // compute negligible vs the link
+        let k = 2usize;
+        let mut root = Pcg::new(5);
+        let tokens: Vec<u32> = (0..4000).map(|i| (i % 7) as u32).collect();
+        let mut c = FleetClient::new(
+            0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 1.0,
+            &mut root).unwrap();
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let g = vec![
+            c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+            c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+        ];
+        let bytes = (8 * 2 + 2 * 8) as u64 * 4;
+        // ~85% of a fresh upload fits per round: the fresh delta never
+        // lands on time, but every blob can finish within two retries
+        let budget = c.link.upload_s(bytes) * 0.85;
+        let mut delivered = 0usize;
+        let mut fresh = 0usize;
+        for round in 1..=10usize {
+            c.battery.set_level_frac(1.0); // isolate the link behavior
+            c.evict_stale(round, k);
+            assert!(c.queue_len() <= k, "round {round}: post-eviction \
+                     queue {} exceeds K={k}", c.queue_len());
+            // the deadline is judged on compute + upload (the download
+            // overlaps the coordinator's broadcast), so compute + budget
+            // leaves exactly `budget` seconds of uplink
+            let compute = c.nominal_round_s(&cfg, 0);
+            let u = c.run_round(&names, &g, &model, &cfg, round,
+                                compute + budget);
+            assert_eq!(u.failure, None, "round {round}: {u:?}");
+            assert!(u.upload_truncated, "round {round}: {u:?}");
+            delivered += u.stale_delivered.len();
+            if !u.delta.is_empty() {
+                fresh += 1;
+            }
+            for sd in &u.stale_delivered {
+                assert!(round - sd.origin_round <= k,
+                        "round {round}: blob from {} arrived too old",
+                        sd.origin_round);
+            }
+            assert!(c.queue_len() <= k,
+                    "round {round}: queue {} exceeds K={k} — the bounded \
+                     buffer invariant broke", c.queue_len());
+        }
+        assert_eq!(fresh, 0, "85% of an upload never lands fresh");
+        assert!(delivered >= 6,
+                "a perpetual straggler must keep delivering late deltas \
+                 instead of livelocking, got {delivered}/10");
+        assert!(c.pending_total_bytes() <= k as u64 * bytes,
+                "backlog must stay bounded: {}", c.pending_total_bytes());
+    }
+
+    #[test]
+    fn congested_regime_round_slows_the_link_but_not_the_power() {
+        let (model, mut cfg, _) = setup();
+        cfg.transport = true;
+        cfg.link_regime = Some(LinkRegime { p_bad: 0.5, factor: 0.25 });
+        let names = vec![LORA_A.to_string(), LORA_B.to_string()];
+        let run_with_state = |bad: bool| {
+            let mut root = Pcg::new(5);
+            let tokens: Vec<u32> =
+                (0..4000).map(|i| (i % 7) as u32).collect();
+            let mut c = FleetClient::new(
+                0, &sim::DEVICES[1], tokens, &model.lora_info(), &cfg, 0.9,
+                &mut root).unwrap();
+            let mut p = c.persist_state();
+            p.link_bad = bad;
+            c.restore_persist(&p);
+            let g = vec![
+                c.adapter.get(LORA_A).unwrap().as_f32().unwrap().to_vec(),
+                c.adapter.get(LORA_B).unwrap().as_f32().unwrap().to_vec(),
+            ];
+            c.run_round(&names, &g, &model, &cfg, 1, f64::INFINITY)
+        };
+        let good = run_with_state(false);
+        let bad = run_with_state(true);
+        assert_eq!(good.failure, None);
+        assert_eq!(bad.failure, None);
+        // both directions slow down by exactly 1/factor = 4x
+        assert!((bad.upload_s - good.upload_s * 4.0).abs()
+                    < 1e-9 * bad.upload_s,
+                "congested upload {} vs good {}", bad.upload_s,
+                good.upload_s);
+        assert!((bad.download_s - good.download_s * 4.0).abs()
+                    < 1e-9 * bad.download_s);
+        // a slow round burns the radio longer, not hotter
+        assert!(bad.energy_j > good.energy_j);
     }
 
     #[test]

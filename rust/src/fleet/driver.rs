@@ -19,8 +19,17 @@
 //! expected round at the deadline-relevant work — compute plus, with
 //! `--transport`, its upload leg — so a factor >= 1 deadline is always
 //! achievable by the client that sets it.  An upload the deadline cuts
-//! short delivers only the bytes that fit; the remainder becomes the
-//! client's resume offset, flushed before its next fresh delta.
+//! short delivers only the bytes that fit; the remainder joins the
+//! client's bounded upload queue as a round-tagged blob (payload
+//! included), flushed oldest-first before its next fresh delta.  A blob
+//! completing within `--drop-stale-after` rounds is aggregated at the
+//! staleness discount `--stale-weight`^age (`n_stale_aggregated`);
+//! older blobs are evicted at round start (`bytes_dropped_stale`), so a
+//! perpetually-selected straggler keeps delivering late deltas instead
+//! of livelocking on an unbounded backlog.  With `--link-regime` every
+//! client also advances a persistent good/congested link chain at round
+//! start — multi-round congestion stretches are what actually grow
+//! backlogs.
 //!
 //! Faults never abort the run: [`FleetClient::run_round`] converts local
 //! errors and mid-round battery deaths into [`ClientFailure`]-carrying
@@ -64,9 +73,11 @@ use crate::cli::Args;
 use crate::data::corpus::synthetic_corpus;
 use crate::data::partition::{dirichlet_shards, split_articles};
 use crate::fleet::aggregate::{make_aggregator, ClientFailure, ClientUpdate};
-use crate::fleet::client::{ClientPersist, ClientStatus, FleetClient};
+use crate::fleet::client::{BlobPersist, ClientPersist, ClientStatus,
+                           FleetClient};
 use crate::fleet::model::{BigramRef, LORA_A, LORA_B};
 use crate::fleet::select::{select_clients, SelectPolicy};
+use crate::fleet::transport::LinkRegime;
 use crate::fleet::FleetConfig;
 use crate::metrics::{append_round, RoundRecord};
 use crate::sim;
@@ -79,8 +90,10 @@ use crate::util::rng::Pcg;
 const MIB: u64 = 1024 * 1024;
 
 /// Checkpoint format tag for `fleet_ckpt.json` (v2 added the per-client
-/// upload resume offset).
-const CKPT_FORMAT: &str = "mft-fleet-ckpt-v2";
+/// upload resume offset; v3 replaced it with the staleness-aware upload
+/// queue — round-tagged blobs carrying their delta payloads as u32 bit
+/// patterns — plus the correlated-outage link state).
+const CKPT_FORMAT: &str = "mft-fleet-ckpt-v3";
 
 /// Floor of the slack added to the straggler deadline.  The deadline is
 /// derived from the fastest client's *expected* round time, but the
@@ -147,6 +160,46 @@ fn pair_parse(j: &Json) -> Result<(u64, u64)> {
         bail!("checkpoint rng state must be a [state, inc] pair");
     }
     Ok((bits_parse(&a[0])?, bits_parse(&a[1])?))
+}
+
+/// Upload-queue blob -> checkpoint JSON.  The delta payload travels as
+/// u32 bit patterns written as plain JSON numbers (f64 carries u32
+/// exactly), so `--resume` replays late deliveries bit-for-bit.
+fn blob_json(b: &BlobPersist) -> Json {
+    Json::obj(vec![
+        ("round", Json::from(b.origin_round)),
+        ("total", bits_json(b.total_bytes)),
+        ("left", bits_json(b.bytes_left)),
+        ("n", Json::from(b.n_samples)),
+        ("delta", Json::Arr(
+            b.delta_bits
+                .iter()
+                .map(|t| Json::Arr(
+                    t.iter().map(|&x| Json::from(x as u64)).collect()))
+                .collect())),
+    ])
+}
+
+fn blob_parse(j: &Json) -> Result<BlobPersist> {
+    let mut delta_bits = Vec::new();
+    for t in j.req("delta")?.as_arr()? {
+        let mut bits = Vec::new();
+        for v in t.as_arr()? {
+            let x = v.as_u64()?;
+            if x > u32::MAX as u64 {
+                bail!("blob delta bit pattern {x} exceeds u32");
+            }
+            bits.push(x as u32);
+        }
+        delta_bits.push(bits);
+    }
+    Ok(BlobPersist {
+        origin_round: j.req("round")?.as_u64()?,
+        total_bytes: bits_parse(j.req("total")?)?,
+        bytes_left: bits_parse(j.req("left")?)?,
+        n_samples: j.req("n")?.as_u64()?,
+        delta_bits,
+    })
 }
 
 /// Atomically replace `path` with `bytes`: write `<stem>.tmp`, fsync,
@@ -259,7 +312,9 @@ fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
                 ("net_rng", pair_json(p.net_rng)),
                 ("sched_throttled", Json::from(p.sched_throttled)),
                 ("sched_steps", Json::from(p.sched_steps)),
-                ("pending_up", bits_json(p.pending_up)),
+                ("link_bad", Json::from(p.link_bad)),
+                ("pending", Json::Arr(
+                    p.pending.iter().map(blob_json).collect())),
             ])
         })
         .collect();
@@ -282,6 +337,29 @@ fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
         let _ = std::fs::remove_file(dir.join(f));
     }
     Ok(())
+}
+
+/// Remove every artifact a previous run may have left in `dir` before a
+/// fresh (non-`--resume`) start: the round log, the checkpoint json,
+/// committed/orphaned ckpt generations, **and the end-of-run outputs**
+/// (`summary.json`, `adapter.safetensors`).  The old sweep left the last
+/// two behind, so a fresh run that crashed mid-way left a directory that
+/// read as a *completed* older run — a stale summary next to a
+/// half-written round log.  Files the fleet never writes are untouched.
+pub fn sweep_fresh_out_dir(dir: &Path) {
+    for f in ["rounds.jsonl", "fleet_ckpt.json", "summary.json",
+              "adapter.safetensors"] {
+        let _ = std::fs::remove_file(dir.join(f));
+    }
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if name.starts_with("ckpt_client_")
+                || name.starts_with("ckpt_global") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
 }
 
 struct ResumeState {
@@ -322,7 +400,13 @@ fn load_fleet_ckpt(dir: &Path, cfg: &FleetConfig)
             net_rng: pair_parse(cj.req("net_rng")?)?,
             sched_throttled: cj.req("sched_throttled")?.as_bool()?,
             sched_steps: cj.req("sched_steps")?.as_usize()?,
-            pending_up: bits_parse(cj.req("pending_up")?)?,
+            link_bad: cj.req("link_bad")?.as_bool()?,
+            pending: cj
+                .req("pending")?
+                .as_arr()?
+                .iter()
+                .map(blob_parse)
+                .collect::<Result<_>>()?,
         });
         client_files.push(cj.req("ckpt")?.as_str()?.to_string());
     }
@@ -557,20 +641,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     } else {
         if let Some(d) = &out_dir {
             std::fs::create_dir_all(d)?;
-            let _ = std::fs::remove_file(d.join("rounds.jsonl"));
-            // stale checkpoint state from an earlier run in the same
-            // dir — the json, committed generations, and any crash
-            // orphans — must not survive a fresh (non-resume) start
-            let _ = std::fs::remove_file(d.join("fleet_ckpt.json"));
-            if let Ok(rd) = std::fs::read_dir(d) {
-                for e in rd.flatten() {
-                    let name = e.file_name().to_string_lossy().to_string();
-                    if name.starts_with("ckpt_client_")
-                        || name.starts_with("ckpt_global") {
-                        let _ = std::fs::remove_file(e.path());
-                    }
-                }
-            }
+            sweep_fresh_out_dir(d);
         }
         // round 0: the untouched global adapter (B = 0 => base model)
         let nll0 = model.eval_nll_cached(&mut eval_cache, &global[ia],
@@ -593,6 +664,31 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         for c in clients.iter_mut() {
             cum_energy += c.battery.drain(0.0, cfg.round_idle_s);
         }
+        // stale-upload lifecycle, round start: every client's queue —
+        // selected or not — evicts blobs older than `drop_stale_after`
+        // rounds.  Age-based eviction is what bounds a passed-over
+        // client's backlog now (it replaces PR-4's blanket
+        // abandon-on-skip: the blob payload rides the queue, so a late
+        // completion is still aggregatable and worth keeping for K
+        // rounds), and it keeps the bandwidth policy's estimate from
+        // being inflated forever.  The correlated-outage chain also
+        // advances here for every client — a cell is congested whether
+        // or not its phone trains this round.
+        let mut bytes_dropped_stale = 0u64;
+        // radio already spent on blobs that get evicted delivered
+        // nothing and resumes nothing: reconciled from provisional
+        // stale progress into this round's wasted bytes, so the
+        // K-policy radio-cost comparison sees the true waste
+        let mut bytes_wasted = 0u64;
+        for c in clients.iter_mut() {
+            let (dropped, transmitted) =
+                c.evict_stale(round, cfg.drop_stale_after);
+            bytes_dropped_stale += dropped;
+            bytes_wasted += transmitted;
+            if let Some(reg) = &cfg.link_regime {
+                c.advance_link_regime(reg);
+            }
+        }
         let statuses: Vec<ClientStatus> = clients
             .iter_mut()
             .map(|c| c.sample_status(cfg, adapter_bytes))
@@ -609,19 +705,6 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         for &id in &sel.selected {
             in_round[id] = true;
         }
-        // a client passed over this round has no transfer left to
-        // resume — the coordinator-side partial blob belongs to a round
-        // that is gone — so its dangling upload offset is abandoned.
-        // Without this, one truncated upload could starve a client under
-        // the bandwidth policy forever: the backlog inflates its
-        // estimate past the (fixed) deadline, it gets skipped, and a
-        // skipped client never reaches the upload leg where a backlog
-        // drains.
-        for c in clients.iter_mut() {
-            if !in_round[c.id] {
-                c.abandon_pending_upload();
-            }
-        }
 
         // fan the selected clients' local rounds out over worker
         // threads; `selected` is ascending and the chunked fan-out
@@ -635,28 +718,60 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
                 .filter(|c| in_round[c.id])
                 .collect();
             pool::ordered_map_mut(&mut run, threads, |_, c| {
-                c.run_round(&names, &global, &model, cfg, deadline_s)
+                c.run_round(&names, &global, &model, cfg, round, deadline_s)
             })
         };
         cum_energy += results.iter().map(|u| u.energy_j).sum::<f64>();
 
         // classify: delivered on time / straggler / failed locally /
         // failed on the link.  Only bytes that actually hit the air are
-        // accounted this round: a truncated transfer's remainder rides
-        // the client's resume offset and is charged when retried.
-        // Backlog bytes (an earlier round's interrupted blob) are stale
-        // on arrival, so they are always wasted radio, even when flushed
-        // by an otherwise on-time client.
+        // accounted this round.  Byte fate follows blob fate:
+        //   * a fresh delta that completes on time is delivered
+        //     (`bytes_up`);
+        //   * bytes toward queued blobs — flushed backlog and the
+        //     truncated portion of a fresh delta that joins the queue —
+        //     are stale-transfer progress (`bytes_up_stale`): the
+        //     payload rides the queue and the server can still use it;
+        //   * only transfers with nothing left to resume are wasted
+        //     radio (`bytes_up_wasted`): a failed upload's fresh bytes,
+        //     the fresh partial of a rolled-back (dead) client whose
+        //     blob was never queued, a truncated remainder dropped on
+        //     the spot under `drop_stale_after = 0`, and — reconciled
+        //     in the eviction round — bytes that had been transmitted
+        //     toward a blob that aged or was capacity-evicted out of
+        //     the queue.
+        // Completed queue blobs arrive as `stale_delivered` regardless
+        // of what happened to the client afterwards (a straggling or
+        // dying client's earlier blob still landed) and join the
+        // aggregation cohort at the FedBuff-style discounted weight
+        // `stale_weight^age`.
         let mut ontime: Vec<&ClientUpdate> = Vec::new();
         let mut late: Vec<&ClientUpdate> = Vec::new();
         let mut n_failed = 0usize;
         let mut n_failed_upload = 0usize;
         let mut bytes_delivered = 0u64;
-        let mut bytes_wasted = 0u64;
+        let mut bytes_stale = 0u64;
         let mut bytes_down = 0u64;
         let mut any_link_silent = false;
+        let mut stale_cohort: Vec<ClientUpdate> = Vec::new();
         for u in &results {
             bytes_down += u.bytes_down;
+            bytes_stale += u.bytes_up_backlog;
+            bytes_dropped_stale += u.bytes_dropped_stale;
+            bytes_wasted += u.bytes_wasted_evicted;
+            for sd in &u.stale_delivered {
+                // age >= 1 by construction (a blob can only be retried
+                // in a later round) and <= drop_stale_after (older
+                // blobs were evicted before the upload leg ran)
+                let age = round.saturating_sub(sd.origin_round) as i32;
+                stale_cohort.push(ClientUpdate {
+                    client_id: u.client_id,
+                    n_samples: sd.n_samples,
+                    delta: sd.delta.clone(),
+                    stale_scale: cfg.stale_weight.powi(age),
+                    ..ClientUpdate::default()
+                });
+            }
             // a client that died while a transfer was in flight
             // ([`ClientUpdate::link_silent`]) just went quiet on the
             // link; the coordinator can only discover that by waiting
@@ -665,36 +780,53 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             match &u.failure {
                 Some(ClientFailure::UploadFailed) => {
                     n_failed_upload += 1;
-                    bytes_wasted += u.bytes_up + u.bytes_up_backlog;
+                    bytes_wasted += u.bytes_up;
                 }
                 Some(_) => {
                     n_failed += 1;
-                    bytes_wasted += u.bytes_up + u.bytes_up_backlog;
+                    bytes_wasted += u.bytes_up;
                 }
                 None if u.time_s <= deadline_s && !u.upload_truncated => {
                     bytes_delivered += u.bytes_up;
-                    bytes_wasted += u.bytes_up_backlog;
                     ontime.push(u);
                 }
                 None => {
-                    // without the link model no radio ran: a straggler's
-                    // would-be upload is not "wasted radio bytes"
+                    // a transport straggler's fresh partial joined the
+                    // queue, so its bytes are stale-transfer progress —
+                    // except under --drop-stale-after 0, where the
+                    // client dropped the remainder on the spot and the
+                    // transmitted bytes resume nothing: wasted radio.
+                    // Without the link model no radio ran at all.
                     if cfg.transport {
-                        bytes_wasted += u.bytes_up + u.bytes_up_backlog;
+                        if cfg.drop_stale_after == 0 {
+                            bytes_wasted += u.bytes_up;
+                        } else {
+                            bytes_stale += u.bytes_up;
+                        }
                     }
                     late.push(u);
                 }
             }
         }
+        let n_stale_aggregated = stale_cohort.len();
 
+        // aggregate: the on-time cohort at full weight plus this
+        // round's late blob deliveries at their staleness discount —
+        // MobiLLM-style use of device work that arrives out of band
+        // instead of discarding it.  Order is deterministic: ontime in
+        // client-id order, then stale deliveries in the same order.
         let mut mean_loss = 0.0f64;
-        if !ontime.is_empty() {
-            let delta = agg.aggregate(&ontime)?;
+        let mut cohort: Vec<&ClientUpdate> = ontime.clone();
+        cohort.extend(stale_cohort.iter());
+        if !cohort.is_empty() {
+            let delta = agg.aggregate(&cohort)?;
             for (g, d) in global.iter_mut().zip(&delta) {
                 for (x, &y) in g.iter_mut().zip(d) {
                     *x += y;
                 }
             }
+        }
+        if !ontime.is_empty() {
             mean_loss = ontime.iter().map(|u| u.train_loss).sum::<f64>()
                 / ontime.len() as f64;
         }
@@ -712,10 +844,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             n_stragglers: late.len(),
             n_failed,
             n_failed_upload,
+            n_stale_aggregated,
             mean_train_loss: mean_loss,
             energy_j: cum_energy,
             bytes_up: bytes_delivered,
             bytes_up_wasted: bytes_wasted,
+            bytes_up_stale: bytes_stale,
+            bytes_dropped_stale,
             bytes_down,
             // on-time makespan: the round's virtual wall time is set by
             // the slowest client that made the deadline — dropped
@@ -808,6 +943,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         ("transport", Json::from(cfg.transport)),
         ("upload_fail_prob", Json::from(cfg.upload_fail_prob)),
         ("link_var", Json::from(cfg.link_var)),
+        ("link_regime_p_bad", match &cfg.link_regime {
+            Some(r) => Json::from(r.p_bad),
+            None => Json::Null,
+        }),
+        ("link_regime_factor", match &cfg.link_regime {
+            Some(r) => Json::from(r.factor),
+            None => Json::Null,
+        }),
+        ("drop_stale_after", Json::from(cfg.drop_stale_after)),
+        ("stale_weight", Json::from(cfg.stale_weight)),
         ("initial_nll", Json::from(first.eval_nll)),
         ("final_nll", Json::from(last.eval_nll)),
         ("initial_ppl", Json::from(first.eval_ppl)),
@@ -820,6 +965,9 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             train_rounds.iter().map(|r| r.n_failed).sum::<usize>())),
         ("total_failed_upload", Json::from(
             train_rounds.iter().map(|r| r.n_failed_upload).sum::<usize>())),
+        ("total_stale_aggregated", Json::from(
+            train_rounds.iter().map(|r| r.n_stale_aggregated)
+                .sum::<usize>())),
         ("total_skipped_battery", Json::from(
             train_rounds.iter().map(|r| r.n_skipped_battery).sum::<usize>())),
         ("total_skipped_ram", Json::from(
@@ -832,6 +980,11 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             train_rounds.iter().map(|r| r.bytes_up).sum::<u64>())),
         ("total_bytes_up_wasted", Json::from(
             train_rounds.iter().map(|r| r.bytes_up_wasted).sum::<u64>())),
+        ("total_bytes_up_stale", Json::from(
+            train_rounds.iter().map(|r| r.bytes_up_stale).sum::<u64>())),
+        ("total_bytes_dropped_stale", Json::from(
+            train_rounds.iter().map(|r| r.bytes_dropped_stale)
+                .sum::<u64>())),
         ("total_bytes_down", Json::from(
             train_rounds.iter().map(|r| r.bytes_down).sum::<u64>())),
         ("deadline_s", Json::from(deadline_s)),
@@ -840,6 +993,35 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         std::fs::write(d.join("summary.json"), summary.to_string())?;
     }
     Ok(FleetResult { summary, rounds: records })
+}
+
+/// Parse `--link-regime P_BAD FACTOR` (the CLI layer collects both
+/// operands into one space-joined value; `P_BAD,FACTOR` via `=` works
+/// too) into the config's [`LinkRegime`].
+pub fn parse_link_regime(args: &Args) -> Result<Option<LinkRegime>> {
+    let Some(v) = args.get("link-regime") else {
+        // a bare `--link-regime` (both operands missing — the next
+        // token was another flag) parses as a valueless flag; silently
+        // ignoring it would drop the feature the user asked for
+        if args.has("link-regime") {
+            bail!("--link-regime takes two values (P_BAD FACTOR)");
+        }
+        return Ok(None);
+    };
+    let parts: Vec<&str> = v
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if parts.len() != 2 {
+        bail!("--link-regime takes two values (P_BAD FACTOR), got {v:?}");
+    }
+    let p_bad: f64 = parts[0]
+        .parse()
+        .map_err(|e| anyhow!("--link-regime P_BAD {:?}: {e}", parts[0]))?;
+    let factor: f64 = parts[1]
+        .parse()
+        .map_err(|e| anyhow!("--link-regime FACTOR {:?}: {e}", parts[1]))?;
+    Ok(Some(LinkRegime { p_bad, factor }))
 }
 
 /// Build a [`FleetConfig`] from `mft fleet` flags.
@@ -879,11 +1061,71 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
     cfg.upload_fail_prob =
         args.get_parse("upload-fail-prob", cfg.upload_fail_prob)?;
     cfg.link_var = args.get_parse("link-var", cfg.link_var)?;
+    cfg.link_regime = parse_link_regime(args)?;
+    cfg.drop_stale_after =
+        args.get_parse("drop-stale-after", cfg.drop_stale_after)?;
+    cfg.stale_weight = args.get_parse("stale-weight", cfg.stale_weight)?;
+    // the config layer cannot tell "explicitly set" from the non-zero
+    // defaults, so the explicit-flag-without-transport check lives here
+    // (matching the validate()-level gates on link_var/upload_fail_prob)
+    if !cfg.transport {
+        for f in ["drop-stale-after", "stale-weight"] {
+            if args.has(f) {
+                bail!("--{f} shapes the upload queue, which only exists \
+                       with the transport model (--transport)");
+            }
+        }
+    }
     cfg.resume = args.has("resume");
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.out_dir = args.get("out").map(String::from);
     cfg.validate()?;
     Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn link_regime_flag_parsing() {
+        let r = parse_link_regime(&args("fleet --link-regime 0.3 0.2"))
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.p_bad, 0.3);
+        assert_eq!(r.factor, 0.2);
+        let r = parse_link_regime(&args("fleet --link-regime=0.4,0.5"))
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.p_bad, 0.4);
+        assert_eq!(r.factor, 0.5);
+        assert!(parse_link_regime(&args("fleet")).unwrap().is_none());
+        // one operand, zero operands (next token is a flag) and junk
+        // all error — the flag is never silently dropped
+        assert!(parse_link_regime(&args("fleet --link-regime 0.3"))
+            .is_err());
+        assert!(parse_link_regime(&args("fleet --link-regime --rounds 4"))
+            .is_err());
+        assert!(parse_link_regime(&args("fleet --link-regime a b"))
+            .is_err());
+    }
+
+    #[test]
+    fn stale_knobs_require_transport_when_explicit() {
+        // the stale knobs have non-zero defaults, so the
+        // explicit-without-transport check lives in the CLI layer
+        assert!(fleet_config(&args("fleet --drop-stale-after 3")).is_err());
+        assert!(fleet_config(&args("fleet --stale-weight 0.7")).is_err());
+        assert!(fleet_config(&args(
+            "fleet --transport --drop-stale-after 3 --stale-weight 0.7"))
+            .is_ok());
+        // untouched defaults without transport stay valid
+        assert!(fleet_config(&args("fleet")).is_ok());
+    }
 }
 
 pub fn cmd_fleet(args: &Args) -> Result<()> {
@@ -892,8 +1134,15 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
               cfg.n_clients, cfg.rounds, cfg.dirichlet_alpha, cfg.aggregator,
               cfg.policy.as_str(),
               if cfg.transport {
-                  format!(", transport on (upload fail p={}, link var {})",
-                          cfg.upload_fail_prob, cfg.link_var)
+                  format!(", transport on (upload fail p={}, link var {}{}, \
+                           stale: keep {} rounds @ weight {})",
+                          cfg.upload_fail_prob, cfg.link_var,
+                          match &cfg.link_regime {
+                              Some(r) => format!(", regime p_bad={} x{}",
+                                                 r.p_bad, r.factor),
+                              None => String::new(),
+                          },
+                          cfg.drop_stale_after, cfg.stale_weight)
               } else {
                   String::new()
               });
@@ -904,14 +1153,17 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
                       r.round, r.eval_nll, r.eval_ppl);
         } else {
             eprintln!(
-                "round {:>3}  nll {:.4} (ppl {:>7.1})  agg {}/{} sel  \
-                 skip bat {} ram {} link {}  late {}  fail {}+{}up  \
-                 E {:.2} kJ  up {} KiB (waste {} KiB) down {} KiB",
+                "round {:>3}  nll {:.4} (ppl {:>7.1})  agg {}/{} sel \
+                 +{} stale  skip bat {} ram {} link {}  late {}  \
+                 fail {}+{}up  E {:.2} kJ  up {} KiB (stale {} KiB, \
+                 waste {} KiB, dropped {} KiB) down {} KiB",
                 r.round, r.eval_nll, r.eval_ppl, r.n_aggregated,
-                r.n_selected, r.n_skipped_battery, r.n_skipped_ram,
-                r.n_skipped_link, r.n_stragglers, r.n_failed,
-                r.n_failed_upload, r.energy_j / 1000.0, r.bytes_up / 1024,
-                r.bytes_up_wasted / 1024, r.bytes_down / 1024);
+                r.n_selected, r.n_stale_aggregated, r.n_skipped_battery,
+                r.n_skipped_ram, r.n_skipped_link, r.n_stragglers,
+                r.n_failed, r.n_failed_upload, r.energy_j / 1000.0,
+                r.bytes_up / 1024, r.bytes_up_stale / 1024,
+                r.bytes_up_wasted / 1024, r.bytes_dropped_stale / 1024,
+                r.bytes_down / 1024);
         }
     }
     println!("{}", res.summary);

@@ -27,10 +27,21 @@
 //!   fastest client's compute **plus** its upload leg, so a
 //!   `straggler_factor >= 1` deadline is always achievable), per-round
 //!   bandwidth draws (`link_var`) vary each client's effective rates,
-//!   uploads can fail (seeded per-client draws), and interrupted
-//!   transfers carry a per-client resume offset that is retried before
-//!   the next fresh delta — `bytes_up` splits into delivered vs wasted,
-//!   and `bytes_down` accounts the broadcast;
+//!   correlated outages (`--link-regime P_BAD FACTOR`) run a persistent
+//!   per-client good/congested Markov chain whose bad stretches last
+//!   several rounds, and uploads can fail (seeded per-client draws) —
+//!   `bytes_up` splits into delivered vs stale vs wasted, and
+//!   `bytes_down` accounts the broadcast;
+//! * **stale-upload lifecycle** ([`client::PendingBlob`]) — an upload
+//!   the deadline cuts short parks its remainder *with its delta
+//!   payload* on a bounded, round-tagged queue, flushed oldest-first
+//!   before the next fresh delta.  A blob completing within
+//!   `--drop-stale-after` K rounds is aggregated with the FedBuff-style
+//!   discount `--stale-weight`^age (`n_stale_aggregated` /
+//!   `bytes_up_stale` in the round record); older blobs are evicted
+//!   (`bytes_dropped_stale`), which bounds the queue at K blobs and
+//!   fixes the PR-4 livelock where a perpetually-selected straggler's
+//!   backlog grew without bound while delivering nothing;
 //! * [`driver`] — the round loop: select -> local rounds (fanned out
 //!   over coordinator threads via
 //!   [`util::pool`](crate::util::pool), merged in client-id order so
@@ -65,12 +76,14 @@ pub mod select;
 pub mod transport;
 
 pub use aggregate::{make_aggregator, Aggregator, ClientFailure,
-                    ClientUpdate, CoordMedian, FedAvg, TrimmedMean};
-pub use client::{ClientStatus, FleetClient};
+                    ClientUpdate, CoordMedian, FedAvg, StaleDelivery,
+                    TrimmedMean};
+pub use client::{ClientStatus, FleetClient, PendingBlob};
 pub use driver::{cmd_fleet, run_fleet, FleetResult};
 pub use model::BigramRef;
 pub use select::{select_clients, SelectPolicy, SelectionOutcome};
-pub use transport::{draw_link_scales, link_for, LinkProfile, RoundLink};
+pub use transport::{draw_link_scales, link_for, step_link_regime,
+                    LinkProfile, LinkRegime, RoundLink};
 
 use anyhow::{bail, Result};
 
@@ -138,6 +151,25 @@ pub struct FleetConfig {
     /// `[1/(1+link_var), 1+link_var]` drawn from its private net_rng
     /// stream ([`transport::draw_link_scales`]); 0 = fixed nominal links
     pub link_var: f64,
+    /// correlated-outage model (`--link-regime P_BAD FACTOR`, transport
+    /// model): each client runs a persistent two-state good/congested
+    /// Markov chain ([`transport::step_link_regime`]) with stationary
+    /// congested probability `p_bad`; congested rounds scale both link
+    /// directions by `factor`.  Unlike i.i.d. `link_var` draws the
+    /// chain produces multi-round bad stretches — the case that grows
+    /// upload backlogs and stresses bandwidth-aware selection
+    pub link_regime: Option<LinkRegime>,
+    /// staleness budget of the upload queue: an interrupted blob may be
+    /// retried for this many rounds after its origin round, then it is
+    /// evicted (counted as `bytes_dropped_stale`); also the queue's
+    /// capacity, so a client's backlog is bounded by `drop_stale_after`
+    /// blobs.  0 = no stale tolerance (truncated remainders are dropped
+    /// on the spot, PR-3 style but bounded)
+    pub drop_stale_after: usize,
+    /// staleness discount base: a blob delivered `age` rounds late is
+    /// aggregated at weight `stale_weight^age` of its FedAvg share
+    /// (FedBuff/MobiLLM-style server-side use of late device work)
+    pub stale_weight: f64,
     /// resume from `<out_dir>/fleet_ckpt.json` if present (requires
     /// `out_dir`); a fresh run writes the checkpoint every round
     pub resume: bool,
@@ -178,6 +210,9 @@ impl Default for FleetConfig {
             transport: false,
             upload_fail_prob: 0.0,
             link_var: 0.0,
+            link_regime: None,
+            drop_stale_after: 2,
+            stale_weight: 0.5,
             resume: false,
             inject_empty_shard: None,
             seed: 42,
@@ -230,6 +265,23 @@ impl FleetConfig {
         }
         if self.link_var > 0.0 && !self.transport {
             bail!("link_var needs the transport model (--transport)");
+        }
+        if let Some(r) = &self.link_regime {
+            if !(0.0..=1.0).contains(&r.p_bad) || !r.p_bad.is_finite() {
+                bail!("link-regime P_BAD must be a probability in [0,1]");
+            }
+            if !r.factor.is_finite() || r.factor <= 0.0 || r.factor > 1.0 {
+                bail!("link-regime FACTOR must be in (0,1] (a congested \
+                       cell slows the link down, it does not speed it up)");
+            }
+            if !self.transport {
+                bail!("link-regime needs the transport model (--transport)");
+            }
+        }
+        if !self.stale_weight.is_finite() || self.stale_weight <= 0.0
+            || self.stale_weight > 1.0 {
+            bail!("stale-weight must be in (0,1]: a late delta is \
+                   discounted, never amplified");
         }
         if matches!(self.policy, SelectPolicy::Bandwidth) && !self.transport {
             bail!("the bandwidth selection policy gates on estimated \
@@ -297,6 +349,32 @@ mod tests {
         assert!(c.validate().is_err());
         c.link_var = f64::NAN;
         assert!(c.validate().is_err());
+
+        // and the correlated-outage regime chain
+        let mut c = FleetConfig::default();
+        c.link_regime = Some(LinkRegime { p_bad: 0.3, factor: 0.2 });
+        assert!(c.validate().is_err(), "regime without transport");
+        c.transport = true;
+        assert!(c.validate().is_ok());
+        c.link_regime = Some(LinkRegime { p_bad: 1.5, factor: 0.2 });
+        assert!(c.validate().is_err(), "P_BAD is a probability");
+        c.link_regime = Some(LinkRegime { p_bad: 0.3, factor: 0.0 });
+        assert!(c.validate().is_err(), "FACTOR 0 stalls forever");
+        c.link_regime = Some(LinkRegime { p_bad: 0.3, factor: 2.0 });
+        assert!(c.validate().is_err(), "congestion never speeds links up");
+
+        // the staleness discount must discount
+        let mut c = FleetConfig::default();
+        c.stale_weight = 0.0;
+        assert!(c.validate().is_err());
+        c.stale_weight = 1.5;
+        assert!(c.validate().is_err());
+        c.stale_weight = 1.0;
+        assert!(c.validate().is_ok());
+        // drop_stale_after = 0 (no stale tolerance) is a valid policy
+        let mut c = FleetConfig::default();
+        c.drop_stale_after = 0;
+        assert!(c.validate().is_ok());
 
         // bandwidth selection gates on upload estimates, which only
         // exist with the link model

@@ -24,8 +24,21 @@
 //! * transfers are resumable: a client whose upload is cut short (the
 //!   coordinator's deadline passed, or the battery died mid-transfer)
 //!   delivered `elapsed/needed` of its bytes, and the remainder is
-//!   carried as a per-client resume offset that is flushed *before* the
-//!   fresh delta next round ([`crate::fleet::client::FleetClient`]).
+//!   carried as a round-tagged blob on the client's upload queue that is
+//!   flushed oldest-first *before* the fresh delta next round
+//!   ([`crate::fleet::client::PendingBlob`]); a blob that completes
+//!   within `--drop-stale-after` rounds still reaches aggregation with a
+//!   staleness discount, older blobs are evicted;
+//! * outages are *correlated*: with `--link-regime P_BAD FACTOR` each
+//!   client carries a two-state (good/congested) Markov link chain
+//!   ([`step_link_regime`]) advanced once per round from its private
+//!   `net_rng` stream — congested rounds scale both link directions by
+//!   `FACTOR`, and because the chain is persistent
+//!   ([`REGIME_PERSISTENCE`]) bad stretches last several rounds, the
+//!   sustained-congestion case that actually grows upload backlogs and
+//!   stresses bandwidth-aware selection (i.i.d. `--link-var` draws never
+//!   produce it).  The chain's stationary congested probability is
+//!   exactly `P_BAD`.
 //!
 //! Link profiles are keyed by [`sim::DeviceProfile`] name (paper Tab. 3
 //! devices get plausible sustained cellular/Wi-Fi rates; unknown devices
@@ -154,6 +167,49 @@ pub fn draw_link_scales(rng: &mut Pcg, link_var: f64) -> (f64, f64) {
     (up, down)
 }
 
+/// Correlated-outage link model (`--link-regime P_BAD FACTOR`): every
+/// client carries a two-state good/congested Markov chain advanced once
+/// per round.  `p_bad` is the chain's *stationary* congested
+/// probability; `factor` scales both link directions while congested
+/// (e.g. `0.2` = a 5x slowdown — a shared tower at rush hour, not a
+/// different modem).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkRegime {
+    pub p_bad: f64,
+    pub factor: f64,
+}
+
+/// Per-round memory of the regime chain: the probability mass of the
+/// current state that carries over to the next round.  With persistence
+/// `λ` the transition matrix is `P(bad|bad) = λ + (1-λ)·p_bad`,
+/// `P(bad|good) = (1-λ)·p_bad`, which keeps the stationary congested
+/// probability at exactly `p_bad` while making congestion *sticky*: the
+/// expected congested stretch is `1 / ((1-λ)(1-p_bad))` rounds (~5.7
+/// rounds at `p_bad = 0.3`) — the sustained bad-link runs that grow
+/// upload backlogs, which i.i.d. per-round draws essentially never
+/// produce.
+pub const REGIME_PERSISTENCE: f64 = 0.75;
+
+/// Draw a client's initial regime state from the chain's stationary
+/// distribution (one `net_rng` draw; only called when the regime model
+/// is enabled, so regime-free runs leave the stream untouched).
+pub fn init_link_regime(rng: &mut Pcg, regime: &LinkRegime) -> bool {
+    rng.uniform() < regime.p_bad
+}
+
+/// Advance a client's regime chain by one round (one `net_rng` draw) and
+/// return the new state (`true` = congested).
+pub fn step_link_regime(rng: &mut Pcg, regime: &LinkRegime, was_bad: bool)
+                        -> bool {
+    let carry = REGIME_PERSISTENCE;
+    let p = if was_bad {
+        carry + (1.0 - carry) * regime.p_bad
+    } else {
+        (1.0 - carry) * regime.p_bad
+    };
+    rng.uniform() < p
+}
+
 /// Bytes delivered by a transfer of `total` bytes cut short after
 /// `elapsed` of the `needed` seconds (battery death or the coordinator's
 /// deadline).  The floor keeps the count conservative; a transfer that
@@ -271,6 +327,53 @@ mod tests {
         // and a positive var does consume it
         let _ = draw_link_scales(&mut rng, 0.5);
         assert_ne!(rng.state_parts(), before);
+    }
+
+    #[test]
+    fn regime_chain_is_sticky_and_stationary_at_p_bad() {
+        let reg = LinkRegime { p_bad: 0.3, factor: 0.2 };
+        let mut rng = Pcg::new(11);
+        let mut state = init_link_regime(&mut rng, &reg);
+        let (mut bad_rounds, mut bad_after_bad, mut bad_count) = (0usize, 0usize, 0usize);
+        let (mut bad_after_good, mut good_count) = (0usize, 0usize);
+        let n = 20_000;
+        for _ in 0..n {
+            let prev = state;
+            state = step_link_regime(&mut rng, &reg, prev);
+            if prev {
+                bad_count += 1;
+                if state { bad_after_bad += 1; }
+            } else {
+                good_count += 1;
+                if state { bad_after_good += 1; }
+            }
+            if state { bad_rounds += 1; }
+        }
+        // stationary congested fraction ~= p_bad
+        let frac = bad_rounds as f64 / n as f64;
+        assert!((frac - reg.p_bad).abs() < 0.03, "stationary frac {frac}");
+        // persistence: congestion is far stickier than an i.i.d. draw
+        let p_bb = bad_after_bad as f64 / bad_count.max(1) as f64;
+        let p_gb = bad_after_good as f64 / good_count.max(1) as f64;
+        assert!(p_bb > 0.7, "P(bad|bad) = {p_bb} not sticky");
+        assert!(p_gb < 0.15, "P(bad|good) = {p_gb} too jumpy");
+        assert!(p_bb > p_gb * 3.0, "chain has no memory: {p_bb} vs {p_gb}");
+    }
+
+    #[test]
+    fn regime_chain_is_deterministic_per_stream() {
+        let reg = LinkRegime { p_bad: 0.4, factor: 0.5 };
+        let run = || {
+            let mut rng = Pcg::new(3);
+            let mut s = init_link_regime(&mut rng, &reg);
+            let mut states = Vec::new();
+            for _ in 0..64 {
+                s = step_link_regime(&mut rng, &reg, s);
+                states.push(s);
+            }
+            states
+        };
+        assert_eq!(run(), run(), "seeded regime chain must reproduce");
     }
 
     #[test]

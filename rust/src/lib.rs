@@ -27,13 +27,21 @@
 //!   over N simulated devices — non-IID sharding ([`data::partition`]),
 //!   energy/RAM/bandwidth-aware selection ([`fleet::select`]: the
 //!   Oort-style `bandwidth` policy skips clients whose estimated
-//!   compute+upload time cannot make the deadline), a deterministic
-//!   per-device link model ([`fleet::transport`]: download/upload cost
-//!   link time + radio energy, deadlines judged on compute + upload
-//!   *and derived from the fastest client's compute + upload*, seeded
-//!   per-round bandwidth draws (`--link-var`), seeded upload failures,
-//!   partial transfers with per-client resume-from-offset, and
-//!   delivered-vs-wasted byte accounting on both link directions),
+//!   compute+upload time — including their queued upload backlog and
+//!   current link-regime state — cannot make the deadline), a
+//!   deterministic per-device link model ([`fleet::transport`]:
+//!   download/upload cost link time + radio energy, deadlines judged
+//!   on compute + upload *and derived from the fastest client's
+//!   compute + upload*, seeded per-round bandwidth draws
+//!   (`--link-var`), correlated outages (`--link-regime` — persistent
+//!   per-client good/congested Markov chains whose bad stretches span
+//!   rounds), seeded upload failures, and a staleness-aware upload
+//!   queue: an interrupted transfer parks its remainder *with its
+//!   delta payload* as a round-tagged blob, bounded by
+//!   `--drop-stale-after` (age + capacity eviction), and a blob
+//!   completing within that budget is aggregated at the FedBuff-style
+//!   discount `--stale-weight`^age — delivered vs stale vs wasted byte
+//!   accounting on both link directions),
 //!   pluggable aggregation ([`fleet::Aggregator`]: FedAvg in f64 /
 //!   median / trimmed-mean, robust variants on linear-time `select_nth`
 //!   order statistics), local rounds fanned out across coordinator

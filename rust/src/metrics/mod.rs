@@ -101,20 +101,37 @@ pub struct RoundRecord {
     pub n_failed: usize,
     /// clients whose delta upload failed on the link (transport model)
     pub n_failed_upload: usize,
+    /// late blobs that completed their resumed transfer this round and
+    /// were aggregated with the staleness discount `stale_weight^age`
+    /// (FedBuff/MobiLLM-style: late device work is used, not discarded)
+    pub n_stale_aggregated: usize,
     /// mean local train loss over aggregated clients
     pub mean_train_loss: f64,
     /// cumulative fleet energy (J) through this round
     pub energy_j: f64,
-    /// upload bytes that reached aggregation (on-time, successful;
-    /// without the transport model this is the would-be upload size)
+    /// upload bytes that reached aggregation on time at full weight
+    /// (without the transport model this is the would-be upload size)
     pub bytes_up: u64,
-    /// upload bytes burned for nothing — stragglers' partial transfers,
-    /// failed uploads, and stale resume-backlog flushes used the radio
-    /// too (always 0 without the transport model: no radio ran, so
-    /// nothing was wasted).  Only bytes actually transmitted this round
-    /// count; a cut-short transfer's remainder is charged in the round
-    /// that retries it.
+    /// upload bytes burned for nothing — transfers with nothing left to
+    /// resume: failed uploads, the fresh partials of rolled-back (dead)
+    /// clients, remainders dropped on the spot at `drop_stale_after =
+    /// 0`, and — reconciled in the round a blob is evicted — the bytes
+    /// that had been transmitted toward it in earlier rounds (they
+    /// were provisionally `bytes_up_stale` then; cross-round sums of
+    /// stale + wasted therefore intentionally re-count those bytes
+    /// once they are known dead).  Always 0 without the transport
+    /// model: no radio ran, so nothing was wasted.
     pub bytes_up_wasted: u64,
+    /// upload bytes transmitted toward queued blobs this round —
+    /// flushed backlog plus the truncated portion of a fresh delta that
+    /// joined the queue; *provisional* progress toward a stale
+    /// delivery (re-charged as wasted in a later round if the blob is
+    /// evicted before completing)
+    pub bytes_up_stale: u64,
+    /// flushable (never-transmitted) bytes evicted from upload queues
+    /// this round: blobs older than `drop_stale_after` (round-start
+    /// sweep) plus capacity evictions — the work the bound abandons
+    pub bytes_dropped_stale: u64,
     /// downlink bytes the selected clients actually pulled for the
     /// global adapter broadcast this round (partial when a battery died
     /// mid-download; 0 without the transport model)
@@ -147,10 +164,13 @@ impl RoundRecord {
             ("n_stragglers", Json::from(self.n_stragglers)),
             ("n_failed", Json::from(self.n_failed)),
             ("n_failed_upload", Json::from(self.n_failed_upload)),
+            ("n_stale_aggregated", Json::from(self.n_stale_aggregated)),
             ("mean_train_loss", Json::from(self.mean_train_loss)),
             ("energy_j", Json::from(self.energy_j)),
             ("bytes_up", Json::from(self.bytes_up)),
             ("bytes_up_wasted", Json::from(self.bytes_up_wasted)),
+            ("bytes_up_stale", Json::from(self.bytes_up_stale)),
+            ("bytes_dropped_stale", Json::from(self.bytes_dropped_stale)),
             ("bytes_down", Json::from(self.bytes_down)),
             ("time_s", Json::from(self.time_s)),
             ("straggler_time_s", Json::from(self.straggler_time_s)),
@@ -167,6 +187,13 @@ impl RoundRecord {
         let opt_u = |k: &str| -> Result<usize> {
             Ok(j.get(k).map(|v| v.as_usize()).transpose()?.unwrap_or(0))
         };
+        // byte counters go through `as_u64`, never `as_usize`: on a
+        // 32-bit target (a phone — the whole point of this codebase)
+        // `usize` is u32 and a long fleet's cumulative radio traffic
+        // overflows it
+        let opt_u64 = |k: &str| -> Result<u64> {
+            Ok(j.get(k).map(|v| v.as_u64()).transpose()?.unwrap_or(0))
+        };
         Ok(RoundRecord {
             round: j.req("round")?.as_usize()?,
             eval_nll: j.req("eval_nll")?.as_f64()?,
@@ -179,11 +206,14 @@ impl RoundRecord {
             n_stragglers: opt_u("n_stragglers")?,
             n_failed: opt_u("n_failed")?,
             n_failed_upload: opt_u("n_failed_upload")?,
+            n_stale_aggregated: opt_u("n_stale_aggregated")?,
             mean_train_loss: opt_f("mean_train_loss")?,
             energy_j: opt_f("energy_j")?,
-            bytes_up: opt_u("bytes_up")? as u64,
-            bytes_up_wasted: opt_u("bytes_up_wasted")? as u64,
-            bytes_down: opt_u("bytes_down")? as u64,
+            bytes_up: opt_u64("bytes_up")?,
+            bytes_up_wasted: opt_u64("bytes_up_wasted")?,
+            bytes_up_stale: opt_u64("bytes_up_stale")?,
+            bytes_dropped_stale: opt_u64("bytes_dropped_stale")?,
+            bytes_down: opt_u64("bytes_down")?,
             time_s: opt_f("time_s")?,
             straggler_time_s: opt_f("straggler_time_s")?,
             participants: match j.get("participants") {
@@ -361,10 +391,13 @@ mod tests {
                 n_stragglers: 1,
                 n_failed: 1,
                 n_failed_upload: 2,
+                n_stale_aggregated: 3,
                 mean_train_loss: 4.0,
                 energy_j: 100.0 * r as f64,
                 bytes_up: 4096,
                 bytes_up_wasted: 12288,
+                bytes_up_stale: 2048,
+                bytes_dropped_stale: 512,
                 bytes_down: 24576,
                 time_s: 12.5,
                 straggler_time_s: 91.25,
@@ -377,6 +410,36 @@ mod tests {
         }
         let got = read_rounds(&dir).unwrap();
         assert_eq!(got, recs);
+    }
+
+    #[test]
+    fn round_record_byte_counters_roundtrip_past_u32_max() {
+        // the 32-bit-target regression: byte counters used to route
+        // through `as_usize`, truncating anything above u32::MAX on a
+        // phone.  A long fleet's cumulative radio traffic gets there
+        // easily; the JSONL round-trip must carry it exactly.
+        let dir = tdir("u64");
+        let big = u32::MAX as u64;
+        let rec = RoundRecord {
+            round: 1,
+            eval_nll: 3.0,
+            eval_ppl: 20.0,
+            bytes_up: big * 3 + 1,
+            bytes_up_wasted: big + 17,
+            bytes_up_stale: big * 2 + 5,
+            bytes_dropped_stale: big + 1,
+            bytes_down: big * 5 + 999,
+            ..Default::default()
+        };
+        append_round(&dir, &rec).unwrap();
+        let got = read_rounds(&dir).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].bytes_up, big * 3 + 1);
+        assert_eq!(got[0].bytes_up_wasted, big + 17);
+        assert_eq!(got[0].bytes_up_stale, big * 2 + 5);
+        assert_eq!(got[0].bytes_dropped_stale, big + 1);
+        assert_eq!(got[0].bytes_down, big * 5 + 999);
+        assert_eq!(got[0], rec);
     }
 
     #[test]

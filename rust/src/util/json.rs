@@ -62,6 +62,23 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// Read a non-negative integer as `u64` without going through the
+    /// platform-width `usize` (on 32-bit targets — phones — `as_usize`
+    /// silently truncates anything above `u32::MAX`).  JSON numbers are
+    /// f64, so values must stay below 2^53 to round-trip exactly; the
+    /// writer side ([`From<u64>`]) shares that contract, which holds for
+    /// every byte counter this repo serializes (2^53 bytes = 8 PiB).
+    pub fn as_u64(&self) -> Result<u64> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        if f >= 9.0e15 {
+            bail!("integer {f} too large to carry exactly in JSON (f64)");
+        }
+        Ok(f as u64)
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -427,6 +444,20 @@ mod tests {
         assert_eq!(Json::Num(7.0).as_usize().unwrap(), 7);
         assert!(Json::Num(7.5).as_usize().is_err());
         assert!(Json::Num(-1.0).as_usize().is_err());
+    }
+
+    #[test]
+    fn as_u64_carries_values_past_u32_max() {
+        // the 32-bit-target trap as_usize has: byte counters above
+        // u32::MAX must survive a write/parse cycle exactly
+        let big: u64 = u32::MAX as u64 * 3 + 17;
+        let j = Json::from(big);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.as_u64().unwrap(), big);
+        assert!(Json::Num(-1.0).as_u64().is_err());
+        assert!(Json::Num(0.5).as_u64().is_err());
+        // past 2^53 an f64 cannot carry the integer exactly: refuse
+        assert!(Json::Num(1.0e16).as_u64().is_err());
     }
 
     #[test]

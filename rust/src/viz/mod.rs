@@ -115,8 +115,13 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     } else {
         String::new()
     };
+    let stale = if last.n_stale_aggregated > 0 {
+        format!(" +{} stale", last.n_stale_aggregated)
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "agg   {:>4}/{:<4}  {}   skip bat {} ram {}{link_skips}  \
+        "agg   {:>4}/{:<4}{stale}  {}   skip bat {} ram {}{link_skips}  \
          late {}{fails}\n",
         last.n_aggregated, last.n_selected, sparkline(&parts, 40),
         last.n_skipped_battery, last.n_skipped_ram, last.n_stragglers));
@@ -125,11 +130,23 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     } else {
         String::new()
     };
-    let waste = if last.bytes_up_wasted > 0 {
-        format!(" (waste {} B)", last.bytes_up_wasted)
-    } else {
-        String::new()
-    };
+    let mut waste = String::new();
+    if last.bytes_up_stale > 0 || last.bytes_up_wasted > 0
+        || last.bytes_dropped_stale > 0 {
+        waste.push_str(" (");
+        let mut parts_s: Vec<String> = Vec::new();
+        if last.bytes_up_stale > 0 {
+            parts_s.push(format!("stale {} B", last.bytes_up_stale));
+        }
+        if last.bytes_up_wasted > 0 {
+            parts_s.push(format!("waste {} B", last.bytes_up_wasted));
+        }
+        if last.bytes_dropped_stale > 0 {
+            parts_s.push(format!("dropped {} B", last.bytes_dropped_stale));
+        }
+        waste.push_str(&parts_s.join(", "));
+        waste.push(')');
+    }
     let down = if last.bytes_down > 0 {
         format!("   down {} B", last.bytes_down)
     } else {
@@ -224,9 +241,12 @@ mod tests {
                 n_stragglers: 1,
                 n_failed: 1,
                 n_failed_upload: 2,
+                n_stale_aggregated: 2,
                 energy_j: 1500.0,
                 bytes_up: 32768,
                 bytes_up_wasted: 8192,
+                bytes_up_stale: 4096,
+                bytes_dropped_stale: 1024,
                 bytes_down: 65536,
                 time_s: 42.0,
                 straggler_time_s: 97.5,
@@ -238,11 +258,14 @@ mod tests {
         assert!(s.contains("round 2/4"), "{s}");
         assert!(s.contains("eval"), "{s}");
         assert!(s.contains("5/6"), "{s}");
+        assert!(s.contains("+2 stale"), "{s}");
         assert!(s.contains("skip bat 2"), "{s}");
         assert!(s.contains("link 3"), "{s}");
         assert!(s.contains("late 1"), "{s}");
         assert!(s.contains("fail 1 up-fail 2"), "{s}");
+        assert!(s.contains("stale 4096 B"), "{s}");
         assert!(s.contains("waste 8192 B"), "{s}");
+        assert!(s.contains("dropped 1024 B"), "{s}");
         assert!(s.contains("down 65536 B"), "{s}");
         assert!(s.contains("late t 97.5s"), "{s}");
         // no stragglers/failures/skips -> no clutter
@@ -250,13 +273,18 @@ mod tests {
         quiet[1].straggler_time_s = 0.0;
         quiet[1].n_failed = 0;
         quiet[1].n_failed_upload = 0;
+        quiet[1].n_stale_aggregated = 0;
         quiet[1].bytes_up_wasted = 0;
+        quiet[1].bytes_up_stale = 0;
+        quiet[1].bytes_dropped_stale = 0;
         quiet[1].bytes_down = 0;
         quiet[1].n_skipped_link = 0;
         let qs = render_fleet(&quiet, Some(4));
         assert!(!qs.contains("late t"));
         assert!(!qs.contains("fail"), "{qs}");
         assert!(!qs.contains("waste"), "{qs}");
+        assert!(!qs.contains("stale"), "{qs}");
+        assert!(!qs.contains("dropped"), "{qs}");
         assert!(!qs.contains("down"), "{qs}");
         assert!(!qs.contains("link"), "{qs}");
     }

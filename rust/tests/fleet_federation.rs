@@ -14,11 +14,20 @@
 //!     are judged on compute **plus upload** — the fastest client always
 //!     makes a `straggler_factor >= 1` deadline (the PR-3 regression),
 //!     while a disproportionately slow uplink still flips a client late;
-//!   * uploads the deadline or a dying battery cuts short deliver only
-//!     the bytes that fit; the remainder resumes from a per-client
-//!     offset next round, surviving `--resume` bit-for-bit;
-//!   * per-round bandwidth draws (`--link-var`) keep every determinism
-//!     contract (thread counts, resume);
+//!   * uploads the deadline cuts short deliver only the bytes that fit;
+//!     the remainder parks on a bounded round-tagged queue (payload
+//!     included), blobs completing within `--drop-stale-after` rounds
+//!     are aggregated with the `--stale-weight`^age discount, older
+//!     blobs are evicted — a perpetually-selected slow-uplink client
+//!     keeps delivering late deltas instead of livelocking on an
+//!     unbounded backlog (the PR-4 pathology this PR fixes);
+//!   * per-round bandwidth draws (`--link-var`) and the correlated
+//!     outage chain (`--link-regime`) keep every determinism contract
+//!     (thread counts, resume — the queue and chain state ride
+//!     `fleet_ckpt.json` v3);
+//!   * a fresh (non-`--resume`) start sweeps *every* artifact of a
+//!     previous run in the out dir, `summary.json` and
+//!     `adapter.safetensors` included;
 //!   * the `bandwidth` selection policy skips clients whose estimated
 //!     compute+upload time cannot make the deadline (`skipped_link`);
 //!   * faults never abort the run: degenerate shards, mid-round battery
@@ -374,9 +383,13 @@ fn slow_uplink_flips_on_time_client_to_straggler() {
     assert_eq!(r.bytes_up, adapter_bytes * r.n_aggregated as u64);
     // the stragglers were cut off at the deadline mid-upload: they
     // burned real but *partial* radio bytes (the PR-3 model charged the
-    // full blob), and the remainder rides their resume offsets
-    assert!(r.bytes_up_wasted > 0, "{r:?}");
-    assert!(r.bytes_up_wasted < adapter_bytes * r.n_stragglers as u64,
+    // full blob).  Those bytes are progress toward a queued blob the
+    // server can still aggregate later — stale-transfer bytes, not
+    // wasted radio
+    assert_eq!(r.bytes_up_wasted, 0,
+               "a queued blob's partial transfer is not waste: {r:?}");
+    assert!(r.bytes_up_stale > 0, "{r:?}");
+    assert!(r.bytes_up_stale < adapter_bytes * r.n_stragglers as u64,
             "a cut-short upload must charge only the transmitted bytes: \
              {r:?}");
     // every selected client pulled the full broadcast
@@ -426,7 +439,8 @@ fn bandwidth_policy_skips_slow_uplink_clients_resource_selects() {
         assert_eq!(r.n_selected, 8, "resource selects everyone: {r:?}");
         assert_eq!(r.n_stragglers, 2, "and the nova9s straggle: {r:?}");
         assert_eq!(r.n_skipped_link, 0);
-        assert!(r.bytes_up_wasted > 0);
+        assert!(r.bytes_up_stale > 0,
+                "truncated uploads put stale bytes on the air: {r:?}");
     }
 
     let mut bw_cfg = res_cfg.clone();
@@ -443,6 +457,8 @@ fn bandwidth_policy_skips_slow_uplink_clients_resource_selects() {
                     && !r.participants.contains(&5), "{r:?}");
         assert_eq!(r.bytes_up_wasted, 0,
                    "no stragglers -> no wasted radio: {r:?}");
+        assert_eq!(r.bytes_up_stale, 0,
+                   "no truncations -> no stale transfer bytes: {r:?}");
     }
     assert_eq!(res.summary.get("total_skipped_link").unwrap()
                    .as_f64().unwrap() as usize,
@@ -451,26 +467,45 @@ fn bandwidth_policy_skips_slow_uplink_clients_resource_selects() {
                "bandwidth");
 }
 
-/// A client passed over for a round must abandon its dangling upload
-/// offset (the coordinator-side partial blob belongs to a finished
-/// round; under the bandwidth policy an undrainable backlog would also
-/// inflate the estimate past the fixed deadline forever).  Pinned
-/// through the checkpoint, which persists each client's `pending_up`:
-/// nova9 client 1 starts just above mu, is selected and cut off
-/// mid-upload in round 1 (backlog > 0), then the between-round idle
-/// drain pushes it below mu, round 2 battery-skips it, and being passed
-/// over must zero its offset — while nova9 client 5 (healthy battery)
-/// stays selected, keeps straggling, and keeps a nonzero backlog.
-#[test]
-fn passed_over_client_abandons_upload_backlog() {
+/// Read each client's queued-blob count and flushable byte total out of
+/// `fleet_ckpt.json` (v3 persists the whole queue per client).
+fn ckpt_queues(dir: &std::path::Path, n: usize) -> Vec<(usize, u64)> {
     use mft::util::json::Json;
-    let dir = tdir("abandon");
+    let txt = std::fs::read_to_string(dir.join("fleet_ckpt.json")).unwrap();
+    let j = Json::parse(&txt).unwrap();
+    let mut out = vec![(0usize, 0u64); n];
+    for c in j.req("clients").unwrap().as_arr().unwrap() {
+        let id = c.req("id").unwrap().as_usize().unwrap();
+        let blobs = c.req("pending").unwrap().as_arr().unwrap();
+        let left: u64 = blobs
+            .iter()
+            .map(|b| b.req("left").unwrap().as_str().unwrap()
+                .parse::<u64>().unwrap())
+            .sum();
+        out[id] = (blobs.len(), left);
+    }
+    out
+}
+
+/// A passed-over client's backlog is governed by the *staleness* policy
+/// now, not a blanket abandon-on-skip: its queued blob (payload
+/// included) stays deliverable while younger than `drop_stale_after`
+/// rounds — the server can still use a late delta — and is evicted
+/// after that, so the queue (and the bandwidth policy's estimate it
+/// feeds) stays bounded even for a client that is never selected again.
+/// Scenario: nova9 id1 starts just above mu, is selected and truncated
+/// in round 1 (blob queued), drains below mu and is battery-skipped
+/// from round 2 on.  With K=2 its round-1 blob survives rounds 2-3 and
+/// is evicted at round 4 (`bytes_dropped_stale`); nova9 id5 stays
+/// selected, keeps straggling, and keeps a bounded (<= K) queue.
+#[test]
+fn passed_over_client_backlog_is_bounded_by_eviction() {
+    let dir = tdir("evict");
     let mut cfg = transport_cfg();
-    cfg.rounds = 2;
+    cfg.rounds = 4;
     // battery spacing 0.55 + 0.42*i/7: id1 (nova9) sits at 0.61 — above
     // mu=0.6 after one idle drain (~0.87%/round), below it after two;
-    // id0 (p50, 0.55) is battery-skipped from the start, everyone else
-    // stays comfortably above mu for both rounds
+    // id0 (p50, 0.55) is battery-skipped from the start
     cfg.battery_min = 0.55;
     cfg.battery_max = 0.97;
     cfg.out_dir = Some(dir.display().to_string());
@@ -481,26 +516,48 @@ fn passed_over_client_abandons_upload_backlog() {
     assert_eq!(r1.n_skipped_battery, 1, "only id0 skipped: {r1:?}");
     assert_eq!(r1.n_selected, 7, "{r1:?}");
     assert_eq!(r1.n_stragglers, 2, "both nova9s cut off: {r1:?}");
-    // round 2: id1 has drained below mu and is passed over
-    let r2 = &res.rounds[2];
-    assert_eq!(r2.n_skipped_battery, 2, "ids 0 and 1 skipped: {r2:?}");
-    assert_eq!(r2.n_selected, 6, "{r2:?}");
-    assert_eq!(r2.n_stragglers, 1, "only nova9 id5 still late: {r2:?}");
-
-    // the round-2 checkpoint holds the post-abandonment offsets
-    let txt = std::fs::read_to_string(dir.join("fleet_ckpt.json")).unwrap();
-    let j = Json::parse(&txt).unwrap();
-    let mut pending = vec![String::new(); 8];
-    for c in j.req("clients").unwrap().as_arr().unwrap() {
-        let id = c.req("id").unwrap().as_usize().unwrap();
-        pending[id] = c.req("pending_up").unwrap().as_str().unwrap()
-            .to_string();
+    // round 2 on: id1 has drained below mu and is passed over
+    for r in &res.rounds[2..] {
+        assert_eq!(r.n_skipped_battery, 2,
+                   "round {}: ids 0 and 1 skipped: {r:?}", r.round);
+        assert_eq!(r.n_stragglers, 1,
+                   "round {}: only nova9 id5 still late: {r:?}", r.round);
     }
-    assert_eq!(pending[1], "0",
-               "passed-over client 1 must abandon its backlog: {pending:?}");
-    assert_ne!(pending[5], "0",
-               "still-selected straggler 5 keeps its backlog: {pending:?}");
-    assert_eq!(pending[0], "0", "never-selected client has no backlog");
+    // rounds 2 and 3: id1's blob is younger than K=2, still deliverable
+    assert_eq!(res.rounds[2].bytes_dropped_stale, 0, "{:?}", res.rounds[2]);
+    // round 4: the round-1 blob ages out (age 3 > K) and is evicted;
+    // id5's capacity evictions land here too
+    let total_dropped: u64 = res.rounds[1..]
+        .iter()
+        .map(|r| r.bytes_dropped_stale)
+        .sum();
+    assert!(total_dropped > 0,
+            "the aged-out blob must be charged as dropped: {:?}",
+            &res.rounds[1..]);
+    assert!(res.rounds[4].bytes_dropped_stale > 0,
+            "id1's round-1 blob ages out exactly at round 4: {:?}",
+            res.rounds[4]);
+    // the bytes round 1 transmitted toward that blob delivered nothing:
+    // the eviction round reconciles them from provisional stale
+    // progress into wasted radio
+    assert!(res.rounds[4].bytes_up_wasted > 0,
+            "evicted-blob transmitted bytes must be re-charged as \
+             wasted: {:?}", res.rounds[4]);
+
+    // the final checkpoint: id1's queue is empty again (evicted, not
+    // abandoned on the skip itself), id5's stays bounded by K, and the
+    // never-selected id0 never queued anything
+    let queues = ckpt_queues(&dir, 8);
+    assert_eq!(queues[1].0, 0,
+               "passed-over id1's blob must have aged out: {queues:?}");
+    assert_eq!(queues[0], (0, 0), "never-selected client has no backlog");
+    assert!(queues[5].0 >= 1 && queues[5].0 <= cfg.drop_stale_after,
+            "still-selected straggler id5 keeps a bounded queue: \
+             {queues:?}");
+    let adapter_bytes = res.summary.get("adapter_bytes").unwrap()
+        .as_f64().unwrap() as u64;
+    assert!(queues[5].1 <= cfg.drop_stale_after as u64 * adapter_bytes,
+            "id5's flushable backlog must stay bounded: {queues:?}");
 }
 
 /// Satellite fix: a round where *every* selected client failed locally
@@ -615,6 +672,12 @@ fn checkpoint_resume_matches_uninterrupted_run() {
         cfg.transport = true;
         cfg.upload_fail_prob = 0.25;
         cfg.link_var = 0.5;
+        // the ckpt-v3 state rides along: per-client regime chain bits
+        // and the upload queue must both resume exactly
+        cfg.link_regime = Some(mft::fleet::LinkRegime {
+            p_bad: 0.3,
+            factor: 0.3,
+        });
         cfg.battery_min = 0.4;
         cfg.battery_max = 1.0;
         cfg.out_dir = Some(dir.display().to_string());
@@ -648,9 +711,11 @@ fn checkpoint_resume_matches_uninterrupted_run() {
 }
 
 /// The determinism contract extended to the adaptive-transport layer:
-/// per-round bandwidth draws, deadline-truncated partial uploads and
-/// resume-offset carry-over are all client-local state, so records and
-/// artifacts stay bitwise identical for any thread count.
+/// per-round bandwidth draws, the correlated-outage regime chain,
+/// deadline-truncated partial uploads, the stale upload queue and its
+/// late deliveries are all client-local state, so records and artifacts
+/// stay bitwise identical for any thread count — the acceptance
+/// criterion for the staleness/outage stack.
 #[test]
 fn variable_link_partial_uploads_bitwise_identical_across_threads() {
     let run_with = |threads: usize, tag: &str| {
@@ -659,8 +724,12 @@ fn variable_link_partial_uploads_bitwise_identical_across_threads() {
         cfg.rounds = 3;
         cfg.link_var = 0.8;
         cfg.upload_fail_prob = 0.5;
+        cfg.link_regime = Some(mft::fleet::LinkRegime {
+            p_bad: 0.4,
+            factor: 0.3,
+        });
         // tight deadline: the p50s' uploads are always cut short at the
-        // deadline (partial bytes + resume offsets every round), the
+        // deadline (partial bytes + queued blobs every round), the
         // nova9s are late on compute alone, iqoo/macbook complete and
         // feed the upload-failure draws
         cfg.straggler_factor = 4.0;
@@ -673,11 +742,14 @@ fn variable_link_partial_uploads_bitwise_identical_across_threads() {
     // the paths under test must actually fire
     let stragglers: usize =
         res1.rounds.iter().map(|r| r.n_stragglers).sum();
+    let stale_bytes: u64 =
+        res1.rounds.iter().map(|r| r.bytes_up_stale).sum();
     let wasted: u64 = res1.rounds.iter().map(|r| r.bytes_up_wasted).sum();
     let upfail: usize =
         res1.rounds.iter().map(|r| r.n_failed_upload).sum();
     assert!(stragglers > 0, "no stragglers — deadline not tight enough");
-    assert!(wasted > 0, "no partial-upload bytes were charged");
+    assert!(stale_bytes > 0, "no queued-blob bytes were charged");
+    assert!(wasted > 0, "no failed-upload bytes were charged");
     assert!(upfail > 0, "upload-failure path never fired");
     for threads in [2usize, 4] {
         let (dirn, resn) = run_with(threads, &threads.to_string());
@@ -697,11 +769,13 @@ fn variable_link_partial_uploads_bitwise_identical_across_threads() {
     }
 }
 
-/// Partial-upload resume offsets survive `mft fleet --resume`: kill a
-/// run whose clients carry nonzero pending-upload backlogs across the
-/// checkpoint boundary, resume it, and the completed run must match the
-/// uninterrupted one bit-for-bit.  (If the offsets were not persisted,
-/// the resumed rounds would upload less, finish earlier and diverge.)
+/// The upload queue — round-tagged blobs with their delta payloads —
+/// survives `mft fleet --resume`: kill a run whose clients carry queued
+/// blobs across the checkpoint boundary, resume it, and the completed
+/// run must match the uninterrupted one bit-for-bit (late deliveries,
+/// staleness discounts, evictions and all).  If the blobs or their
+/// payload bits were not persisted exactly, the resumed rounds would
+/// upload less, aggregate different deltas and diverge.
 #[test]
 fn partial_upload_resume_offsets_survive_fleet_resume() {
     let base = |dir: &PathBuf| {
@@ -715,10 +789,10 @@ fn partial_upload_resume_offsets_survive_fleet_resume() {
     };
     let dir_a = tdir("poff-straight");
     let res_a = run_fleet(&base(&dir_a)).unwrap();
-    // pending offsets must exist at the crash point for this test to
-    // pin anything: the crash-prefix rounds saw cut-short uploads
+    // queued blobs must exist at the crash point for this test to pin
+    // anything: the crash-prefix rounds saw cut-short uploads
     assert!(res_a.rounds[1..=2].iter()
-                .any(|r| r.n_stragglers > 0 && r.bytes_up_wasted > 0),
+                .any(|r| r.n_stragglers > 0 && r.bytes_up_stale > 0),
             "no partial uploads before the crash point: {:?}",
             &res_a.rounds[1..=2]);
 
@@ -755,6 +829,181 @@ fn resume_rejects_a_different_config() {
     other.resume = true;
     let err = run_fleet(&other).unwrap_err().to_string();
     assert!(err.contains("different config"), "{err}");
+}
+
+/// THE livelock regression this PR exists for (ROADMAP "stale-blob
+/// abandonment policy"): under `--select resource --transport` a
+/// perpetually-selected slow-uplink client (nova9) whose deadline only
+/// ever fits ~80% of a fresh upload used to grow `pending_up_bytes`
+/// without bound — every round queued a fresh delta behind the old
+/// blob, burned radio, and never delivered anything again.  With the
+/// staleness-aware queue the backlog is bounded by `drop_stale_after`
+/// blobs and (nearly) every round's delta still reaches the aggregator
+/// within K rounds as a discounted stale delivery.
+#[test]
+fn slow_uplink_straggler_keeps_delivering_instead_of_livelocking() {
+    let dir = tdir("livelock");
+    let mut cfg = transport_cfg();
+    cfg.rounds = 6;
+    cfg.policy = SelectPolicy::Resource;
+    // deadline = 21 x the fastest (macbook) compute+upload ≈ 50ms: the
+    // nova9s (10.2ms compute + 49ms full upload) get ~80% of a fresh
+    // upload per round — never on time, but every blob finishes within
+    // two retries; every other device is comfortably on time
+    cfg.straggler_factor = 21.0;
+    cfg.out_dir = Some(dir.display().to_string());
+    let res = run_fleet(&cfg).unwrap();
+
+    let k = cfg.drop_stale_after;
+    let mut stale_total = 0usize;
+    for r in &res.rounds[1..] {
+        assert_eq!(r.n_selected, 8,
+                   "round {}: resource keeps selecting: {r:?}", r.round);
+        assert_eq!(r.n_stragglers, 2,
+                   "round {}: both nova9s stay late: {r:?}", r.round);
+        assert_eq!(r.n_aggregated, 6, "round {}: {r:?}", r.round);
+        stale_total += r.n_stale_aggregated;
+        assert!(r.bytes_up_stale > 0,
+                "round {}: the queue keeps flushing: {r:?}", r.round);
+    }
+    // the fix: the stragglers' work keeps landing — late and
+    // discounted, but aggregated, within K+1 rounds of its origin
+    assert!(stale_total >= 6,
+            "nova9 deltas must keep reaching the aggregator as stale \
+             deliveries, got {stale_total} over {} rounds", cfg.rounds);
+    assert_eq!(res.summary.get("total_stale_aggregated").unwrap()
+                   .as_f64().unwrap() as usize,
+               stale_total);
+    // and the backlog is bounded: final queues hold <= K blobs and
+    // <= K adapters of flushable bytes (the raw counter grew by a
+    // fifth of an adapter every round, forever)
+    let adapter_bytes = res.summary.get("adapter_bytes").unwrap()
+        .as_f64().unwrap() as u64;
+    let queues = ckpt_queues(&dir, 8);
+    for (id, (len, left)) in queues.iter().enumerate() {
+        assert!(*len <= k, "client {id}: queue {len} exceeds K={k}");
+        assert!(*left <= k as u64 * adapter_bytes,
+                "client {id}: flushable backlog {left} unbounded");
+    }
+    // the proportionate-link clients never queue at all
+    for id in [0usize, 2, 3, 4, 6, 7] {
+        assert_eq!(queues[id], (0, 0), "client {id} should not queue");
+    }
+}
+
+/// `--drop-stale-after 0` means no stale tolerance: a truncated fresh
+/// remainder is dropped on the spot, nothing is ever queued, and the
+/// bytes a straggler did put on the air resume nothing — wasted radio,
+/// not stale-transfer progress (the bounded PR-3-style policy, for
+/// comparing radio cost against the queueing one).
+#[test]
+fn zero_stale_budget_wastes_truncated_fresh_bytes() {
+    let mut cfg = transport_cfg();
+    cfg.rounds = 2;
+    cfg.drop_stale_after = 0;
+    let res = run_fleet(&cfg).unwrap();
+    for r in &res.rounds[1..] {
+        assert_eq!(r.n_stragglers, 2, "round {}: {r:?}", r.round);
+        assert_eq!(r.n_stale_aggregated, 0,
+                   "nothing can deliver late at K=0: {r:?}");
+        assert_eq!(r.bytes_up_stale, 0,
+                   "nothing is queued at K=0: {r:?}");
+        assert!(r.bytes_up_wasted > 0,
+                "a dropped remainder's on-air bytes are wasted: {r:?}");
+        assert!(r.bytes_dropped_stale > 0,
+                "the dropped remainder is charged: {r:?}");
+    }
+}
+
+/// Satellite fix: a fresh (non-`--resume`) start must sweep *every*
+/// artifact of a previous run — `summary.json` and
+/// `adapter.safetensors` included.  The old sweep left those two
+/// behind, so a fresh run that crashed mid-way left a directory
+/// reading as a *completed* older run.
+#[test]
+fn fresh_start_sweeps_summary_and_adapter_too() {
+    use mft::fleet::driver::sweep_fresh_out_dir;
+    let dir = tdir("sweep");
+    std::fs::create_dir_all(&dir).unwrap();
+    let stale_files = ["rounds.jsonl", "fleet_ckpt.json", "summary.json",
+                       "adapter.safetensors",
+                       "ckpt_client_0_r3.safetensors",
+                       "ckpt_global_r3.safetensors"];
+    for f in stale_files {
+        std::fs::write(dir.join(f), b"stale marker").unwrap();
+    }
+    std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+    sweep_fresh_out_dir(&dir);
+    for f in stale_files {
+        assert!(!dir.join(f).exists(), "{f} survived the fresh sweep");
+    }
+    assert!(dir.join("notes.txt").exists(),
+            "files the fleet never writes must be left alone");
+
+    // end-to-end: run_fleet on a dir holding a previous run's outputs
+    // goes through the same sweep, and what is left afterwards is this
+    // run's own output, not the marker
+    for f in ["summary.json", "adapter.safetensors"] {
+        std::fs::write(dir.join(f), b"stale marker").unwrap();
+    }
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.out_dir = Some(dir.display().to_string());
+    let res = run_fleet(&cfg).unwrap();
+    let summary = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+    assert!(!summary.contains("stale marker"));
+    assert_eq!(summary, res.summary.to_string());
+    let adapter = std::fs::read(dir.join("adapter.safetensors")).unwrap();
+    assert_ne!(adapter, b"stale marker".to_vec());
+}
+
+/// Correlated outages end-to-end: with `--link-regime` the per-client
+/// chains produce congested rounds (sticky, multi-round stretches) that
+/// slow real transfers, and the whole model — chain state included —
+/// stays deterministic per seed.
+#[test]
+fn link_regime_produces_congestion_and_stays_deterministic() {
+    let mut cfg = transport_cfg();
+    cfg.rounds = 4;
+    // everyone healthy, roomy deadline: isolate the regime's effect on
+    // round time rather than on classification
+    cfg.straggler_factor = 500.0;
+    cfg.link_regime = Some(mft::fleet::LinkRegime {
+        p_bad: 0.5,
+        factor: 0.1,
+    });
+    let a = run_fleet(&cfg).unwrap();
+    let b = run_fleet(&cfg).unwrap();
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra, rb, "round {} diverged", ra.round);
+        assert_eq!(ra.time_s.to_bits(), rb.time_s.to_bits());
+    }
+    assert_eq!(a.summary.get("link_regime_p_bad").unwrap()
+                   .as_f64().unwrap(), 0.5);
+    assert_eq!(a.summary.get("link_regime_factor").unwrap()
+                   .as_f64().unwrap(), 0.1);
+
+    // congestion must show up in the physics.  p_bad = 1 pins every
+    // chain in the congested state (stationary probability 1, and the
+    // transition to bad is then certain too), so the slowdown check is
+    // deterministic — the *stochastic* properties of the chain
+    // (stickiness, stationarity at p_bad) are unit-tested in
+    // fleet::transport
+    let mut always_bad = cfg.clone();
+    always_bad.link_regime = Some(mft::fleet::LinkRegime {
+        p_bad: 1.0,
+        factor: 0.1,
+    });
+    let bad = run_fleet(&always_bad).unwrap();
+    let mut plain = cfg.clone();
+    plain.link_regime = None;
+    let p = run_fleet(&plain).unwrap();
+    for (rb, rp) in bad.rounds[1..].iter().zip(&p.rounds[1..]) {
+        assert!(rb.time_s > rp.time_s * 1.5,
+                "round {}: a permanently congested fleet must run its \
+                 uploads ~10x slower: {} vs {}", rb.round, rb.time_s,
+                rp.time_s);
+    }
 }
 
 #[test]

@@ -311,6 +311,38 @@ fn bench_fleet(args: &Args) -> Result<()> {
                determinism contract broken");
     }
 
+    // -- round loop phase profile: one --profile transport run, so the
+    // baseline file says where the round's wall time actually goes
+    // (select vs local rounds vs aggregate vs eval); wall-clock values
+    // are machine-dependent by nature, so this cell has no pinned
+    // expectations — it is the measurement --
+    let profile_cell = {
+        let mut cfg = fleet_cfg.clone();
+        cfg.transport = true;
+        cfg.upload_fail_prob = 0.1;
+        cfg.link_var = 0.5;
+        cfg.profile = true;
+        let res = run_fleet(&cfg).expect("bench profile run failed");
+        let phases = res.summary.get("profile").cloned()
+            .unwrap_or(Json::Null);
+        if let Ok(obj) = phases.as_obj() {
+            for (name, p) in obj {
+                let g = |k: &str| p.get(k)
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0);
+                eprintln!(
+                    "[bench] round phase    {name}: mean {:.3}ms p95 \
+                     {:.3}ms total {:.3}ms",
+                    g("mean_ms"), g("p95_ms"), g("total_ms"));
+            }
+        }
+        Json::obj(vec![
+            ("clients", Json::from(cfg.n_clients)),
+            ("rounds", Json::from(cfg.rounds)),
+            ("phases", phases),
+        ])
+    };
+
     let j = Json::obj(vec![
         ("bench", Json::from("fleet")),
         ("quick", Json::from(quick)),
@@ -363,6 +395,7 @@ fn bench_fleet(args: &Args) -> Result<()> {
             ("deterministic", Json::from(tr_deterministic)),
             ("cells", Json::Arr(tr_cells)),
         ])),
+        ("round_loop_profile", profile_cell),
     ]);
     std::fs::write(&out_path, j.to_string())?;
     println!("[bench] wrote {}", out_path.display());

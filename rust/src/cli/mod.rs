@@ -8,6 +8,7 @@
 //!                            spawns `mft train` workers for clean RSS)
 //!   mft agent [flags]        the campus health-agent case study
 //!   mft bench fleet [flags]  fleet perf benchmarks -> BENCH_fleet.json
+//!   mft trace summarize F    per-phase rollups of a fleet `--trace` file
 //!   mft viz <run-dir>        terminal training visualizer
 //!   mft devices              list simulated device profiles
 //!   mft info                 manifest/artifact inventory
@@ -152,11 +153,13 @@ pub fn main() -> Result<()> {
         Some("exp") => crate::exp::drivers::dispatch(&args),
         Some("agent") => crate::agent::cmd_agent(&args),
         Some("bench") => crate::bench::dispatch(&args),
+        Some("trace") => crate::obs::cmd_trace(&args),
         Some("viz") => crate::viz::cmd_viz(&args),
         Some("devices") => cmd_devices(),
         Some("info") => cmd_info(&args),
         Some(other) => bail!("unknown subcommand {other:?}; try \
-                              train|fleet|exp|agent|bench|viz|devices|info"),
+                              train|fleet|exp|agent|bench|trace|viz|\
+                              devices|info"),
         None => {
             print_help();
             Ok(())
@@ -248,12 +251,27 @@ fn print_help() {
                      late aggregates at weight W^age — default 0.5)\n\
                      --resume (continue a killed run from\n\
                      <out>/fleet_ckpt.json, bit-for-bit)\n\
+                     --ckpt-every K (checkpoint every K rounds instead\n\
+                     of every round; --resume replays the uncommitted\n\
+                     tail bit-for-bit — default 1)\n\
+                     --trace FILE (deterministic virtual-time span\n\
+                     timeline as Chrome trace-event JSON: one track per\n\
+                     client + a coordinator track; open in Perfetto or\n\
+                     chrome://tracing) --trace-ring N (per-client span\n\
+                     buffer capacity — default 4096)\n\
+                     --profile (host wall-clock per driver phase ->\n\
+                     \"profile\" aggregates in summary.json)\n\
            exp       regenerate a paper experiment:\n\
                      fig9 table4 table5 fig10 table6 table7 fig11 table8\n\
                      fig12 fleet\n\
            agent     campus health-agent case study (train/ask)\n\
            bench     perf benchmarks: `bench fleet [--quick] [--out F]`\n\
-                     writes BENCH_fleet.json (kernel + round-loop numbers)\n\
+                     writes BENCH_fleet.json (kernel + round-loop numbers\n\
+                     + per-phase wall-clock profile)\n\
+           trace     inspect a fleet trace: `trace summarize FILE\n\
+                     [--top K]` validates the Chrome trace-event shape\n\
+                     and prints per-phase virtual-time/bytes/energy\n\
+                     rollups plus the K slowest client tracks\n\
            viz       terminal dashboard over a run dir\n\
            devices   list simulated device profiles\n\
            info      artifact inventory"

@@ -21,6 +21,12 @@
 //! robust aggregators ([`CoordMedian`], [`TrimmedMean`]) take the late
 //! vote unweighted: per-coordinate order statistics have no weight axis,
 //! and their robustness to a minority of odd votes *is* their discount.
+//!
+//! Observability: each round's merge shows up as an `aggregate` span on
+//! the trace's coordinator track ([`crate::obs::trace`]) carrying the
+//! cohort size and the stale-delivery count, and (under `--profile`)
+//! as the `aggregate` row of the host wall-clock phase breakdown
+//! ([`crate::obs::prof`]).
 
 use anyhow::{bail, Result};
 

@@ -45,6 +45,7 @@ use crate::fleet::transport::{draw_link_scales, init_link_regime, link_for,
                               partial_bytes, step_link_regime, LinkProfile,
                               LinkRegime};
 use crate::fleet::FleetConfig;
+use crate::obs::trace::{TraceBuf, TraceEvent};
 use crate::sim::DeviceProfile;
 use crate::train::lora::LoraState;
 use crate::train::optimizer::AdamW;
@@ -157,6 +158,13 @@ pub struct FleetClient {
     /// correlated-outage chain state (`--link-regime`): `true` while
     /// this client's cell is congested
     link_bad: bool,
+    /// per-round span buffer (`--trace`), drained by the driver after
+    /// every round via [`Self::take_trace`].  Never checkpointed: the
+    /// trace is an observer of the run, not simulation state — a
+    /// resumed run's trace covers the resumed rounds.  Never rolled
+    /// back either: spans record physical time/energy that stands even
+    /// when the optimizer state rolls back
+    trace: Option<TraceBuf>,
     global_names: Vec<String>,
     global_snapshot: Vec<Vec<f32>>,
 }
@@ -202,6 +210,7 @@ impl FleetClient {
             net_rng,
             pending_up: Vec::new(),
             link_bad,
+            trace: cfg.trace.as_ref().map(|_| TraceBuf::new(cfg.trace_ring)),
             global_names: Vec::new(),
             global_snapshot: Vec::new(),
         })
@@ -351,23 +360,74 @@ impl FleetClient {
                        -> (u64, u64) {
         let mut dropped = 0u64;
         let mut transmitted = 0u64;
+        let mut max_age = 0u64;
         self.pending_up.retain(|b| {
-            let stale = round.saturating_sub(b.origin_round) > keep_rounds;
+            let age = round.saturating_sub(b.origin_round);
+            let stale = age > keep_rounds;
             if stale {
                 dropped += b.bytes_left;
                 transmitted += b.total_bytes - b.bytes_left;
+                max_age = max_age.max(age as u64);
             }
             !stale
         });
+        if (dropped > 0 || transmitted > 0) && self.trace.is_some() {
+            let ev = TraceEvent {
+                name: "evict_stale",
+                round: round as u64,
+                client: Some(self.id),
+                t0_s: self.clock.now_s(),
+                bytes: dropped,
+                bytes_aux: transmitted,
+                battery: self.battery.level_frac(),
+                age: max_age,
+                ..TraceEvent::default()
+            };
+            self.tr(ev);
+        }
         (dropped, transmitted)
     }
 
     /// Advance the correlated-outage chain by one round (one `net_rng`
     /// draw).  The driver steps every client at round start — the cell
     /// is congested or not regardless of whether the client trains.
-    pub fn advance_link_regime(&mut self, regime: &LinkRegime) {
-        self.link_bad =
-            step_link_regime(&mut self.net_rng, regime, self.link_bad);
+    /// State *flips* land in the trace as `regime_step` markers
+    /// (`n` = 1 entering congestion, 0 leaving it); steady rounds stay
+    /// silent so a long outage is two markers, not a marker per round.
+    pub fn advance_link_regime(&mut self, round: usize,
+                               regime: &LinkRegime) {
+        let was = self.link_bad;
+        self.link_bad = step_link_regime(&mut self.net_rng, regime, was);
+        if self.link_bad != was && self.trace.is_some() {
+            let ev = TraceEvent {
+                name: "regime_step",
+                round: round as u64,
+                client: Some(self.id),
+                t0_s: self.clock.now_s(),
+                n: self.link_bad as u64,
+                battery: self.battery.level_frac(),
+                ..TraceEvent::default()
+            };
+            self.tr(ev);
+        }
+    }
+
+    /// Drain this client's buffered spans plus the events-dropped count
+    /// (both zero-empty when tracing is off).  The driver calls this
+    /// for every client after every round, in client-id order — that
+    /// drain order *is* the trace's determinism contract.
+    pub fn take_trace(&mut self) -> (Vec<TraceEvent>, u64) {
+        match &mut self.trace {
+            Some(t) => t.drain(),
+            None => (Vec::new(), 0),
+        }
+    }
+
+    #[inline]
+    fn tr(&mut self, ev: TraceEvent) {
+        if let Some(t) = &mut self.trace {
+            t.push(ev);
+        }
     }
 
     /// Whether the correlated-outage chain currently has this client's
@@ -525,6 +585,7 @@ impl FleetClient {
         let mut bytes_down = 0u64;
         let mut transfer_energy = 0.0f64;
         if cfg.transport {
+            let t_dl0 = self.clock.now_s();
             let needed = link.download_s(adapter_bytes);
             let limit = self.battery.seconds_until_empty(link.p_radio);
             if limit < needed {
@@ -541,12 +602,40 @@ impl FleetClient {
                 u.bytes_down = partial_bytes(adapter_bytes, limit, needed);
                 u.energy_j = e;
                 u.link_silent = true;
+                if self.trace.is_some() {
+                    let ev = TraceEvent {
+                        name: "broadcast",
+                        round: round as u64,
+                        client: Some(self.id),
+                        t0_s: t_dl0,
+                        dur_s: limit,
+                        bytes: u.bytes_down,
+                        energy_j: e,
+                        battery: 0.0,
+                        ..TraceEvent::default()
+                    };
+                    self.tr(ev);
+                }
                 return Ok(u);
             }
             download_s = needed;
             bytes_down = adapter_bytes;
             self.clock.sleep(needed);
             transfer_energy += self.battery.drain_with(needed, link.p_radio);
+            if self.trace.is_some() {
+                let ev = TraceEvent {
+                    name: "broadcast",
+                    round: round as u64,
+                    client: Some(self.id),
+                    t0_s: t_dl0,
+                    dur_s: needed,
+                    bytes: adapter_bytes,
+                    energy_j: transfer_energy,
+                    battery: self.battery.level_frac(),
+                    ..TraceEvent::default()
+                };
+                self.tr(ev);
+            }
             if self.battery.is_empty() {
                 let mut u = ClientUpdate::failed(self.id,
                                                  ClientFailure::BatteryDead);
@@ -561,6 +650,7 @@ impl FleetClient {
         // mismatch, mid-compute battery death) must still carry the
         // broadcast the battery already paid for — an Err that bubbled
         // straight to run_round would zero out the accounting
+        let t_lr0 = self.clock.now_s();
         let mut u = match self
             .load_global(names, global)
             .and_then(|()| self.local_round(model, cfg))
@@ -577,6 +667,23 @@ impl FleetClient {
         };
         u.download_s = download_s;
         u.bytes_down = bytes_down;
+        // the local_round span carries compute-only time/energy; the
+        // broadcast span above already carries the transfer share
+        // (u.time_s here is compute time — the upload leg adds later)
+        if self.trace.is_some() {
+            let ev = TraceEvent {
+                name: "local_round",
+                round: round as u64,
+                client: Some(self.id),
+                t0_s: t_lr0,
+                dur_s: u.time_s,
+                n: u.n_samples as u64,
+                energy_j: u.energy_j,
+                battery: self.battery.level_frac(),
+                ..TraceEvent::default()
+            };
+            self.tr(ev);
+        }
         u.energy_j += transfer_energy;
         if u.failure.is_some() {
             return Ok(u);
@@ -601,8 +708,10 @@ impl FleetClient {
             let avail = (deadline_s - u.time_s).max(0.0);
             let limit = self.battery.seconds_until_empty(link.p_radio);
             let send_s = needed.min(avail).min(limit);
+            let t_up0 = self.clock.now_s();
             self.clock.sleep(send_s);
-            u.energy_j += self.battery.drain_with(send_s, link.p_radio);
+            let up_e = self.battery.drain_with(send_s, link.p_radio);
+            u.energy_j += up_e;
             u.upload_s = send_s;
             u.time_s += send_s;
             let sent = if send_s >= needed {
@@ -635,6 +744,60 @@ impl FleetClient {
             }
             u.bytes_up_backlog = stale_sent;
             u.bytes_up = sent - stale_sent;
+            // the upload leg becomes up to two spans: the backlog flush
+            // (oldest-first queue drain) then the fresh delta, with the
+            // leg's time/energy split pro-rata by bytes.  Emitted
+            // *before* the outcome classification below so any eviction
+            // marker (stamped at the leg's end) stays later on this
+            // client's track than the span starts — per-track timestamps
+            // must never go backwards
+            if self.trace.is_some() {
+                let bat = self.battery.level_frac();
+                let frac = if sent > 0 {
+                    stale_sent as f64 / sent as f64
+                } else {
+                    0.0
+                };
+                let stale_dur = send_s * frac;
+                if stale_sent > 0 {
+                    let age = u.stale_delivered.iter()
+                        .map(|sd| round.saturating_sub(sd.origin_round)
+                             as u64)
+                        .max()
+                        .unwrap_or(0);
+                    let ev = TraceEvent {
+                        name: "upload_stale_flush",
+                        round: round as u64,
+                        client: Some(self.id),
+                        t0_s: t_up0,
+                        dur_s: stale_dur,
+                        n: u.stale_delivered.len() as u64,
+                        bytes: stale_sent,
+                        energy_j: up_e * frac,
+                        battery: bat,
+                        age,
+                        ..TraceEvent::default()
+                    };
+                    self.tr(ev);
+                }
+                let name = if send_s < needed {
+                    "upload_partial"
+                } else {
+                    "upload"
+                };
+                let ev = TraceEvent {
+                    name,
+                    round: round as u64,
+                    client: Some(self.id),
+                    t0_s: t_up0 + stale_dur,
+                    dur_s: send_s - stale_dur,
+                    bytes: u.bytes_up,
+                    energy_j: up_e * (1.0 - frac),
+                    battery: bat,
+                    ..TraceEvent::default()
+                };
+                self.tr(ev);
+            }
             if send_s < needed {
                 // interrupted mid-transfer: only the bytes that hit the
                 // air this round are accounted this round
@@ -664,6 +827,18 @@ impl FleetClient {
                     if cfg.drop_stale_after == 0 {
                         u.bytes_dropped_stale += fresh_left;
                         u.delta.clear();
+                        if self.trace.is_some() {
+                            let ev = TraceEvent {
+                                name: "evict_stale",
+                                round: round as u64,
+                                client: Some(self.id),
+                                t0_s: self.clock.now_s(),
+                                bytes: fresh_left,
+                                battery: self.battery.level_frac(),
+                                ..TraceEvent::default()
+                            };
+                            self.tr(ev);
+                        }
                     } else {
                         if self.pending_up.len() >= cfg.drop_stale_after {
                             let old = self.pending_up.remove(0);
@@ -674,6 +849,23 @@ impl FleetClient {
                             // stale-progress when they hit the air)
                             u.bytes_wasted_evicted +=
                                 old.total_bytes - old.bytes_left;
+                            if self.trace.is_some() {
+                                let ev = TraceEvent {
+                                    name: "evict_stale",
+                                    round: round as u64,
+                                    client: Some(self.id),
+                                    t0_s: self.clock.now_s(),
+                                    bytes: old.bytes_left,
+                                    bytes_aux:
+                                        old.total_bytes - old.bytes_left,
+                                    battery: self.battery.level_frac(),
+                                    age: round
+                                        .saturating_sub(old.origin_round)
+                                        as u64,
+                                    ..TraceEvent::default()
+                                };
+                                self.tr(ev);
+                            }
                         }
                         self.pending_up.push(PendingBlob {
                             origin_round: round,
@@ -696,6 +888,18 @@ impl FleetClient {
             // no link model: the would-be upload still carries its size
             // so the driver's delivered/wasted accounting stays uniform
             u.bytes_up = adapter_bytes;
+            if self.trace.is_some() {
+                let ev = TraceEvent {
+                    name: "upload",
+                    round: round as u64,
+                    client: Some(self.id),
+                    t0_s: self.clock.now_s(),
+                    bytes: adapter_bytes,
+                    battery: self.battery.level_frac(),
+                    ..TraceEvent::default()
+                };
+                self.tr(ev);
+            }
         }
         Ok(u)
     }

@@ -80,6 +80,8 @@ use crate::fleet::select::{select_clients, SelectPolicy};
 use crate::fleet::transport::LinkRegime;
 use crate::fleet::FleetConfig;
 use crate::metrics::{append_round, RoundRecord};
+use crate::obs::prof::Prof;
+use crate::obs::trace::{TraceEvent, TraceSink};
 use crate::sim;
 use crate::tokenizer::Tokenizer;
 use crate::train::lora::LoraState;
@@ -123,6 +125,11 @@ const MIN_EVAL_BYTES: usize = 16;
 pub struct FleetResult {
     pub summary: Json,
     pub rounds: Vec<RoundRecord>,
+    /// The merged virtual-time trace when `cfg.trace` asked for one
+    /// (`None` otherwise) — the same events written to the trace file,
+    /// kept here so tests and callers can reconcile spans against
+    /// [`RoundRecord`] counters without re-parsing JSON.
+    pub trace: Option<TraceSink>,
 }
 
 /// Everything about a config that must match for a checkpoint to be
@@ -130,14 +137,21 @@ pub struct FleetResult {
 /// clone with the legitimately-variable fields normalized away) so a
 /// future `FleetConfig` field can never be forgotten here: rounds may
 /// grow (that is the point of resuming), thread count never changes
-/// results, and out_dir/resume are where/how, not what.
+/// results, out_dir/resume are where/how, not what, and the
+/// observability knobs (ckpt_every cadence, trace output, trace ring
+/// size, wall-clock profiling) shape what gets *recorded*, never the
+/// training trajectory.
 fn config_fingerprint(cfg: &FleetConfig) -> String {
     let mut c = cfg.clone();
     c.rounds = 0;
     c.threads = 0;
     c.out_dir = None;
     c.resume = false;
-    format!("v3|{c:?}")
+    c.ckpt_every = 0;
+    c.trace = None;
+    c.trace_ring = 0;
+    c.profile = false;
+    format!("v4|{c:?}")
 }
 
 fn bits_json(x: u64) -> Json {
@@ -548,6 +562,19 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let mut cum_energy = 0.0f64;
     let mut start_round = 1usize;
     let mut ckpt = CkptState::fresh(cfg.n_clients);
+    // host wall-clock phase profiler: zero-cost unless --profile asked
+    // for it (wall times are nondeterministic, so they only ever reach
+    // the opt-in "profile" summary aggregate, never the trace)
+    let prof = Prof::new(cfg.profile);
+    // virtual-time trace sink; the coordinator track's clock is
+    // synthetic (idle gap + round makespan per round) and restarts at 0
+    // on --resume, so a resumed run's trace covers the resumed rounds
+    let mut sink: Option<TraceSink> = cfg.trace.as_ref().map(|_| TraceSink::new());
+    let mut coord_clock = 0.0f64;
+    // clients whose on-disk state is behind the last committed
+    // checkpoint; accumulates across skipped rounds when --ckpt-every
+    // K > 1 so the next commit writes every file that moved
+    let mut ckpt_dirty = vec![false; cfg.n_clients];
 
     // eval statistics are fixed for the run: collapse the held-out
     // stream to a bigram count matrix once, reuse every round
@@ -661,9 +688,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
 
     for round in start_round..=cfg.rounds {
         // background drain between rounds
+        let mut idle_e = 0.0f64;
         for c in clients.iter_mut() {
-            cum_energy += c.battery.drain(0.0, cfg.round_idle_s);
+            let e = c.battery.drain(0.0, cfg.round_idle_s);
+            cum_energy += e;
+            idle_e += e;
         }
+        coord_clock += cfg.round_idle_s;
         // stale-upload lifecycle, round start: every client's queue —
         // selected or not — evicts blobs older than `drop_stale_after`
         // rounds.  Age-based eviction is what bounds a passed-over
@@ -680,21 +711,31 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         // stale progress into this round's wasted bytes, so the
         // K-policy radio-cost comparison sees the true waste
         let mut bytes_wasted = 0u64;
+        // evicted-transfer waste reported apart from the wasted total
+        // (which it also joins) so the viz/CLI byte-fate breakdown can
+        // name the queue-eviction share explicitly
+        let mut bytes_wasted_evicted = 0u64;
         for c in clients.iter_mut() {
             let (dropped, transmitted) =
                 c.evict_stale(round, cfg.drop_stale_after);
             bytes_dropped_stale += dropped;
             bytes_wasted += transmitted;
+            bytes_wasted_evicted += transmitted;
             if let Some(reg) = &cfg.link_regime {
-                c.advance_link_regime(reg);
+                c.advance_link_regime(round, reg);
             }
         }
-        let statuses: Vec<ClientStatus> = clients
-            .iter_mut()
-            .map(|c| c.sample_status(cfg, adapter_bytes))
-            .collect();
-        let sel = select_clients(&cfg.policy, cfg.mu, cfg.ram_required_bytes,
-                                 deadline_s, &statuses, &mut select_rng);
+        let (statuses, sel) = {
+            let _g = prof.scope("select");
+            let statuses: Vec<ClientStatus> = clients
+                .iter_mut()
+                .map(|c| c.sample_status(cfg, adapter_bytes))
+                .collect();
+            let sel = select_clients(&cfg.policy, cfg.mu,
+                                     cfg.ram_required_bytes, deadline_s,
+                                     &statuses, &mut select_rng);
+            (statuses, sel)
+        };
         let min_batt = sel
             .selected
             .iter()
@@ -713,6 +754,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         // run_round never errors the run: faults come back as
         // ClientFailure-carrying updates.
         let results: Vec<ClientUpdate> = {
+            let _g = prof.scope("local_rounds");
             let mut run: Vec<&mut FleetClient> = clients
                 .iter_mut()
                 .filter(|c| in_round[c.id])
@@ -759,6 +801,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             bytes_stale += u.bytes_up_backlog;
             bytes_dropped_stale += u.bytes_dropped_stale;
             bytes_wasted += u.bytes_wasted_evicted;
+            bytes_wasted_evicted += u.bytes_wasted_evicted;
             for sd in &u.stale_delivered {
                 // age >= 1 by construction (a blob can only be retried
                 // in a later round) and <= drop_stale_after (older
@@ -818,11 +861,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         let mut mean_loss = 0.0f64;
         let mut cohort: Vec<&ClientUpdate> = ontime.clone();
         cohort.extend(stale_cohort.iter());
-        if !cohort.is_empty() {
-            let delta = agg.aggregate(&cohort)?;
-            for (g, d) in global.iter_mut().zip(&delta) {
-                for (x, &y) in g.iter_mut().zip(d) {
-                    *x += y;
+        let n_cohort = cohort.len();
+        {
+            let _g = prof.scope("aggregate");
+            if !cohort.is_empty() {
+                let delta = agg.aggregate(&cohort)?;
+                for (g, d) in global.iter_mut().zip(&delta) {
+                    for (x, &y) in g.iter_mut().zip(d) {
+                        *x += y;
+                    }
                 }
             }
         }
@@ -830,8 +877,40 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             mean_loss = ontime.iter().map(|u| u.train_loss).sum::<f64>()
                 / ontime.len() as f64;
         }
-        let nll = model.eval_nll_cached(&mut eval_cache, &global[ia],
-                                        &global[ib]);
+        let nll = {
+            let _g = prof.scope("eval");
+            model.eval_nll_cached(&mut eval_cache, &global[ia], &global[ib])
+        };
+        // on-time makespan: the round's virtual wall time is set by
+        // the slowest client that made the deadline — dropped
+        // stragglers don't gate the round, they are reported apart.
+        // If nothing came back usable the charge depends on *why*:
+        // when someone was late, lost an upload, or went silent
+        // mid-transfer (a battery dying during its upload or during
+        // the broadcast looks like a stalled link — the coordinator
+        // can only wait the deadline out), the round costs
+        // deadline_s; but when every selected client failed
+        // on-device with no transfer in flight (battery deaths in
+        // compute, degenerate shards — failures the device side
+        // reports) the coordinator learned of the last failure then
+        // and moved on, so charging deadline_s would overcount the
+        // round.
+        let round_time_s = if ontime.is_empty() && !sel.selected.is_empty() {
+            let all_failed_observable = late.is_empty()
+                && n_failed_upload == 0
+                && !any_link_silent;
+            if all_failed_observable {
+                results
+                    .iter()
+                    .map(|u| u.time_s)
+                    .fold(0.0f64, f64::max)
+                    .min(deadline_s)
+            } else {
+                deadline_s
+            }
+        } else {
+            ontime.iter().map(|u| u.time_s).fold(0.0f64, f64::max)
+        };
         let rec = RoundRecord {
             round,
             eval_nll: nll,
@@ -851,37 +930,9 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             bytes_up_wasted: bytes_wasted,
             bytes_up_stale: bytes_stale,
             bytes_dropped_stale,
+            bytes_wasted_evicted,
             bytes_down,
-            // on-time makespan: the round's virtual wall time is set by
-            // the slowest client that made the deadline — dropped
-            // stragglers don't gate the round, they are reported apart.
-            // If nothing came back usable the charge depends on *why*:
-            // when someone was late, lost an upload, or went silent
-            // mid-transfer (a battery dying during its upload or during
-            // the broadcast looks like a stalled link — the coordinator
-            // can only wait the deadline out), the round costs
-            // deadline_s; but when every selected client failed
-            // on-device with no transfer in flight (battery deaths in
-            // compute, degenerate shards — failures the device side
-            // reports) the coordinator learned of the last failure then
-            // and moved on, so charging deadline_s would overcount the
-            // round.
-            time_s: if ontime.is_empty() && !sel.selected.is_empty() {
-                let all_failed_observable = late.is_empty()
-                    && n_failed_upload == 0
-                    && !any_link_silent;
-                if all_failed_observable {
-                    results
-                        .iter()
-                        .map(|u| u.time_s)
-                        .fold(0.0f64, f64::max)
-                        .min(deadline_s)
-                } else {
-                    deadline_s
-                }
-            } else {
-                ontime.iter().map(|u| u.time_s).fold(0.0f64, f64::max)
-            },
+            time_s: round_time_s,
             straggler_time_s:
                 late.iter().map(|u| u.time_s).fold(0.0f64, f64::max),
             participants: ontime.iter().map(|u| u.client_id).collect(),
@@ -895,24 +946,80 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             append_round(d, &rec)?;
         }
         records.push(rec);
-        if let Some(d) = &out_dir {
-            // only clients whose adapter/moments changed need their
-            // safetensors rewritten: trained clients (even ones whose
-            // upload was lost — the local work stands), not rolled-back
-            // failures or unselected clients.  The first checkpoint of a
-            // fresh run writes everyone so stale files can't linger.
-            let changed: Vec<usize> = results
-                .iter()
-                .filter(|u| !matches!(
-                    u.failure,
-                    Some(ClientFailure::BatteryDead)
-                    | Some(ClientFailure::Error(_))))
-                .map(|u| u.client_id)
+        // only clients whose adapter/moments changed need their
+        // safetensors rewritten: trained clients (even ones whose
+        // upload was lost — the local work stands), not rolled-back
+        // failures or unselected clients.  Dirtiness accumulates across
+        // the rounds `--ckpt-every K` skips, so the next commit writes
+        // every file that moved since the last one; the first
+        // checkpoint of a fresh run writes everyone so stale files
+        // can't linger.
+        for u in &results {
+            if !matches!(u.failure,
+                         Some(ClientFailure::BatteryDead)
+                         | Some(ClientFailure::Error(_))) {
+                ckpt_dirty[u.client_id] = true;
+            }
+        }
+        let mut did_ckpt: Option<usize> = None;
+        if let (Some(d), true) = (&out_dir, round % cfg.ckpt_every == 0) {
+            let changed: Vec<usize> = (0..cfg.n_clients)
+                .filter(|&id| ckpt_dirty[id])
                 .collect();
+            let _g = prof.scope("ckpt_commit");
             save_fleet_ckpt(d, cfg, &mut template, &mut ckpt, round,
                             cum_energy, &select_rng, &clients, &changed,
                             &names, &global)?;
+            ckpt_dirty.fill(false);
+            did_ckpt = Some(changed.len());
         }
+
+        // merge this round's trace: every client drains (evict/regime
+        // events fire for unselected clients too), in client-id order —
+        // the per-(round, client) buffers make the merged stream a pure
+        // function of the config and seed, independent of MFT_THREADS.
+        // Coordinator-track spans ride a synthetic clock: idle gap,
+        // then the round's makespan, with aggregate/eval/ckpt stamped
+        // as markers at the round's end.
+        if let Some(sink) = &mut sink {
+            sink.push(TraceEvent {
+                name: "select",
+                round: round as u64,
+                t0_s: coord_clock,
+                n: sel.selected.len() as u64,
+                energy_j: idle_e,
+                ..TraceEvent::default()
+            });
+            for c in clients.iter_mut() {
+                let (evs, dropped) = c.take_trace();
+                sink.absorb(evs, dropped);
+            }
+            let t_end = coord_clock + round_time_s;
+            sink.push(TraceEvent {
+                name: "aggregate",
+                round: round as u64,
+                t0_s: t_end,
+                n: n_cohort as u64,
+                age: n_stale_aggregated as u64,
+                ..TraceEvent::default()
+            });
+            sink.push(TraceEvent {
+                name: "eval",
+                round: round as u64,
+                t0_s: t_end,
+                ..TraceEvent::default()
+            });
+            if let Some(n_changed) = did_ckpt {
+                sink.push(TraceEvent {
+                    name: "ckpt_commit",
+                    round: round as u64,
+                    t0_s: t_end,
+                    n: n_changed as u64,
+                    ..TraceEvent::default()
+                });
+            }
+        }
+        coord_clock += round_time_s;
     }
 
     // export the merged global adapter through the standard path
@@ -929,7 +1036,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         .map(|r| r.n_aggregated as f64 / cfg.n_clients as f64)
         .sum::<f64>()
         / train_rounds.len().max(1) as f64;
-    let summary = Json::obj(vec![
+    let mut pairs = vec![
         ("n_clients", Json::from(cfg.n_clients)),
         ("rounds", Json::from(cfg.rounds)),
         ("local_steps", Json::from(cfg.local_steps)),
@@ -985,14 +1092,29 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         ("total_bytes_dropped_stale", Json::from(
             train_rounds.iter().map(|r| r.bytes_dropped_stale)
                 .sum::<u64>())),
+        ("total_bytes_wasted_evicted", Json::from(
+            train_rounds.iter().map(|r| r.bytes_wasted_evicted)
+                .sum::<u64>())),
         ("total_bytes_down", Json::from(
             train_rounds.iter().map(|r| r.bytes_down).sum::<u64>())),
         ("deadline_s", Json::from(deadline_s)),
-    ]);
+    ];
+    // wall-clock phase breakdown is nondeterministic by nature, so it
+    // only joins the summary when --profile explicitly asked for it
+    if let Some(pj) = prof.summary_json() {
+        pairs.push(("profile", pj));
+    }
+    let summary = Json::obj(pairs);
     if let Some(d) = &out_dir {
         std::fs::write(d.join("summary.json"), summary.to_string())?;
     }
-    Ok(FleetResult { summary, rounds: records })
+    // the trace path is used exactly as given (not joined to --out, so
+    // tracing works without an out dir at all)
+    if let (Some(path), Some(s)) = (cfg.trace.as_ref(), sink.as_ref()) {
+        s.write(Path::new(path), cfg.n_clients)
+            .with_context(|| format!("write trace {path}"))?;
+    }
+    Ok(FleetResult { summary, rounds: records, trace: sink })
 }
 
 /// Parse `--link-regime P_BAD FACTOR` (the CLI layer collects both
@@ -1077,6 +1199,13 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
         }
     }
     cfg.resume = args.has("resume");
+    cfg.ckpt_every = args.get_parse("ckpt-every", cfg.ckpt_every)?;
+    cfg.trace = args.get("trace").map(String::from);
+    if args.has("trace") && cfg.trace.is_none() {
+        bail!("--trace takes a file path");
+    }
+    cfg.trace_ring = args.get_parse("trace-ring", cfg.trace_ring)?;
+    cfg.profile = args.has("profile");
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.out_dir = args.get("out").map(String::from);
     cfg.validate()?;
@@ -1156,14 +1285,15 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
                 "round {:>3}  nll {:.4} (ppl {:>7.1})  agg {}/{} sel \
                  +{} stale  skip bat {} ram {} link {}  late {}  \
                  fail {}+{}up  E {:.2} kJ  up {} KiB (stale {} KiB, \
-                 waste {} KiB, dropped {} KiB) down {} KiB",
+                 waste {} KiB of which evicted {} KiB, dropped {} KiB) \
+                 down {} KiB",
                 r.round, r.eval_nll, r.eval_ppl, r.n_aggregated,
                 r.n_selected, r.n_stale_aggregated, r.n_skipped_battery,
                 r.n_skipped_ram, r.n_skipped_link, r.n_stragglers,
                 r.n_failed, r.n_failed_upload, r.energy_j / 1000.0,
                 r.bytes_up / 1024, r.bytes_up_stale / 1024,
-                r.bytes_up_wasted / 1024, r.bytes_dropped_stale / 1024,
-                r.bytes_down / 1024);
+                r.bytes_up_wasted / 1024, r.bytes_wasted_evicted / 1024,
+                r.bytes_dropped_stale / 1024, r.bytes_down / 1024);
         }
     }
     println!("{}", res.summary);

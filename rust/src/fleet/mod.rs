@@ -51,9 +51,18 @@
 //!   safetensors.  Faults never abort the run: a client whose round
 //!   errors or whose battery empties is recorded as a per-round failure
 //!   and rolled back to its round-start optimizer state, and (with an
-//!   out dir) every round checkpoints each client's adapter + Adam
-//!   moments ([`LoraState::save_checkpoint`]) plus the coordinator
-//!   scalars, so `--resume` continues a killed run bit-for-bit.
+//!   out dir) every `--ckpt-every` K-th round checkpoints each
+//!   client's adapter + Adam moments ([`LoraState::save_checkpoint`])
+//!   plus the coordinator scalars, so `--resume` continues a killed
+//!   run bit-for-bit (replaying any uncommitted tail rounds);
+//! * observability ([`crate::obs`]) — with `--trace FILE` every phase
+//!   of every round (selection, regime flips, broadcast, local round,
+//!   full/partial/stale uploads, queue evictions, aggregate, eval,
+//!   checkpoint commits) is recorded as a virtual-time span and
+//!   exported as Chrome trace-event JSON (one Perfetto track per
+//!   client + a coordinator track, bitwise identical for any
+//!   `MFT_THREADS`), and `--profile` aggregates host wall-clock per
+//!   driver phase into the summary's `"profile"` key.
 //!
 //! [`LoraState::save_checkpoint`]: crate::train::lora::LoraState::save_checkpoint
 //!
@@ -170,8 +179,34 @@ pub struct FleetConfig {
     /// aggregated at weight `stale_weight^age` of its FedAvg share
     /// (FedBuff/MobiLLM-style server-side use of late device work)
     pub stale_weight: f64,
+    /// checkpoint cadence in rounds (`--ckpt-every K`): with an out
+    /// dir, `fleet_ckpt.json` + per-client generations are committed
+    /// every K-th round instead of every round.  `--resume` restarts
+    /// from the last *committed* generation and replays the
+    /// uncommitted tail bit-for-bit; no checkpoint is forced at the
+    /// final round, so K > 1 trades crash-replay compute for
+    /// checkpoint I/O.  Cadence is "how", not "what": it is
+    /// normalized out of the checkpoint's config fingerprint, so a
+    /// run may be resumed under a different K
+    pub ckpt_every: usize,
+    /// write the deterministic virtual-time span timeline
+    /// ([`crate::obs::trace`]) to this file as Chrome trace-event
+    /// JSON (`--trace FILE`); `None` disables tracing entirely — no
+    /// buffers are allocated and no events are constructed
+    pub trace: Option<String>,
+    /// per-client span-buffer capacity (`--trace-ring N`); the driver
+    /// drains buffers every round, so this bounds one round's events
+    /// per client.  Overflow drops the newest events and counts them
+    /// in the export's `events_dropped` — never silently
+    pub trace_ring: usize,
+    /// host wall-clock phase profiling ([`crate::obs::prof`],
+    /// `--profile`): per-phase count/mean/p50/p95 wall-ms under
+    /// `"profile"` in the summary.  Off by default — wall times vary
+    /// run-to-run and must never leak into deterministic outputs
+    pub profile: bool,
     /// resume from `<out_dir>/fleet_ckpt.json` if present (requires
-    /// `out_dir`); a fresh run writes the checkpoint every round
+    /// `out_dir`); a fresh run commits checkpoints on the
+    /// `ckpt_every` cadence
     pub resume: bool,
     /// fault-injection hook for tests/chaos runs: replace this client's
     /// shard with a single token so its local round always fails
@@ -213,6 +248,10 @@ impl Default for FleetConfig {
             link_regime: None,
             drop_stale_after: 2,
             stale_weight: 0.5,
+            ckpt_every: 1,
+            trace: None,
+            trace_ring: 4096,
+            profile: false,
             resume: false,
             inject_empty_shard: None,
             seed: 42,
@@ -290,6 +329,13 @@ impl FleetConfig {
         }
         if self.resume && self.out_dir.is_none() {
             bail!("--resume needs --out (checkpoints live in the out dir)");
+        }
+        if self.ckpt_every == 0 {
+            bail!("--ckpt-every must be >= 1 (checkpoint cadence in rounds)");
+        }
+        if self.trace_ring == 0 {
+            bail!("--trace-ring must be >= 1 (per-client span buffer \
+                   capacity)");
         }
         Ok(())
     }
@@ -389,6 +435,19 @@ mod tests {
         c.resume = true;
         assert!(c.validate().is_err());
         c.out_dir = Some("/tmp/x".into());
+        assert!(c.validate().is_ok());
+
+        // checkpoint cadence and trace buffers must be positive
+        let mut c = FleetConfig::default();
+        c.ckpt_every = 0;
+        assert!(c.validate().is_err());
+        c.ckpt_every = 3;
+        assert!(c.validate().is_ok());
+        let mut c = FleetConfig::default();
+        c.trace_ring = 0;
+        assert!(c.validate().is_err());
+        c.trace = Some("/tmp/trace.json".into());
+        c.trace_ring = 1;
         assert!(c.validate().is_ok());
     }
 }

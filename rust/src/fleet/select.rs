@@ -27,7 +27,10 @@
 //! driver's *round-time* failure reasons ([`ClientFailure`]): a client
 //! that passes selection can still die mid-round, error on its shard, or
 //! lose its upload on the link — all recorded per round, never aborting
-//! the run.
+//! the run.  With `--trace` the driver stamps each round's selection as
+//! a `select` span on the coordinator track ([`crate::obs::trace`]),
+//! carrying the chosen-cohort size next to the per-client skip counters
+//! in [`crate::metrics::RoundRecord`].
 //!
 //! [`ClientFailure`]: crate::fleet::aggregate::ClientFailure
 

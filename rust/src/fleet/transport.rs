@@ -44,7 +44,11 @@
 //! devices get plausible sustained cellular/Wi-Fi rates; unknown devices
 //! fall back to [`DEFAULT_LINK`]).  Everything here is pure arithmetic
 //! over config + static tables + client-local RNG streams, so
-//! transport-enabled runs stay bitwise identical for any `MFT_THREADS`.
+//! transport-enabled runs stay bitwise identical for any `MFT_THREADS`
+//! — which is also what makes the `--trace` timeline
+//! ([`crate::obs::trace`]) deterministic: every transfer span's start
+//! and duration come from these virtual-clock advances, never from
+//! host time.
 //!
 //! [`FleetConfig::upload_fail_prob`]: crate::fleet::FleetConfig::upload_fail_prob
 //! [`sim::DeviceProfile`]: crate::sim::DeviceProfile

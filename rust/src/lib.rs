@@ -47,8 +47,16 @@
 //!   order statistics), local rounds fanned out across coordinator
 //!   threads with per-round fault recording (battery deaths and local
 //!   errors never abort the run), round-granular crash checkpoints
-//!   (`--resume` continues bit-for-bit), and per-round metrics
-//!   ([`metrics::RoundRecord`])
+//!   (`--resume` continues bit-for-bit, `--ckpt-every` sets the
+//!   commit cadence), and per-round metrics ([`metrics::RoundRecord`])
+//! * Observability     -> [`obs`]: deterministic fleet tracing — every
+//!   phase (select, regime steps, broadcast, local round, full/partial/
+//!   stale uploads, evictions, aggregate, eval, ckpt commits) becomes a
+//!   virtual-time span exported as Chrome trace-event JSON
+//!   (`--trace FILE`, bitwise identical for any `MFT_THREADS`;
+//!   `mft trace summarize` prints rollups) — plus [`obs::prof`], the
+//!   opt-in host wall-clock phase profiler behind `--profile` feeding
+//!   `"profile"` in `summary.json` and `BENCH_fleet.json`
 
 pub mod agent;
 pub mod bench;
@@ -62,6 +70,7 @@ pub mod fleet;
 pub mod memopt;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

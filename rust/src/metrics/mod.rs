@@ -132,6 +132,12 @@ pub struct RoundRecord {
     /// this round: blobs older than `drop_stale_after` (round-start
     /// sweep) plus capacity evictions — the work the bound abandons
     pub bytes_dropped_stale: u64,
+    /// the eviction-reconciled slice of `bytes_up_wasted`: radio spent
+    /// in earlier rounds toward blobs that aged or were capacity-evicted
+    /// out of the queue this round.  Reported apart so the byte-fate
+    /// breakdown can name the queue-eviction share (it is *also*
+    /// included in `bytes_up_wasted`, never in addition to it)
+    pub bytes_wasted_evicted: u64,
     /// downlink bytes the selected clients actually pulled for the
     /// global adapter broadcast this round (partial when a battery died
     /// mid-download; 0 without the transport model)
@@ -171,6 +177,7 @@ impl RoundRecord {
             ("bytes_up_wasted", Json::from(self.bytes_up_wasted)),
             ("bytes_up_stale", Json::from(self.bytes_up_stale)),
             ("bytes_dropped_stale", Json::from(self.bytes_dropped_stale)),
+            ("bytes_wasted_evicted", Json::from(self.bytes_wasted_evicted)),
             ("bytes_down", Json::from(self.bytes_down)),
             ("time_s", Json::from(self.time_s)),
             ("straggler_time_s", Json::from(self.straggler_time_s)),
@@ -213,6 +220,7 @@ impl RoundRecord {
             bytes_up_wasted: opt_u64("bytes_up_wasted")?,
             bytes_up_stale: opt_u64("bytes_up_stale")?,
             bytes_dropped_stale: opt_u64("bytes_dropped_stale")?,
+            bytes_wasted_evicted: opt_u64("bytes_wasted_evicted")?,
             bytes_down: opt_u64("bytes_down")?,
             time_s: opt_f("time_s")?,
             straggler_time_s: opt_f("straggler_time_s")?,
@@ -398,6 +406,7 @@ mod tests {
                 bytes_up_wasted: 12288,
                 bytes_up_stale: 2048,
                 bytes_dropped_stale: 512,
+                bytes_wasted_evicted: 1536,
                 bytes_down: 24576,
                 time_s: 12.5,
                 straggler_time_s: 91.25,
@@ -428,6 +437,7 @@ mod tests {
             bytes_up_wasted: big + 17,
             bytes_up_stale: big * 2 + 5,
             bytes_dropped_stale: big + 1,
+            bytes_wasted_evicted: big + 7,
             bytes_down: big * 5 + 999,
             ..Default::default()
         };
@@ -438,6 +448,7 @@ mod tests {
         assert_eq!(got[0].bytes_up_wasted, big + 17);
         assert_eq!(got[0].bytes_up_stale, big * 2 + 5);
         assert_eq!(got[0].bytes_dropped_stale, big + 1);
+        assert_eq!(got[0].bytes_wasted_evicted, big + 7);
         assert_eq!(got[0].bytes_down, big * 5 + 999);
         assert_eq!(got[0], rec);
     }

@@ -1,0 +1,204 @@
+//! Observability for the fleet simulator: deterministic virtual-time
+//! tracing and a host wall-clock phase profiler.
+//!
+//! Two instruments with a strict separation of concerns:
+//!
+//! * [`trace`] — typed spans on virtual time (the per-client clocks and
+//!   the coordinator's synthetic timeline).  Pure function of
+//!   (config, seed): `--trace FILE` output is bitwise identical for any
+//!   `MFT_THREADS`, exported as Chrome trace-event JSON for
+//!   `chrome://tracing` / Perfetto, and every span's byte/energy
+//!   counters reconcile with the `RoundRecord` fate ledger
+//!   (`tests/fleet_trace.rs` pins both claims).
+//! * [`prof`] — RAII wall-clock scopes around the driver's phases,
+//!   aggregated into mean/p50/p95 wall-ms.  Opt-in (`--profile`)
+//!   because wall time is nondeterministic; it feeds only the
+//!   `"profile"` summary aggregate and `BENCH_fleet.json`, never the
+//!   trace.
+//!
+//! The `mft trace summarize FILE` subcommand ([`cmd_trace`]) validates
+//! a written trace and prints per-phase virtual-time/bytes/energy
+//! rollups plus the top-K slowest client tracks — it doubles as CI's
+//! well-formedness check for the smoke-run trace artifact.
+
+pub mod prof;
+pub mod trace;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+pub use prof::Prof;
+pub use trace::{validate_chrome_trace, TraceBuf, TraceEvent, TraceSink};
+
+use crate::cli::Args;
+use crate::util::json::Json;
+
+/// `mft trace SUBCOMMAND` dispatcher.
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        Some("summarize") => cmd_summarize(args),
+        Some(other) => bail!("unknown trace subcommand {other:?}; have: summarize"),
+        None => bail!("usage: mft trace summarize FILE [--top K]"),
+    }
+}
+
+/// `mft trace summarize FILE [--top K]`: validate the Chrome
+/// trace-event file, then print per-phase rollups (count, virtual
+/// seconds, bytes, energy) and the K slowest client tracks by virtual
+/// seconds.
+fn cmd_summarize(args: &Args) -> Result<()> {
+    let path = match args.pos(2) {
+        Some(p) => p,
+        None => bail!("usage: mft trace summarize FILE [--top K]"),
+    };
+    let top_k: usize = args.get_parse("top", 5)?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace {path}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parse trace {path}"))?;
+    let n_events = validate_chrome_trace(&j)
+        .with_context(|| format!("malformed Chrome trace {path}"))?;
+
+    // track names from the thread_name metadata events
+    let evs = j.req("traceEvents")?.as_arr()?;
+    let mut track_name: BTreeMap<u64, String> = BTreeMap::new();
+    for e in evs {
+        if e.get("ph").and_then(|p| p.as_str().ok()) == Some("M")
+            && e.get("name").and_then(|n| n.as_str().ok())
+                == Some("thread_name")
+        {
+            let tid = e.req("tid")?.as_u64()?;
+            if let Some(nm) = e.get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(|n| n.as_str().ok())
+            {
+                track_name.insert(tid, nm.to_string());
+            }
+        }
+    }
+
+    // per-phase and per-track rollups over complete events
+    #[derive(Default)]
+    struct Roll {
+        count: u64,
+        dur_s: f64,
+        bytes: u64,
+        energy_j: f64,
+    }
+    let mut phases: BTreeMap<String, Roll> = BTreeMap::new();
+    let mut tracks: BTreeMap<u64, Roll> = BTreeMap::new();
+    for e in evs {
+        if e.get("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+            continue;
+        }
+        let name = e.req("name")?.as_str()?.to_string();
+        let tid = e.req("tid")?.as_u64()?;
+        let dur_s = e.req("dur")?.as_f64()? / 1e6;
+        let args_j = e.get("args");
+        let g_u64 = |k: &str| args_j
+            .and_then(|a| a.get(k))
+            .and_then(|v| v.as_u64().ok())
+            .unwrap_or(0);
+        let g_f64 = |k: &str| args_j
+            .and_then(|a| a.get(k))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0);
+        let bytes = g_u64("bytes") + g_u64("bytes_aux");
+        let energy = g_f64("energy_j");
+        let p = phases.entry(name).or_default();
+        p.count += 1;
+        p.dur_s += dur_s;
+        p.bytes += bytes;
+        p.energy_j += energy;
+        if tid > 0 {
+            let t = tracks.entry(tid).or_default();
+            t.count += 1;
+            t.dur_s += dur_s;
+            t.bytes += bytes;
+            t.energy_j += energy;
+        }
+    }
+
+    let dropped = j.get("otherData")
+        .and_then(|o| o.get("events_dropped"))
+        .and_then(|v| v.as_u64().ok())
+        .unwrap_or(0);
+    println!("trace {path}: {n_events} events on {} client track(s), \
+              {dropped} dropped", tracks.len());
+    println!("{:<20} {:>7} {:>12} {:>14} {:>12}",
+             "phase", "count", "virtual-s", "bytes", "energy-J");
+    for (name, r) in &phases {
+        println!("{:<20} {:>7} {:>12.3} {:>14} {:>12.3}",
+                 name, r.count, r.dur_s, r.bytes, r.energy_j);
+    }
+    let mut slowest: Vec<(u64, &Roll)> =
+        tracks.iter().map(|(tid, r)| (*tid, r)).collect();
+    slowest.sort_by(|a, b| b.1.dur_s.total_cmp(&a.1.dur_s).then(a.0.cmp(&b.0)));
+    if !slowest.is_empty() {
+        println!("slowest client tracks (by virtual seconds):");
+        for (tid, r) in slowest.into_iter().take(top_k) {
+            let fallback = format!("client {}", tid - 1);
+            let name = track_name.get(&tid).unwrap_or(&fallback);
+            println!("  {:<12} {:>10.3} s {:>14} B {:>10.3} J",
+                     name, r.dur_s, r.bytes, r.energy_j);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mft_obs_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn summarize_validates_and_accepts_a_written_trace() {
+        let dir = tdir("summarize");
+        let mut sink = TraceSink::new();
+        sink.absorb(vec![
+            TraceEvent { name: "broadcast", round: 1, client: Some(0),
+                         t0_s: 0.0, dur_s: 2.0, bytes: 1024,
+                         energy_j: 0.5, ..TraceEvent::default() },
+            TraceEvent { name: "upload", round: 1, client: Some(0),
+                         t0_s: 12.0, dur_s: 3.0, bytes: 2048,
+                         energy_j: 1.5, ..TraceEvent::default() },
+        ], 0);
+        sink.push(TraceEvent { name: "aggregate", round: 1, client: None,
+                               t0_s: 15.0, n: 1, ..TraceEvent::default() });
+        let path = dir.join("trace.json");
+        sink.write(&path, 1).unwrap();
+
+        let args = Args::parse(vec![
+            "trace".into(), "summarize".into(),
+            path.to_str().unwrap().into(),
+        ]);
+        cmd_trace(&args).unwrap();
+
+        // an invalid file is rejected, not summarized
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{\"traceEvents\": [{\"ph\": \"X\"}]}").unwrap();
+        let args = Args::parse(vec![
+            "trace".into(), "summarize".into(),
+            bad.to_str().unwrap().into(),
+        ]);
+        assert!(cmd_trace(&args).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_dispatch_rejects_unknown_subcommands() {
+        let args = Args::parse(vec!["trace".into()]);
+        assert!(cmd_trace(&args).unwrap_err().to_string().contains("usage"));
+        let args = Args::parse(vec!["trace".into(), "frobnicate".into()]);
+        assert!(cmd_trace(&args).unwrap_err()
+            .to_string().contains("unknown trace subcommand"));
+    }
+}

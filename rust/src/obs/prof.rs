@@ -1,0 +1,154 @@
+//! Host wall-clock phase profiler for the fleet driver.
+//!
+//! The trace (`obs::trace`) answers "where does *virtual* time go";
+//! this module answers "where does the *host's* time go" — how many
+//! wall milliseconds each driver phase (`select`, `local_rounds`,
+//! `aggregate`, `eval`, `ckpt_commit`) costs per round.  Wall times
+//! vary run-to-run, so they are quarantined from every deterministic
+//! output: the profiler is opt-in (`--profile`), feeds only the
+//! `"profile"` aggregate in `summary.json` and the
+//! `round_loop_profile` cells of `BENCH_fleet.json`, and never touches
+//! the trace or `rounds.jsonl`.
+//!
+//! Usage is RAII: `let _g = prof.scope("aggregate");` records the
+//! scope's elapsed wall time when the guard drops.  A disabled
+//! profiler ([`Prof::new`]`(false)`) allocates nothing and its scopes
+//! are no-ops — the round loop pays one `Option` check per phase.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-phase wall-time collector.  Single-threaded by design: scopes
+/// are opened only on the driver thread (the fan-out itself is one
+/// scope — per-worker timing would re-introduce scheduling noise the
+/// deterministic design exists to avoid).
+#[derive(Debug, Default)]
+pub struct Prof {
+    inner: Option<RefCell<BTreeMap<&'static str, Vec<f64>>>>,
+}
+
+impl Prof {
+    pub fn new(enabled: bool) -> Prof {
+        Prof { inner: enabled.then(|| RefCell::new(BTreeMap::new())) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a named RAII scope; elapsed wall-ms is recorded when the
+    /// returned guard drops.  No-op (and no clock read) when disabled.
+    #[must_use = "the scope records on drop; bind it with `let _g = ...`"]
+    pub fn scope(&self, name: &'static str) -> Scope<'_> {
+        Scope { rec: self.inner.as_ref().map(|_| (self, name, Instant::now())) }
+    }
+
+    fn record_ms(&self, name: &'static str, ms: f64) {
+        if let Some(m) = &self.inner {
+            m.borrow_mut().entry(name).or_default().push(ms);
+        }
+    }
+
+    /// Aggregate every phase into count / total / mean / p50 / p95
+    /// wall-ms (nearest-rank percentiles).  `None` when disabled, so
+    /// callers can gate the `"profile"` summary key on it directly.
+    pub fn summary_json(&self) -> Option<Json> {
+        let m = self.inner.as_ref()?.borrow();
+        let mut pairs: Vec<(&str, Json)> = Vec::with_capacity(m.len());
+        for (name, xs) in m.iter() {
+            let mut s = xs.clone();
+            s.sort_by(|a, b| a.total_cmp(b));
+            let total: f64 = s.iter().sum();
+            pairs.push((*name, Json::obj(vec![
+                ("count", Json::from(s.len())),
+                ("total_ms", Json::from(total)),
+                ("mean_ms", Json::from(total / s.len() as f64)),
+                ("p50_ms", Json::from(percentile(&s, 0.50))),
+                ("p95_ms", Json::from(percentile(&s, 0.95))),
+            ])));
+        }
+        Some(Json::obj(pairs))
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice
+/// (`q` in [0, 1]); 0.0 for an empty slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// RAII guard returned by [`Prof::scope`].
+pub struct Scope<'a> {
+    rec: Option<(&'a Prof, &'static str, Instant)>,
+}
+
+impl Drop for Scope<'_> {
+    fn drop(&mut self) {
+        if let Some((p, name, t0)) = self.rec.take() {
+            p.record_ms(name, t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 100.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.50), 3.0);
+        assert_eq!(percentile(&xs, 0.95), 100.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.5], 0.95), 7.5);
+    }
+
+    #[test]
+    fn disabled_prof_records_nothing() {
+        let p = Prof::new(false);
+        assert!(!p.enabled());
+        {
+            let _g = p.scope("select");
+        }
+        assert!(p.summary_json().is_none());
+    }
+
+    #[test]
+    fn enabled_prof_aggregates_per_phase() {
+        let p = Prof::new(true);
+        assert!(p.enabled());
+        for _ in 0..3 {
+            let _g = p.scope("aggregate");
+        }
+        {
+            let _g = p.scope("eval");
+        }
+        // direct recording keeps the aggregation test deterministic
+        p.record_ms("select", 4.0);
+        p.record_ms("select", 2.0);
+        let j = p.summary_json().unwrap();
+        let sel = j.req("select").unwrap();
+        assert_eq!(sel.req("count").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(sel.req("total_ms").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(sel.req("mean_ms").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(sel.req("p50_ms").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(sel.req("p95_ms").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(j.req("aggregate").unwrap()
+                    .req("count").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("eval").unwrap()
+                    .req("count").unwrap().as_usize().unwrap(), 1);
+        // keys come out sorted (BTreeMap) -> stable summary key order
+        let names: Vec<&str> = j.as_obj().unwrap()
+            .iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, ["aggregate", "eval", "select"]);
+    }
+}

@@ -1,0 +1,346 @@
+//! Deterministic virtual-time span tracing for the fleet simulator.
+//!
+//! Every fleet phase — selection, link-regime flips, broadcast,
+//! local training, full/partial/stale uploads, queue evictions,
+//! aggregation, eval, checkpoint commits — becomes one typed
+//! [`TraceEvent`] carrying **virtual** start/duration seconds from the
+//! per-client clocks (or the coordinator's synthetic timeline) plus
+//! payload counters (bytes, energy J, battery fraction, staleness age).
+//! Host wall-clock never enters an event: the stream is a pure function
+//! of (config, seed), so `trace.json` is bitwise identical for any
+//! `MFT_THREADS` — pinned by `tests/fleet_trace.rs`.
+//!
+//! Buffering discipline:
+//!   * each client owns a bounded [`TraceBuf`] (capacity
+//!     `FleetConfig::trace_ring`); its worker thread pushes events
+//!     during the local round, so no cross-thread ordering exists to
+//!     get wrong;
+//!   * the driver drains every client **in client-id order** after each
+//!     round and appends its own coordinator events last, so the merged
+//!     [`TraceSink`] stream is (round, client-id, push-seq) ordered by
+//!     construction;
+//!   * a full buffer drops the *newest* events and counts them in
+//!     `events_dropped` (surfaced in the export's `otherData`) — the
+//!     retained prefix keeps span starts intact and nothing is
+//!     truncated silently.
+//!
+//! Export is Chrome trace-event JSON (the `{"traceEvents": [...]}`
+//! form), loadable in `chrome://tracing` and Perfetto: pid 0 is the
+//! fleet, tid 0 the coordinator track, tid `i+1` client `i`'s track;
+//! `ts`/`dur` are virtual microseconds.  [`validate_chrome_trace`]
+//! checks the shape CI relies on: every event carries
+//! name/ph/pid/tid/ts/dur and complete-event timestamps are
+//! non-decreasing per track.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One virtual-time span (or instant, `dur_s == 0`).  Field semantics
+/// vary slightly by `name` — the emitting site documents its use of the
+/// counter fields:
+///
+/// | name                 | bytes            | bytes_aux           | n            | age            |
+/// |----------------------|------------------|---------------------|--------------|----------------|
+/// | `select`             | —                | —                   | cohort size  | —              |
+/// | `regime_step`        | —                | —                   | new state    | —              |
+/// | `broadcast`          | bytes down       | —                   | —            | —              |
+/// | `local_round`        | —                | —                   | samples      | —              |
+/// | `upload`/`_partial`  | fresh bytes up   | —                   | —            | —              |
+/// | `upload_stale_flush` | backlog bytes up | —                   | blobs done   | oldest (rounds)|
+/// | `evict_stale`        | bytes dropped    | transmitted, wasted | —            | oldest (rounds)|
+/// | `aggregate`          | —                | —                   | cohort size  | stale deltas   |
+/// | `eval` / `ckpt_commit` | —              | —                   | — / clients  | —              |
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub round: u64,
+    /// `None` = coordinator track (tid 0); `Some(i)` = client `i`
+    /// (tid `i + 1`).
+    pub client: Option<usize>,
+    /// Virtual start time in seconds — a client's own clock for client
+    /// events, the coordinator's synthetic timeline for coordinator
+    /// events (tracks are independent; only per-track order matters).
+    pub t0_s: f64,
+    /// Virtual duration in seconds (0 for instant markers).
+    pub dur_s: f64,
+    pub n: u64,
+    pub bytes: u64,
+    pub bytes_aux: u64,
+    pub energy_j: f64,
+    /// Battery level fraction at span end (0 when not meaningful).
+    pub battery: f64,
+    /// Staleness age in rounds where applicable.
+    pub age: u64,
+}
+
+/// Per-client bounded event buffer.  One lives inside each
+/// `FleetClient` when tracing is on; the driver drains it every round,
+/// so its high-water mark is one round's worth of events — the capacity
+/// is a guard rail, not a working limit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceBuf {
+    cap: usize,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl TraceBuf {
+    pub fn new(cap: usize) -> TraceBuf {
+        TraceBuf { cap: cap.max(1), events: Vec::new(), dropped: 0 }
+    }
+
+    /// Append an event, or count it as dropped when the buffer is at
+    /// capacity.  Dropping the newest (not rotating out the oldest)
+    /// keeps the retained prefix chronologically contiguous.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.events.push(ev);
+        }
+    }
+
+    /// Take the buffered events and the drop count, leaving the buffer
+    /// empty for the next round.
+    pub fn drain(&mut self) -> (Vec<TraceEvent>, u64) {
+        (std::mem::take(&mut self.events), std::mem::take(&mut self.dropped))
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// The merged, deterministic event stream: per-round client drains (in
+/// client-id order) followed by that round's coordinator events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSink {
+    pub events: Vec<TraceEvent>,
+    /// Total events lost to per-client buffer capacity — exported under
+    /// `otherData.events_dropped` so truncation is never silent.
+    pub dropped: u64,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// Fold one client's round drain into the stream.
+    pub fn absorb(&mut self, events: Vec<TraceEvent>, dropped: u64) {
+        self.events.extend(events);
+        self.dropped += dropped;
+    }
+
+    /// Append a coordinator event (unbounded: the coordinator emits a
+    /// handful of events per round, not per client).
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// Serialize as Chrome trace-event JSON: metadata events naming the
+    /// process and every track first, then one complete (`ph: "X"`)
+    /// event per span with virtual-µs `ts`/`dur` and the payload
+    /// counters under `args`.
+    pub fn to_chrome_json(&self, n_clients: usize) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(self.events.len() + n_clients + 2);
+        evs.push(meta_event("process_name", 0, "mft-fleet"));
+        evs.push(meta_event("thread_name", 0, "coordinator"));
+        for c in 0..n_clients {
+            evs.push(meta_event("thread_name", c + 1, &format!("client {c}")));
+        }
+        for e in &self.events {
+            let tid = e.client.map(|c| c + 1).unwrap_or(0);
+            evs.push(Json::obj(vec![
+                ("name", Json::from(e.name)),
+                ("cat", Json::from("fleet")),
+                ("ph", Json::from("X")),
+                ("pid", Json::from(0usize)),
+                ("tid", Json::from(tid)),
+                ("ts", Json::from(e.t0_s * 1e6)),
+                ("dur", Json::from(e.dur_s * 1e6)),
+                ("args", Json::obj(vec![
+                    ("round", Json::from(e.round)),
+                    ("n", Json::from(e.n)),
+                    ("bytes", Json::from(e.bytes)),
+                    ("bytes_aux", Json::from(e.bytes_aux)),
+                    ("energy_j", Json::from(e.energy_j)),
+                    ("battery", Json::from(e.battery)),
+                    ("age", Json::from(e.age)),
+                ])),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::from("ms")),
+            ("otherData", Json::obj(vec![
+                ("clients", Json::from(n_clients)),
+                ("events", Json::from(self.events.len())),
+                ("events_dropped", Json::from(self.dropped)),
+            ])),
+        ])
+    }
+
+    /// Write the Chrome trace-event JSON to `path`.
+    pub fn write(&self, path: &Path, n_clients: usize) -> Result<()> {
+        std::fs::write(path, self.to_chrome_json(n_clients).to_string())
+            .with_context(|| format!("write trace {}", path.display()))
+    }
+}
+
+fn meta_event(name: &str, tid: usize, value: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(name)),
+        ("ph", Json::from("M")),
+        ("pid", Json::from(0usize)),
+        ("tid", Json::from(tid)),
+        ("ts", Json::from(0.0)),
+        ("dur", Json::from(0.0)),
+        ("args", Json::obj(vec![("name", Json::from(value))])),
+    ])
+}
+
+/// Validate the Chrome trace-event shape CI depends on: a
+/// `traceEvents` array whose every entry has `name`/`ph`/`pid`/`tid`/
+/// `ts`/`dur`, with complete-event (`ph: "X"`) timestamps
+/// non-decreasing per (pid, tid) track.  Returns the number of
+/// complete events.
+pub fn validate_chrome_trace(j: &Json) -> Result<usize> {
+    let evs = j.req("traceEvents")?.as_arr()?;
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut n_complete = 0usize;
+    for (i, e) in evs.iter().enumerate() {
+        let ctx = |k: &str| format!("traceEvents[{i}].{k}");
+        e.req("name")
+            .and_then(|v| v.as_str())
+            .with_context(|| ctx("name"))?;
+        let ph = e.req("ph")
+            .and_then(|v| v.as_str())
+            .with_context(|| ctx("ph"))?
+            .to_string();
+        let pid = e.req("pid")
+            .and_then(|v| v.as_u64())
+            .with_context(|| ctx("pid"))?;
+        let tid = e.req("tid")
+            .and_then(|v| v.as_u64())
+            .with_context(|| ctx("tid"))?;
+        let ts = e.req("ts")
+            .and_then(|v| v.as_f64())
+            .with_context(|| ctx("ts"))?;
+        e.req("dur")
+            .and_then(|v| v.as_f64())
+            .with_context(|| ctx("dur"))?;
+        if ph == "X" {
+            n_complete += 1;
+            let last = last_ts.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+            if ts < *last {
+                bail!(
+                    "traceEvents[{i}]: ts {ts} goes backwards on track \
+                     (pid {pid}, tid {tid}); previous ts {last}");
+            }
+            *last = ts;
+        }
+    }
+    Ok(n_complete)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, client: Option<usize>, t0: f64, dur: f64)
+          -> TraceEvent {
+        TraceEvent { name, client, t0_s: t0, dur_s: dur, ..TraceEvent::default() }
+    }
+
+    #[test]
+    fn buf_bounds_memory_and_counts_drops() {
+        let mut b = TraceBuf::new(2);
+        for i in 0..5 {
+            b.push(ev("upload", Some(0), i as f64, 0.0));
+        }
+        assert_eq!(b.len(), 2);
+        let (evs, dropped) = b.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(dropped, 3);
+        // earliest events are the ones retained
+        assert_eq!(evs[0].t0_s, 0.0);
+        assert_eq!(evs[1].t0_s, 1.0);
+        // drained: empty and counter reset
+        assert!(b.is_empty());
+        assert_eq!(b.drain(), (Vec::new(), 0));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_roundtrips() {
+        let mut sink = TraceSink::new();
+        sink.absorb(vec![
+            ev("broadcast", Some(0), 0.0, 1.5),
+            ev("local_round", Some(0), 1.5, 10.0),
+        ], 0);
+        sink.absorb(vec![ev("upload", Some(1), 0.5, 2.0)], 2);
+        sink.push(ev("aggregate", None, 20.0, 0.0));
+        let j = sink.to_chrome_json(2);
+        // serialize -> reparse -> validate: what CI's summarize step sees
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(validate_chrome_trace(&back).unwrap(), 4);
+        let other = back.req("otherData").unwrap();
+        assert_eq!(other.req("events_dropped").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(other.req("clients").unwrap().as_u64().unwrap(), 2);
+        // track ids: coordinator on tid 0, client i on tid i+1
+        let evs = back.req("traceEvents").unwrap().as_arr().unwrap();
+        let agg = evs.iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str().ok())
+                == Some("aggregate"))
+            .unwrap();
+        assert_eq!(agg.req("tid").unwrap().as_u64().unwrap(), 0);
+        // virtual seconds exported as microseconds
+        let lr = evs.iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str().ok())
+                == Some("local_round"))
+            .unwrap();
+        assert_eq!(lr.req("ts").unwrap().as_f64().unwrap(), 1.5e6);
+        assert_eq!(lr.req("dur").unwrap().as_f64().unwrap(), 10.0e6);
+    }
+
+    #[test]
+    fn validate_rejects_backwards_time_and_missing_fields() {
+        let mut sink = TraceSink::new();
+        sink.absorb(vec![
+            ev("upload", Some(0), 5.0, 1.0),
+            ev("upload", Some(0), 4.0, 1.0), // goes backwards on track
+        ], 0);
+        let j = sink.to_chrome_json(1);
+        assert!(validate_chrome_trace(&j).unwrap_err()
+            .to_string().contains("backwards"));
+        // equal timestamps on one track are fine (instant markers)
+        let mut ok = TraceSink::new();
+        ok.absorb(vec![
+            ev("evict_stale", Some(0), 5.0, 0.0),
+            ev("regime_step", Some(0), 5.0, 0.0),
+        ], 0);
+        assert_eq!(validate_chrome_trace(&ok.to_chrome_json(1)).unwrap(), 2);
+        // same timestamp on *different* tracks never interacts
+        let mut two = TraceSink::new();
+        two.absorb(vec![ev("upload", Some(0), 9.0, 0.0)], 0);
+        two.absorb(vec![ev("upload", Some(1), 1.0, 0.0)], 0);
+        assert_eq!(validate_chrome_trace(&two.to_chrome_json(2)).unwrap(), 2);
+        // missing required key
+        let bad = Json::obj(vec![
+            ("traceEvents", Json::Arr(vec![Json::obj(vec![
+                ("name", Json::from("x")),
+                ("ph", Json::from("X")),
+            ])])),
+        ]);
+        assert!(validate_chrome_trace(&bad).is_err());
+    }
+}

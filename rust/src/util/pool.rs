@@ -7,7 +7,11 @@
 //! construction: workers never share mutable state, and results are
 //! merged back **in item order**, so the caller-observable outcome is
 //! identical whether the map ran on 1 thread or 16.  The only thing
-//! threads may change is wall-clock time.
+//! threads may change is wall-clock time.  The fleet's trace events
+//! ([`crate::obs::trace`]) inherit the guarantee for free: each client
+//! buffers its own spans as part of the per-item mutable state, and the
+//! driver drains the buffers in client-id order after the merge, so
+//! `--trace` output is bitwise identical for any `MFT_THREADS` too.
 //!
 //! Thread count resolution (see [`resolve_threads`]):
 //!   explicit caller value > 0  >  `MFT_THREADS` env  >  host parallelism.

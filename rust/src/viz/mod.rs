@@ -15,7 +15,9 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
-use crate::metrics::{read_rounds, read_steps, RoundRecord, StepRecord};
+use crate::metrics::{read_rounds, read_steps, read_summary, RoundRecord,
+                     StepRecord};
+use crate::util::json::Json;
 
 const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
 
@@ -132,7 +134,7 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     };
     let mut waste = String::new();
     if last.bytes_up_stale > 0 || last.bytes_up_wasted > 0
-        || last.bytes_dropped_stale > 0 {
+        || last.bytes_dropped_stale > 0 || last.bytes_wasted_evicted > 0 {
         waste.push_str(" (");
         let mut parts_s: Vec<String> = Vec::new();
         if last.bytes_up_stale > 0 {
@@ -140,6 +142,9 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
         }
         if last.bytes_up_wasted > 0 {
             parts_s.push(format!("waste {} B", last.bytes_up_wasted));
+        }
+        if last.bytes_wasted_evicted > 0 {
+            parts_s.push(format!("evicted {} B", last.bytes_wasted_evicted));
         }
         if last.bytes_dropped_stale > 0 {
             parts_s.push(format!("dropped {} B", last.bytes_dropped_stale));
@@ -160,6 +165,31 @@ pub fn render_fleet(recs: &[RoundRecord], total_rounds: Option<usize>)
     out
 }
 
+/// Render the host wall-clock phase breakdown (`"profile"` in a fleet
+/// run's `summary.json`, present only when the run passed `--profile`)
+/// as an extra dashboard section.  Returns "" for anything that is not
+/// an object, so callers can append it unconditionally.
+pub fn render_profile(profile: &Json) -> String {
+    let mut out = String::new();
+    let Ok(phases) = profile.as_obj() else {
+        return out;
+    };
+    if phases.is_empty() {
+        return out;
+    }
+    out.push_str("host profile (wall-clock ms per phase)\n");
+    for (name, p) in phases {
+        let g = |k: &str| p.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        let count = p.get("count").and_then(|v| v.as_u64().ok()).unwrap_or(0);
+        out.push_str(&format!(
+            "  {:<14} x{:<5} mean {:>9.3}  p50 {:>9.3}  p95 {:>9.3}  \
+             total {:>10.3}\n",
+            name, count, g("mean_ms"), g("p50_ms"), g("p95_ms"),
+            g("total_ms")));
+    }
+    out
+}
+
 pub fn cmd_viz(args: &Args) -> Result<()> {
     let Some(dir) = args.pos(1) else {
         bail!("usage: mft viz <run-dir> [--follow] [--steps N] [--rounds N]");
@@ -176,6 +206,13 @@ pub fn cmd_viz(args: &Args) -> Result<()> {
         if is_fleet {
             let recs = read_rounds(dir).unwrap_or_default();
             print!("{}", render_fleet(&recs, total_rounds));
+            // a finished --profile run's summary carries the host
+            // wall-clock phase breakdown; tack it on when present
+            if let Ok(s) = read_summary(dir) {
+                if let Some(p) = s.get("profile") {
+                    print!("{}", render_profile(p));
+                }
+            }
         } else {
             let recs = read_steps(dir).unwrap_or_default();
             print!("{}", render(&recs, total));
@@ -247,6 +284,7 @@ mod tests {
                 bytes_up_wasted: 8192,
                 bytes_up_stale: 4096,
                 bytes_dropped_stale: 1024,
+                bytes_wasted_evicted: 2048,
                 bytes_down: 65536,
                 time_s: 42.0,
                 straggler_time_s: 97.5,
@@ -265,6 +303,7 @@ mod tests {
         assert!(s.contains("fail 1 up-fail 2"), "{s}");
         assert!(s.contains("stale 4096 B"), "{s}");
         assert!(s.contains("waste 8192 B"), "{s}");
+        assert!(s.contains("evicted 2048 B"), "{s}");
         assert!(s.contains("dropped 1024 B"), "{s}");
         assert!(s.contains("down 65536 B"), "{s}");
         assert!(s.contains("late t 97.5s"), "{s}");
@@ -277,6 +316,7 @@ mod tests {
         quiet[1].bytes_up_wasted = 0;
         quiet[1].bytes_up_stale = 0;
         quiet[1].bytes_dropped_stale = 0;
+        quiet[1].bytes_wasted_evicted = 0;
         quiet[1].bytes_down = 0;
         quiet[1].n_skipped_link = 0;
         let qs = render_fleet(&quiet, Some(4));
@@ -285,8 +325,36 @@ mod tests {
         assert!(!qs.contains("waste"), "{qs}");
         assert!(!qs.contains("stale"), "{qs}");
         assert!(!qs.contains("dropped"), "{qs}");
+        assert!(!qs.contains("evicted"), "{qs}");
         assert!(!qs.contains("down"), "{qs}");
         assert!(!qs.contains("link"), "{qs}");
+    }
+
+    #[test]
+    fn render_profile_section() {
+        let p = Json::obj(vec![
+            ("local_rounds", Json::obj(vec![
+                ("count", Json::from(4usize)),
+                ("total_ms", Json::from(12.0)),
+                ("mean_ms", Json::from(3.0)),
+                ("p50_ms", Json::from(2.5)),
+                ("p95_ms", Json::from(6.0)),
+            ])),
+            ("select", Json::obj(vec![
+                ("count", Json::from(4usize)),
+                ("total_ms", Json::from(0.4)),
+                ("mean_ms", Json::from(0.1)),
+                ("p50_ms", Json::from(0.1)),
+                ("p95_ms", Json::from(0.2)),
+            ])),
+        ]);
+        let s = render_profile(&p);
+        assert!(s.contains("host profile"), "{s}");
+        assert!(s.contains("local_rounds"), "{s}");
+        assert!(s.contains("select"), "{s}");
+        // not an object / empty object -> renders nothing
+        assert_eq!(render_profile(&Json::Null), "");
+        assert_eq!(render_profile(&Json::obj(vec![])), "");
     }
 
     #[test]

@@ -816,6 +816,55 @@ fn partial_upload_resume_offsets_survive_fleet_resume() {
     assert_eq!(res_a.summary.to_string(), res_b.summary.to_string());
 }
 
+/// `--ckpt-every K` commits the checkpoint only every K-th round, and a
+/// kill landing on an *uncommitted* round must resume from the last
+/// committed one and replay the tail bit-for-bit.  The kill lands on
+/// round 3 under K=2: the on-disk checkpoint must still be the round-2
+/// commit (if the cadence gate leaked, the checkpoint would say 3 and
+/// the replay would skip a round), and the completed resumed run must
+/// match an uninterrupted one on every record and artifact.
+#[test]
+fn ckpt_every_resumes_bitwise_from_last_committed_round() {
+    let base = |dir: &PathBuf| {
+        let mut cfg = transport_cfg();
+        cfg.rounds = 4;
+        cfg.link_var = 0.5;
+        // tight enough that queued blobs straddle the commit boundary,
+        // so the replayed tail exercises the stale-upload state too
+        cfg.straggler_factor = 4.0;
+        cfg.ckpt_every = 2;
+        cfg.out_dir = Some(dir.display().to_string());
+        cfg
+    };
+    let dir_a = tdir("ckev-straight");
+    let res_a = run_fleet(&base(&dir_a)).unwrap();
+
+    let dir_b = tdir("ckev-crashed");
+    let mut first = base(&dir_b);
+    first.rounds = 3;
+    run_fleet(&first).unwrap();
+    let ck = std::fs::read_to_string(dir_b.join("fleet_ckpt.json")).unwrap();
+    let ck = mft::util::json::Json::parse(&ck).unwrap();
+    assert_eq!(ck.get("round").unwrap().as_usize().unwrap(), 2,
+               "K=2 must leave round 3 uncommitted");
+
+    let mut second = base(&dir_b);
+    second.resume = true;
+    let res_b = run_fleet(&second).unwrap();
+
+    assert_eq!(res_a.rounds.len(), res_b.rounds.len());
+    for (a, b) in res_a.rounds.iter().zip(&res_b.rounds) {
+        assert_eq!(a, b, "round {} diverged after cadenced resume",
+                   a.round);
+    }
+    for f in ["rounds.jsonl", "summary.json", "adapter.safetensors"] {
+        let x = std::fs::read(dir_a.join(f)).unwrap();
+        let y = std::fs::read(dir_b.join(f)).unwrap();
+        assert_eq!(x, y, "{f} differs between straight and resumed runs");
+    }
+    assert_eq!(res_a.summary.to_string(), res_b.summary.to_string());
+}
+
 #[test]
 fn resume_rejects_a_different_config() {
     let dir = tdir("resume-mismatch");

@@ -1,0 +1,179 @@
+//! Integration tests for the fleet's deterministic tracing (`--trace`).
+//!
+//! Two claims from the observability contract are pinned here:
+//!
+//!   * the trace is part of the determinism contract: `trace.json` is
+//!     **bitwise identical** for any coordinator thread count (events
+//!     ride per-client buffers drained in client-id order, so thread
+//!     scheduling can never reorder them), and the written file is
+//!     well-formed Chrome trace-event JSON with per-track monotone
+//!     timestamps;
+//!   * the spans are not decorative: per round, the byte and energy
+//!     counters on the trace events reconcile *exactly* (bytes) /
+//!     to float tolerance (energy: the upload leg's energy is split
+//!     pro-rata between the backlog-flush and fresh-delta spans) with
+//!     the `RoundRecord` fate ledger the driver writes to
+//!     `rounds.jsonl`.
+//!
+//! The config is deliberately hostile — tight deadline, variable links,
+//! correlated outages, seeded upload failures, a capacity-1 stale queue
+//! — so truncated uploads, backlog flushes, age/capacity evictions and
+//! failed uploads all actually fire; each test asserts the paths it
+//! reconciles were exercised.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use mft::fleet::{run_fleet, FleetConfig};
+use mft::obs::trace::{validate_chrome_trace, TraceEvent};
+use mft::util::json::Json;
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("mft-fleet-trace-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Transport-enabled config that exercises every byte-fate path: the
+/// tight deadline truncates uploads (queued blobs + backlog flushes),
+/// the capacity-1 queue evicts transmitted-toward blobs, the failure
+/// draw loses fresh deltas, and the regime chain flips link states.
+fn trace_cfg() -> FleetConfig {
+    let mut cfg = FleetConfig::default();
+    cfg.n_clients = 8;
+    cfg.rounds = 5;
+    cfg.local_steps = 6;
+    cfg.micro_batch = 8;
+    cfg.window = 32;
+    cfg.vocab = 384;
+    cfg.rank = 4;
+    cfg.lr = 0.05;
+    cfg.corpus_bytes = 50_000;
+    cfg.dirichlet_alpha = 1.0;
+    cfg.seed = 42;
+    cfg.battery_min = 0.9;
+    cfg.battery_max = 1.0;
+    cfg.ram_required_bytes = 0;
+    cfg.transport = true;
+    cfg.flops_per_token = 1e5;
+    cfg.straggler_factor = 4.0;
+    cfg.link_var = 0.8;
+    cfg.upload_fail_prob = 0.5;
+    cfg.link_regime = Some(mft::fleet::LinkRegime {
+        p_bad: 0.4,
+        factor: 0.3,
+    });
+    cfg.drop_stale_after = 1;
+    cfg
+}
+
+#[test]
+fn trace_is_bitwise_identical_across_thread_counts() {
+    let dir = tdir("threads");
+    let run_with = |threads: usize| -> Vec<u8> {
+        let path = dir.join(format!("trace-t{threads}.json"));
+        let mut cfg = trace_cfg();
+        cfg.threads = threads;
+        cfg.trace = Some(path.display().to_string());
+        run_fleet(&cfg).unwrap();
+        std::fs::read(&path).unwrap()
+    };
+    let t1 = run_with(1);
+    // the file must be well-formed Chrome trace-event JSON: every event
+    // carries pid/tid/ts/dur/name and per-track timestamps are monotone
+    let j = Json::parse(std::str::from_utf8(&t1).unwrap()).unwrap();
+    let n_events = validate_chrome_trace(&j).unwrap();
+    assert!(n_events > 0, "trace has no complete events");
+    let other = j.get("otherData").unwrap();
+    assert_eq!(other.get("clients").unwrap().as_usize().unwrap(), 8);
+    assert_eq!(other.get("events_dropped").unwrap().as_u64().unwrap(), 0);
+    for threads in [2usize, 4] {
+        let tn = run_with(threads);
+        assert_eq!(t1, tn,
+                   "trace.json differs at {threads} coordinator threads");
+    }
+}
+
+#[test]
+fn trace_spans_reconcile_with_round_record_byte_and_energy_ledger() {
+    let mut cfg = trace_cfg();
+    cfg.trace = Some(
+        tdir("reconcile").join("trace.json").display().to_string());
+    let res = run_fleet(&cfg).unwrap();
+    let sink = res.trace.as_ref().expect("--trace must return the sink");
+    assert_eq!(sink.dropped, 0, "ring must not overflow at default size");
+
+    let mut by_round: BTreeMap<u64, Vec<&TraceEvent>> = BTreeMap::new();
+    for ev in &sink.events {
+        by_round.entry(ev.round).or_default().push(ev);
+    }
+
+    for r in &res.rounds[1..] {
+        let evs = by_round
+            .get(&(r.round as u64))
+            .unwrap_or_else(|| panic!("round {} has no trace events",
+                                      r.round));
+        let sum = |names: &[&str]| -> u64 {
+            evs.iter()
+                .filter(|e| names.contains(&e.name))
+                .map(|e| e.bytes)
+                .sum()
+        };
+        // downlink: every broadcast span's bytes, full or cut short
+        assert_eq!(sum(&["broadcast"]), r.bytes_down,
+                   "round {}: broadcast spans != bytes_down", r.round);
+        // uplink: everything that hit the air this round.  The ledger
+        // splits the same bytes by fate — delivered + stale progress +
+        // (wasted minus the eviction-reconciled slice, which re-charges
+        // *earlier* rounds' transmissions and so never had a span this
+        // round)
+        assert_eq!(
+            sum(&["upload", "upload_partial", "upload_stale_flush"]),
+            r.bytes_up + r.bytes_up_stale
+                + (r.bytes_up_wasted - r.bytes_wasted_evicted),
+            "round {}: upload spans != uplink fate ledger", r.round);
+        // evictions: flushable bytes dropped, and transmitted-toward
+        // bytes re-charged as waste, each on its own counter
+        assert_eq!(sum(&["evict_stale"]), r.bytes_dropped_stale,
+                   "round {}: evict spans != bytes_dropped_stale",
+                   r.round);
+        let evicted_aux: u64 = evs.iter()
+            .filter(|e| e.name == "evict_stale")
+            .map(|e| e.bytes_aux)
+            .sum();
+        assert_eq!(evicted_aux, r.bytes_wasted_evicted,
+                   "round {}: evict aux bytes != bytes_wasted_evicted",
+                   r.round);
+        // energy: the round's cumulative-energy delta is the idle drain
+        // (carried by the coordinator's select span) plus every client
+        // span's share.  The upload leg's energy is split pro-rata
+        // across two spans, so this holds to float tolerance only.
+        let span_e: f64 = evs.iter().map(|e| e.energy_j).sum();
+        let prev = &res.rounds[r.round - 1];
+        let delta = r.energy_j - prev.energy_j;
+        assert!((span_e - delta).abs() <= 1e-9 * delta.max(1.0),
+                "round {}: span energy {span_e} != ledger delta {delta}",
+                r.round);
+        // coordinator spans are present every round
+        for name in ["select", "aggregate", "eval"] {
+            assert_eq!(
+                evs.iter().filter(|e| e.name == name).count(), 1,
+                "round {}: expected exactly one {name} span", r.round);
+        }
+    }
+
+    // the reconciliation is vacuous unless the hostile paths fired
+    let train = &res.rounds[1..];
+    assert!(train.iter().map(|r| r.bytes_up).sum::<u64>() > 0,
+            "no delivered bytes");
+    assert!(train.iter().map(|r| r.bytes_up_stale).sum::<u64>() > 0,
+            "no truncated uploads");
+    assert!(train.iter().map(|r| r.bytes_dropped_stale).sum::<u64>() > 0,
+            "no evictions");
+    assert!(train.iter().map(|r| r.bytes_wasted_evicted).sum::<u64>() > 0,
+            "no transmitted-toward bytes were reconciled");
+    assert!(train.iter().any(|r| r.n_stragglers > 0),
+            "no stragglers — deadline not tight enough");
+}

@@ -8,6 +8,9 @@
 //!                            spawns `mft train` workers for clean RSS)
 //!   mft agent [flags]        the campus health-agent case study
 //!   mft bench fleet [flags]  fleet perf benchmarks -> BENCH_fleet.json
+//!   mft chaos [flags]        crash sweep: kill + resume the fleet at
+//!                            every checkpoint failpoint, assert
+//!                            byte-identical recovery
 //!   mft trace summarize F    per-phase rollups of a fleet `--trace` file
 //!   mft viz <run-dir>        terminal training visualizer
 //!   mft devices              list simulated device profiles
@@ -153,13 +156,14 @@ pub fn main() -> Result<()> {
         Some("exp") => crate::exp::drivers::dispatch(&args),
         Some("agent") => crate::agent::cmd_agent(&args),
         Some("bench") => crate::bench::dispatch(&args),
+        Some("chaos") => crate::fleet::cmd_chaos(&args),
         Some("trace") => crate::obs::cmd_trace(&args),
         Some("viz") => crate::viz::cmd_viz(&args),
         Some("devices") => cmd_devices(),
         Some("info") => cmd_info(&args),
         Some(other) => bail!("unknown subcommand {other:?}; try \
-                              train|fleet|exp|agent|bench|trace|viz|\
-                              devices|info"),
+                              train|fleet|exp|agent|bench|chaos|trace|\
+                              viz|devices|info"),
         None => {
             print_help();
             Ok(())
@@ -250,10 +254,17 @@ fn print_help() {
                      --stale-weight W (a blob finishing `age` rounds\n\
                      late aggregates at weight W^age — default 0.5)\n\
                      --resume (continue a killed run from\n\
-                     <out>/fleet_ckpt.json, bit-for-bit)\n\
+                     <out>/fleet_ckpt.json, bit-for-bit; damaged\n\
+                     checkpoint generations are quarantined and resume\n\
+                     falls back to the previous one)\n\
                      --ckpt-every K (checkpoint every K rounds instead\n\
                      of every round; --resume replays the uncommitted\n\
                      tail bit-for-bit — default 1)\n\
+                     --ckpt-keep N (committed checkpoint generations\n\
+                     retained for corruption fallback — default 2)\n\
+                     --fail-at SPEC (deterministic fault injection:\n\
+                     point[:N][=crash|err|errxM], comma-separated; same\n\
+                     grammar as MFT_FAILPOINTS — see `mft chaos`)\n\
                      --trace FILE (deterministic virtual-time span\n\
                      timeline as Chrome trace-event JSON: one track per\n\
                      client + a coordinator track; open in Perfetto or\n\
@@ -268,6 +279,15 @@ fn print_help() {
            bench     perf benchmarks: `bench fleet [--quick] [--out F]`\n\
                      writes BENCH_fleet.json (kernel + round-loop numbers\n\
                      + per-phase wall-clock profile)\n\
+           chaos     self-verifying crash sweep: for every registered\n\
+                     checkpoint failpoint, kill a fleet run there in a\n\
+                     subprocess, resume it, and assert rounds.jsonl,\n\
+                     summary.json and adapter.safetensors come out\n\
+                     byte-identical to an uninterrupted reference run;\n\
+                     also exercises corrupt-generation fallback.\n\
+                     --quick (representative failpoint subset)\n\
+                     --points P1,P2 (explicit subset) --out DIR\n\
+                     (default chaos-out; writes chaos_report.json)\n\
            trace     inspect a fleet trace: `trace summarize FILE\n\
                      [--top K]` validates the Chrome trace-event shape\n\
                      and prints per-phase virtual-time/bytes/energy\n\

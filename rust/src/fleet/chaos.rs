@@ -1,0 +1,404 @@
+//! `mft chaos` — the self-verifying crash sweep.
+//!
+//! The crash-anywhere contract says: kill the fleet driver at *any*
+//! point in its checkpoint/resume I/O and a `--resume` converges to
+//! byte-identical outputs.  This module proves it mechanically instead
+//! of trusting the code review:
+//!
+//! 1. run an uninterrupted **reference** fleet in-process (failpoints
+//!    cleared) and keep its outputs;
+//! 2. for every registered failpoint in [`faults::ALL_POINTS`], run the
+//!    same fleet in a **subprocess** armed (via `MFT_FAILPOINTS`) to
+//!    crash at that point, assert it died with [`faults::EXIT_CODE`],
+//!    then `--resume` it unarmed and assert `rounds.jsonl`,
+//!    `adapter.safetensors`, `fleet_ckpt.json` and (normalized)
+//!    `summary.json` are byte-identical to the reference.  `resume.*`
+//!    points never fire on a fresh run, so for those the sweep first
+//!    *manufactures* an interrupted run (crash at the second commit
+//!    rename), then crashes during the resume itself before recovering;
+//! 3. one extra scenario corrupts the newest committed generation with
+//!    a bit flip and asserts the unarmed resume quarantines it, falls
+//!    back one generation, and still converges byte-identically.
+//!
+//! The `summary.json` comparison drops the `"recovery"` and
+//! `"profile"` keys first: both describe what happened to *a process*
+//! (retries, quarantines, wall-clock), not the training trajectory, and
+//! a crashed-and-recovered run legitimately differs there.
+//!
+//! A `chaos_report.json` lands in `--out` (default `chaos-out`) for CI
+//! artifact upload; the process exits nonzero if any leg fails.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::util::faults;
+use crate::util::json::Json;
+
+use super::driver::{fleet_config, run_fleet};
+
+/// The fleet config every sweep leg runs — small enough that a full
+/// sweep is a CI smoke leg, rich enough to exercise the transport
+/// queue in checkpoints, a retention-window GC (rounds > `--ckpt-keep`
+/// + 1, so `ckpt.gc` actually deletes), and partial per-round client
+/// file sets.
+fn fleet_argv(out: &Path) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "fleet", "--clients", "4", "--rounds", "5", "--local-steps", "2",
+        "--corpus-bytes", "60000", "--seed", "7", "--transport",
+        "--upload-fail-prob", "0.2", "--link-var", "0.5",
+        "--straggler-factor", "2", "--ckpt-every", "1", "--ckpt-keep", "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    v.push("--out".to_string());
+    v.push(out.display().to_string());
+    v
+}
+
+/// Representative subset for `--quick` (CI smoke): one point from each
+/// phase of the commit path, the GC, and a resume-side read.
+const QUICK_POINTS: &[&str] = &[
+    "ckpt.client_save",
+    "ckpt.write",
+    "ckpt.rename",
+    "ckpt.gc",
+    "resume.read_json",
+];
+
+pub struct ChaosOpts {
+    /// sweep only [`QUICK_POINTS`] instead of every registered point
+    pub quick: bool,
+    /// explicit point subset (overrides `quick`)
+    pub points: Option<Vec<String>>,
+    /// scratch + report directory
+    pub out: PathBuf,
+}
+
+/// Outcome of one sweep leg (a failpoint, or a named scenario).
+pub struct PointResult {
+    pub name: String,
+    /// `fresh-crash` (point fired during the run), `resume-crash` (the
+    /// point only fires during `--resume`, so the sweep manufactured an
+    /// interrupted run first) or `scenario` (e.g. corrupt fallback)
+    pub mode: &'static str,
+    pub ok: bool,
+    /// empty when ok; otherwise the first divergence/failure
+    pub detail: String,
+}
+
+pub struct ChaosReport {
+    pub results: Vec<PointResult>,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.results.iter().all(|r| r.ok)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::from(self.ok())),
+            ("legs", Json::from(self.results.len())),
+            ("results", Json::Arr(
+                self.results
+                    .iter()
+                    .map(|r| Json::obj(vec![
+                        ("point", Json::from(r.name.clone())),
+                        ("mode", Json::from(r.mode)),
+                        ("ok", Json::from(r.ok)),
+                        ("detail", Json::from(r.detail.clone())),
+                    ]))
+                    .collect(),
+            )),
+        ])
+    }
+}
+
+struct RunOut {
+    code: Option<i32>,
+    stderr: String,
+}
+
+/// Run `<bin> fleet ...` into `dir` as a subprocess.  `failpoints`
+/// arms `MFT_FAILPOINTS` (or scrubs it, so an armed parent env never
+/// leaks into a recovery leg).
+fn run_mft(bin: &Path, dir: &Path, resume: bool,
+           failpoints: Option<&str>) -> Result<RunOut> {
+    let mut argv = fleet_argv(dir);
+    if resume {
+        argv.push("--resume".to_string());
+    }
+    let mut cmd = Command::new(bin);
+    cmd.args(&argv);
+    match failpoints {
+        Some(s) => {
+            cmd.env("MFT_FAILPOINTS", s);
+        }
+        None => {
+            cmd.env_remove("MFT_FAILPOINTS");
+        }
+    }
+    let out = cmd
+        .output()
+        .with_context(|| format!("spawn {} (set MFT_BIN to the mft \
+                                  binary if this is not it)",
+                                 bin.display()))?;
+    Ok(RunOut {
+        code: out.status.code(),
+        stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+    })
+}
+
+/// Last few stderr lines, flattened — enough to diagnose a failed leg
+/// from the report without rerunning.
+fn tail(stderr: &str) -> String {
+    let lines: Vec<&str> = stderr.lines().rev().take(4).collect();
+    lines.into_iter().rev().collect::<Vec<_>>().join(" | ")
+}
+
+/// `summary.json` minus process history (`recovery`, `profile`).
+fn normalized_summary(p: &Path) -> Result<String> {
+    let j = Json::parse(&std::fs::read_to_string(p)
+        .with_context(|| format!("read {}", p.display()))?)
+        .with_context(|| format!("parse {}", p.display()))?;
+    let pairs = j.as_obj()?;
+    Ok(Json::Obj(
+        pairs
+            .iter()
+            .filter(|(k, _)| k != "recovery" && k != "profile")
+            .cloned()
+            .collect(),
+    )
+    .to_string())
+}
+
+/// Byte-compare a recovered run dir against the reference run dir.
+fn compare_run(dir: &Path, ref_dir: &Path)
+               -> std::result::Result<(), String> {
+    for f in ["rounds.jsonl", "adapter.safetensors", "fleet_ckpt.json"] {
+        let a = std::fs::read(dir.join(f))
+            .map_err(|e| format!("read {}: {e}", dir.join(f).display()))?;
+        let b = std::fs::read(ref_dir.join(f)).map_err(
+            |e| format!("read {}: {e}", ref_dir.join(f).display()))?;
+        if a != b {
+            return Err(format!(
+                "{f} differs from the uninterrupted reference \
+                 ({} vs {} bytes)", a.len(), b.len()));
+        }
+    }
+    let a = normalized_summary(&dir.join("summary.json"))
+        .map_err(|e| format!("{e:#}"))?;
+    let b = normalized_summary(&ref_dir.join("summary.json"))
+        .map_err(|e| format!("{e:#}"))?;
+    if a != b {
+        return Err("summary.json differs from the uninterrupted \
+                    reference (after dropping recovery/profile)"
+            .to_string());
+    }
+    Ok(())
+}
+
+fn scratch_dir(out: &Path, name: &str) -> Result<PathBuf> {
+    let dir = out.join(name.replace('.', "_"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("create {}", dir.display()))?;
+    Ok(dir)
+}
+
+/// One failpoint's kill/resume/compare cycle.
+fn sweep_point(bin: &Path, out: &Path, point: &str, ref_dir: &Path)
+               -> Result<PointResult> {
+    let fail = |mode: &'static str, detail: String| PointResult {
+        name: point.to_string(), mode, ok: false, detail,
+    };
+    let dir = scratch_dir(out, point)?;
+    let mut mode: &'static str = "fresh-crash";
+    let r = run_mft(bin, &dir, false, Some(point))?;
+    match r.code {
+        Some(c) if c == faults::EXIT_CODE => {}
+        Some(0) => {
+            // the point never fires on an uninterrupted run (resume.*):
+            // manufacture an interrupted run — crash at the second
+            // commit rename, leaving one committed generation plus
+            // uncommitted round-2 orphans — then crash in the resume
+            mode = "resume-crash";
+            let dir = scratch_dir(out, point)?;
+            let r = run_mft(bin, &dir, false, Some("ckpt.rename:2"))?;
+            if r.code != Some(faults::EXIT_CODE) {
+                return Ok(fail(mode, format!(
+                    "manufacturing an interrupted run exited {:?} \
+                     (wanted {}): {}", r.code, faults::EXIT_CODE,
+                    tail(&r.stderr))));
+            }
+            let r = run_mft(bin, &dir, true, Some(point))?;
+            if r.code != Some(faults::EXIT_CODE) {
+                return Ok(fail(mode, format!(
+                    "failpoint never fired during --resume (exit {:?}): \
+                     {}", r.code, tail(&r.stderr))));
+            }
+        }
+        c => {
+            return Ok(fail(mode, format!(
+                "armed run exited {c:?} (wanted crash {} or clean 0): {}",
+                faults::EXIT_CODE, tail(&r.stderr))));
+        }
+    }
+    // recovery leg: unarmed resume must finish and match the reference
+    let dir = out.join(point.replace('.', "_"));
+    let r = run_mft(bin, &dir, true, None)?;
+    if r.code != Some(0) {
+        return Ok(fail(mode, format!(
+            "recovery --resume exited {:?}: {}", r.code, tail(&r.stderr))));
+    }
+    Ok(match compare_run(&dir, ref_dir) {
+        Ok(()) => PointResult {
+            name: point.to_string(), mode, ok: true,
+            detail: String::new(),
+        },
+        Err(d) => fail(mode, d),
+    })
+}
+
+/// The corrupt-latest-generation scenario: two committed generations,
+/// a bit flip in the newest one's global file, and an unarmed resume
+/// that must quarantine it, fall back one generation, replay the gap
+/// and still match the reference byte-for-byte.
+fn scenario_corrupt_fallback(bin: &Path, out: &Path, ref_dir: &Path)
+                             -> Result<PointResult> {
+    const NAME: &str = "scenario.corrupt_fallback";
+    let fail = |detail: String| PointResult {
+        name: NAME.to_string(), mode: "scenario", ok: false, detail,
+    };
+    let dir = scratch_dir(out, NAME)?;
+    // crash at the *third* commit rename: generations r2 (newest) and
+    // r1 are committed, round-3 files are uncommitted orphans
+    let r = run_mft(bin, &dir, false, Some("ckpt.rename:3"))?;
+    if r.code != Some(faults::EXIT_CODE) {
+        return Ok(fail(format!(
+            "manufacturing two committed generations exited {:?} \
+             (wanted {}): {}", r.code, faults::EXIT_CODE,
+            tail(&r.stderr))));
+    }
+    let j = Json::parse(&std::fs::read_to_string(
+        dir.join("fleet_ckpt.json"))?)?;
+    let newest = &j.req("generations")?.as_arr()?[0];
+    let victim = newest.req("global_ckpt")?.as_str()?.to_string();
+    let mut bytes = std::fs::read(dir.join(&victim))?;
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01; // tensor-data bit flip: parses, fails the CRC
+    std::fs::write(dir.join(&victim), &bytes)?;
+    let r = run_mft(bin, &dir, true, None)?;
+    if r.code != Some(0) {
+        return Ok(fail(format!(
+            "resume over the corrupted generation exited {:?}: {}",
+            r.code, tail(&r.stderr))));
+    }
+    if !r.stderr.contains("quarantined") {
+        return Ok(fail(
+            "resume never reported quarantining the damaged generation"
+                .to_string()));
+    }
+    if !dir.join(format!("quarantined_{victim}")).exists() {
+        return Ok(fail(format!(
+            "quarantined_{victim} evidence file missing after fallback")));
+    }
+    Ok(match compare_run(&dir, ref_dir) {
+        Ok(()) => PointResult {
+            name: NAME.to_string(), mode: "scenario", ok: true,
+            detail: String::new(),
+        },
+        Err(d) => fail(d),
+    })
+}
+
+/// Run the sweep.  `bin` is the `mft` binary used for the subprocess
+/// legs (the reference run happens in-process).
+pub fn run_chaos(bin: &Path, opts: &ChaosOpts) -> Result<ChaosReport> {
+    let points: Vec<String> = match (&opts.points, opts.quick) {
+        (Some(ps), _) => {
+            for p in ps {
+                if !faults::ALL_POINTS.contains(&p.as_str()) {
+                    bail!("--points: unknown failpoint {p:?} (known: {})",
+                          faults::ALL_POINTS.join(", "));
+                }
+            }
+            ps.clone()
+        }
+        (None, true) => {
+            QUICK_POINTS.iter().map(|s| s.to_string()).collect()
+        }
+        (None, false) => {
+            faults::ALL_POINTS.iter().map(|s| s.to_string()).collect()
+        }
+    };
+    std::fs::create_dir_all(&opts.out)
+        .with_context(|| format!("create {}", opts.out.display()))?;
+
+    // uninterrupted reference, in-process; clear (don't inherit) any
+    // failpoints armed in this process or its environment
+    faults::clear();
+    let ref_dir = scratch_dir(&opts.out, "reference")?;
+    let argv = fleet_argv(&ref_dir);
+    let cfg = fleet_config(&Args::parse(argv))
+        .context("chaos reference config")?;
+    run_fleet(&cfg).context("chaos reference run")?;
+
+    let mut results = Vec::new();
+    for p in &points {
+        eprintln!("chaos: sweeping {p} ...");
+        results.push(sweep_point(bin, &opts.out, p, &ref_dir)?);
+    }
+    eprintln!("chaos: sweeping scenario.corrupt_fallback ...");
+    results.push(scenario_corrupt_fallback(bin, &opts.out, &ref_dir)?);
+
+    let report = ChaosReport { results };
+    std::fs::write(opts.out.join("chaos_report.json"),
+                   report.to_json().to_string())
+        .with_context(|| format!("write {}",
+                                 opts.out.join("chaos_report.json")
+                                     .display()))?;
+    Ok(report)
+}
+
+/// `mft chaos [--quick] [--points P1,P2] [--out DIR]`.
+pub fn cmd_chaos(args: &Args) -> Result<()> {
+    let opts = ChaosOpts {
+        quick: args.has("quick"),
+        points: args.get("points").map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        }),
+        out: PathBuf::from(args.get("out").unwrap_or("chaos-out")),
+    };
+    let bin = match std::env::var_os("MFT_BIN") {
+        Some(p) => PathBuf::from(p),
+        None => std::env::current_exe()
+            .context("resolve the running mft binary (set MFT_BIN to \
+                      override)")?,
+    };
+    let report = run_chaos(&bin, &opts)?;
+    for r in &report.results {
+        eprintln!("chaos: {:<28} {:<13} {}", r.name, r.mode,
+                  if r.ok { "ok" } else { "FAIL" });
+        if !r.ok {
+            eprintln!("       {}", r.detail);
+        }
+    }
+    println!("{}", report.to_json());
+    if !report.ok() {
+        bail!("chaos sweep failed: {} of {} legs diverged (see {} )",
+              report.results.iter().filter(|r| !r.ok).count(),
+              report.results.len(),
+              opts.out.join("chaos_report.json").display());
+    }
+    eprintln!("chaos: all {} legs byte-identical to the reference",
+              report.results.len());
+    Ok(())
+}

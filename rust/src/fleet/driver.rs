@@ -55,16 +55,30 @@
 //! `fleet_ckpt.json` — f64s travel as bit strings because JSON numbers
 //! cannot carry u64 exactly.  Checkpoints are transactional: new
 //! round-tagged generation files are written first, the atomic
-//! `fleet_ckpt.json` rename commits them, and only then are superseded
-//! generations deleted — a crash at any point leaves a consistent
-//! previous checkpoint.  `--resume` then continues a killed run from
-//! its last committed round, bit-for-bit identical to a run that was
-//! never interrupted.
+//! `fleet_ckpt.json` rename (tmp + fsync + rename + parent-dir fsync)
+//! commits them, and only then are superseded generations deleted — a
+//! crash at any point leaves a consistent previous checkpoint.  The
+//! store keeps the newest `--ckpt-keep` committed generations, each
+//! safetensors file CRC32-fingerprinted at commit (format v5), so
+//! `--resume` verifies integrity newest-first: a torn, bit-flipped or
+//! missing file is quarantined with a warning and the run falls back
+//! one generation and deterministically replays the gap instead of
+//! dying.  Transient I/O errors retry (bounded, counted); recovery
+//! events surface under `"recovery"` in the summary and as
+//! `ckpt_retry` / `ckpt_fallback` / `ckpt_quarantine` trace spans.
+//! Every step of this path is a named failpoint
+//! ([`crate::util::faults`], `--fail-at` / `MFT_FAILPOINTS`) and
+//! `mft chaos` ([`crate::fleet::chaos`]) sweeps them all: crash at
+//! each point in a subprocess, resume, assert byte-identity with an
+//! uninterrupted reference run.  `--resume` then continues a killed
+//! run from its last committed round, bit-for-bit identical to a run
+//! that was never interrupted.
 //!
 //! Every round appends a [`RoundRecord`] to `rounds.jsonl` (the fleet viz
 //! panel tails it) and the final merged adapter exports to safetensors
 //! via the standard [`LoraState`] path.
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -85,6 +99,8 @@ use crate::obs::trace::{TraceEvent, TraceSink};
 use crate::sim;
 use crate::tokenizer::Tokenizer;
 use crate::train::lora::LoraState;
+use crate::util::crc::crc32;
+use crate::util::faults;
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::Pcg;
@@ -94,8 +110,18 @@ const MIB: u64 = 1024 * 1024;
 /// Checkpoint format tag for `fleet_ckpt.json` (v2 added the per-client
 /// upload resume offset; v3 replaced it with the staleness-aware upload
 /// queue — round-tagged blobs carrying their delta payloads as u32 bit
-/// patterns — plus the correlated-outage link state).
-const CKPT_FORMAT: &str = "mft-fleet-ckpt-v3";
+/// patterns — plus the correlated-outage link state; v5 wraps the whole
+/// state in a `generations` array, newest first and at most
+/// `--ckpt-keep` long, with a CRC32 fingerprint per referenced
+/// safetensors file so `--resume` can verify integrity and fall back a
+/// generation when the latest one is damaged).
+const CKPT_FORMAT: &str = "mft-fleet-ckpt-v5";
+
+/// Transient-I/O retry budget for checkpoint/resume units: the first
+/// `CKPT_RETRIES - 1` transient failures of a unit retry it whole
+/// (counted in [`RecoveryStats::ckpt_retries`]); after that, or on any
+/// non-transient error, the failure propagates.
+const CKPT_RETRIES: usize = 3;
 
 /// Floor of the slack added to the straggler deadline.  The deadline is
 /// derived from the fastest client's *expected* round time, but the
@@ -148,10 +174,13 @@ fn config_fingerprint(cfg: &FleetConfig) -> String {
     c.out_dir = None;
     c.resume = false;
     c.ckpt_every = 0;
+    // retention depth is recovery margin, not trajectory: a run may be
+    // resumed under a different --ckpt-keep
+    c.ckpt_keep = 0;
     c.trace = None;
     c.trace_ring = 0;
     c.profile = false;
-    format!("v4|{c:?}")
+    format!("v5|{c:?}")
 }
 
 fn bits_json(x: u64) -> Json {
@@ -217,21 +246,114 @@ fn blob_parse(j: &Json) -> Result<BlobPersist> {
 }
 
 /// Atomically replace `path` with `bytes`: write `<stem>.tmp`, fsync,
-/// rename.  A crash — even a power loss — leaves either the previous
-/// file or the complete new one, never a torn file.  Safetensors writes
-/// don't need this: `write_safetensors` already does tmp + fsync +
-/// rename internally.
+/// rename, fsync the parent directory.  A crash — even a power loss —
+/// leaves either the previous file or the complete new one, never a
+/// torn file.  Safetensors writes don't need this: `write_safetensors`
+/// already does tmp + fsync + rename internally.  Every step is a
+/// named failpoint so `mft chaos` can kill or fault-inject between any
+/// two of them.
 fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     use std::io::Write;
     let tmp = path.with_extension("tmp");
     {
+        faults::hit("ckpt.tmp_create")
+            .with_context(|| format!("create {}", tmp.display()))?;
         let mut f = std::fs::File::create(&tmp)
             .with_context(|| format!("create {}", tmp.display()))?;
-        f.write_all(bytes)?;
-        f.sync_all()?;
+        faults::hit("ckpt.write")
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        faults::hit("ckpt.sync")
+            .with_context(|| format!("sync {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("sync {}", tmp.display()))?;
     }
-    std::fs::rename(&tmp, path)?;
+    faults::hit("ckpt.rename").with_context(
+        || format!("rename {} -> {}", tmp.display(), path.display()))?;
+    std::fs::rename(&tmp, path).with_context(
+        || format!("rename {} -> {}", tmp.display(), path.display()))?;
+    // the rename is only durable once the parent directory's entry
+    // table is: without this fsync a power loss *after* the "commit"
+    // could roll the commit itself back to the old file
+    faults::hit("ckpt.dir_sync")
+        .with_context(|| format!("sync parent dir of {}", path.display()))?;
+    #[cfg(unix)]
+    if let Some(parent) = path.parent() {
+        let parent = if parent.as_os_str().is_empty() {
+            Path::new(".")
+        } else {
+            parent
+        };
+        std::fs::File::open(parent)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("sync dir {}", parent.display()))?;
+    }
     Ok(())
+}
+
+/// Process-level recovery history of one run: transient-error retries
+/// that succeeded, resume fallbacks and quarantines, orphaned
+/// generation files swept, and warned restart-from-scratch resumes.
+/// Surfaced under `"recovery"` in `summary.json` and as coordinator
+/// trace spans.  Like `"profile"` this records what happened to *this
+/// process*, not the training trajectory — a crashed-and-resumed run
+/// legitimately differs here from an uninterrupted one, which is why
+/// the chaos comparator normalizes the key away before byte-comparing
+/// summaries.
+#[derive(Debug, Default, Clone)]
+struct RecoveryStats {
+    ckpt_retries: usize,
+    ckpt_fallbacks: usize,
+    ckpt_quarantined: usize,
+    orphans_swept: usize,
+    fresh_restarts: usize,
+}
+
+impl RecoveryStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ckpt_retries", Json::from(self.ckpt_retries)),
+            ("ckpt_fallbacks", Json::from(self.ckpt_fallbacks)),
+            ("ckpt_quarantined", Json::from(self.ckpt_quarantined)),
+            ("orphans_swept", Json::from(self.orphans_swept)),
+            ("fresh_restarts", Json::from(self.fresh_restarts)),
+        ])
+    }
+}
+
+/// True when the error chain bottoms out in a transient I/O condition
+/// (`Interrupted` — what the `err`-mode failpoints inject and what a
+/// signal-interrupted syscall reports).
+fn is_transient(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>()
+            .map_or(false, |io| io.kind() == std::io::ErrorKind::Interrupted)
+    })
+}
+
+/// Run an idempotent checkpoint/resume I/O unit with a bounded
+/// transient-error retry: up to [`CKPT_RETRIES`] attempts total, each
+/// retry counted and warned; non-transient errors and exhaustion
+/// propagate.
+fn with_retry<T>(recovery: &mut RecoveryStats, what: &str,
+                 mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    let mut attempt = 1usize;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) if attempt < CKPT_RETRIES && is_transient(&e) => {
+                recovery.ckpt_retries += 1;
+                eprintln!("fleet: transient error in {what} (attempt \
+                           {attempt}/{CKPT_RETRIES}): {e:#}; retrying");
+                attempt += 1;
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "{what} (after {attempt} attempt(s))")));
+            }
+        }
+    }
 }
 
 /// Copy the in-memory global adapter into `state`'s tensors and export
@@ -248,27 +370,118 @@ fn export_global(state: &mut LoraState, names: &[String],
     state.export(path, "fleet-bigram", alpha)
 }
 
+/// One committed checkpoint generation exactly as it appears in
+/// `fleet_ckpt.json`'s `generations` array: the coordinator scalars +
+/// per-client state at its round, referencing CRC32-fingerprinted
+/// round-tagged safetensors files.
+#[derive(Clone)]
+struct Generation {
+    round: usize,
+    /// the complete committed generation object (kept verbatim so
+    /// older generations re-commit byte-identically on the next save)
+    json: Json,
+}
+
+impl Generation {
+    /// Every safetensors file this generation references.
+    fn files(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Some(Ok(g)) = self.json.get("global_ckpt").map(|v| v.as_str())
+        {
+            out.push(g.to_string());
+        }
+        if let Some(Ok(arr)) = self.json.get("clients").map(|v| v.as_arr()) {
+            for c in arr {
+                if let Some(Ok(f)) = c.get("ckpt").map(|v| v.as_str()) {
+                    out.push(f.to_string());
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Which checkpoint files are current on disk.  `fleet_ckpt.json` names
 /// them explicitly (client/global files are round-tagged generations),
 /// so the atomic json rename is the single commit point: a crash
-/// anywhere in a checkpoint write leaves the previous generation's
+/// anywhere in a checkpoint write leaves the previous generations'
 /// files intact and still referenced.  Uncommitted new-generation files
-/// are harmless orphans (overwritten on retry, swept on fresh starts).
+/// are harmless orphans (overwritten on retry, swept on resume and on
+/// the next commit).
 struct CkptState {
     /// current committed safetensors file per client (indexed by id)
     client_files: Vec<String>,
+    /// CRC32 of each client's current committed file
+    client_crcs: Vec<u32>,
     global_file: String,
+    global_crc: u32,
     /// every client has a file written by this run's lineage; until
     /// then the next save writes all clients, not just the changed ones
     files_complete: bool,
+    /// committed generations carried on disk, newest first, at most
+    /// `--ckpt-keep` long; unchanged clients share files across
+    /// generations, so retention GC is reference-counted over this
+    gens: Vec<Generation>,
 }
 
 impl CkptState {
     fn fresh(n_clients: usize) -> CkptState {
         CkptState {
             client_files: vec![String::new(); n_clients],
+            client_crcs: vec![0; n_clients],
             global_file: String::new(),
+            global_crc: 0,
             files_complete: false,
+            gens: Vec::new(),
+        }
+    }
+}
+
+/// Delete every on-disk `ckpt_*` generation file no kept generation
+/// references.  `dropped` names the generations this commit just
+/// retired (their unshared files are normal retention GC); anything
+/// *else* collected here is an orphan — left by a crash between an
+/// earlier commit and its GC, or by an uncommitted save — and counts
+/// toward [`RecoveryStats::orphans_swept`].  Quarantined files
+/// (`quarantined_` prefix) are deliberately exempt: they are evidence,
+/// kept until a fresh start sweeps the dir.  Deletion failures are
+/// harmless (the file stays orphaned and the next sweep retries), so a
+/// faulted `ckpt.gc` just defers the sweep.
+fn sweep_unreferenced(dir: &Path, ckpt: &CkptState, dropped: &[Generation],
+                      recovery: &mut RecoveryStats) {
+    let referenced: HashSet<String> =
+        ckpt.gens.iter().flat_map(|g| g.files()).collect();
+    let expected: HashSet<String> = dropped
+        .iter()
+        .flat_map(|g| g.files())
+        .filter(|f| !referenced.contains(f))
+        .collect();
+    let mut doomed: Vec<(String, bool)> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if !(name.starts_with("ckpt_client_")
+                 || name.starts_with("ckpt_global")) {
+                continue;
+            }
+            if referenced.contains(&name) {
+                continue;
+            }
+            let orphan = !expected.contains(&name);
+            doomed.push((name, orphan));
+        }
+    }
+    if doomed.is_empty() {
+        return;
+    }
+    // read_dir order is filesystem-dependent; delete deterministically
+    doomed.sort();
+    if faults::hit("ckpt.gc").is_err() {
+        return;
+    }
+    for (name, orphan) in doomed {
+        if std::fs::remove_file(dir.join(&name)).is_ok() && orphan {
+            recovery.orphans_swept += 1;
         }
     }
 }
@@ -282,35 +495,43 @@ impl CkptState {
 /// file is already current, and its changing scalars (battery, clock,
 /// RNGs) travel in `fleet_ckpt.json`.  The first checkpoint of a fresh
 /// run writes every client regardless.  New generations are written
-/// under round-tagged names, the json commit flips the references, and
-/// only then are the superseded generations deleted.
+/// under round-tagged names (each CRC32-fingerprinted as written), the
+/// json commit flips the references — prepending this generation and
+/// retaining the newest `--ckpt-keep` — and only then are generations
+/// that fell off the retention window garbage-collected.  Transient
+/// write errors retry each idempotent unit up to [`CKPT_RETRIES`]
+/// times.
 #[allow(clippy::too_many_arguments)]
 fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
                    ckpt: &mut CkptState, round: usize, cum_energy: f64,
                    select_rng: &Pcg, clients: &[FleetClient],
                    changed: &[usize], names: &[String],
-                   global: &[Vec<f32>]) -> Result<()> {
-    let mut superseded: Vec<String> = Vec::new();
+                   global: &[Vec<f32>],
+                   recovery: &mut RecoveryStats) -> Result<()> {
     for c in clients {
         if ckpt.files_complete && !changed.contains(&c.id) {
             continue;
         }
         let fname = format!("ckpt_client_{}_r{round}.safetensors", c.id);
-        c.adapter
-            .save_checkpoint(&dir.join(&fname), c.opt.t)
-            .with_context(|| format!("checkpoint client {}", c.id))?;
-        let old = std::mem::replace(&mut ckpt.client_files[c.id], fname);
-        if !old.is_empty() && old != ckpt.client_files[c.id] {
-            superseded.push(old);
-        }
+        let path = dir.join(&fname);
+        let crc = with_retry(
+            recovery, &format!("checkpoint client {}", c.id), || {
+                c.adapter.save_checkpoint(&path, c.opt.t)?;
+                Ok(crc32(&std::fs::read(&path)?))
+            })?;
+        ckpt.client_files[c.id] = fname;
+        ckpt.client_crcs[c.id] = crc;
     }
     let gname = format!("ckpt_global_r{round}.safetensors");
-    export_global(scratch, names, global, &dir.join(&gname),
-                  cfg.lora_alpha)?;
-    let gold = std::mem::replace(&mut ckpt.global_file, gname);
-    if !gold.is_empty() && gold != ckpt.global_file {
-        superseded.push(gold);
-    }
+    let gpath = dir.join(&gname);
+    ckpt.global_crc =
+        with_retry(recovery, "checkpoint global adapter", || {
+            faults::hit("ckpt.global_save")
+                .with_context(|| format!("save {}", gpath.display()))?;
+            export_global(scratch, names, global, &gpath, cfg.lora_alpha)?;
+            Ok(crc32(&std::fs::read(&gpath)?))
+        })?;
+    ckpt.global_file = gname;
     let clients_json: Vec<Json> = clients
         .iter()
         .map(|c| {
@@ -318,6 +539,7 @@ fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
             Json::obj(vec![
                 ("id", Json::from(p.id)),
                 ("ckpt", Json::from(ckpt.client_files[c.id].clone())),
+                ("crc", Json::from(ckpt.client_crcs[c.id] as u64)),
                 ("battery", bits_json(p.battery_bits)),
                 ("clock", bits_json(p.clock_bits)),
                 ("opt_t", bits_json(p.opt_t)),
@@ -332,24 +554,38 @@ fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
             ])
         })
         .collect();
-    let j = Json::obj(vec![
-        ("format", Json::from(CKPT_FORMAT)),
-        ("config", Json::from(config_fingerprint(cfg))),
+    let gen_json = Json::obj(vec![
         ("round", Json::from(round)),
         ("cum_energy", bits_json(cum_energy.to_bits())),
         ("select_rng", pair_json(select_rng.state_parts())),
         ("global_ckpt", Json::from(ckpt.global_file.clone())),
+        ("global_crc", Json::from(ckpt.global_crc as u64)),
         ("clients", Json::Arr(clients_json)),
+    ]);
+    ckpt.gens.insert(0, Generation { round, json: gen_json });
+    let dropped: Vec<Generation> = if ckpt.gens.len() > cfg.ckpt_keep {
+        ckpt.gens.split_off(cfg.ckpt_keep)
+    } else {
+        Vec::new()
+    };
+    let j = Json::obj(vec![
+        ("format", Json::from(CKPT_FORMAT)),
+        ("config", Json::from(config_fingerprint(cfg))),
+        ("generations", Json::Arr(
+            ckpt.gens.iter().map(|g| g.json.clone()).collect())),
     ]);
     // the commit point: an atomic rename switches every reference at
     // once; a crash before it leaves the previous json + its files
-    write_atomic(&dir.join("fleet_ckpt.json"), j.to_string().as_bytes())?;
+    with_retry(recovery, "commit fleet_ckpt.json", || {
+        write_atomic(&dir.join("fleet_ckpt.json"),
+                     j.to_string().as_bytes())
+    })?;
     ckpt.files_complete = true;
-    // garbage-collect the superseded generations only after the commit
-    // (a crash in here just leaves orphans, never a broken checkpoint)
-    for f in superseded {
-        let _ = std::fs::remove_file(dir.join(f));
-    }
+    // garbage-collect retired generations + sweep orphans only after
+    // the commit (a crash or injected error in here just leaves
+    // orphans, never a broken checkpoint — the next sweep collects
+    // them)
+    sweep_unreferenced(dir, ckpt, &dropped, recovery);
     Ok(())
 }
 
@@ -369,7 +605,10 @@ pub fn sweep_fresh_out_dir(dir: &Path) {
         for e in rd.flatten() {
             let name = e.file_name().to_string_lossy().to_string();
             if name.starts_with("ckpt_client_")
-                || name.starts_with("ckpt_global") {
+                || name.starts_with("ckpt_global")
+                || name.starts_with("quarantined_")
+                || name == "fleet_ckpt.tmp"
+                || name == "rounds.tmp" {
                 let _ = std::fs::remove_file(e.path());
             }
         }
@@ -383,27 +622,31 @@ struct ResumeState {
     clients: Vec<ClientPersist>,
     /// committed safetensors file per client, from the json
     client_files: Vec<String>,
+    client_crcs: Vec<u32>,
     global_file: String,
+    global_crc: u32,
+    /// the generations to carry into [`CkptState`]: the verified one
+    /// this resume restores from first, then the older kept ones
+    /// (damaged newer generations are dropped — their files
+    /// quarantined — and the replay re-commits them byte-identically)
+    gens: Vec<Generation>,
 }
 
-fn load_fleet_ckpt(dir: &Path, cfg: &FleetConfig)
-                   -> Result<Option<ResumeState>> {
-    let p = dir.join("fleet_ckpt.json");
-    if !p.exists() {
-        return Ok(None);
+fn crc_parse(j: &Json) -> Result<u32> {
+    let x = j.as_u64()?;
+    if x > u32::MAX as u64 {
+        bail!("checkpoint crc {x} exceeds u32");
     }
-    let j = Json::parse(&std::fs::read_to_string(&p)?)
-        .with_context(|| format!("parse {}", p.display()))?;
-    if j.req("format")?.as_str()? != CKPT_FORMAT {
-        bail!("unknown fleet checkpoint format in {}", p.display());
-    }
-    if j.req("config")?.as_str()? != config_fingerprint(cfg) {
-        bail!("fleet checkpoint in {} was written by a different config; \
-               delete it or rerun without --resume", dir.display());
-    }
+    Ok(x as u32)
+}
+
+/// Parse one `generations[i]` object into a [`ResumeState`] (with
+/// `gens` left empty — the caller assembles the carried set).
+fn parse_generation(gj: &Json) -> Result<ResumeState> {
     let mut clients = Vec::new();
     let mut client_files = Vec::new();
-    for cj in j.req("clients")?.as_arr()? {
+    let mut client_crcs = Vec::new();
+    for cj in gj.req("clients")?.as_arr()? {
         clients.push(ClientPersist {
             id: cj.req("id")?.as_usize()?,
             battery_bits: bits_parse(cj.req("battery")?)?,
@@ -423,15 +666,142 @@ fn load_fleet_ckpt(dir: &Path, cfg: &FleetConfig)
                 .collect::<Result<_>>()?,
         });
         client_files.push(cj.req("ckpt")?.as_str()?.to_string());
+        client_crcs.push(crc_parse(cj.req("crc")?)?);
     }
-    Ok(Some(ResumeState {
-        round: j.req("round")?.as_usize()?,
-        cum_energy: f64::from_bits(bits_parse(j.req("cum_energy")?)?),
-        select_rng: pair_parse(j.req("select_rng")?)?,
+    Ok(ResumeState {
+        round: gj.req("round")?.as_usize()?,
+        cum_energy: f64::from_bits(bits_parse(gj.req("cum_energy")?)?),
+        select_rng: pair_parse(gj.req("select_rng")?)?,
         clients,
         client_files,
-        global_file: j.req("global_ckpt")?.as_str()?.to_string(),
-    }))
+        client_crcs,
+        global_file: gj.req("global_ckpt")?.as_str()?.to_string(),
+        global_crc: crc_parse(gj.req("global_crc")?)?,
+        gens: Vec::new(),
+    })
+}
+
+/// Verify every safetensors file a generation references: present,
+/// readable, CRC32 matching the fingerprint recorded at commit.
+/// Returns the first problem as `(file, why)`.  Reads go through the
+/// `resume.*` failpoints under a bounded transient retry, so an
+/// injected `Interrupted` is retried — never misread as corruption.
+fn verify_generation(dir: &Path, rs: &ResumeState,
+                     recovery: &mut RecoveryStats)
+                     -> std::result::Result<(), (String, String)> {
+    let mut check = |file: &str, want: u32, point: &'static str|
+                     -> std::result::Result<(), (String, String)> {
+        let p = dir.join(file);
+        let bytes =
+            with_retry(recovery, &format!("verify {}", p.display()), || {
+                faults::hit(point)
+                    .with_context(|| format!("read {}", p.display()))?;
+                Ok(std::fs::read(&p)
+                    .with_context(|| format!("read {}", p.display()))?)
+            });
+        match bytes {
+            Err(e) => Err((file.to_string(), format!("{e:#}"))),
+            Ok(b) => {
+                let got = crc32(&b);
+                if got != want {
+                    Err((file.to_string(),
+                         format!("checksum mismatch (committed \
+                                  {want:#010x}, file has {got:#010x})")))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    };
+    for (f, &crc) in rs.client_files.iter().zip(&rs.client_crcs) {
+        check(f, crc, "resume.read_client")?;
+    }
+    check(&rs.global_file, rs.global_crc, "resume.read_global")
+}
+
+/// Load the newest checkpoint generation that passes integrity
+/// verification.  A damaged newest generation — torn file, bit flip,
+/// missing safetensors — is quarantined with a warning naming the
+/// file, the generation and the fallback action, and resume falls back
+/// to the next older kept generation; the driver then deterministically
+/// replays the gap.  Only when *every* kept generation fails does this
+/// error out.
+fn load_fleet_ckpt(dir: &Path, cfg: &FleetConfig,
+                   recovery: &mut RecoveryStats)
+                   -> Result<Option<ResumeState>> {
+    let p = dir.join("fleet_ckpt.json");
+    if !p.exists() {
+        return Ok(None);
+    }
+    let text = with_retry(recovery, "read fleet_ckpt.json", || {
+        faults::hit("resume.read_json")
+            .with_context(|| format!("read {}", p.display()))?;
+        Ok(std::fs::read_to_string(&p)
+            .with_context(|| format!("read {}", p.display()))?)
+    })?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("parse {}", p.display()))?;
+    if j.req("format")?.as_str()? != CKPT_FORMAT {
+        bail!("unknown fleet checkpoint format in {}", p.display());
+    }
+    if j.req("config")?.as_str()? != config_fingerprint(cfg) {
+        bail!("fleet checkpoint in {} was written by a different config; \
+               delete it or rerun without --resume", dir.display());
+    }
+    let gens_json = j.req("generations")?.as_arr()?;
+    if gens_json.is_empty() {
+        bail!("fleet checkpoint in {} has no generations", p.display());
+    }
+    let mut chosen: Option<ResumeState> = None;
+    let mut kept: Vec<Generation> = Vec::new();
+    for (gi, gj) in gens_json.iter().enumerate() {
+        if chosen.is_some() {
+            // an older kept generation rides along unverified — it is
+            // only needed if a *future* resume has to fall back to it,
+            // and that resume will verify it then
+            kept.push(Generation { round: gj.req("round")?.as_usize()?,
+                                   json: gj.clone() });
+            continue;
+        }
+        let rs = parse_generation(gj).with_context(
+            || format!("parse generation {gi} in {}", p.display()))?;
+        match verify_generation(dir, &rs, recovery) {
+            Ok(()) => {
+                kept.push(Generation { round: rs.round, json: gj.clone() });
+                chosen = Some(rs);
+            }
+            Err((file, why)) => {
+                recovery.ckpt_fallbacks += 1;
+                let fallback = if gi + 1 < gens_json.len() {
+                    "falling back to the previous committed generation \
+                     and replaying the gap deterministically"
+                } else {
+                    "no older generation is left to fall back to"
+                };
+                let quarantined = format!("quarantined_{file}");
+                if std::fs::rename(dir.join(&file),
+                                   dir.join(&quarantined)).is_ok() {
+                    recovery.ckpt_quarantined += 1;
+                    eprintln!("fleet: resume: checkpoint generation {gi} \
+                               (round {}) is damaged — {file}: {why}; \
+                               quarantined as {quarantined}; {fallback}",
+                              rs.round);
+                } else {
+                    eprintln!("fleet: resume: checkpoint generation {gi} \
+                               (round {}) is damaged — {file}: {why}; \
+                               {fallback}", rs.round);
+                }
+            }
+        }
+    }
+    let Some(mut rs) = chosen else {
+        bail!("--resume: all {} committed checkpoint generation(s) in {} \
+               failed integrity verification; the out dir is \
+               unrecoverable — rerun without --resume to start over",
+              gens_json.len(), p.display());
+    };
+    rs.gens = kept;
+    Ok(Some(rs))
 }
 
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
@@ -562,6 +932,11 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let mut cum_energy = 0.0f64;
     let mut start_round = 1usize;
     let mut ckpt = CkptState::fresh(cfg.n_clients);
+    // recovery events this process observed (retries, fallbacks,
+    // quarantines, orphan sweeps) — reported in the summary under
+    // "recovery"; process history, not run state, so like "profile" it
+    // is excluded from byte-identity comparisons
+    let mut recovery = RecoveryStats::default();
     // host wall-clock phase profiler: zero-cost unless --profile asked
     // for it (wall times are nondeterministic, so they only ever reach
     // the opt-in "profile" summary aggregate, never the trace)
@@ -582,13 +957,21 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
 
     let resume_state = match (&out_dir, cfg.resume) {
         (Some(d), true) => {
-            let rs = load_fleet_ckpt(d, cfg)?;
-            // --resume on a dir with records but no checkpoint must not
-            // fall through to the fresh path, which would wipe them
+            let rs = load_fleet_ckpt(d, cfg, &mut recovery)?;
+            // --resume on a dir with records but no committed
+            // checkpoint means the run died before its first commit
+            // (e.g. a crash inside the very first checkpoint write).
+            // Nothing is restorable, but nothing is lost either: warn
+            // and restart from round 0 — the replay is deterministic,
+            // so the rerun converges to the same bytes.  This keeps
+            // `--resume` safe to issue after a crash *anywhere*.
             if rs.is_none() && d.join("rounds.jsonl").exists() {
-                bail!("--resume: {} has rounds.jsonl but no \
-                       fleet_ckpt.json (a pre-checkpoint run?); rerun \
-                       without --resume to start over", d.display());
+                recovery.fresh_restarts += 1;
+                eprintln!("fleet: --resume: {} has rounds.jsonl but no \
+                           committed fleet_ckpt.json (crashed before the \
+                           first checkpoint commit?); restarting from \
+                           round 0 and replaying deterministically",
+                          d.display());
             }
             rs
         }
@@ -613,7 +996,10 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             c.restore_persist(p);
             let (adapter, t) =
                 LoraState::load_checkpoint(&info, cfg.rank, &d.join(f))
-                    .with_context(|| format!("resume client {}", c.id))?;
+                    .with_context(|| format!(
+                        "resume client {} from generation r{} file {f:?} \
+                         (verified moments ago — the out dir is racing \
+                         this process?)", c.id, rs.round))?;
             // the json commit names exactly the files it was written
             // with, so this can only trip on external tampering — keep
             // it as a cheap integrity check
@@ -627,15 +1013,23 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             c.opt.t = t;
         }
         let gstate = LoraState::load(&info, cfg.rank,
-                                     &d.join(&rs.global_file))?;
+                                     &d.join(&rs.global_file))
+            .with_context(|| format!(
+                "resume global adapter from generation r{} file {:?}",
+                rs.round, rs.global_file))?;
         for (g, n) in global.iter_mut().zip(&names) {
             g.copy_from_slice(gstate.get(n)?.as_f32()?);
         }
         // read only the rounds the checkpoint committed: a crash between
         // the jsonl append and the checkpoint write can leave one extra
         // (possibly torn) trailing line, which must not kill the resume
-        let text = std::fs::read_to_string(d.join("rounds.jsonl"))
-            .context("resume: read rounds.jsonl")?;
+        let text = with_retry(&mut recovery, "resume: read rounds.jsonl",
+                              || {
+            faults::hit("resume.read_rounds")
+                .context("read rounds.jsonl")?;
+            Ok(std::fs::read_to_string(d.join("rounds.jsonl"))
+                .context("resume: read rounds.jsonl")?)
+        })?;
         records = text
             .lines()
             .filter(|l| !l.trim().is_empty())
@@ -657,12 +1051,40 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         }
         write_atomic(&d.join("rounds.jsonl"), kept.as_bytes())?;
         start_round = rs.round + 1;
-        // the committed generation files are on disk and current
+        // the committed generation files are on disk, verified and
+        // current; the carried generations re-commit verbatim
         ckpt = CkptState {
             client_files: rs.client_files.clone(),
+            client_crcs: rs.client_crcs.clone(),
             global_file: rs.global_file.clone(),
+            global_crc: rs.global_crc,
             files_complete: true,
+            gens: rs.gens.clone(),
         };
+        // collect generation files a crash orphaned (written but never
+        // committed, or superseded but never GC'd) — satellite of the
+        // crash-anywhere contract: no file leaks, ever
+        sweep_unreferenced(d, &ckpt, &[], &mut recovery);
+        if let Some(sink) = &mut sink {
+            // resume-time recovery spans live at the head of the
+            // coordinator track (t 0.0, before the first resumed round)
+            if recovery.ckpt_quarantined > 0 {
+                sink.push(TraceEvent {
+                    name: "ckpt_quarantine",
+                    round: rs.round as u64,
+                    n: recovery.ckpt_quarantined as u64,
+                    ..TraceEvent::default()
+                });
+            }
+            if recovery.ckpt_fallbacks > 0 {
+                sink.push(TraceEvent {
+                    name: "ckpt_fallback",
+                    round: rs.round as u64,
+                    n: recovery.ckpt_fallbacks as u64,
+                    ..TraceEvent::default()
+                });
+            }
+        }
         eprintln!("fleet: resuming from round {} in {}", rs.round,
                   d.display());
     } else {
@@ -962,14 +1384,17 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             }
         }
         let mut did_ckpt: Option<usize> = None;
+        let mut ckpt_retries_this_round = 0usize;
         if let (Some(d), true) = (&out_dir, round % cfg.ckpt_every == 0) {
             let changed: Vec<usize> = (0..cfg.n_clients)
                 .filter(|&id| ckpt_dirty[id])
                 .collect();
             let _g = prof.scope("ckpt_commit");
+            let retries_before = recovery.ckpt_retries;
             save_fleet_ckpt(d, cfg, &mut template, &mut ckpt, round,
                             cum_energy, &select_rng, &clients, &changed,
-                            &names, &global)?;
+                            &names, &global, &mut recovery)?;
+            ckpt_retries_this_round = recovery.ckpt_retries - retries_before;
             ckpt_dirty.fill(false);
             did_ckpt = Some(changed.len());
         }
@@ -1015,6 +1440,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
                     round: round as u64,
                     t0_s: t_end,
                     n: n_changed as u64,
+                    ..TraceEvent::default()
+                });
+            }
+            if ckpt_retries_this_round > 0 {
+                sink.push(TraceEvent {
+                    name: "ckpt_retry",
+                    round: round as u64,
+                    t0_s: t_end,
+                    n: ckpt_retries_this_round as u64,
                     ..TraceEvent::default()
                 });
             }
@@ -1098,6 +1532,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         ("total_bytes_down", Json::from(
             train_rounds.iter().map(|r| r.bytes_down).sum::<u64>())),
         ("deadline_s", Json::from(deadline_s)),
+        ("ckpt_keep", Json::from(cfg.ckpt_keep)),
+        // process recovery history (retries/fallbacks/quarantines/
+        // sweeps/restarts) — like "profile" below, this describes what
+        // happened to *this process*, not the training trajectory, so
+        // byte-identity comparisons (chaos, resume-equivalence) must
+        // normalize it away before diffing summaries
+        ("recovery", recovery.to_json()),
     ];
     // wall-clock phase breakdown is nondeterministic by nature, so it
     // only joins the summary when --profile explicitly asked for it
@@ -1200,6 +1641,7 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
     }
     cfg.resume = args.has("resume");
     cfg.ckpt_every = args.get_parse("ckpt-every", cfg.ckpt_every)?;
+    cfg.ckpt_keep = args.get_parse("ckpt-keep", cfg.ckpt_keep)?;
     cfg.trace = args.get("trace").map(String::from);
     if args.has("trace") && cfg.trace.is_none() {
         bail!("--trace takes a file path");
@@ -1259,6 +1701,12 @@ mod tests {
 
 pub fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = fleet_config(args)?;
+    // arm failpoints before any checkpoint I/O; same grammar as
+    // MFT_FAILPOINTS (which subprocess harnesses use instead, since it
+    // arms every thread)
+    if let Some(spec) = args.get("fail-at") {
+        faults::arm(spec).context("--fail-at")?;
+    }
     eprintln!("fleet: {} clients, {} rounds, alpha {}, agg {}, policy {}{}",
               cfg.n_clients, cfg.rounds, cfg.dirichlet_alpha, cfg.aggregator,
               cfg.policy.as_str(),

@@ -55,6 +55,21 @@
 //!   client's adapter + Adam moments ([`LoraState::save_checkpoint`])
 //!   plus the coordinator scalars, so `--resume` continues a killed
 //!   run bit-for-bit (replaying any uncommitted tail rounds);
+//! * **crash-anywhere recovery** ([`chaos`] +
+//!   [`crate::util::faults`]) — `fleet_ckpt.json` (format v5) keeps
+//!   the newest `--ckpt-keep` committed generations, each safetensors
+//!   file CRC32-fingerprinted at commit.  `--resume` verifies
+//!   newest-first: a torn, bit-flipped or missing file is quarantined
+//!   with a warning naming the file, the generation and the fallback,
+//!   and the run falls back one generation and replays the gap
+//!   bit-for-bit; transient I/O errors are retried (bounded) and
+//!   every recovery event is surfaced as a `"recovery"` summary
+//!   counter and a coordinator trace span (`ckpt_retry` /
+//!   `ckpt_fallback` / `ckpt_quarantine`).  Every step of the
+//!   checkpoint/resume I/O path is a named failpoint
+//!   (`MFT_FAILPOINTS` / `--fail-at`), and `mft chaos` sweeps all of
+//!   them mechanically — crash at each point in a subprocess, resume,
+//!   assert byte-identity with an uninterrupted reference run;
 //! * observability ([`crate::obs`]) — with `--trace FILE` every phase
 //!   of every round (selection, regime flips, broadcast, local round,
 //!   full/partial/stale uploads, queue evictions, aggregate, eval,
@@ -78,6 +93,7 @@
 //! [`metrics::RoundRecord`]: crate::metrics::RoundRecord
 
 pub mod aggregate;
+pub mod chaos;
 pub mod client;
 pub mod driver;
 pub mod model;
@@ -87,6 +103,7 @@ pub mod transport;
 pub use aggregate::{make_aggregator, Aggregator, ClientFailure,
                     ClientUpdate, CoordMedian, FedAvg, StaleDelivery,
                     TrimmedMean};
+pub use chaos::{cmd_chaos, run_chaos, ChaosOpts, ChaosReport};
 pub use client::{ClientStatus, FleetClient, PendingBlob};
 pub use driver::{cmd_fleet, run_fleet, FleetResult};
 pub use model::BigramRef;
@@ -189,6 +206,16 @@ pub struct FleetConfig {
     /// normalized out of the checkpoint's config fingerprint, so a
     /// run may be resumed under a different K
     pub ckpt_every: usize,
+    /// committed checkpoint generations retained (`--ckpt-keep N`,
+    /// default 2, >= 1).  Every commit appends a CRC32-checksummed
+    /// generation to `fleet_ckpt.json` (format v5) and keeps the
+    /// newest N; `--resume` verifies checksums newest-first and, when
+    /// the latest generation is corrupt or missing, quarantines the
+    /// bad file, falls back to the previous generation and replays
+    /// the gap bit-for-bit.  Retention is "how much recovery margin",
+    /// not "what is computed", so it is normalized out of the config
+    /// fingerprint like `ckpt_every`
+    pub ckpt_keep: usize,
     /// write the deterministic virtual-time span timeline
     /// ([`crate::obs::trace`]) to this file as Chrome trace-event
     /// JSON (`--trace FILE`); `None` disables tracing entirely — no
@@ -249,6 +276,7 @@ impl Default for FleetConfig {
             drop_stale_after: 2,
             stale_weight: 0.5,
             ckpt_every: 1,
+            ckpt_keep: 2,
             trace: None,
             trace_ring: 4096,
             profile: false,
@@ -332,6 +360,10 @@ impl FleetConfig {
         }
         if self.ckpt_every == 0 {
             bail!("--ckpt-every must be >= 1 (checkpoint cadence in rounds)");
+        }
+        if self.ckpt_keep == 0 {
+            bail!("--ckpt-keep must be >= 1 (committed checkpoint \
+                   generations retained)");
         }
         if self.trace_ring == 0 {
             bail!("--trace-ring must be >= 1 (per-client span buffer \
@@ -442,6 +474,12 @@ mod tests {
         c.ckpt_every = 0;
         assert!(c.validate().is_err());
         c.ckpt_every = 3;
+        assert!(c.validate().is_ok());
+        // generation retention must keep at least one
+        let mut c = FleetConfig::default();
+        c.ckpt_keep = 0;
+        assert!(c.validate().is_err());
+        c.ckpt_keep = 3;
         assert!(c.validate().is_ok());
         let mut c = FleetConfig::default();
         c.trace_ring = 0;

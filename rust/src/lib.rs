@@ -46,9 +46,17 @@
 //!   median / trimmed-mean, robust variants on linear-time `select_nth`
 //!   order statistics), local rounds fanned out across coordinator
 //!   threads with per-round fault recording (battery deaths and local
-//!   errors never abort the run), round-granular crash checkpoints
-//!   (`--resume` continues bit-for-bit, `--ckpt-every` sets the
-//!   commit cadence), and per-round metrics ([`metrics::RoundRecord`])
+//!   errors never abort the run), round-granular crash-anywhere
+//!   checkpoints (`--resume` continues bit-for-bit, `--ckpt-every` sets
+//!   the commit cadence; `--ckpt-keep` retains N CRC32-checksummed
+//!   committed generations, so a damaged newest generation is
+//!   quarantined and resume falls back one generation and replays —
+//!   [`fleet::driver`]), deterministic failpoint injection
+//!   ([`util::faults`]: `MFT_FAILPOINTS` / `--fail-at` kill or
+//!   fault-inject any step of the checkpoint/resume I/O) with the
+//!   self-verifying `mft chaos` crash sweep ([`fleet::chaos`]: kill at
+//!   every registered failpoint, resume, assert byte-identical
+//!   outputs), and per-round metrics ([`metrics::RoundRecord`])
 //! * Observability     -> [`obs`]: deterministic fleet tracing — every
 //!   phase (select, regime steps, broadcast, local round, full/partial/
 //!   stale uploads, evictions, aggregate, eval, ckpt commits) becomes a

@@ -54,6 +54,15 @@ use crate::util::json::Json;
 /// | `evict_stale`        | bytes dropped    | transmitted, wasted | —            | oldest (rounds)|
 /// | `aggregate`          | —                | —                   | cohort size  | stale deltas   |
 /// | `eval` / `ckpt_commit` | —              | —                   | — / clients  | —              |
+/// | `ckpt_retry`         | —                | —                   | retries      | —              |
+/// | `ckpt_fallback`      | —                | —                   | fallbacks    | —              |
+/// | `ckpt_quarantine`    | —                | —                   | files        | —              |
+///
+/// The three `ckpt_*` recovery markers ride the coordinator track:
+/// `ckpt_retry` at a round's end when its commit survived transient
+/// I/O errors, `ckpt_fallback`/`ckpt_quarantine` at t=0 of a resumed
+/// run whose newest checkpoint generation was damaged (the `round`
+/// field names the generation resumed *from*).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct TraceEvent {
     pub name: &'static str,

@@ -9,11 +9,12 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::manifest::{ModelInfo, ParamSpec};
 use crate::tensor::safetensors::{read_safetensors, write_safetensors};
 use crate::tensor::HostTensor;
+use crate::util::faults;
 use crate::util::rng::Pcg;
 
 #[derive(Debug)]
@@ -118,6 +119,8 @@ impl LoraState {
     /// it stopped.  `opt_m.*` / `opt_v.*` tensors ride in the same
     /// safetensors file; `opt_step` travels in the metadata.
     pub fn save_checkpoint(&self, path: &Path, opt_step: u64) -> Result<()> {
+        faults::hit("ckpt.client_save")
+            .with_context(|| format!("save checkpoint {}", path.display()))?;
         let mut tensors: Vec<(String, HostTensor)> = Vec::new();
         for s in &self.specs {
             tensors.push((s.name.clone(), self.tensors[&s.name].clone()));
@@ -142,7 +145,10 @@ impl LoraState {
     pub fn load_checkpoint(info: &ModelInfo, rank: usize, path: &Path)
                            -> Result<(LoraState, u64)> {
         let mut st = LoraState::init(info, rank, 0)?;
-        let (tensors, meta) = read_safetensors(path)?;
+        faults::hit("resume.read_client")
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        let (tensors, meta) = read_safetensors(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
         let opt_step: u64 = meta
             .get("opt_step")
             .ok_or_else(|| anyhow!("checkpoint missing opt_step metadata"))?
@@ -189,7 +195,10 @@ impl LoraState {
 
     pub fn load(info: &ModelInfo, rank: usize, path: &Path) -> Result<LoraState> {
         let mut st = LoraState::init(info, rank, 0)?;
-        let (tensors, _) = read_safetensors(path)?;
+        faults::hit("resume.read_global")
+            .with_context(|| format!("read adapter {}", path.display()))?;
+        let (tensors, _) = read_safetensors(path)
+            .with_context(|| format!("read adapter {}", path.display()))?;
         for (name, t) in tensors {
             let spec = st
                 .specs

@@ -1,0 +1,60 @@
+//! CRC32 (IEEE 802.3, the zlib/gzip polynomial), hand-rolled — the
+//! offline registry has no checksum crate, and 20 lines of table-driven
+//! CRC beat a dependency anyway.  Used by the fleet checkpoint store to
+//! fingerprint every committed safetensors generation so `--resume` can
+//! tell a torn or bit-flipped file from a good one *before* trusting it.
+
+/// 256-entry lookup table for the reflected polynomial 0xEDB88320,
+/// generated at compile time.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 of `bytes` (standard init/final XOR with `0xFFFFFFFF`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the classic check value for "123456789" under CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let data = vec![0xA5u8; 4096];
+        let base = crc32(&data);
+        for byte in [0usize, 1, 2048, 4095] {
+            let mut flipped = data.clone();
+            flipped[byte] ^= 0x01;
+            assert_ne!(crc32(&flipped), base, "flip at byte {byte}");
+        }
+        // truncation changes it too
+        assert_ne!(crc32(&data[..4095]), base);
+    }
+}

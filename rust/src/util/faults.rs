@@ -1,0 +1,317 @@
+//! Deterministic failpoint injection for crash-anywhere testing.
+//!
+//! Every step of the fleet checkpoint/resume I/O path is routed through
+//! a *named failpoint* ([`hit`]).  Unarmed, a failpoint is a counter
+//! bump — no allocation, no branch beyond a thread-local lookup — so
+//! production runs pay nothing.  Armed (via the `MFT_FAILPOINTS` env
+//! var, `mft fleet --fail-at`, or [`arm`] in tests), the Nth hit of a
+//! point fires one of two faults:
+//!
+//! * **crash** (the default) — print a marker and terminate the process
+//!   with [`EXIT_CODE`], *without* unwinding or flushing buffered
+//!   writers: the closest a test can get to `kill -9` / battery death
+//!   while staying deterministic;
+//! * **err** / **errxM** — return an injected transient
+//!   [`io::ErrorKind::Interrupted`] error for M consecutive hits
+//!   (default 1), then go inert — so a bounded-retry caller recovers
+//!   and the retry path itself is exercised.
+//!
+//! The spec grammar (comma-separated):
+//!
+//! ```text
+//!   point[:N][=crash|err|errxM]
+//!   e.g.  MFT_FAILPOINTS="ckpt.rename:2"              crash at 2nd rename
+//!         MFT_FAILPOINTS="ckpt.write=err"             1 transient error
+//!         MFT_FAILPOINTS="ckpt.client_save:3=errx2"   2 errors from hit 3
+//! ```
+//!
+//! The registry is **thread-local**: each thread lazily arms itself
+//! from `MFT_FAILPOINTS` on its first [`hit`], and [`arm`]/[`clear`]
+//! affect only the calling thread.  This is deliberate — `cargo test`
+//! runs tests concurrently in one process, and all fleet checkpoint
+//! I/O happens on the coordinator (caller) thread, so per-thread
+//! arming gives each test an isolated fault universe while subprocess
+//! runs armed through the environment still see every thread armed.
+//!
+//! Point names must come from [`ALL_POINTS`] (or the `test.` prefix,
+//! reserved for unit tests) so a typo in a spec is an error, not a
+//! silently-never-firing fault.  `mft chaos` sweeps [`ALL_POINTS`]
+//! mechanically — adding a point here automatically adds it to the
+//! crash sweep.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::io;
+
+use anyhow::{bail, Result};
+
+/// Process exit code of a simulated crash — distinct from normal error
+/// exits (1) so harnesses can tell "the failpoint fired" from "the run
+/// actually failed".
+pub const EXIT_CODE: i32 = 86;
+
+/// Every registered failpoint, in checkpoint-lifecycle order.  The
+/// `ckpt.*` points cover the commit path (generation writes, the
+/// atomic-rename commit and its durability syncs, garbage collection);
+/// the `resume.*` points cover every read `--resume` performs before
+/// it mutates anything.
+pub const ALL_POINTS: &[&str] = &[
+    "ckpt.client_save",  // per-client safetensors generation write
+    "ckpt.global_save",  // global-adapter safetensors generation write
+    "ckpt.tmp_create",   // write_atomic: create the .tmp file
+    "ckpt.write",        // write_atomic: write the payload
+    "ckpt.sync",         // write_atomic: fsync the .tmp file
+    "ckpt.rename",       // write_atomic: the atomic commit rename
+    "ckpt.dir_sync",     // write_atomic: fsync the parent directory
+    "ckpt.gc",           // delete superseded/orphaned generation files
+    "resume.read_json",  // read + parse fleet_ckpt.json
+    "resume.read_client", // read/verify a client generation file
+    "resume.read_global", // read/verify a global generation file
+    "resume.read_rounds", // read rounds.jsonl for the committed tail
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Mode {
+    Crash,
+    /// `left` consecutive injected errors remain before the point goes
+    /// inert (so retries eventually succeed)
+    Err { left: u64 },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Armed {
+    point: String,
+    /// 1-based hit index at which the fault fires
+    fire_at: u64,
+    mode: Mode,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    armed: Vec<Armed>,
+    /// lifetime hit count per point on this thread (armed or not)
+    counts: HashMap<String, u64>,
+}
+
+impl Registry {
+    fn from_env() -> Registry {
+        let mut reg = Registry::default();
+        if let Ok(spec) = std::env::var("MFT_FAILPOINTS") {
+            match parse_spec(&spec) {
+                Ok(armed) => reg.armed = armed,
+                // a child process can't surface a config error usefully
+                // from inside an io path; warn loudly and stay unarmed
+                Err(e) => eprintln!(
+                    "warning: ignoring invalid MFT_FAILPOINTS {spec:?}: {e}"),
+            }
+        }
+        reg
+    }
+}
+
+thread_local! {
+    static REG: RefCell<Option<Registry>> = const { RefCell::new(None) };
+}
+
+fn valid_point(name: &str) -> bool {
+    ALL_POINTS.contains(&name) || name.starts_with("test.")
+}
+
+/// Parse a failpoint spec (see the module docs for the grammar).
+fn parse_spec(spec: &str) -> Result<Vec<Armed>> {
+    let mut armed = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (head, mode_s) = match part.split_once('=') {
+            Some((h, m)) => (h, Some(m)),
+            None => (part, None),
+        };
+        let (name, n_s) = match head.split_once(':') {
+            Some((p, n)) => (p, Some(n)),
+            None => (head, None),
+        };
+        if !valid_point(name) {
+            bail!("unknown failpoint {name:?} (known: {})",
+                  ALL_POINTS.join(", "));
+        }
+        let fire_at: u64 = match n_s {
+            Some(n) => n
+                .parse()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "failpoint {name}: hit index {n:?} must be an integer \
+                     >= 1"))?,
+            None => 1,
+        };
+        let mode = match mode_s {
+            None | Some("crash") => Mode::Crash,
+            Some("err") => Mode::Err { left: 1 },
+            Some(m) if m.starts_with("errx") => {
+                let count: u64 = m["errx".len()..]
+                    .parse()
+                    .ok()
+                    .filter(|&c| c >= 1)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "failpoint {name}: error count in {m:?} must be an \
+                         integer >= 1"))?;
+                Mode::Err { left: count }
+            }
+            Some(m) => bail!(
+                "failpoint {name}: unknown mode {m:?} (crash | err | errxM)"),
+        };
+        armed.push(Armed { point: name.to_string(), fire_at, mode });
+    }
+    Ok(armed)
+}
+
+/// Arm the calling thread with `spec`, replacing anything previously
+/// armed (and resetting hit counts).  Errors on malformed specs or
+/// unknown point names.
+pub fn arm(spec: &str) -> Result<()> {
+    let armed = parse_spec(spec)?;
+    REG.with(|r| {
+        *r.borrow_mut() = Some(Registry { armed, ..Registry::default() });
+    });
+    Ok(())
+}
+
+/// Disarm every failpoint on the calling thread and reset hit counts.
+/// Installs an *empty* registry (not "uninitialized"), so a later
+/// [`hit`] does not re-arm from `MFT_FAILPOINTS`.
+pub fn clear() {
+    REG.with(|r| {
+        *r.borrow_mut() = Some(Registry::default());
+    });
+}
+
+/// Lifetime hit count of `point` on the calling thread.
+pub fn hit_count(point: &str) -> u64 {
+    REG.with(|r| {
+        r.borrow()
+            .as_ref()
+            .and_then(|reg| reg.counts.get(point).copied())
+            .unwrap_or(0)
+    })
+}
+
+/// Register one pass through the failpoint `point`.  Returns `Ok(())`
+/// unless an armed fault fires here: an injected transient error comes
+/// back as `io::ErrorKind::Interrupted`, and a crash terminates the
+/// process with [`EXIT_CODE`] without returning at all.
+pub fn hit(point: &str) -> io::Result<()> {
+    REG.with(|r| {
+        let mut r = r.borrow_mut();
+        let reg = r.get_or_insert_with(Registry::from_env);
+        let count = reg.counts.entry(point.to_string()).or_insert(0);
+        *count += 1;
+        let n = *count;
+        for a in reg.armed.iter_mut() {
+            if a.point != point {
+                continue;
+            }
+            match &mut a.mode {
+                Mode::Crash if n == a.fire_at => {
+                    eprintln!(
+                        "failpoint {point}: simulated crash at hit {n} \
+                         (exit {EXIT_CODE})");
+                    // no unwinding, no destructor-driven flushes: the
+                    // point is to model power loss, and exit() tears the
+                    // process down like one (modulo the fsyncs the code
+                    // under test already performed — which is exactly
+                    // the contract the chaos sweep verifies)
+                    std::process::exit(EXIT_CODE);
+                }
+                Mode::Err { left } if n >= a.fire_at && *left > 0 => {
+                    *left -= 1;
+                    return Err(io::Error::new(
+                        io::ErrorKind::Interrupted,
+                        format!("failpoint {point}: injected transient I/O \
+                                 error (hit {n})"),
+                    ));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_hits_only_count() {
+        clear();
+        assert_eq!(hit_count("test.a"), 0);
+        for _ in 0..3 {
+            hit("test.a").unwrap();
+        }
+        assert_eq!(hit_count("test.a"), 3);
+        assert_eq!(hit_count("test.b"), 0);
+    }
+
+    #[test]
+    fn err_mode_fires_once_then_goes_inert() {
+        arm("test.e=err").unwrap();
+        let e = hit("test.e").unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::Interrupted);
+        assert!(e.to_string().contains("test.e"), "{e}");
+        // disarmed after the single injected error — a retry succeeds
+        hit("test.e").unwrap();
+        hit("test.e").unwrap();
+        assert_eq!(hit_count("test.e"), 3);
+        clear();
+    }
+
+    #[test]
+    fn err_mode_respects_hit_index_and_multiplicity() {
+        arm("test.m:2=errx2").unwrap();
+        hit("test.m").unwrap(); // hit 1: before fire_at
+        assert!(hit("test.m").is_err()); // hit 2 fires
+        assert!(hit("test.m").is_err()); // hit 3 fires (errx2)
+        hit("test.m").unwrap(); // exhausted
+        clear();
+    }
+
+    #[test]
+    fn arm_replaces_and_clear_disarms() {
+        arm("test.x=err").unwrap();
+        arm("test.y=err").unwrap(); // replaces test.x entirely
+        hit("test.x").unwrap();
+        assert!(hit("test.y").is_err());
+        clear();
+        hit("test.y").unwrap();
+    }
+
+    #[test]
+    fn comma_lists_arm_multiple_points() {
+        arm("test.p=err,test.q:2=err").unwrap();
+        assert!(hit("test.p").is_err());
+        hit("test.q").unwrap();
+        assert!(hit("test.q").is_err());
+        clear();
+    }
+
+    #[test]
+    fn spec_validation() {
+        // unknown names, bad indices and bad modes are config errors
+        assert!(parse_spec("ckpt.rename:2").is_ok());
+        assert!(parse_spec("ckpt.write=err,resume.read_json=errx3").is_ok());
+        assert!(parse_spec("").unwrap().is_empty());
+        assert!(parse_spec("ckpt.nope").is_err());
+        assert!(parse_spec("ckpt.rename:0").is_err());
+        assert!(parse_spec("ckpt.rename:x").is_err());
+        assert!(parse_spec("ckpt.rename=explode").is_err());
+        assert!(parse_spec("ckpt.rename=errx0").is_err());
+        // every registered point parses under every mode — the chaos
+        // sweep depends on this
+        for p in ALL_POINTS {
+            assert!(parse_spec(&format!("{p}:3=err")).is_ok(), "{p}");
+        }
+    }
+}

@@ -1,7 +1,9 @@
 //! Shared substrate: JSON, seeded RNG, virtual clock, deterministic
-//! thread pool, small helpers.
+//! thread pool, failpoint injection, CRC32, small helpers.
 
 pub mod clock;
+pub mod crc;
+pub mod faults;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,55 @@
+//! Integration coverage for the `mft chaos` crash sweep (see
+//! `fleet::chaos`): run the sweep over a small representative failpoint
+//! subset — a commit-path kill, the atomic-rename kill, and a
+//! resume-side kill — plus the corrupt-generation fallback scenario the
+//! sweep always appends, and assert every leg recovered byte-identical
+//! to the uninterrupted reference.
+//!
+//! The sweep spawns the `mft` binary for its kill legs.  Cargo exports
+//! the binary's path to integration tests as `CARGO_BIN_EXE_mft`; if a
+//! build environment doesn't provide it (no bin target built), the test
+//! skips rather than fabricating a binary.  The full-sweep leg
+//! (`mft chaos` over every registered point) runs in CI.
+
+use std::path::PathBuf;
+
+use mft::fleet::{run_chaos, ChaosOpts};
+
+#[test]
+fn chaos_subset_recovers_byte_identical() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_mft") else {
+        eprintln!("skipping: CARGO_BIN_EXE_mft not set (no mft bin \
+                   target in this build)");
+        return;
+    };
+    let out = std::env::temp_dir()
+        .join(format!("mft-chaos-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    let opts = ChaosOpts {
+        quick: false,
+        points: Some(vec![
+            "ckpt.client_save".to_string(),
+            "ckpt.rename".to_string(),
+            "resume.read_json".to_string(),
+        ]),
+        out: out.clone(),
+    };
+    let report = run_chaos(std::path::Path::new(bin), &opts).unwrap();
+    // 3 failpoints + the always-appended corrupt-fallback scenario
+    assert_eq!(report.results.len(), 4);
+    for r in &report.results {
+        assert!(r.ok, "chaos leg {} ({}) diverged: {}", r.name, r.mode,
+                r.detail);
+    }
+    // resume.read_json can only fire during --resume, so the sweep must
+    // have taken the manufactured-interruption path for it
+    let rj = report
+        .results
+        .iter()
+        .find(|r| r.name == "resume.read_json")
+        .unwrap();
+    assert_eq!(rj.mode, "resume-crash");
+    let report_file: PathBuf = out.join("chaos_report.json");
+    assert!(report_file.exists(), "chaos_report.json must be written");
+    let _ = std::fs::remove_dir_all(&out);
+}

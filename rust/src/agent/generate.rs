@@ -64,6 +64,7 @@ pub fn greedy(trainer: &mut Trainer, tokenizer: &Tokenizer, prompt: &str,
             .map(|(i, _)| i as u32)
             .unwrap_or(crate::tokenizer::EOS);
         if next == crate::tokenizer::EOS || next == crate::tokenizer::PAD {
+            // mft-lint: allow(det-env-config) -- debug logging toggle only
             if std::env::var("MFT_AGENT_DEBUG").is_ok() {
                 eprintln!("    [decode stopped: token {next} after {} tokens]",
                           out_ids.len());

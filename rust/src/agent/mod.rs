@@ -146,6 +146,7 @@ pub fn run_user(engine: Rc<Engine>, acfg: &AgentConfig, user: usize)
     let mut final_loss = f64::NAN;
     for st in 0..acfg.steps {
         final_loss = trainer.step(&mut train_loader)?.loss;
+        // mft-lint: allow(det-env-config) -- debug logging toggle only
         if std::env::var("MFT_AGENT_DEBUG").is_ok() && st % 10 == 0 {
             eprintln!("  [train step {st}: loss {final_loss:.3}]");
         }
@@ -166,6 +167,7 @@ fn score_all(trainer: &mut Trainer, tokenizer: &crate::tokenizer::Tokenizer,
         let prompt = format!("User: {}\nAgent:", q.question);
         let resp = generate::greedy(trainer, tokenizer, &prompt, gen_tokens)?;
         let score = judge_response(q.category, stats, &resp).total();
+        // mft-lint: allow(det-env-config) -- debug logging toggle only
         if std::env::var("MFT_AGENT_DEBUG").is_ok() {
             eprintln!("--- [{}] Q: {}\n    A: {resp:?}\n    score {score}",
                       q.category.as_str(), q.question);

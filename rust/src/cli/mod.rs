@@ -12,6 +12,9 @@
 //!                            every checkpoint failpoint, assert
 //!                            byte-identical recovery
 //!   mft trace summarize F    per-phase rollups of a fleet `--trace` file
+//!   mft lint [flags]         repo-contract static analysis over src/
+//!                            (determinism/durability/failpoint-coverage
+//!                            lints — see [`crate::lint`])
 //!   mft viz <run-dir>        terminal training visualizer
 //!   mft devices              list simulated device profiles
 //!   mft info                 manifest/artifact inventory
@@ -158,12 +161,13 @@ pub fn main() -> Result<()> {
         Some("bench") => crate::bench::dispatch(&args),
         Some("chaos") => crate::fleet::cmd_chaos(&args),
         Some("trace") => crate::obs::cmd_trace(&args),
+        Some("lint") => crate::lint::cmd_lint(&args),
         Some("viz") => crate::viz::cmd_viz(&args),
         Some("devices") => cmd_devices(),
         Some("info") => cmd_info(&args),
         Some(other) => bail!("unknown subcommand {other:?}; try \
                               train|fleet|exp|agent|bench|chaos|trace|\
-                              viz|devices|info"),
+                              lint|viz|devices|info"),
         None => {
             print_help();
             Ok(())
@@ -292,6 +296,14 @@ fn print_help() {
                      [--top K]` validates the Chrome trace-event shape\n\
                      and prints per-phase virtual-time/bytes/energy\n\
                      rollups plus the K slowest client tracks\n\
+           lint      repo-contract static analysis over src/:\n\
+                     determinism (hash iteration, wall-clock, env\n\
+                     reads, float sums), durability (raw writes vs\n\
+                     write_atomic) and failpoint-coverage lints, with\n\
+                     inline `mft-lint: allow(name) -- reason` escapes\n\
+                     --deny (exit nonzero on any finding — the CI leg)\n\
+                     --json FILE (write the ranked report)\n\
+                     --root DIR (source tree; default rust/src)\n\
            viz       terminal dashboard over a run dir\n\
            devices   list simulated device profiles\n\
            info      artifact inventory"

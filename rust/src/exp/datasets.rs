@@ -45,6 +45,8 @@ pub fn tokenizer_for(cache_dir: &Path, vocab: usize) -> Result<Tokenizer> {
 }
 
 pub fn default_cache_dir() -> PathBuf {
+    // mft-lint: allow(det-env-config) -- cache *location* only; the
+    // cached tokenizer bytes are the same wherever they live
     std::env::var("MFT_CACHE_DIR")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from(".cache"))

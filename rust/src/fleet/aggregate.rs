@@ -206,6 +206,8 @@ impl Aggregator for FedAvg {
 
     fn aggregate(&self, updates: &[&ClientUpdate]) -> Result<Vec<Vec<f32>>> {
         validate(updates)?;
+        // mft-lint: allow(det-float-sum) -- exact: integer-valued f64 terms,
+        // so the sum is the same in any order
         let total: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
         if total <= 0.0 {
             bail!("fedavg: zero total samples");
@@ -328,6 +330,8 @@ impl Aggregator for TrimmedMean {
                     vals[j] = u.delta[ti][i];
                 }
                 let sum: f32 = if k == 0 {
+                    // mft-lint: allow(det-float-sum) -- `vals` is indexed by
+                    // cohort position, a deterministic order for a given round
                     vals.iter().sum()
                 } else {
                     // drop the k smallest: pivot at rank k-1, keep right
@@ -337,6 +341,8 @@ impl Aggregator for TrimmedMean {
                     // k..n-k of the full set); NaNs land past the pivot
                     let (lo, piv, _) = rest.select_nth_unstable_by(
                         kept_n - 1, |a, b| a.total_cmp(b));
+                    // mft-lint: allow(det-float-sum) -- summed in the
+                    // select_nth partition order, deterministic per input
                     lo.iter().sum::<f32>() + *piv
                 };
                 *x = sum / kept_n as f32;

@@ -35,6 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 use crate::util::faults;
+use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 
 use super::driver::{fleet_config, run_fleet};
@@ -291,6 +292,8 @@ fn scenario_corrupt_fallback(bin: &Path, out: &Path, ref_dir: &Path)
     let mut bytes = std::fs::read(dir.join(&victim))?;
     let last = bytes.len() - 1;
     bytes[last] ^= 0x01; // tensor-data bit flip: parses, fails the CRC
+    // mft-lint: allow(dur-raw-write) -- deliberately corrupting a
+    // committed generation is the point of this scenario
     std::fs::write(dir.join(&victim), &bytes)?;
     let r = run_mft(bin, &dir, true, None)?;
     if r.code != Some(0) {
@@ -357,8 +360,8 @@ pub fn run_chaos(bin: &Path, opts: &ChaosOpts) -> Result<ChaosReport> {
     results.push(scenario_corrupt_fallback(bin, &opts.out, &ref_dir)?);
 
     let report = ChaosReport { results };
-    std::fs::write(opts.out.join("chaos_report.json"),
-                   report.to_json().to_string())
+    write_atomic(&opts.out.join("chaos_report.json"),
+                 report.to_json().to_string().as_bytes())
         .with_context(|| format!("write {}",
                                  opts.out.join("chaos_report.json")
                                      .display()))?;
@@ -377,6 +380,8 @@ pub fn cmd_chaos(args: &Args) -> Result<()> {
         }),
         out: PathBuf::from(args.get("out").unwrap_or("chaos-out")),
     };
+    // mft-lint: allow(det-env-config) -- picks which binary the sweep
+    // spawns, never what any run computes
     let bin = match std::env::var_os("MFT_BIN") {
         Some(p) => PathBuf::from(p),
         None => std::env::current_exe()

@@ -78,7 +78,7 @@
 //! panel tails it) and the final merged adapter exports to safetensors
 //! via the standard [`LoraState`] path.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -101,6 +101,7 @@ use crate::tokenizer::Tokenizer;
 use crate::train::lora::LoraState;
 use crate::util::crc::crc32;
 use crate::util::faults;
+use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::Pcg;
@@ -243,53 +244,6 @@ fn blob_parse(j: &Json) -> Result<BlobPersist> {
         n_samples: j.req("n")?.as_u64()?,
         delta_bits,
     })
-}
-
-/// Atomically replace `path` with `bytes`: write `<stem>.tmp`, fsync,
-/// rename, fsync the parent directory.  A crash — even a power loss —
-/// leaves either the previous file or the complete new one, never a
-/// torn file.  Safetensors writes don't need this: `write_safetensors`
-/// already does tmp + fsync + rename internally.  Every step is a
-/// named failpoint so `mft chaos` can kill or fault-inject between any
-/// two of them.
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    use std::io::Write;
-    let tmp = path.with_extension("tmp");
-    {
-        faults::hit("ckpt.tmp_create")
-            .with_context(|| format!("create {}", tmp.display()))?;
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("create {}", tmp.display()))?;
-        faults::hit("ckpt.write")
-            .with_context(|| format!("write {}", tmp.display()))?;
-        f.write_all(bytes)
-            .with_context(|| format!("write {}", tmp.display()))?;
-        faults::hit("ckpt.sync")
-            .with_context(|| format!("sync {}", tmp.display()))?;
-        f.sync_all()
-            .with_context(|| format!("sync {}", tmp.display()))?;
-    }
-    faults::hit("ckpt.rename").with_context(
-        || format!("rename {} -> {}", tmp.display(), path.display()))?;
-    std::fs::rename(&tmp, path).with_context(
-        || format!("rename {} -> {}", tmp.display(), path.display()))?;
-    // the rename is only durable once the parent directory's entry
-    // table is: without this fsync a power loss *after* the "commit"
-    // could roll the commit itself back to the old file
-    faults::hit("ckpt.dir_sync")
-        .with_context(|| format!("sync parent dir of {}", path.display()))?;
-    #[cfg(unix)]
-    if let Some(parent) = path.parent() {
-        let parent = if parent.as_os_str().is_empty() {
-            Path::new(".")
-        } else {
-            parent
-        };
-        std::fs::File::open(parent)
-            .and_then(|d| d.sync_all())
-            .with_context(|| format!("sync dir {}", parent.display()))?;
-    }
-    Ok(())
 }
 
 /// Process-level recovery history of one run: transient-error retries
@@ -449,9 +403,9 @@ impl CkptState {
 /// faulted `ckpt.gc` just defers the sweep.
 fn sweep_unreferenced(dir: &Path, ckpt: &CkptState, dropped: &[Generation],
                       recovery: &mut RecoveryStats) {
-    let referenced: HashSet<String> =
+    let referenced: BTreeSet<String> =
         ckpt.gens.iter().flat_map(|g| g.files()).collect();
-    let expected: HashSet<String> = dropped
+    let expected: BTreeSet<String> = dropped
         .iter()
         .flat_map(|g| g.files())
         .filter(|f| !referenced.contains(f))
@@ -1547,7 +1501,12 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     }
     let summary = Json::obj(pairs);
     if let Some(d) = &out_dir {
-        std::fs::write(d.join("summary.json"), summary.to_string())?;
+        // atomic + fsynced like every other artifact: a crash during
+        // the final write must never leave a torn summary next to a
+        // completed rounds.jsonl
+        write_atomic(&d.join("summary.json"),
+                     summary.to_string().as_bytes())
+            .context("write summary.json")?;
     }
     // the trace path is used exactly as given (not joined to --out, so
     // tracing works without an out dir at all)

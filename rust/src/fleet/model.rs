@@ -297,7 +297,11 @@ impl BigramRef {
                 spans.push((entries.len(), entries.len()));
             }
             entries.push((t, k as f64));
-            spans.last_mut().unwrap().1 = entries.len();
+            // spans is never empty here (the guard above pushes one for
+            // a fresh context), but don't panic on the invariant
+            if let Some(span) = spans.last_mut() {
+                span.1 = entries.len();
+            }
         }
         EvalCache { ctxs, spans, entries, n_pairs, row: vec![0.0f32; v] }
     }

@@ -65,6 +65,16 @@
 //!   `mft trace summarize` prints rollups) — plus [`obs::prof`], the
 //!   opt-in host wall-clock phase profiler behind `--profile` feeding
 //!   `"profile"` in `summary.json` and `BENCH_fleet.json`
+//! * Contract enforcement -> [`lint`]: `mft lint`, a zero-dependency
+//!   static scanner over `src/` that enforces the repo's own rules at
+//!   the source level — determinism (no hash-order iteration in
+//!   fleet/train/data, no wall-clock or env reads on deterministic
+//!   paths, ordered float accumulation in the aggregator), durability
+//!   (artifact writes go through [`util::fsio::write_atomic`]), and
+//!   failpoint coverage (`faults::ALL_POINTS` and the literal
+//!   `faults::hit` sites must match both directions); per-module
+//!   allowlists + inline `mft-lint: allow(name) -- reason` escapes,
+//!   ranked `lint_report.json`, `--deny` for CI
 
 pub mod agent;
 pub mod bench;
@@ -75,6 +85,7 @@ pub mod energy;
 pub mod eval;
 pub mod exp;
 pub mod fleet;
+pub mod lint;
 pub mod memopt;
 pub mod metrics;
 pub mod model;

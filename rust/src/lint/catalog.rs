@@ -1,0 +1,146 @@
+//! The lint catalog: every repo contract the scanner enforces.
+//!
+//! Each needle lint is (name, class, severity, needles, scope, hint).
+//! Needles are plain substrings matched against *blanked* source lines
+//! (comments and string contents replaced by spaces — see
+//! [`super::scan`]), so a needle in a doc comment or a log message never
+//! fires.  Scope is a set of repo-relative path prefixes: `OnlyIn` fires
+//! only under those prefixes, `Outside` fires everywhere else.
+//!
+//! Severity ranks the report (0 sorts first); under `--deny` *any*
+//! finding fails the run, so severity is presentation, not policy.
+//!
+//! The two coverage lints (`cover-failpoint-routed`,
+//! `cover-failpoint-unknown`) are not needle lints — they cross-check
+//! [`crate::util::faults::ALL_POINTS`] against the literal
+//! `faults::hit("...")` call sites collected during the scan — but their
+//! names live here with the rest of the catalog so `allow(...)`
+//! annotations and docs have one namespace.
+
+/// Where a lint applies, as repo-relative path prefixes
+/// (`"fleet/"` matches the directory, `"util/rng.rs"` a single file).
+pub enum Scope {
+    /// Fires only under these prefixes.
+    OnlyIn(&'static [&'static str]),
+    /// Fires everywhere *except* under these prefixes.
+    Outside(&'static [&'static str]),
+}
+
+impl Scope {
+    pub fn applies(&self, rel: &str) -> bool {
+        match self {
+            Scope::OnlyIn(p) => p.iter().any(|p| rel.starts_with(p)),
+            Scope::Outside(p) => !p.iter().any(|p| rel.starts_with(p)),
+        }
+    }
+}
+
+pub struct NeedleLint {
+    pub name: &'static str,
+    pub class: &'static str,
+    pub severity: u8,
+    pub needles: &'static [&'static str],
+    pub scope: Scope,
+    pub hint: &'static str,
+}
+
+/// Lint names that are computed by the coverage pass, not needle search.
+pub const COVER_ROUTED: &str = "cover-failpoint-routed";
+pub const COVER_UNKNOWN: &str = "cover-failpoint-unknown";
+
+pub const CATALOG: &[NeedleLint] = &[
+    NeedleLint {
+        name: "det-hash-iter",
+        class: "determinism",
+        severity: 0,
+        needles: &["HashMap", "HashSet"],
+        // the modules whose outputs must be bitwise reproducible per seed
+        scope: Scope::OnlyIn(&["fleet/", "train/", "data/", "util/rng.rs"]),
+        hint: "hash iteration order is nondeterministic; use \
+               BTreeMap/BTreeSet or an index-ordered Vec",
+    },
+    NeedleLint {
+        name: "det-wall-clock",
+        class: "determinism",
+        severity: 0,
+        needles: &["Instant::now", "SystemTime"],
+        // timing belongs to observability; everything else runs on the
+        // virtual clock
+        scope: Scope::Outside(&["obs/", "bench/", "util/clock.rs"]),
+        hint: "wall-clock must not steer deterministic paths; use \
+               util::clock::Clock or move the measurement into obs/",
+    },
+    NeedleLint {
+        name: "det-env-config",
+        class: "determinism",
+        severity: 0,
+        needles: &["env::var"],
+        // env reads are run inputs: they must flow through flag/config
+        // parsing (cli/, config/) or the two sanctioned util knobs
+        scope: Scope::Outside(&["cli/", "config/", "util/pool.rs",
+                                "util/faults.rs"]),
+        hint: "environment reads hide run inputs from the replayable \
+               config; route them through cli/config parsing",
+    },
+    NeedleLint {
+        name: "det-float-sum",
+        class: "determinism",
+        severity: 1,
+        needles: &[".sum()", ".sum::<"],
+        // the aggregator is where float accumulation order decides
+        // whether two coordinators agree bitwise
+        scope: Scope::OnlyIn(&["fleet/aggregate.rs"]),
+        hint: "float sums must have a fixed accumulation order; sum via \
+               an explicitly ordered walk or annotate why the order is \
+               deterministic",
+    },
+    NeedleLint {
+        name: "dur-raw-write",
+        class: "durability",
+        severity: 0,
+        needles: &["fs::write(", "File::create("],
+        // every artifact a crash must not tear goes through write_atomic
+        scope: Scope::OnlyIn(&["fleet/", "metrics/", "obs/", "tensor/"]),
+        hint: "raw writes can tear on crash; route artifact writes \
+               through util::fsio::write_atomic (tmp + fsync + rename)",
+    },
+    NeedleLint {
+        name: "robust-unwrap",
+        class: "robustness",
+        severity: 1,
+        needles: &[".unwrap()", ".expect("],
+        // the fleet driver must degrade (record a fault, keep the
+        // round loop alive), never panic mid-checkpoint
+        scope: Scope::OnlyIn(&["fleet/"]),
+        hint: "fleet code returns Result; use anyhow::Context or \
+               ok_or_else instead of panicking",
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = CATALOG.iter().map(|l| l.name).collect();
+        names.push(COVER_ROUTED);
+        names.push(COVER_UNKNOWN);
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate lint name in catalog");
+    }
+
+    #[test]
+    fn scope_prefix_matching() {
+        let only = Scope::OnlyIn(&["fleet/", "util/rng.rs"]);
+        assert!(only.applies("fleet/driver.rs"));
+        assert!(only.applies("util/rng.rs"));
+        assert!(!only.applies("util/json.rs"));
+        let outside = Scope::Outside(&["obs/", "util/clock.rs"]);
+        assert!(!outside.applies("obs/prof.rs"));
+        assert!(!outside.applies("util/clock.rs"));
+        assert!(outside.applies("exp/run.rs"));
+    }
+}

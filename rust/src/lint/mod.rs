@@ -1,0 +1,269 @@
+//! `mft lint` — repo-contract static analysis (zero dependencies).
+//!
+//! The repo's invariants — determinism (bitwise-reproducible fleet runs
+//! per seed), durability (crash-anywhere checkpoints), failpoint
+//! coverage — are enforced by tests *after* a violation ships.  This
+//! module enforces them at the source level: a line/token scanner over
+//! `src/` driven by a lint catalog ([`catalog::CATALOG`]) with
+//! per-module allowlists and inline escapes:
+//!
+//! ```text
+//! // mft-lint: allow(<lint-name>) -- <reason>
+//! ```
+//!
+//! An allow on a code line covers that line; an allow on a comment line
+//! covers the next code line.  The `-- <reason>` is mandatory by
+//! convention (reviewed, not parsed): an escape without a *why* is a
+//! suppression, not a decision.
+//!
+//! `mft lint` prints a ranked human summary on stderr and the full
+//! report as JSON on stdout; `--json FILE` also writes the report to a
+//! file (atomically, naturally), and `--deny` exits nonzero on any
+//! finding — that is the CI leg.  See `lint/README.md` for the catalog.
+
+pub mod catalog;
+mod scan;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::util::fsio::write_atomic;
+use crate::util::json::Json;
+
+/// One lint violation, anchored to a source line.
+#[derive(Debug)]
+pub struct Finding {
+    pub lint: &'static str,
+    pub class: &'static str,
+    pub severity: u8,
+    /// repo-relative path, `/`-separated
+    pub file: String,
+    /// 1-based; 0 for registry-level findings with no single line
+    pub line: usize,
+    pub snippet: String,
+    pub hint: &'static str,
+}
+
+pub struct LintReport {
+    /// ranked: (severity, lint, file, line)
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub allows_used: usize,
+}
+
+impl LintReport {
+    pub fn to_json(&self) -> Json {
+        let mut by_lint: std::collections::BTreeMap<&str, usize> =
+            std::collections::BTreeMap::new();
+        for f in &self.findings {
+            *by_lint.entry(f.lint).or_default() += 1;
+        }
+        Json::obj(vec![
+            ("ok", Json::from(self.findings.is_empty())),
+            ("files_scanned", Json::from(self.files_scanned)),
+            ("allows_used", Json::from(self.allows_used)),
+            ("by_lint",
+             Json::Obj(by_lint
+                 .into_iter()
+                 .map(|(k, v)| (k.to_string(), Json::from(v)))
+                 .collect())),
+            ("findings",
+             Json::Arr(self.findings
+                 .iter()
+                 .map(|f| Json::obj(vec![
+                     ("lint", Json::from(f.lint)),
+                     ("class", Json::from(f.class)),
+                     ("severity", Json::from(f.severity as usize)),
+                     ("file", Json::from(f.file.as_str())),
+                     ("line", Json::from(f.line)),
+                     ("snippet", Json::from(f.snippet.as_str())),
+                     ("hint", Json::from(f.hint)),
+                 ]))
+                 .collect())),
+        ])
+    }
+}
+
+/// Collect `.rs` files under `root`, sorted by relative path.  The
+/// `lint/` subtree is excluded: the catalog and its fixtures spell the
+/// needles out, and a linter flagging its own definition helps no one.
+fn walk(dir: &Path, rel: &str, out: &mut Vec<(PathBuf, String)>)
+        -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("read dir {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let r = if rel.is_empty() {
+            name.clone()
+        } else {
+            format!("{rel}/{name}")
+        };
+        let path = e.path();
+        if path.is_dir() {
+            if r == "lint" {
+                continue;
+            }
+            walk(&path, &r, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((path, r));
+        }
+    }
+    Ok(())
+}
+
+/// Run every catalog lint plus the failpoint-coverage cross-check over
+/// the source tree at `root` (normally `rust/src`).
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    walk(root, "", &mut files)?;
+    if files.is_empty() {
+        bail!("no .rs files under {}", root.display());
+    }
+
+    let mut findings = Vec::new();
+    let mut allows_used = 0usize;
+    let mut hits = Vec::new();
+    for (path, rel) in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let s = scan::scan_source(rel, &text);
+        findings.extend(s.findings);
+        allows_used += s.allows_used;
+        hits.extend(s.hits);
+    }
+    findings.extend(
+        scan::coverage_findings(crate::util::faults::ALL_POINTS, &hits));
+
+    findings.sort_by(|a, b| {
+        (a.severity, a.lint, &a.file, a.line)
+            .cmp(&(b.severity, b.lint, &b.file, b.line))
+    });
+    Ok(LintReport { findings, files_scanned: files.len(), allows_used })
+}
+
+/// `mft lint [--root DIR] [--deny] [--json FILE]`.
+pub fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_dir())
+            // fall back to the source tree this binary was built from
+            // (compile-time path, useful for `cargo run` anywhere)
+            .unwrap_or_else(|| {
+                PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+            }),
+    };
+    let report = run_lint(&root).context("lint scan")?;
+
+    eprintln!("mft lint: {} files scanned, {} finding(s), {} allow(s) used",
+              report.files_scanned, report.findings.len(),
+              report.allows_used);
+    for f in &report.findings {
+        if f.line > 0 {
+            eprintln!("  [{}] {}:{}: {}", f.lint, f.file, f.line, f.snippet);
+        } else {
+            eprintln!("  [{}] {}: {}", f.lint, f.file, f.snippet);
+        }
+        eprintln!("      hint: {}", f.hint);
+    }
+
+    let json = report.to_json();
+    if let Some(p) = args.get("json") {
+        write_atomic(Path::new(p), json.to_string().as_bytes())
+            .with_context(|| format!("write {p}"))?;
+    }
+    // machine-readable report on stdout (same contract as `mft chaos`)
+    println!("{json}");
+
+    if args.has("deny") && !report.findings.is_empty() {
+        bail!("lint: {} finding(s) under --deny", report.findings.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_tree(tag: &str, files: &[(&str, &str)]) -> PathBuf {
+        let root = std::env::temp_dir()
+            .join(format!("mft-lint-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (rel, text) in files {
+            let p = root.join(rel);
+            std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+            std::fs::write(&p, text).unwrap();
+        }
+        root
+    }
+
+    // every registered failpoint routed, so a fixture tree passes the
+    // coverage cross-check
+    fn routed_hits() -> String {
+        crate::util::faults::ALL_POINTS
+            .iter()
+            .map(|p| format!("    faults::hit(\"{p}\")?;\n"))
+            .collect()
+    }
+
+    #[test]
+    fn run_lint_aggregates_ranks_and_skips_lint_dir() {
+        let driver = format!("use std::collections::HashMap;\n\
+                              pub fn go() -> anyhow::Result<()> {{\n\
+                              {}    Ok(())\n}}\n", routed_hits());
+        let root = tmp_tree("agg", &[
+            ("fleet/driver.rs", driver.as_str()),
+            // severity 1, must rank after the severity-0 hash finding
+            ("fleet/model.rs", "pub fn f() { x.unwrap(); }\n"),
+            // the linter's own sources are exempt
+            ("lint/catalog.rs", "pub const N: &str = \"HashMap\";\n"),
+            ("clean.rs", "pub fn ok() {}\n"),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert_eq!(r.files_scanned, 3, "lint/ must be excluded");
+        let lints: Vec<_> = r.findings.iter().map(|f| f.lint).collect();
+        assert_eq!(lints, vec!["det-hash-iter", "robust-unwrap"]);
+        assert_eq!(r.findings[0].file, "fleet/driver.rs");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let driver = format!("pub fn go() {{\n{}}}\n", routed_hits());
+        let root = tmp_tree("json", &[
+            ("fleet/driver.rs", driver.as_str()),
+            ("exp/run.rs", "let t0 = Instant::now();\n"),
+        ]);
+        let r = run_lint(&root).unwrap();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert!(!j.req("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.req("files_scanned").unwrap().as_usize().unwrap(), 2);
+        let fs = j.req("findings").unwrap().as_arr().unwrap();
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].req("lint").unwrap().as_str().unwrap(),
+                   "det-wall-clock");
+        assert_eq!(fs[0].req("file").unwrap().as_str().unwrap(),
+                   "exp/run.rs");
+        assert_eq!(fs[0].req("line").unwrap().as_usize().unwrap(), 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn unrouted_failpoint_surfaces_as_coverage_finding() {
+        // a tree with no faults::hit sites at all: every registered
+        // point is unrouted
+        let root = tmp_tree("cov", &[("clean.rs", "pub fn ok() {}\n")]);
+        let r = run_lint(&root).unwrap();
+        let n_routed = r.findings.iter()
+            .filter(|f| f.lint == "cover-failpoint-routed")
+            .count();
+        assert_eq!(n_routed, crate::util::faults::ALL_POINTS.len());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,600 @@
+//! The file scanner: blanking, test-module skipping, allow annotations,
+//! needle matching, and failpoint-literal collection.
+//!
+//! The scanner is deliberately line/token-level, not a parser: every
+//! contract in the catalog is expressible as "this substring appears on
+//! a code line in this part of the tree", and a few hundred lines of
+//! state machine is something `mft lint` itself can keep honest.  Three
+//! passes happen per line, in order:
+//!
+//! 1. **Blanking** — string-literal contents and comments become spaces
+//!    (comment *text* is kept aside for annotation parsing).  The state
+//!    machine tracks multi-line block comments, multi-line string
+//!    literals, raw strings (`r"…"`, `r#"…"#`), and distinguishes char
+//!    literals from lifetimes.
+//! 2. **Test skipping** — a `#[cfg(test)]` item (in this repo always a
+//!    trailing `mod tests { … }`) is skipped to its closing brace: test
+//!    code may use HashMap, unwrap and raw writes freely.
+//! 3. **Matching** — catalog needles against the blanked line, minus
+//!    any `mft-lint: allow(name)` annotations in force for that line.
+//!
+//! Allow annotations attach to the *next code line*: an allow on a code
+//! line covers that line; an allow on a comment-only line (plus any
+//! following comment/blank lines — reasons often wrap) covers the first
+//! code line after it, and nothing beyond.
+
+use super::catalog::{COVER_ROUTED, COVER_UNKNOWN, CATALOG};
+use super::Finding;
+
+/// A literal `faults::hit("point")` call site found during the scan.
+pub struct HitSite {
+    pub point: String,
+    pub file: String,
+    pub line: usize,
+    /// inside a `#[cfg(test)]` module — counts for the unknown-point
+    /// check but not as production routing
+    pub in_test: bool,
+}
+
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    /// allow annotations that suppressed at least one finding
+    pub allows_used: usize,
+    pub hits: Vec<HitSite>,
+}
+
+enum StrState {
+    None,
+    Normal,
+    /// raw string, closing delimiter is `"` followed by this many `#`s
+    Raw(usize),
+}
+
+/// Line blanker: replaces string contents and comments with spaces,
+/// carrying string/comment state across lines.
+struct Blanker {
+    block_depth: usize,
+    str_state: StrState,
+}
+
+impl Blanker {
+    fn new() -> Blanker {
+        Blanker { block_depth: 0, str_state: StrState::None }
+    }
+
+    /// Returns (blanked line, concatenated comment text on this line).
+    fn blank_line(&mut self, line: &str) -> (String, String) {
+        let b: Vec<char> = line.chars().collect();
+        let mut out = String::with_capacity(b.len());
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < b.len() {
+            match self.str_state {
+                StrState::Normal => {
+                    if b[i] == '\\' {
+                        out.push(' ');
+                        if i + 1 < b.len() {
+                            out.push(' ');
+                        }
+                        i += 2;
+                    } else if b[i] == '"' {
+                        self.str_state = StrState::None;
+                        out.push(' ');
+                        i += 1;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                    continue;
+                }
+                StrState::Raw(h) => {
+                    if b[i] == '"' && b[i + 1..].iter().take(h)
+                        .filter(|c| **c == '#').count() == h
+                    {
+                        self.str_state = StrState::None;
+                        for _ in 0..=h {
+                            out.push(' ');
+                        }
+                        i += 1 + h;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                    continue;
+                }
+                StrState::None => {}
+            }
+            if self.block_depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    self.block_depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    self.block_depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(b[i]);
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            // normal code position
+            if b[i] == '/' && b.get(i + 1) == Some(&'/') {
+                comment.extend(&b[i..]);
+                for _ in i..b.len() {
+                    out.push(' ');
+                }
+                break;
+            }
+            if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                self.block_depth = 1;
+                out.push_str("  ");
+                i += 2;
+                continue;
+            }
+            if b[i] == '"' {
+                self.str_state = StrState::Normal;
+                out.push(' ');
+                i += 1;
+                continue;
+            }
+            if b[i] == 'r'
+                && (i == 0
+                    || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_'))
+            {
+                // raw string start: r"…" or r#…#"…"#…# (raw identifiers
+                // like r#type fail the final quote check and fall through)
+                let mut j = i + 1;
+                let mut hashes = 0;
+                while b.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if b.get(j) == Some(&'"') {
+                    self.str_state = StrState::Raw(hashes);
+                    for _ in i..=j {
+                        out.push(' ');
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+            if b[i] == '\'' {
+                // char literal vs lifetime
+                if b.get(i + 1) == Some(&'\\') {
+                    let mut j = i + 2;
+                    while j < b.len() && b[j] != '\'' {
+                        j += 1;
+                    }
+                    for _ in i..=j.min(b.len() - 1) {
+                        out.push(' ');
+                    }
+                    i = j + 1;
+                    continue;
+                }
+                if b.get(i + 2) == Some(&'\'') {
+                    out.push_str("   ");
+                    i += 3;
+                    continue;
+                }
+                // lifetime: keep the tick, scan on
+                out.push('\'');
+                i += 1;
+                continue;
+            }
+            out.push(b[i]);
+            i += 1;
+        }
+        (out, comment)
+    }
+}
+
+/// Extract every `mft-lint: allow(name)` from a line's comment text.
+fn parse_allows(comment: &str) -> Vec<String> {
+    const TAG: &str = "mft-lint: allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(p) = rest.find(TAG) {
+        rest = &rest[p + TAG.len()..];
+        if let Some(close) = rest.find(')') {
+            out.push(rest[..close].trim().to_string());
+            rest = &rest[close + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Extract every `faults::hit("point")` literal from a raw line.  The
+/// caller has already confirmed the *blanked* line contains the call, so
+/// doc-comment mentions never land here.
+fn parse_hits(raw: &str) -> Vec<String> {
+    const TAG: &str = "faults::hit(\"";
+    let mut out = Vec::new();
+    let mut rest = raw;
+    while let Some(p) = rest.find(TAG) {
+        rest = &rest[p + TAG.len()..];
+        if let Some(close) = rest.find('"') {
+            out.push(rest[..close].to_string());
+            rest = &rest[close + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+fn brace_delta(blanked: &str) -> i64 {
+    let mut d = 0i64;
+    for c in blanked.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// Trim a source line for the report (120 chars keeps the JSON sane).
+fn snippet(raw: &str) -> String {
+    let t = raw.trim();
+    if t.chars().count() > 120 {
+        let cut: String = t.chars().take(117).collect();
+        format!("{cut}...")
+    } else {
+        t.to_string()
+    }
+}
+
+/// Scan one file's source.  `rel` is the repo-relative path with `/`
+/// separators (scope matching is prefix-based on it).
+pub fn scan_source(rel: &str, text: &str) -> FileScan {
+    let mut blanker = Blanker::new();
+    let mut findings = Vec::new();
+    let mut allows_used = 0usize;
+    let mut hits = Vec::new();
+
+    // allows from preceding comment-only lines, waiting for a code line
+    let mut pending_allows: Vec<String> = Vec::new();
+    // #[cfg(test)] skipping
+    let mut test_pending = false;
+    let mut in_test = false;
+    let mut test_depth = 0i64;
+
+    let applicable: Vec<_> =
+        CATALOG.iter().filter(|l| l.scope.applies(rel)).collect();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let (blanked, comment) = blanker.blank_line(raw);
+
+        if blanked.contains("faults::hit(\"") {
+            for point in parse_hits(raw) {
+                hits.push(HitSite {
+                    point,
+                    file: rel.to_string(),
+                    line: lineno,
+                    in_test: in_test || test_pending,
+                });
+            }
+        }
+
+        if in_test {
+            test_depth += brace_delta(&blanked);
+            if test_depth <= 0 {
+                in_test = false;
+            }
+            continue;
+        }
+        if test_pending {
+            let d = brace_delta(&blanked);
+            if d > 0 {
+                in_test = true;
+                test_depth = d;
+                test_pending = false;
+            } else if !blanked.trim().is_empty() && d < 0 {
+                // defensive: attribute orphaned by a close brace
+                test_pending = false;
+            }
+            continue;
+        }
+        if blanked.contains("#[cfg(test)]") {
+            test_pending = true;
+            continue;
+        }
+
+        let line_allows = parse_allows(&comment);
+        let has_code = !blanked.trim().is_empty();
+        if !has_code {
+            // comment-only or blank line: allows accumulate (reasons
+            // wrap over multiple comment lines) and wait for code
+            pending_allows.extend(line_allows);
+            continue;
+        }
+        let mut active = std::mem::take(&mut pending_allows);
+        active.extend(line_allows);
+
+        for lint in &applicable {
+            if lint.needles.iter().any(|n| blanked.contains(n)) {
+                if active.iter().any(|a| a == lint.name) {
+                    allows_used += 1;
+                } else {
+                    findings.push(Finding {
+                        lint: lint.name,
+                        class: lint.class,
+                        severity: lint.severity,
+                        file: rel.to_string(),
+                        line: lineno,
+                        snippet: snippet(raw),
+                        hint: lint.hint,
+                    });
+                }
+            }
+        }
+    }
+
+    FileScan { findings, allows_used, hits }
+}
+
+/// Cross-check the failpoint registry against the collected hit sites:
+/// every registered point must be routed (≥1 non-test `faults::hit`
+/// literal), and every hit literal must be registered or `test.`-scoped.
+pub fn coverage_findings(points: &[&str], hits: &[HitSite]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in points {
+        let routed = hits.iter().any(|h| !h.in_test && h.point == *p);
+        if !routed {
+            out.push(Finding {
+                lint: COVER_ROUTED,
+                class: "coverage",
+                severity: 0,
+                file: "util/faults.rs".to_string(),
+                line: 0,
+                snippet: format!(
+                    "registered failpoint \"{p}\" has no faults::hit(\
+                     \"{p}\") call site"),
+                hint: "add a faults::hit on the I/O path this point \
+                       guards, or retire it from ALL_POINTS",
+            });
+        }
+    }
+    for h in hits {
+        let known = h.point.starts_with("test.")
+            || points.contains(&h.point.as_str());
+        if !known {
+            out.push(Finding {
+                lint: COVER_UNKNOWN,
+                class: "coverage",
+                severity: 0,
+                file: h.file.clone(),
+                line: h.line,
+                snippet: format!("faults::hit(\"{}\")", h.point),
+                hint: "register the point in util::faults::ALL_POINTS \
+                       or use the test. prefix",
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lints(rel: &str, src: &str) -> Vec<(&'static str, usize)> {
+        scan_source(rel, src)
+            .findings
+            .iter()
+            .map(|f| (f.lint, f.line))
+            .collect()
+    }
+
+    // -- per-lint fire + allow fixtures ------------------------------
+
+    #[test]
+    fn det_hash_iter_fires_in_scope() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(lints("fleet/driver.rs", src),
+                   vec![("det-hash-iter", 1)]);
+        assert_eq!(lints("train/grads.rs", src),
+                   vec![("det-hash-iter", 1)]);
+        // out of scope: the runtime cache may hash
+        assert_eq!(lints("runtime/engine.rs", src), vec![]);
+    }
+
+    #[test]
+    fn det_hash_iter_allow_suppresses() {
+        let src = "// mft-lint: allow(det-hash-iter) -- ordered elsewhere\n\
+                   use std::collections::HashMap;\n";
+        let s = scan_source("fleet/driver.rs", src);
+        assert!(s.findings.is_empty());
+        assert_eq!(s.allows_used, 1);
+    }
+
+    #[test]
+    fn det_wall_clock_fire_and_same_line_allow() {
+        let src = "let t0 = Instant::now();\n";
+        assert_eq!(lints("exp/run.rs", src), vec![("det-wall-clock", 1)]);
+        assert_eq!(lints("obs/prof.rs", src), vec![]);
+        assert_eq!(lints("bench/mod.rs", src), vec![]);
+        let allowed =
+            "let t0 = Instant::now(); // mft-lint: allow(det-wall-clock) -- x\n";
+        let s = scan_source("exp/run.rs", allowed);
+        assert!(s.findings.is_empty());
+        assert_eq!(s.allows_used, 1);
+    }
+
+    #[test]
+    fn det_env_config_fire_and_scope() {
+        let src = "let v = std::env::var(\"MFT_X\").ok();\n";
+        assert_eq!(lints("exp/run.rs", src), vec![("det-env-config", 1)]);
+        assert_eq!(lints("cli/mod.rs", src), vec![]);
+        assert_eq!(lints("util/pool.rs", src), vec![]);
+        // set_var is not a read
+        assert_eq!(lints("exp/run.rs", "std::env::set_var(\"A\", \"1\");\n"),
+                   vec![]);
+    }
+
+    #[test]
+    fn det_float_sum_only_in_aggregator() {
+        let a = "let s: f32 = vals.iter().sum();\n";
+        let b = "let s = lo.iter().sum::<f32>();\n";
+        assert_eq!(lints("fleet/aggregate.rs", a),
+                   vec![("det-float-sum", 1)]);
+        assert_eq!(lints("fleet/aggregate.rs", b),
+                   vec![("det-float-sum", 1)]);
+        assert_eq!(lints("fleet/client.rs", a), vec![]);
+    }
+
+    #[test]
+    fn dur_raw_write_fire_and_allow() {
+        let src = "std::fs::write(&path, bytes)?;\n";
+        assert_eq!(lints("metrics/mod.rs", src), vec![("dur-raw-write", 1)]);
+        assert_eq!(lints("obs/trace.rs", "let f = fs::File::create(&p)?;\n"),
+                   vec![("dur-raw-write", 1)]);
+        // out of scope: experiment drivers write throwaway temp files
+        assert_eq!(lints("exp/drivers.rs", src), vec![]);
+        let allowed = "// mft-lint: allow(dur-raw-write) -- corruption test\n\
+                       std::fs::write(&path, bytes)?;\n";
+        assert_eq!(lints("fleet/chaos.rs", allowed), vec![]);
+    }
+
+    #[test]
+    fn robust_unwrap_fleet_only() {
+        let src = "let x = m.get(k).unwrap();\n";
+        assert_eq!(lints("fleet/model.rs", src), vec![("robust-unwrap", 1)]);
+        assert_eq!(lints("fleet/mod.rs", "v.expect(\"set\");\n"),
+                   vec![("robust-unwrap", 1)]);
+        assert_eq!(lints("train/lora.rs", src), vec![]);
+        // unwrap_or is not a panic
+        assert_eq!(lints("fleet/model.rs", "m.get(k).unwrap_or(&0);\n"),
+                   vec![]);
+    }
+
+    // -- scanner mechanics -------------------------------------------
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "// a HashMap in prose\n\
+                   /* Instant::now in a block\n\
+                      comment spanning lines */\n\
+                   let s = \"fs::write( and .unwrap() in a string\";\n\
+                   let r = r#\"env::var in a raw string\"#;\n";
+        assert_eq!(lints("fleet/driver.rs", src), vec![]);
+    }
+
+    #[test]
+    fn code_after_block_comment_still_fires() {
+        let src = "/* prose */ let m = HashMap::new();\n";
+        assert_eq!(lints("fleet/driver.rs", src), vec![("det-hash-iter", 1)]);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_survive_blanking() {
+        // the '"' char literal must not open a string that swallows the
+        // rest of the file
+        let src = "let q = '\"';\nlet m: HashMap<u8, u8>;\n\
+                   fn f<'a>(x: &'a str) {}\n";
+        assert_eq!(lints("fleet/driver.rs", src), vec![("det-hash-iter", 2)]);
+    }
+
+    #[test]
+    fn cfg_test_module_skipped() {
+        let src = "pub fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use std::collections::HashMap;\n\
+                       fn g() { let _x = HashMap::<u8, u8>::new(); }\n\
+                   }\n";
+        assert_eq!(lints("fleet/driver.rs", src), vec![]);
+    }
+
+    #[test]
+    fn code_before_test_module_still_fires() {
+        let src = "use std::collections::HashMap;\n\
+                   #[cfg(test)]\n\
+                   mod tests { fn g() {} }\n";
+        assert_eq!(lints("fleet/driver.rs", src), vec![("det-hash-iter", 1)]);
+    }
+
+    #[test]
+    fn allow_spans_wrapped_comment_lines() {
+        let src = "// mft-lint: allow(det-wall-clock) -- the reason for\n\
+                   // this wraps onto a second comment line\n\
+                   let t0 = Instant::now();\n";
+        let s = scan_source("exp/run.rs", src);
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        assert_eq!(s.allows_used, 1);
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_next_code_line() {
+        let src = "// mft-lint: allow(det-wall-clock) -- covers next line\n\
+                   let a = 1;\n\
+                   let t0 = Instant::now();\n";
+        assert_eq!(lints("exp/run.rs", src), vec![("det-wall-clock", 3)]);
+    }
+
+    #[test]
+    fn allow_for_wrong_lint_does_not_suppress() {
+        let src = "// mft-lint: allow(det-hash-iter) -- wrong name\n\
+                   let t0 = Instant::now();\n";
+        assert_eq!(lints("exp/run.rs", src), vec![("det-wall-clock", 2)]);
+    }
+
+    // -- failpoint coverage ------------------------------------------
+
+    #[test]
+    fn hit_literals_collected_with_test_flag() {
+        let src = "pub fn save() { faults::hit(\"ckpt.write\")?; }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { faults::hit(\"test.only\").unwrap(); }\n\
+                   }\n";
+        let s = scan_source("fleet/driver.rs", src);
+        assert_eq!(s.hits.len(), 2);
+        assert_eq!(s.hits[0].point, "ckpt.write");
+        assert!(!s.hits[0].in_test);
+        assert_eq!(s.hits[1].point, "test.only");
+        assert!(s.hits[1].in_test);
+    }
+
+    #[test]
+    fn hit_mention_in_comment_ignored() {
+        let src = "// arm it, then faults::hit(\"ckpt.write\") fires\n";
+        assert!(scan_source("fleet/driver.rs", src).hits.is_empty());
+    }
+
+    fn hit(point: &str, in_test: bool) -> HitSite {
+        HitSite { point: point.into(), file: "f.rs".into(), line: 1, in_test }
+    }
+
+    #[test]
+    fn coverage_unrouted_point_fires() {
+        let f = coverage_findings(&["a.b"], &[]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "cover-failpoint-routed");
+        // a test-only site does not count as routing
+        let f = coverage_findings(&["a.b"], &[hit("a.b", true)]);
+        assert_eq!(f.len(), 1);
+        // a production site does
+        assert!(coverage_findings(&["a.b"], &[hit("a.b", false)]).is_empty());
+    }
+
+    #[test]
+    fn coverage_unknown_literal_fires() {
+        let f = coverage_findings(&["a.b"], &[hit("zz.q", false),
+                                              hit("a.b", false)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "cover-failpoint-unknown");
+        assert_eq!(f[0].file, "f.rs");
+        // test.-scoped literals are exempt
+        assert!(coverage_findings(&["a.b"], &[hit("a.b", false),
+                                              hit("test.x", true)])
+            .is_empty());
+    }
+}

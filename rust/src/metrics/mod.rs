@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Default)]
@@ -316,7 +317,11 @@ impl Observer {
 
     pub fn write_summary(&self, summary: &Json) -> Result<()> {
         if self.steps.is_some() {
-            std::fs::write(self.dir.join("summary.json"), summary.to_string())?;
+            // tmp + fsync + rename: the summary is the run's contract
+            // with downstream parsers, so it must never read torn
+            write_atomic(&self.dir.join("summary.json"),
+                         summary.to_string().as_bytes())
+                .context("write summary.json")?;
         }
         Ok(())
     }

@@ -37,6 +37,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 
 /// One virtual-time span (or instant, `dur_s == 0`).  Field semantics
@@ -198,9 +199,13 @@ impl TraceSink {
         ])
     }
 
-    /// Write the Chrome trace-event JSON to `path`.
+    /// Write the Chrome trace-event JSON to `path`, atomically: the
+    /// trace is an end-of-run artifact with the same durability
+    /// contract as `summary.json` (CI uploads it, `trace summarize`
+    /// parses it), so it must never read torn after a crash.
     pub fn write(&self, path: &Path, n_clients: usize) -> Result<()> {
-        std::fs::write(path, self.to_chrome_json(n_clients).to_string())
+        write_atomic(path,
+                     self.to_chrome_json(n_clients).to_string().as_bytes())
             .with_context(|| format!("write trace {}", path.display()))
     }
 }

@@ -108,6 +108,8 @@ impl Engine {
             return Ok(exe.clone());
         }
         let path = info.path(&self.manifest.dir);
+        // mft-lint: allow(det-wall-clock) -- compile-time accounting
+        // for EngineStats; results never depend on it
         let t0 = Instant::now();
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
@@ -201,12 +203,15 @@ impl Engine {
         Self::validate_inputs(&info, inputs)?;
         let exe = self.executable(&info)?;
 
+        // mft-lint: allow(det-wall-clock) -- marshal/exec wall-clock
+        // accounting for EngineStats; results never depend on it
         let tm0 = Instant::now();
         let buffers: Vec<PjRtBuffer> =
             inputs.iter().map(|t| self.upload(t)).collect::<Result<_>>()?;
         let marshal_in = tm0.elapsed().as_secs_f64();
         let bytes_in: u64 = inputs.iter().map(|t| t.size_bytes() as u64).sum();
 
+        // mft-lint: allow(det-wall-clock) -- see above
         let te0 = Instant::now();
         let result = exe
             .execute_b::<PjRtBuffer>(&buffers)
@@ -218,6 +223,7 @@ impl Engine {
             .map_err(|e| anyhow::anyhow!("read output of {}: {e}", info.name))?;
         let exec_s = te0.elapsed().as_secs_f64();
 
+        // mft-lint: allow(det-wall-clock) -- see above
         let tm1 = Instant::now();
         // Artifacts are lowered with return_tuple=True: the root is a tuple.
         let parts = tuple_lit

@@ -65,6 +65,8 @@ pub fn write_safetensors(
 
     let tmp = path.with_extension("tmp");
     {
+        // mft-lint: allow(dur-raw-write) -- streams tensors through its own
+        // tmp + fsync + rename commit; write_atomic would buffer the payload
         let mut f = fs::File::create(&tmp)
             .with_context(|| format!("create {}", tmp.display()))?;
         f.write_all(&(hjson.len() as u64).to_le_bytes())?;

@@ -47,6 +47,8 @@ pub const OPS_FIXED: usize = 30;
 /// Eager/interpreted execution slowdown vs the fused graph (see module
 /// docs; override with MFT_EAGER_TAX).
 pub fn eager_tax() -> f64 {
+    // mft-lint: allow(det-env-config) -- emulation-only slowdown knob;
+    // the fleet's deterministic paths never run emulated mode
     std::env::var("MFT_EAGER_TAX")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -74,6 +76,8 @@ impl Trainer {
         // PyTorch, like a fused graph and unlike our layerwise trainer,
         // keeps every layer's intermediates alive until backward — then
         // charge the eager tax proportional to the compute performed.
+        // mft-lint: allow(det-wall-clock) -- emulation measures the real
+        // compute it just did so it can charge the eager tax on top
         let t0 = Instant::now();
         self.micro_step_fused(batch)?;
         let compute = t0.elapsed();

@@ -6,7 +6,7 @@
 //! count — bit-equivalent (up to float reassociation) to a large-batch
 //! step, at the memory cost of one micro-batch.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -15,7 +15,9 @@ use crate::tensor::HostTensor;
 #[derive(Debug)]
 pub struct GradBuffer {
     names: Vec<String>,
-    bufs: HashMap<String, Vec<f32>>,
+    // ordered map so `values_mut` walks (finalize_mean/zero) and any
+    // future whole-buffer iteration are key-ordered, not hash-ordered
+    bufs: BTreeMap<String, Vec<f32>>,
     /// summed loss over accumulated micro-batches
     pub loss_sum: f64,
     /// summed masked-token count
@@ -25,7 +27,7 @@ pub struct GradBuffer {
 
 impl GradBuffer {
     pub fn new(names_shapes: &[(String, usize)]) -> GradBuffer {
-        let mut bufs = HashMap::new();
+        let mut bufs = BTreeMap::new();
         let mut names = Vec::new();
         for (n, len) in names_shapes {
             names.push(n.clone());
@@ -95,7 +97,7 @@ impl GradBuffer {
     pub fn all_mut(&mut self) -> Vec<&mut [f32]> {
         let names = self.names.clone();
         let mut out: Vec<&mut [f32]> = Vec::with_capacity(names.len());
-        // safe split borrows: HashMap values are distinct allocations
+        // safe split borrows: map values are distinct allocations
         for n in &names {
             let p = self.bufs.get_mut(n).unwrap() as *mut Vec<f32>;
             out.push(unsafe { (*p).as_mut_slice() });

@@ -6,7 +6,7 @@
 //! shape: frozen base streamed from disk, trainable adapter in memory,
 //! adapter exported to safetensors for the inference app.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
@@ -21,9 +21,12 @@ use crate::util::rng::Pcg;
 pub struct LoraState {
     pub rank: usize,
     pub specs: Vec<ParamSpec>,
-    tensors: HashMap<String, HostTensor>,
-    m: HashMap<String, Vec<f32>>,
-    v: HashMap<String, Vec<f32>>,
+    // BTreeMap, not HashMap: every serialization walks `specs`, but
+    // keeping the backing maps ordered means no future iteration over
+    // them can silently depend on hash order (det-hash-iter contract)
+    tensors: BTreeMap<String, HostTensor>,
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
 }
 
 impl LoraState {
@@ -32,9 +35,9 @@ impl LoraState {
     pub fn init(info: &ModelInfo, rank: usize, seed: u64) -> Result<LoraState> {
         let specs = info.lora_specs(rank)?.to_vec();
         let mut rng = Pcg::new(seed);
-        let mut tensors = HashMap::new();
-        let mut m = HashMap::new();
-        let mut v = HashMap::new();
+        let mut tensors = BTreeMap::new();
+        let mut m = BTreeMap::new();
+        let mut v = BTreeMap::new();
         for s in &specs {
             let n = s.numel();
             let data: Vec<f32> = if s.init == "zeros" {
@@ -69,8 +72,16 @@ impl LoraState {
             .tensors
             .get_mut(name)
             .ok_or_else(|| anyhow!("no lora param {name:?}"))? as *mut HostTensor;
-        let m = self.m.get_mut(name).unwrap() as *mut Vec<f32>;
-        let v = self.v.get_mut(name).unwrap() as *mut Vec<f32>;
+        let m = self
+            .m
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no Adam m state for {name:?}"))?
+            as *mut Vec<f32>;
+        let v = self
+            .v
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no Adam v state for {name:?}"))?
+            as *mut Vec<f32>;
         unsafe { Ok(((*p).as_f32_mut()?, (*m).as_mut_slice(), (*v).as_mut_slice())) }
     }
 
@@ -275,6 +286,41 @@ mod tests {
     #[test]
     fn missing_rank_errors() {
         assert!(LoraState::init(&info(), 8, 0).is_err());
+    }
+
+    /// The adapter's on-disk bytes are a function of its *values*, never
+    /// of the order tensors were handed to the state: loading the same
+    /// adapter from a file with reversed tensor order (so every map
+    /// insertion happens in the opposite sequence) must export
+    /// byte-identical safetensors.
+    #[test]
+    fn export_bytes_invariant_to_construction_order() {
+        let dir = std::env::temp_dir()
+            .join(format!("mft-lora-order-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut st = LoraState::init(&info(), 4, 21).unwrap();
+        {
+            let (pm, _, _) = st.param_and_state("blocks.1.lora_q_b").unwrap();
+            pm[3] = -2.25;
+        }
+        let fwd = dir.join("fwd.safetensors");
+        st.export(&fwd, "t", 16.0).unwrap();
+
+        // same tensors, reversed file order -> reversed insertion order
+        let (mut tensors, _) = read_safetensors(&fwd).unwrap();
+        tensors.reverse();
+        let rev_src = dir.join("rev_src.safetensors");
+        write_safetensors(&rev_src, &tensors, &[]).unwrap();
+
+        let st2 = LoraState::load(&info(), 4, &rev_src).unwrap();
+        let rev = dir.join("rev.safetensors");
+        st2.export(&rev, "t", 16.0).unwrap();
+
+        assert_eq!(std::fs::read(&fwd).unwrap(),
+                   std::fs::read(&rev).unwrap(),
+                   "export bytes depend on construction order");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Deterministic synthetic gradient for the resume test.

@@ -1,0 +1,102 @@
+//! Durable file replacement — the repo's one way to write an artifact.
+//!
+//! Everything a run leaves behind that a reader may open later
+//! (checkpoints, `summary.json`, `trace.json`, report files) goes
+//! through [`write_atomic`]: raw `std::fs::write` can tear on a crash
+//! and is never fsynced, so a power loss can surface a half-written or
+//! empty file long after the "successful" run.  The `dur-raw-write`
+//! lint ([`crate::lint`]) enforces the discipline at the source level.
+//!
+//! Lives in `util` (not `fleet::driver`, where it grew up) so the
+//! metrics and observability layers can share it without depending on
+//! the fleet layer.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::faults;
+
+/// Atomically replace `path` with `bytes`: write `<stem>.tmp`, fsync,
+/// rename, fsync the parent directory.  A crash — even a power loss —
+/// leaves either the previous file or the complete new one, never a
+/// torn file.  Safetensors writes don't need this: `write_safetensors`
+/// already does tmp + fsync + rename internally.  Every step is a
+/// named failpoint so `mft chaos` can kill or fault-inject between any
+/// two of them.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension("tmp");
+    {
+        faults::hit("ckpt.tmp_create")
+            .with_context(|| format!("create {}", tmp.display()))?;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        faults::hit("ckpt.write")
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        faults::hit("ckpt.sync")
+            .with_context(|| format!("sync {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("sync {}", tmp.display()))?;
+    }
+    faults::hit("ckpt.rename").with_context(
+        || format!("rename {} -> {}", tmp.display(), path.display()))?;
+    std::fs::rename(&tmp, path).with_context(
+        || format!("rename {} -> {}", tmp.display(), path.display()))?;
+    // the rename is only durable once the parent directory's entry
+    // table is: without this fsync a power loss *after* the "commit"
+    // could roll the commit itself back to the old file
+    faults::hit("ckpt.dir_sync")
+        .with_context(|| format!("sync parent dir of {}", path.display()))?;
+    #[cfg(unix)]
+    if let Some(parent) = path.parent() {
+        let parent = if parent.as_os_str().is_empty() {
+            Path::new(".")
+        } else {
+            parent
+        };
+        std::fs::File::open(parent)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("sync dir {}", parent.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mft_fsio_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn replaces_existing_content_and_cleans_tmp() {
+        let d = tdir("replace");
+        let p = d.join("out.json");
+        write_atomic(&p, b"first").unwrap();
+        write_atomic(&p, b"second").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second");
+        assert!(!p.with_extension("tmp").exists());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn injected_error_leaves_previous_file_intact() {
+        let d = tdir("faulted");
+        let p = d.join("out.json");
+        write_atomic(&p, b"committed").unwrap();
+        crate::util::faults::clear();
+        crate::util::faults::arm("ckpt.rename=err").unwrap();
+        assert!(write_atomic(&p, b"torn attempt").is_err());
+        crate::util::faults::clear();
+        assert_eq!(std::fs::read(&p).unwrap(), b"committed");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

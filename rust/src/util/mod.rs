@@ -1,9 +1,11 @@
 //! Shared substrate: JSON, seeded RNG, virtual clock, deterministic
-//! thread pool, failpoint injection, CRC32, small helpers.
+//! thread pool, failpoint injection, atomic file replacement, CRC32,
+//! small helpers.
 
 pub mod clock;
 pub mod crc;
 pub mod faults;
+pub mod fsio;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -21,10 +21,10 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
 use crate::data::DataLoader;
-use crate::exp::datasets::{default_cache_dir, tokenizer_for};
+use crate::data::cache::{default_cache_dir, tokenizer_for};
 use crate::runtime::Engine;
 use crate::train::Trainer;
 use crate::util::json::Json;
@@ -191,7 +191,7 @@ fn score_all(trainer: &mut Trainer, tokenizer: &crate::tokenizer::Tokenizer,
 
 /// `mft agent` entrypoint.
 pub fn cmd_agent(args: &Args) -> Result<()> {
-    let dir = crate::cli::artifact_dir(args);
+    let dir = crate::util::args::artifact_dir(args);
     let engine = Rc::new(Engine::new(&dir).context(
         "agent needs the `agent` bundle: python -m compile.aot --bundle agent")?);
     let acfg = AgentConfig {

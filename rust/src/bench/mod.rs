@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::fleet::model::{fill_window_pairs, BigramRef, GradScratch};
 use crate::fleet::{run_fleet, Aggregator, ClientUpdate, CoordMedian,
                    FleetConfig};

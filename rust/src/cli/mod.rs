@@ -19,100 +19,15 @@
 //!   mft devices              list simulated device profiles
 //!   mft info                 manifest/artifact inventory
 
-use std::collections::VecDeque;
-use std::path::PathBuf;
-
 use anyhow::{bail, Context, Result};
 
 use crate::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
 
-/// Flags that take *two* space-separated operands (e.g. `--link-regime
-/// P_BAD FACTOR`); the parser joins them into one space-separated value
-/// so the generic `(name, value)` flag shape holds.  `--flag=a,b` works
-/// too — consumers split on comma or whitespace.
-const TWO_VALUE_FLAGS: &[&str] = &["link-regime"];
-
-pub struct Args {
-    positional: Vec<String>,
-    flags: Vec<(String, Option<String>)>,
-}
-
-impl Args {
-    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
-        let mut positional = Vec::new();
-        let mut flags = Vec::new();
-        let mut it: VecDeque<String> = argv.into_iter().collect();
-        while let Some(a) = it.pop_front() {
-            if let Some(name) = a.strip_prefix("--") {
-                if let Some((k, v)) = name.split_once('=') {
-                    flags.push((k.to_string(), Some(v.to_string())));
-                } else {
-                    // boolean or valued flag: peek
-                    let takes_value = it
-                        .front()
-                        .map(|n| !n.starts_with("--"))
-                        .unwrap_or(false);
-                    if takes_value {
-                        let mut v = it.pop_front().unwrap_or_default();
-                        if TWO_VALUE_FLAGS.contains(&name) {
-                            let second = it
-                                .front()
-                                .map(|n| !n.starts_with("--"))
-                                .unwrap_or(false);
-                            if second {
-                                v.push(' ');
-                                v.push_str(&it.pop_front()
-                                    .unwrap_or_default());
-                            }
-                        }
-                        flags.push((name.to_string(), Some(v)));
-                    } else {
-                        flags.push((name.to_string(), None));
-                    }
-                }
-            } else {
-                positional.push(a);
-            }
-        }
-        Args { positional, flags }
-    }
-
-    pub fn pos(&self, i: usize) -> Option<&str> {
-        self.positional.get(i).map(|s| s.as_str())
-    }
-
-    pub fn get(&self, name: &str) -> Option<&str> {
-        self.flags
-            .iter()
-            .rev()
-            .find(|(k, _)| k == name)
-            .and_then(|(_, v)| v.as_deref())
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.flags.iter().any(|(k, _)| k == name)
-    }
-
-    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T)
-                                           -> Result<T>
-    where
-        T::Err: std::fmt::Display,
-    {
-        match self.get(name) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
-        }
-    }
-}
-
-pub fn artifact_dir(args: &Args) -> PathBuf {
-    args.get("artifacts")
-        .map(PathBuf::from)
-        .or_else(|| std::env::var("MFT_ARTIFACTS").ok().map(PathBuf::from))
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
-}
+// The flag parser itself lives in `util::args` (layer 0) so that every
+// flag-consuming subsystem (fleet, obs, bench, viz, agent, exp, lint)
+// can use it without an upward edge into the application layer; the
+// `cli::Args` spelling stays the canonical one at the top.
+pub use crate::util::args::{artifact_dir, Args};
 
 /// Build a RunConfig from `mft train` flags.
 pub fn run_config(args: &Args) -> Result<RunConfig> {
@@ -230,18 +145,26 @@ fn print_help() {
            train     run one fine-tuning session\n\
                      --model M --task T --seq N --batch N --micro-batch N\n\
                      --steps N --mode full|lora --lora-rank R --lora-alpha A\n\
+                     --lr F --weight-decay F --grad-clip F\n\
                      --exec fused|fused-remat|layerwise|emulated\n\
                      --attn mea|naive --shard --device D --energy-k K\n\
-                     --energy-mu F --energy-rho F --virtual-clock\n\
-                     --out DIR --init-from CKPT --seed N\n\
+                     --energy-mu F --energy-rho F --battery-init F\n\
+                     --eval-every N --eval-batches N --virtual-clock\n\
+                     --artifacts DIR (run artifacts root; also\n\
+                     MFT_ARTIFACTS) --allow-oom (exit 0 on a simulated\n\
+                     OOM abort) --out DIR --init-from CKPT --seed N\n\
            fleet     federated fine-tuning over a simulated device fleet\n\
                      --clients N --rounds R --local-steps E --window N\n\
+                     --vocab N --lora-rank R --lora-alpha A --lr F\n\
                      --dirichlet-alpha F --agg fedavg|median|trimmed-mean\n\
+                     --trim-frac F (per-side trim of trimmed-mean)\n\
                      --select all|resource|random|bandwidth (bandwidth =\n\
                      Oort-style: skip clients whose est. compute+upload\n\
                      cannot make the deadline) --random-k K --mu F\n\
                      --rho F --straggler-factor F --battery-min F\n\
-                     --battery-max F --threads N (0 = MFT_THREADS/auto;\n\
+                     --battery-max F --flops-per-token F --idle-s S\n\
+                     --corpus-bytes N --eval-frac F --ram-required-mb N\n\
+                     --threads N (0 = MFT_THREADS/auto;\n\
                      output is identical for any value) --out DIR --seed N\n\
                      --transport (per-device link model: down/upload cost\n\
                      time+energy, deadline judged on compute+upload,\n\
@@ -279,7 +202,11 @@ fn print_help() {
            exp       regenerate a paper experiment:\n\
                      fig9 table4 table5 fig10 table6 table7 fig11 table8\n\
                      fig12 fleet\n\
+                     --results DIR (where tables/figures land)\n\
+                     --models A,B --tasks A,B (restrict a grid)\n\
            agent     campus health-agent case study (train/ask)\n\
+                     --users N --days N --qa-per-user N --gen-tokens N\n\
+                     --lora (LoRA instead of full fine-tuning)\n\
            bench     perf benchmarks: `bench fleet [--quick] [--out F]`\n\
                      writes BENCH_fleet.json (kernel + round-loop numbers\n\
                      + per-phase wall-clock profile)\n\
@@ -297,14 +224,24 @@ fn print_help() {
                      and prints per-phase virtual-time/bytes/energy\n\
                      rollups plus the K slowest client tracks\n\
            lint      repo-contract static analysis over src/:\n\
-                     determinism (hash iteration, wall-clock, env\n\
-                     reads, float sums), durability (raw writes vs\n\
-                     write_atomic) and failpoint-coverage lints, with\n\
-                     inline `mft-lint: allow(name) -- reason` escapes\n\
+                     tier 1 line lints (hash iteration, wall-clock, env\n\
+                     reads, float sums, raw writes vs write_atomic,\n\
+                     interior mutability) + failpoint coverage + tier 2\n\
+                     cross-file analysis (module-graph layering against\n\
+                     the lib.rs layer map, FleetConfig vs\n\
+                     config_fingerprint, flag vs help text, RoundRecord\n\
+                     vs rounds.jsonl schema docs), with inline\n\
+                     `mft-lint: allow(name) -- reason` escapes\n\
                      --deny (exit nonzero on any finding — the CI leg)\n\
                      --json FILE (write the ranked report)\n\
                      --root DIR (source tree; default rust/src)\n\
-           viz       terminal dashboard over a run dir\n\
+                     --only A,B / --skip A,B (restrict by lint name)\n\
+                     --baseline FILE (report only findings absent from\n\
+                     a prior lint_report.json — gate on *new* drift)\n\
+                     --graph FILE (write the module graph as Graphviz\n\
+                     DOT) --graph-json FILE (write lint_graph.json)\n\
+           viz       terminal dashboard over a run dir (`viz DIR\n\
+                     [--follow]` tails the run as it progresses)\n\
            devices   list simulated device profiles\n\
            info      artifact inventory"
     );
@@ -314,25 +251,10 @@ fn print_help() {
 mod tests {
     use super::*;
 
+    // parser mechanics (flag forms, two-value flags, precedence) are
+    // tested where the parser lives: util/args.rs
     fn args(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(String::from))
-    }
-
-    #[test]
-    fn parse_flags_and_positional() {
-        let a = args("train --model gpt2-nano --steps 5 --shard --lr 0.001");
-        assert_eq!(a.pos(0), Some("train"));
-        assert_eq!(a.get("model"), Some("gpt2-nano"));
-        assert!(a.has("shard"));
-        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 5);
-        assert_eq!(a.get_parse("lr", 0.0f32).unwrap(), 0.001);
-    }
-
-    #[test]
-    fn eq_form_flags() {
-        let a = args("exp --out=/tmp/x --steps=7");
-        assert_eq!(a.get("out"), Some("/tmp/x"));
-        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 7);
     }
 
     #[test]
@@ -359,29 +281,5 @@ mod tests {
         assert!(run_config(&args("train --steps banana")).is_err());
         // shard without layerwise
         assert!(run_config(&args("train --shard")).is_err());
-    }
-
-    #[test]
-    fn last_flag_wins() {
-        let a = args("train --steps 3 --steps 9");
-        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 9);
-    }
-
-    #[test]
-    fn two_value_flags_collect_both_operands() {
-        // --link-regime P_BAD FACTOR: the second operand must not leak
-        // into the positionals
-        let a = args("fleet --link-regime 0.3 0.2 --rounds 4");
-        assert_eq!(a.get("link-regime"), Some("0.3 0.2"));
-        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 4);
-        assert_eq!(a.pos(0), Some("fleet"));
-        assert_eq!(a.pos(1), None, "operand leaked into positionals");
-        // = form with a comma still works
-        let a = args("fleet --link-regime=0.3,0.2");
-        assert_eq!(a.get("link-regime"), Some("0.3,0.2"));
-        // a lone operand followed by another flag stays a single value
-        let a = args("fleet --link-regime 0.3 --rounds 4");
-        assert_eq!(a.get("link-regime"), Some("0.3"));
-        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 4);
     }
 }

@@ -1,0 +1,61 @@
+//! The shared synthetic-corpus constants and the tokenizer cache.
+//!
+//! These used to live in `exp::datasets`, but `agent` needs them too and
+//! `exp` dispatches fig12 *to* `agent` — keeping them in `exp` made the
+//! two application-layer modules a dependency cycle.  The corpus
+//! parameters and the load-or-train tokenizer cache are data-layer
+//! concerns anyway; `exp::datasets` re-exports them so experiment code
+//! keeps its spelling.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::corpus::synthetic_corpus;
+use crate::tokenizer::Tokenizer;
+
+/// Default corpus parameters (the "WikiText-2-sim" snapshot).
+pub const CORPUS_SEED: u64 = 20250711;
+pub const CORPUS_BYTES: usize = 1_500_000;
+/// Held-out tail fraction used as the LM test split.
+pub const CORPUS_TEST_FRAC: f64 = 0.1;
+
+/// Load-or-train the cached tokenizer for a vocab size.  BPE training
+/// is deterministic, so the cache is content-stable.
+pub fn tokenizer_for(cache_dir: &Path, vocab: usize) -> Result<Tokenizer> {
+    std::fs::create_dir_all(cache_dir)?;
+    let path = cache_dir.join(format!("bpe-v{vocab}-s{CORPUS_SEED}.json"));
+    if path.exists() {
+        if let Ok(t) = Tokenizer::load(&path) {
+            return Ok(t);
+        }
+    }
+    let corpus = synthetic_corpus(CORPUS_SEED, CORPUS_BYTES);
+    let tok = Tokenizer::train(&corpus, vocab)
+        .context("tokenizer training failed")?;
+    tok.save(&path)?;
+    Ok(tok)
+}
+
+pub fn default_cache_dir() -> PathBuf {
+    // mft-lint: allow(det-env-config) -- cache *location* only; the
+    // cached tokenizer bytes are the same wherever they live
+    std::env::var("MFT_CACHE_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(".cache"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_cached() {
+        let dir = std::env::temp_dir().join("mft-cache-test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let t1 = tokenizer_for(&dir, 400).unwrap();
+        assert!(dir.join(format!("bpe-v400-s{CORPUS_SEED}.json")).exists());
+        let t2 = tokenizer_for(&dir, 400).unwrap();
+        assert_eq!(t1.encode("the test"), t2.encode("the test"));
+    }
+}

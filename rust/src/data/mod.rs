@@ -10,11 +10,13 @@
 //! fine-tuning measurably improves loss/PPL/accuracy under the paper's
 //! exact evaluation protocol (likelihood-based letter scoring).
 
+pub mod cache;
 pub mod corpus;
 pub mod loader;
 pub mod partition;
 pub mod tasks;
 
+pub use cache::{default_cache_dir, tokenizer_for};
 pub use corpus::synthetic_corpus;
 pub use loader::{Batch, DataLoader, Split};
 pub use partition::{dirichlet_shards, split_articles};

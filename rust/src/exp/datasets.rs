@@ -5,9 +5,7 @@
 //! content-stable).  Task datasets are generated on the fly — they are
 //! cheap and seeded.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::manifest::ModelInfo;
 use crate::data::corpus::synthetic_corpus;
@@ -15,41 +13,17 @@ use crate::data::tasks::{self, TaskKind};
 use crate::data::DataLoader;
 use crate::tokenizer::Tokenizer;
 
-/// Default corpus parameters (the "WikiText-2-sim" snapshot).
-pub const CORPUS_SEED: u64 = 20250711;
-pub const CORPUS_BYTES: usize = 1_500_000;
-/// Held-out tail fraction used as the LM test split.
-pub const CORPUS_TEST_FRAC: f64 = 0.1;
+// The corpus constants and the tokenizer cache moved to `data::cache`
+// (the `agent <-> exp` dependency cycle went through them); re-exported
+// so experiment code keeps its spelling.
+pub use crate::data::cache::{default_cache_dir, tokenizer_for,
+                             CORPUS_BYTES, CORPUS_SEED, CORPUS_TEST_FRAC};
 
 pub struct TaskAssets {
     pub tokenizer: Tokenizer,
     pub train: DataLoader,
     pub test: DataLoader,
     pub task: String,
-}
-
-/// Load-or-train the cached tokenizer for a vocab size.
-pub fn tokenizer_for(cache_dir: &Path, vocab: usize) -> Result<Tokenizer> {
-    std::fs::create_dir_all(cache_dir)?;
-    let path = cache_dir.join(format!("bpe-v{vocab}-s{CORPUS_SEED}.json"));
-    if path.exists() {
-        if let Ok(t) = Tokenizer::load(&path) {
-            return Ok(t);
-        }
-    }
-    let corpus = synthetic_corpus(CORPUS_SEED, CORPUS_BYTES);
-    let tok = Tokenizer::train(&corpus, vocab)
-        .context("tokenizer training failed")?;
-    tok.save(&path)?;
-    Ok(tok)
-}
-
-pub fn default_cache_dir() -> PathBuf {
-    // mft-lint: allow(det-env-config) -- cache *location* only; the
-    // cached tokenizer bytes are the same wherever they live
-    std::env::var("MFT_CACHE_DIR")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from(".cache"))
 }
 
 /// Assemble loaders for a task name ("corpus" or an MC task).
@@ -108,16 +82,6 @@ mod tests {
         let a = assemble(&info(512), "mmlu", 64, 1).unwrap();
         assert_eq!(a.train.len(), 800);
         assert_eq!(a.test.len(), 160);
-    }
-
-    #[test]
-    fn tokenizer_cached() {
-        let dir = std::env::temp_dir().join("mft-cache-test2");
-        let _ = std::fs::remove_dir_all(&dir);
-        let t1 = tokenizer_for(&dir, 400).unwrap();
-        assert!(dir.join(format!("bpe-v400-s{CORPUS_SEED}.json")).exists());
-        let t2 = tokenizer_for(&dir, 400).unwrap();
-        assert_eq!(t1.encode("the test"), t2.encode("the test"));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::process::Command;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::config::{AttnImpl, ExecMode, RunConfig, TrainMode};
 use crate::exp::run_training;
 use crate::util::json::Json;
@@ -68,7 +68,7 @@ fn spawn_train(args: &Args, flags: &[(&str, String)], bools: &[&str])
     let mut cmd = Command::new(exe);
     cmd.arg("train").arg("--allow-oom");
     cmd.arg("--artifacts")
-        .arg(crate::cli::artifact_dir(args).display().to_string());
+        .arg(crate::util::args::artifact_dir(args).display().to_string());
     for (k, v) in flags {
         cmd.arg(format!("--{k}")).arg(v);
     }
@@ -130,7 +130,7 @@ fn base_flag(args: &Args, model: &str) -> Vec<(&'static str, String)> {
 
 fn bases(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 200usize)?;
-    let dir = crate::cli::artifact_dir(args);
+    let dir = crate::util::args::artifact_dir(args);
     let models: Vec<String> = match args.get("models") {
         Some(m) => m.split(',').map(String::from).collect(),
         None => BASE_MODELS.iter().map(|s| s.to_string()).collect(),
@@ -175,7 +175,7 @@ fn bases(args: &Args) -> Result<()> {
 
 fn fig9(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 30usize)?;
-    let dir = crate::cli::artifact_dir(args);
+    let dir = crate::util::args::artifact_dir(args);
     let base = RunConfig {
         model: args.get("model").unwrap_or("gpt2-124m-sim").to_string(),
         task: "corpus".into(),
@@ -558,7 +558,7 @@ fn table6(args: &Args) -> Result<()> {
 
 fn table7(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 40usize)?;
-    let dir = crate::cli::artifact_dir(args);
+    let dir = crate::util::args::artifact_dir(args);
     let model = args.get("model").unwrap_or("gemma3-270m-sim").to_string();
 
     println!("Table 7 — gradient accumulation ablation on {model}@corpus \
@@ -623,7 +623,7 @@ fn table7(args: &Args) -> Result<()> {
 
 fn fig11(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 100usize)?;
-    let dir = crate::cli::artifact_dir(args);
+    let dir = crate::util::args::artifact_dir(args);
     let out = results_dir(args)?.join("fig11_run");
     let cfg = RunConfig {
         model: args.get("model").unwrap_or("qwen25-0.5b-sim").to_string(),

@@ -33,7 +33,7 @@ use std::process::Command;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::util::faults;
 use crate::util::fsio::write_atomic;
 use crate::util::json::Json;

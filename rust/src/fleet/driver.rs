@@ -83,7 +83,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::data::corpus::synthetic_corpus;
 use crate::data::partition::{dirichlet_shards, split_articles};
 use crate::fleet::aggregate::{make_aggregator, ClientFailure, ClientUpdate};
@@ -159,29 +159,79 @@ pub struct FleetResult {
     pub trace: Option<TraceSink>,
 }
 
+/// `FleetConfig` fields deliberately *absent* from
+/// [`config_fingerprint`] — the knobs a resumed run may legitimately
+/// change.  Every other field participates in the fingerprint, and
+/// `mft lint` (contract-config-fingerprint) cross-checks the struct
+/// against this list and the fingerprint body both ways, so a new
+/// field cannot ship without an explicit resume-compatibility decision.
+pub const NON_FINGERPRINTED: &[&str] = &[
+    // rounds may grow — that is the point of resuming
+    "rounds",
+    // thread count never changes results (the pool contract)
+    "threads",
+    // where/how, not what
+    "out_dir",
+    "resume",
+    // cadence and retention depth are recovery margin, not trajectory:
+    // a run may be resumed under a different --ckpt-every/--ckpt-keep
+    "ckpt_every",
+    "ckpt_keep",
+    // observability knobs shape what gets *recorded*, never the
+    // training trajectory
+    "trace",
+    "trace_ring",
+    "profile",
+];
+
 /// Everything about a config that must match for a checkpoint to be
-/// resumable.  Derived mechanically from the whole config (Debug of a
-/// clone with the legitimately-variable fields normalized away) so a
-/// future `FleetConfig` field can never be forgotten here: rounds may
-/// grow (that is the point of resuming), thread count never changes
-/// results, out_dir/resume are where/how, not what, and the
-/// observability knobs (ckpt_every cadence, trace output, trace ring
-/// size, wall-clock profiling) shape what gets *recorded*, never the
-/// training trajectory.
+/// resumable.  Each trajectory-relevant field is formatted in
+/// explicitly, by name (v6; v5 was Debug-of-a-normalized-clone, which
+/// kept the *set* of fingerprinted fields invisible to analysis); the
+/// legitimately-variable fields are listed in [`NON_FINGERPRINTED`]
+/// instead, and the lint keeps the two exhaustive.
 fn config_fingerprint(cfg: &FleetConfig) -> String {
-    let mut c = cfg.clone();
-    c.rounds = 0;
-    c.threads = 0;
-    c.out_dir = None;
-    c.resume = false;
-    c.ckpt_every = 0;
-    // retention depth is recovery margin, not trajectory: a run may be
-    // resumed under a different --ckpt-keep
-    c.ckpt_keep = 0;
-    c.trace = None;
-    c.trace_ring = 0;
-    c.profile = false;
-    format!("v5|{c:?}")
+    let mut s = String::with_capacity(512);
+    s.push_str("v6");
+    {
+        let mut field = |name: &str, value: String| {
+            s.push('|');
+            s.push_str(name);
+            s.push('=');
+            s.push_str(&value);
+        };
+        field("n_clients", format!("{:?}", cfg.n_clients));
+        field("local_steps", format!("{:?}", cfg.local_steps));
+        field("micro_batch", format!("{:?}", cfg.micro_batch));
+        field("window", format!("{:?}", cfg.window));
+        field("vocab", format!("{:?}", cfg.vocab));
+        field("rank", format!("{:?}", cfg.rank));
+        field("lora_alpha", format!("{:?}", cfg.lora_alpha));
+        field("lr", format!("{:?}", cfg.lr));
+        field("dirichlet_alpha", format!("{:?}", cfg.dirichlet_alpha));
+        field("aggregator", format!("{:?}", cfg.aggregator));
+        field("trim_frac", format!("{:?}", cfg.trim_frac));
+        field("policy", format!("{:?}", cfg.policy));
+        field("mu", format!("{:?}", cfg.mu));
+        field("rho", format!("{:?}", cfg.rho));
+        field("straggler_factor", format!("{:?}", cfg.straggler_factor));
+        field("flops_per_token", format!("{:?}", cfg.flops_per_token));
+        field("round_idle_s", format!("{:?}", cfg.round_idle_s));
+        field("corpus_bytes", format!("{:?}", cfg.corpus_bytes));
+        field("eval_frac", format!("{:?}", cfg.eval_frac));
+        field("ram_required_bytes", format!("{:?}", cfg.ram_required_bytes));
+        field("battery_min", format!("{:?}", cfg.battery_min));
+        field("battery_max", format!("{:?}", cfg.battery_max));
+        field("transport", format!("{:?}", cfg.transport));
+        field("upload_fail_prob", format!("{:?}", cfg.upload_fail_prob));
+        field("link_var", format!("{:?}", cfg.link_var));
+        field("link_regime", format!("{:?}", cfg.link_regime));
+        field("drop_stale_after", format!("{:?}", cfg.drop_stale_after));
+        field("stale_weight", format!("{:?}", cfg.stale_weight));
+        field("inject_empty_shard", format!("{:?}", cfg.inject_empty_shard));
+        field("seed", format!("{:?}", cfg.seed));
+    }
+    s
 }
 
 fn bits_json(x: u64) -> Json {
@@ -1642,6 +1692,31 @@ mod tests {
             .is_err());
         assert!(parse_link_regime(&args("fleet --link-regime a b"))
             .is_err());
+    }
+
+    #[test]
+    fn fingerprint_ignores_exactly_the_non_fingerprinted_knobs() {
+        let base = FleetConfig::default();
+        let fp = config_fingerprint(&base);
+        // every allowlisted knob may change without breaking resume
+        let mut c = base.clone();
+        c.rounds += 7;
+        c.threads = 3;
+        c.out_dir = Some("elsewhere".into());
+        c.resume = true;
+        c.ckpt_every = 5;
+        c.ckpt_keep = 9;
+        c.trace = Some("t.json".into());
+        c.trace_ring = 16;
+        c.profile = true;
+        assert_eq!(config_fingerprint(&c), fp);
+        // trajectory fields break it
+        let mut c = base.clone();
+        c.seed += 1;
+        assert_ne!(config_fingerprint(&c), fp);
+        let mut c = base.clone();
+        c.stale_weight += 0.125;
+        assert_ne!(config_fingerprint(&c), fp);
     }
 
     #[test]

@@ -74,7 +74,28 @@
 //!   failpoint coverage (`faults::ALL_POINTS` and the literal
 //!   `faults::hit` sites must match both directions); per-module
 //!   allowlists + inline `mft-lint: allow(name) -- reason` escapes,
-//!   ranked `lint_report.json`, `--deny` for CI
+//!   ranked `lint_report.json`, `--deny` for CI — and, at tier 2, a
+//!   cross-file indexer whose module graph is checked against the
+//!   declared layer DAG below plus cross-file contracts (config
+//!   fingerprint coverage, CLI help text, rounds.jsonl schema docs)
+//!
+//! ## Declared layer DAG (mft-lint layers)
+//!
+//! The block below is machine-read by `mft lint` (tier 2, lint
+//! `arch-layering`): a module may only reference `crate::<m>` for
+//! modules in the same or a lower layer, and no dependency cycle may
+//! form.  It is the *single* declared source of the layering — edit it
+//! here and the lint re-derives the rules; keep it in sync with the
+//! `pub mod` list (the lint flags drift in both directions).
+//!
+//!   0: util
+//!   1: tensor tokenizer sim energy
+//!   2: config
+//!   3: runtime model data train memopt eval
+//!   4: metrics obs
+//!   5: fleet
+//!   6: exp bench viz agent lint
+//!   7: cli
 
 pub mod agent;
 pub mod bench;

@@ -39,6 +39,10 @@ pub struct NeedleLint {
     pub name: &'static str,
     pub class: &'static str,
     pub severity: u8,
+    /// 1 = line-level needle lint; 2 = the cross-file tier (only
+    /// det-interior-mut rides the needle machinery at tier 2 — the
+    /// graph/contract lints are computed in `graph.rs`/`contracts.rs`)
+    pub tier: u8,
     pub needles: &'static [&'static str],
     pub scope: Scope,
     pub hint: &'static str,
@@ -53,6 +57,7 @@ pub const CATALOG: &[NeedleLint] = &[
         name: "det-hash-iter",
         class: "determinism",
         severity: 0,
+        tier: 1,
         needles: &["HashMap", "HashSet"],
         // the modules whose outputs must be bitwise reproducible per seed
         scope: Scope::OnlyIn(&["fleet/", "train/", "data/", "util/rng.rs"]),
@@ -63,6 +68,7 @@ pub const CATALOG: &[NeedleLint] = &[
         name: "det-wall-clock",
         class: "determinism",
         severity: 0,
+        tier: 1,
         needles: &["Instant::now", "SystemTime"],
         // timing belongs to observability; everything else runs on the
         // virtual clock
@@ -74,6 +80,7 @@ pub const CATALOG: &[NeedleLint] = &[
         name: "det-env-config",
         class: "determinism",
         severity: 0,
+        tier: 1,
         needles: &["env::var"],
         // env reads are run inputs: they must flow through flag/config
         // parsing (cli/, config/) or the two sanctioned util knobs
@@ -86,6 +93,7 @@ pub const CATALOG: &[NeedleLint] = &[
         name: "det-float-sum",
         class: "determinism",
         severity: 1,
+        tier: 1,
         needles: &[".sum()", ".sum::<"],
         // the aggregator is where float accumulation order decides
         // whether two coordinators agree bitwise
@@ -98,6 +106,7 @@ pub const CATALOG: &[NeedleLint] = &[
         name: "dur-raw-write",
         class: "durability",
         severity: 0,
+        tier: 1,
         needles: &["fs::write(", "File::create("],
         // every artifact a crash must not tear goes through write_atomic
         scope: Scope::OnlyIn(&["fleet/", "metrics/", "obs/", "tensor/"]),
@@ -108,6 +117,7 @@ pub const CATALOG: &[NeedleLint] = &[
         name: "robust-unwrap",
         class: "robustness",
         severity: 1,
+        tier: 1,
         needles: &[".unwrap()", ".expect("],
         // the fleet driver must degrade (record a fault, keep the
         // round loop alive), never panic mid-checkpoint
@@ -115,7 +125,51 @@ pub const CATALOG: &[NeedleLint] = &[
         hint: "fleet code returns Result; use anyhow::Context or \
                ok_or_else instead of panicking",
     },
+    NeedleLint {
+        name: "det-interior-mut",
+        class: "determinism",
+        severity: 0,
+        tier: 2,
+        needles: &["RefCell", "Cell<", "Mutex", "RwLock", "Atomic",
+                   "static mut"],
+        // interior mutability is how sneaky cross-call state enters a
+        // deterministic path; it is confined to the sanctioned homes —
+        // the pool (worker bookkeeping), the virtual clock, the
+        // failpoint registry, the runtime executable cache and the
+        // host-side profiler
+        scope: Scope::Outside(&["util/pool.rs", "util/clock.rs",
+                                "util/faults.rs", "runtime/", "obs/"]),
+        hint: "shared mutable state undermines the replayable-run \
+               contract; thread explicit state through the call graph \
+               or move it to a sanctioned util/runtime/obs home",
+    },
 ];
+
+// -- tier-2 lint names (computed in graph.rs / contracts.rs, not by --
+// -- needle search; listed here so allow(...), --only/--skip and    --
+// -- docs share one namespace)                                      --
+
+/// Upward or cyclic module-graph edges vs the `lib.rs` layer map.
+pub const ARCH_LAYERING: &str = "arch-layering";
+/// `FleetConfig` fields vs `config_fingerprint` + `NON_FINGERPRINTED`.
+pub const CONTRACT_CONFIG_FINGERPRINT: &str = "contract-config-fingerprint";
+/// Parsed `--flag` literals vs the `print_help` text, both directions.
+pub const CONTRACT_CLI_HELP: &str = "contract-cli-help";
+/// `RoundRecord` fields vs the rounds.jsonl writer/reader and the
+/// documented schema in `benches/README.md`.
+pub const CONTRACT_SCHEMA: &str = "contract-schema";
+
+/// Every lint name `mft lint` can emit (needle, coverage and tier-2
+/// computed lints) — the namespace `--only`/`--skip` validate against.
+pub fn all_lint_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> =
+        CATALOG.iter().map(|l| l.name).collect();
+    names.extend([COVER_ROUTED, COVER_UNKNOWN, ARCH_LAYERING,
+                  CONTRACT_CONFIG_FINGERPRINT, CONTRACT_CLI_HELP,
+                  CONTRACT_SCHEMA]);
+    names.sort_unstable();
+    names
+}
 
 #[cfg(test)]
 mod tests {
@@ -123,13 +177,19 @@ mod tests {
 
     #[test]
     fn names_unique() {
-        let mut names: Vec<&str> = CATALOG.iter().map(|l| l.name).collect();
-        names.push(COVER_ROUTED);
-        names.push(COVER_UNKNOWN);
+        let mut names = all_lint_names();
         let n = names.len();
-        names.sort();
-        names.dedup();
+        names.dedup(); // all_lint_names returns sorted
         assert_eq!(names.len(), n, "duplicate lint name in catalog");
+    }
+
+    #[test]
+    fn tier2_names_registered() {
+        let names = all_lint_names();
+        for t2 in [ARCH_LAYERING, CONTRACT_CONFIG_FINGERPRINT,
+                   CONTRACT_CLI_HELP, CONTRACT_SCHEMA, "det-interior-mut"] {
+            assert!(names.contains(&t2), "{t2} missing from namespace");
+        }
     }
 
     #[test]

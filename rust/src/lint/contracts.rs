@@ -1,0 +1,566 @@
+//! Tier-2 cross-file contracts: facts that must agree across files.
+//!
+//! Three drift-prone pairs the tree has already been burned by (or
+//! would be):
+//!
+//! * **contract-config-fingerprint** — every [`FleetConfig`] field
+//!   must either feed `config_fingerprint` (a `field("name", …)` call
+//!   in its span) or sit on the explicit `NON_FINGERPRINTED`
+//!   allowlist; stale allowlist entries are flagged the other way.  A
+//!   knob that silently skips the fingerprint makes `--resume` accept
+//!   checkpoints from a *different* run configuration.
+//! * **contract-cli-help** — every `--flag` literal parsed under
+//!   `cli/`, `fleet/`, `exp/` must appear in `print_help`, and every
+//!   `--flag` token in the help text must be parsed *somewhere*.
+//!   Undocumented flags rot; documented-but-dead flags lie.
+//! * **contract-schema** — every [`RoundRecord`] field must appear at
+//!   least twice (writer + reader) in the `impl RoundRecord` JSON
+//!   code, and must match the machine-checked column table between
+//!   `<!-- rounds-schema:begin/end -->` markers in
+//!   `benches/README.md`, both directions.
+//!
+//! Each check skips silently when its subject is absent (fixture
+//! trees without a `FleetConfig` should not drown in noise); the
+//! clean-tree test instead asserts the *stats* — fields checked,
+//! help flags seen, schema columns — to prove the checks engaged.
+//!
+//! [`FleetConfig`]: crate::fleet::FleetConfig
+//! [`RoundRecord`]: crate::metrics::RoundRecord
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::catalog::{CONTRACT_CLI_HELP, CONTRACT_CONFIG_FINGERPRINT,
+                     CONTRACT_SCHEMA};
+use super::index::{call_literals, string_literals, RepoIndex};
+use super::Finding;
+
+fn finding(lint: &'static str, file: &str, line: usize, snippet: String,
+           hint: &'static str) -> Finding {
+    Finding {
+        lint,
+        class: "contract",
+        severity: 0,
+        tier: 2,
+        file: file.to_string(),
+        line,
+        snippet,
+        hint,
+    }
+}
+
+/// Push unless an inline allow covers the anchor line.
+fn emit(index: &RepoIndex, findings: &mut Vec<Finding>, allows: &mut usize,
+        f: Finding) {
+    if index.allowed(&f.file, f.line, f.lint) {
+        *allows += 1;
+    } else {
+        findings.push(f);
+    }
+}
+
+/// `FleetConfig` fields vs `config_fingerprint` + `NON_FINGERPRINTED`.
+/// Returns (findings, allows_used, fields_checked).
+pub fn check_config_fingerprint(index: &RepoIndex)
+                                -> (Vec<Finding>, usize, usize) {
+    let Some((sfile, sdef)) = index.struct_def("FleetConfig") else {
+        return (Vec::new(), 0, 0);
+    };
+
+    // every field("name", …) call inside any config_fingerprint fn
+    let mut fingerprinted: BTreeSet<String> = BTreeSet::new();
+    for f in &index.files {
+        let Some(span) = f.fn_span("config_fingerprint") else { continue };
+        for li in &f.lines {
+            if li.lineno < span.start || li.lineno > span.end
+                || li.skip || !li.has_code
+            {
+                continue;
+            }
+            fingerprinted.extend(call_literals(li, "field"));
+        }
+    }
+
+    // the NON_FINGERPRINTED allowlist: literals from the const decl
+    // line through the closing `];`
+    let mut allowlist: Vec<(String, String, usize)> = Vec::new();
+    'files: for f in &index.files {
+        let mut in_const = false;
+        // net `[`/`]` depth — the decl line's `&[&str] = &[` opens two
+        // and closes one, so depth 0 again means the array closed
+        let mut depth = 0i64;
+        for li in &f.lines {
+            if li.skip || !li.has_code {
+                continue;
+            }
+            if !in_const {
+                if li.blanked.contains("NON_FINGERPRINTED")
+                    && li.blanked.contains("const")
+                {
+                    in_const = true;
+                } else {
+                    continue;
+                }
+            }
+            depth += li.blanked.chars().map(|c| match c {
+                '[' => 1,
+                ']' => -1,
+                _ => 0,
+            }).sum::<i64>();
+            for lit in string_literals(&li.raw) {
+                allowlist.push((lit, f.rel.clone(), li.lineno));
+            }
+            if depth <= 0 {
+                break 'files;
+            }
+        }
+    }
+    let allowed_names: BTreeSet<&str> =
+        allowlist.iter().map(|(n, _, _)| n.as_str()).collect();
+
+    let mut findings = Vec::new();
+    let mut allows = 0usize;
+    for (name, line) in &sdef.fields {
+        if fingerprinted.contains(name)
+            || allowed_names.contains(name.as_str())
+        {
+            continue;
+        }
+        emit(index, &mut findings, &mut allows, finding(
+            CONTRACT_CONFIG_FINGERPRINT, &sfile.rel, *line,
+            format!("FleetConfig field `{name}` is neither fingerprinted \
+                     in config_fingerprint nor on NON_FINGERPRINTED"),
+            "add a field(\"…\") line to config_fingerprint, or add the \
+             field to NON_FINGERPRINTED with a reason"));
+    }
+    let field_names: BTreeSet<&str> =
+        sdef.fields.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, file, line) in &allowlist {
+        if !field_names.contains(name.as_str()) {
+            emit(index, &mut findings, &mut allows, finding(
+                CONTRACT_CONFIG_FINGERPRINT, file, *line,
+                format!("NON_FINGERPRINTED entry `{name}` is not a \
+                         FleetConfig field"),
+                "remove the stale allowlist entry"));
+        }
+    }
+    (findings, allows, sdef.fields.len())
+}
+
+/// Every `--[a-z][a-z0-9-]*` token on a line, with dedup left to the
+/// caller.  `--` alone (positional separator) is not a flag.
+fn help_tokens(raw: &str) -> Vec<String> {
+    let b: Vec<char> = raw.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < b.len() {
+        let boundary = i == 0
+            || !(b[i - 1] == '-' || b[i - 1].is_ascii_alphanumeric());
+        if boundary && b[i] == '-' && b[i + 1] == '-'
+            && b[i + 2].is_ascii_lowercase()
+        {
+            let mut j = i + 2;
+            let mut tok = String::new();
+            while j < b.len()
+                && (b[j].is_ascii_lowercase()
+                    || b[j].is_ascii_digit()
+                    || b[j] == '-')
+            {
+                tok.push(b[j]);
+                j += 1;
+            }
+            out.push(tok.trim_end_matches('-').to_string());
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Parsed `--flag` sites vs the `print_help` text, both directions.
+/// Returns (findings, allows_used, help_flags_seen).
+pub fn check_cli_help(index: &RepoIndex) -> (Vec<Finding>, usize, usize) {
+    let Some((hfile, hspan)) = index.files.iter().find_map(|f| {
+        if !f.rel.starts_with("cli/") {
+            return None;
+        }
+        f.fn_span("print_help").map(|s| (f, s))
+    }) else {
+        return (Vec::new(), 0, 0);
+    };
+
+    // token -> first help line mentioning it
+    let mut help: BTreeMap<String, usize> = BTreeMap::new();
+    for li in &hfile.lines {
+        if li.lineno < hspan.start || li.lineno > hspan.end {
+            continue;
+        }
+        for tok in help_tokens(&li.raw) {
+            help.entry(tok).or_insert(li.lineno);
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut allows = 0usize;
+
+    // direction 1: parse sites in user-facing subsystems must be in
+    // the help text
+    const DOCUMENTED_DIRS: [&str; 3] = ["cli/", "fleet/", "exp/"];
+    for f in &index.files {
+        if !DOCUMENTED_DIRS.iter().any(|d| f.rel.starts_with(d)) {
+            continue;
+        }
+        for site in &f.flags {
+            if !help.contains_key(&site.flag) {
+                emit(index, &mut findings, &mut allows, finding(
+                    CONTRACT_CLI_HELP, &f.rel, site.line,
+                    format!("flag `--{}` is parsed here but absent from \
+                             the cli help text", site.flag),
+                    "document the flag in cli::print_help (or allow \
+                     with a reason if deliberately hidden)"));
+            }
+        }
+    }
+
+    // direction 2: every documented flag must be parsed somewhere
+    let parsed: BTreeSet<&str> = index.files.iter()
+        .flat_map(|f| f.flags.iter().map(|s| s.flag.as_str()))
+        .collect();
+    for (tok, line) in &help {
+        if !parsed.contains(tok.as_str()) {
+            emit(index, &mut findings, &mut allows, finding(
+                CONTRACT_CLI_HELP, &hfile.rel, *line,
+                format!("help documents `--{tok}` but no args.get/has/\
+                         get_parse site parses it"),
+                "wire the flag up or drop it from the help text"));
+        }
+    }
+    (findings, allows, help.len())
+}
+
+/// `RoundRecord` fields vs the JSON writer/reader and the documented
+/// schema table in `benches/README.md`.  Returns (findings,
+/// allows_used, documented_columns).
+pub fn check_schema(index: &RepoIndex, readme: Option<&str>)
+                    -> (Vec<Finding>, usize, usize) {
+    let Some((rfile, rdef)) = index.struct_def("RoundRecord") else {
+        return (Vec::new(), 0, 0);
+    };
+
+    let mut findings = Vec::new();
+    let mut allows = 0usize;
+
+    // writer + reader: each field name appears >= 2x as a string
+    // literal inside the impl RoundRecord span (to_json + from_json)
+    if let Some(span) = rfile.impl_span("RoundRecord") {
+        for (name, line) in &rdef.fields {
+            let quoted = format!("\"{name}\"");
+            let n: usize = rfile.lines.iter()
+                .filter(|li| li.lineno >= span.start
+                             && li.lineno <= span.end
+                             && !li.skip && li.has_code)
+                .map(|li| li.raw.matches(quoted.as_str()).count())
+                .sum();
+            if n < 2 {
+                emit(index, &mut findings, &mut allows, finding(
+                    CONTRACT_SCHEMA, &rfile.rel, *line,
+                    format!("RoundRecord field `{name}` appears {n} \
+                             time(s) in the impl RoundRecord JSON code \
+                             (writer + reader expected)"),
+                    "serialize the field in to_json and read it back \
+                     in from_json"));
+            }
+        }
+    }
+
+    // documented schema: backticked idents in the first table column
+    // between the rounds-schema markers
+    let mut documented: Vec<(String, usize)> = Vec::new();
+    let mut columns = 0usize;
+    if let Some(text) = readme {
+        let mut inside = false;
+        let mut saw_markers = false;
+        for (i, line) in text.lines().enumerate() {
+            if line.contains("<!-- rounds-schema:begin -->") {
+                inside = true;
+                saw_markers = true;
+                continue;
+            }
+            if line.contains("<!-- rounds-schema:end -->") {
+                inside = false;
+            }
+            if !inside || !line.trim_start().starts_with('|') {
+                continue;
+            }
+            let Some(cell) = line.split('|').nth(1) else { continue };
+            let mut parts = cell.split('`');
+            if let (Some(_), Some(name)) = (parts.next(), parts.next()) {
+                if !name.is_empty() {
+                    documented.push((name.to_string(), i + 1));
+                }
+            }
+        }
+        if saw_markers {
+            columns = documented.len();
+            let field_names: BTreeSet<&str> =
+                rdef.fields.iter().map(|(n, _)| n.as_str()).collect();
+            let doc_names: BTreeSet<&str> =
+                documented.iter().map(|(n, _)| n.as_str()).collect();
+            for (name, line) in &rdef.fields {
+                if !doc_names.contains(name.as_str()) {
+                    emit(index, &mut findings, &mut allows, finding(
+                        CONTRACT_SCHEMA, &rfile.rel, *line,
+                        format!("RoundRecord field `{name}` is missing \
+                                 from the rounds-schema table in \
+                                 benches/README.md"),
+                        "add the column to the table between the \
+                         rounds-schema markers"));
+                }
+            }
+            for (name, line) in &documented {
+                if !field_names.contains(name.as_str()) {
+                    emit(index, &mut findings, &mut allows, finding(
+                        CONTRACT_SCHEMA, "benches/README.md", *line,
+                        format!("rounds-schema table documents `{name}` \
+                                 which is not a RoundRecord field"),
+                        "drop the stale column from the table"));
+                }
+            }
+        }
+    }
+    (findings, allows, columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::index::FileIndex;
+
+    fn tree(files: &[(&str, &str)]) -> RepoIndex {
+        RepoIndex {
+            files: files.iter()
+                .map(|(rel, text)| FileIndex::build(rel, text))
+                .collect(),
+        }
+    }
+
+    const CFG: &str = "pub struct FleetConfig {\n\
+                       \x20   pub rounds: usize,\n\
+                       \x20   pub seed: u64,\n\
+                       \x20   pub lr: f32,\n\
+                       }\n";
+
+    fn driver(fields: &[&str], allow: &[&str]) -> String {
+        let mut s = String::from(
+            "pub const NON_FINGERPRINTED: &[&str] = &[");
+        for a in allow {
+            s.push_str(&format!("\"{a}\", "));
+        }
+        s.push_str("];\n\
+                    fn config_fingerprint(cfg: &FleetConfig) -> String {\n\
+                    \x20   let mut field = |n: &str, v: String| {};\n");
+        for f in fields {
+            s.push_str(&format!(
+                "    field(\"{f}\", format!(\"{{:?}}\", cfg.{f}));\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    #[test]
+    fn fingerprint_clean_when_covered() {
+        let d = driver(&["seed", "lr"], &["rounds"]);
+        let idx = tree(&[("fleet/mod.rs", CFG),
+                         ("fleet/driver.rs", d.as_str())]);
+        let (f, a, checked) = check_config_fingerprint(&idx);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a, 0);
+        assert_eq!(checked, 3);
+    }
+
+    #[test]
+    fn unfingerprinted_field_fires_and_allow_suppresses() {
+        let d = driver(&["seed"], &["rounds"]);
+        let idx = tree(&[("fleet/mod.rs", CFG),
+                         ("fleet/driver.rs", d.as_str())]);
+        let (f, _, _) = check_config_fingerprint(&idx);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, CONTRACT_CONFIG_FINGERPRINT);
+        assert_eq!(f[0].file, "fleet/mod.rs");
+        assert_eq!(f[0].line, 4); // `pub lr: f32,`
+        assert!(f[0].snippet.contains("`lr`"));
+
+        let cfg_allowed = CFG.replace(
+            "    pub lr: f32,",
+            "    // mft-lint: allow(contract-config-fingerprint) -- x\n\
+             \x20   pub lr: f32,");
+        let idx = tree(&[("fleet/mod.rs", cfg_allowed.as_str()),
+                         ("fleet/driver.rs", d.as_str())]);
+        let (f, a, _) = check_config_fingerprint(&idx);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn stale_allowlist_entry_fires() {
+        let d = driver(&["seed", "lr", "rounds"], &["no_such_knob"]);
+        let idx = tree(&[("fleet/mod.rs", CFG),
+                         ("fleet/driver.rs", d.as_str())]);
+        let (f, _, _) = check_config_fingerprint(&idx);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].snippet.contains("no_such_knob"));
+        assert_eq!(f[0].file, "fleet/driver.rs");
+    }
+
+    #[test]
+    fn no_fleet_config_skips_silently() {
+        let idx = tree(&[("clean.rs", "pub fn ok() {}\n")]);
+        let (f, a, checked) = check_config_fingerprint(&idx);
+        assert!(f.is_empty());
+        assert_eq!((a, checked), (0, 0));
+    }
+
+    const HELP: &str =
+        "pub fn print_help() {\n\
+         \x20   eprintln!(\"mft fleet --rounds N --seed S\");\n\
+         \x20   eprintln!(\"  --deny   fail on findings\");\n\
+         }\n";
+
+    #[test]
+    fn help_tokens_extracted() {
+        assert_eq!(help_tokens("--rounds N --trim-frac F x--y ---"),
+                   vec!["rounds".to_string(), "trim-frac".to_string()]);
+    }
+
+    #[test]
+    fn undocumented_flag_fires_and_allow_suppresses() {
+        let parse = "pub fn go(args: &Args) {\n\
+                     \x20   let r = args.get_parse(\"rounds\", 1usize);\n\
+                     \x20   let s = args.get(\"secret\");\n\
+                     \x20   let d = args.has(\"deny\");\n\
+                     }\n";
+        let idx = tree(&[("cli/mod.rs", HELP),
+                         ("fleet/driver.rs", parse),
+                         // args.get(\"seed\") outside scope parses --seed
+                         ("viz/mod.rs",
+                          "fn v(args: &Args) { args.get(\"seed\"); }\n")]);
+        let (f, _, seen) = check_cli_help(&idx);
+        assert_eq!(seen, 3, "rounds, seed, deny documented");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].snippet.contains("--secret"));
+        assert_eq!(f[0].file, "fleet/driver.rs");
+        assert_eq!(f[0].line, 3);
+
+        let allowed = parse.replace(
+            "    let s = args.get(\"secret\");",
+            "    // mft-lint: allow(contract-cli-help) -- internal\n\
+             \x20   let s = args.get(\"secret\");");
+        let idx = tree(&[("cli/mod.rs", HELP),
+                         ("fleet/driver.rs", allowed.as_str()),
+                         ("viz/mod.rs",
+                          "fn v(args: &Args) { args.get(\"seed\"); }\n")]);
+        let (f, a, _) = check_cli_help(&idx);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn documented_but_unparsed_flag_fires() {
+        let idx = tree(&[("cli/mod.rs", HELP),
+                         ("fleet/driver.rs",
+                          "fn go(args: &Args) {\n\
+                           \x20   args.get_parse(\"rounds\", 1usize);\n\
+                           \x20   args.get(\"seed\");\n\
+                           }\n")]);
+        let (f, _, _) = check_cli_help(&idx);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].snippet.contains("--deny"));
+        assert_eq!(f[0].file, "cli/mod.rs");
+        assert_eq!(f[0].line, 3);
+    }
+
+    const RECORD: &str =
+        "pub struct RoundRecord {\n\
+         \x20   pub round: usize,\n\
+         \x20   pub time_s: f64,\n\
+         }\n\
+         impl RoundRecord {\n\
+         \x20   pub fn to_json(&self) {\n\
+         \x20       let _ = (\"round\", \"time_s\");\n\
+         \x20   }\n\
+         \x20   pub fn from_json(&self) {\n\
+         \x20       let _ = (\"round\", \"time_s\");\n\
+         \x20   }\n\
+         }\n";
+
+    const README: &str =
+        "# bench docs\n\
+         <!-- rounds-schema:begin -->\n\
+         | column | meaning |\n\
+         |---|---|\n\
+         | `round` | index |\n\
+         | `time_s` | virtual time |\n\
+         <!-- rounds-schema:end -->\n\
+         | `not_checked` | outside the markers |\n";
+
+    #[test]
+    fn schema_clean_when_reconciled() {
+        let idx = tree(&[("metrics/mod.rs", RECORD)]);
+        let (f, _, cols) = check_schema(&idx, Some(README));
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(cols, 2);
+    }
+
+    #[test]
+    fn undocumented_field_fires_and_allow_suppresses() {
+        let readme = README.replace("| `time_s` | virtual time |\n", "");
+        let idx = tree(&[("metrics/mod.rs", RECORD)]);
+        let (f, _, _) = check_schema(&idx, Some(readme.as_str()));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].snippet.contains("`time_s`"));
+        assert_eq!(f[0].file, "metrics/mod.rs");
+        assert_eq!(f[0].line, 3);
+
+        let rec_allowed = RECORD.replace(
+            "    pub time_s: f64,",
+            "    // mft-lint: allow(contract-schema) -- internal column\n\
+             \x20   pub time_s: f64,");
+        let idx = tree(&[("metrics/mod.rs", rec_allowed.as_str())]);
+        let (f, a, _) = check_schema(&idx, Some(readme.as_str()));
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn stale_readme_column_fires() {
+        let readme = README.replace(
+            "| `time_s` | virtual time |",
+            "| `time_s` | virtual time |\n| `ghost` | gone |");
+        let idx = tree(&[("metrics/mod.rs", RECORD)]);
+        let (f, _, _) = check_schema(&idx, Some(readme.as_str()));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].snippet.contains("`ghost`"));
+        assert_eq!(f[0].file, "benches/README.md");
+    }
+
+    #[test]
+    fn writer_only_field_fires() {
+        let rec = RECORD.replace(
+            "    pub fn from_json(&self) {\n\
+             \x20       let _ = (\"round\", \"time_s\");",
+            "    pub fn from_json(&self) {\n\
+             \x20       let _ = (\"round\",);");
+        let idx = tree(&[("metrics/mod.rs", rec.as_str())]);
+        let (f, _, _) = check_schema(&idx, Some(README));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].snippet.contains("1 time(s)"));
+    }
+
+    #[test]
+    fn no_readme_skips_doc_direction() {
+        let idx = tree(&[("metrics/mod.rs", RECORD)]);
+        let (f, _, cols) = check_schema(&idx, None);
+        assert!(f.is_empty());
+        assert_eq!(cols, 0);
+    }
+}

@@ -1,0 +1,423 @@
+//! Tier-2 module graph: layering and cycle analysis over the
+//! `crate::<module>` edges the indexer collected.
+//!
+//! The declared layer DAG lives in one place — the `mft-lint layers`
+//! doc block in `lib.rs` (`N: mod mod …` lines) — and this module
+//! re-derives the rules from it on every run: a module may reference
+//! same-or-lower layers only; upward edges are flagged per call site
+//! (inline-allowable there); dependency cycles are flagged as strongly
+//! connected components of the non-upward edge subgraph (all edges
+//! when no DAG is declared, so fixture trees still get cycle
+//! detection); and drift between the declared module list and the tree
+//! is flagged in both directions.  The graph itself is exported as
+//! `lint_graph.json` / Graphviz DOT — byte-stable across runs (BTree
+//! ordering everywhere).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::catalog::ARCH_LAYERING;
+use super::index::RepoIndex;
+use super::scan::LineInfo;
+use super::Finding;
+use crate::util::json::Json;
+
+/// The assembled module dependency graph.
+pub struct ModuleGraph {
+    /// every module in the tree -> its declared layer (None when the
+    /// tree declares no DAG or the module is undeclared)
+    pub layers: BTreeMap<String, Option<u8>>,
+    /// (from, to) -> reference sites, sorted (file, line)
+    pub edges: BTreeMap<(String, String), Vec<(String, usize)>>,
+}
+
+/// Parse the declared layer DAG from `lib.rs` raw lines: a marker line
+/// containing `mft-lint layers`, then `N: mod mod …` lines (leading
+/// `//!`/`//` stripped).  Prose between marker and first layer line is
+/// skipped; the block ends at the first non-matching line after it.
+/// Returns (module -> layer, marker line).
+pub fn parse_layers(lines: &[LineInfo])
+                    -> Option<(BTreeMap<String, u8>, usize)> {
+    let mut marker = None;
+    let mut layers = BTreeMap::new();
+    let mut started = false;
+    for li in lines {
+        if marker.is_none() {
+            if li.raw.contains("mft-lint layers") {
+                marker = Some(li.lineno);
+            }
+            continue;
+        }
+        let t = li.raw.trim()
+            .trim_start_matches("//!")
+            .trim_start_matches("//")
+            .trim();
+        let parsed = t.split_once(':').and_then(|(num, rest)| {
+            num.trim().parse::<u8>().ok().map(|n| (n, rest))
+        });
+        match parsed {
+            Some((n, rest)) => {
+                for m in rest.split_whitespace() {
+                    layers.insert(m.to_string(), n);
+                }
+                started = true;
+            }
+            None if started => break,
+            None => {}
+        }
+    }
+    match (marker, layers.is_empty()) {
+        (Some(m), false) => Some((layers, m)),
+        _ => None,
+    }
+}
+
+/// Build the graph and run the `arch-layering` checks.  Returns
+/// (graph, findings, allows_used).
+pub fn check(index: &RepoIndex) -> (ModuleGraph, Vec<Finding>, usize) {
+    let modules: BTreeSet<String> = index.files.iter()
+        .map(|f| f.module.clone())
+        .filter(|m| m != "lib" && m != "main")
+        .collect();
+
+    let mut edges: BTreeMap<(String, String), Vec<(String, usize)>> =
+        BTreeMap::new();
+    for f in &index.files {
+        if f.module == "lib" || f.module == "main" {
+            continue;
+        }
+        for e in &f.edges {
+            if e.to != f.module && modules.contains(&e.to) {
+                edges.entry((f.module.clone(), e.to.clone()))
+                    .or_default()
+                    .push((f.rel.clone(), e.line));
+            }
+        }
+    }
+    for sites in edges.values_mut() {
+        sites.sort();
+        sites.dedup();
+    }
+
+    let declared = index.file("lib.rs")
+        .and_then(|f| parse_layers(&f.lines));
+
+    let mut findings = Vec::new();
+    let mut allows_used = 0usize;
+    let mut emit = |findings: &mut Vec<Finding>, allows: &mut usize,
+                    file: &str, line: usize, snippet: String,
+                    hint: &'static str| {
+        if index.allowed(file, line, ARCH_LAYERING) {
+            *allows += 1;
+        } else {
+            findings.push(Finding {
+                lint: ARCH_LAYERING,
+                class: "architecture",
+                severity: 0,
+                tier: 2,
+                file: file.to_string(),
+                line,
+                snippet,
+                hint,
+            });
+        }
+    };
+
+    if let Some((layer_of, marker)) = &declared {
+        for m in &modules {
+            if !layer_of.contains_key(m) {
+                emit(&mut findings, &mut allows_used, "lib.rs", *marker,
+                     format!("module `{m}` exists in the tree but is not \
+                              in the declared layer DAG"),
+                     "add the module to a layer in the `mft-lint \
+                      layers` block (lib.rs)");
+            }
+        }
+        for m in layer_of.keys() {
+            if !modules.contains(m) {
+                emit(&mut findings, &mut allows_used, "lib.rs", *marker,
+                     format!("module `{m}` is declared in the layer DAG \
+                              but absent from the tree"),
+                     "remove the stale module from the `mft-lint \
+                      layers` block (lib.rs)");
+            }
+        }
+        for ((a, b), sites) in &edges {
+            let (Some(&la), Some(&lb)) =
+                (layer_of.get(a), layer_of.get(b)) else { continue };
+            if la < lb {
+                for (file, line) in sites {
+                    emit(&mut findings, &mut allows_used, file, *line,
+                         format!("upward dependency: `{a}` (layer {la}) \
+                                  references `{b}` (layer {lb})"),
+                         "a module may only use same-or-lower layers; \
+                          move the shared piece down or invert the \
+                          dependency");
+                }
+            }
+        }
+    }
+
+    // cycles: SCCs of the non-upward subgraph (all edges without a DAG)
+    let nodes: Vec<&String> = modules.iter().collect();
+    let node_id: BTreeMap<&str, usize> =
+        nodes.iter().enumerate().map(|(i, m)| (m.as_str(), i)).collect();
+    let n = nodes.len();
+    let mut reach = vec![vec![false; n]; n];
+    for (a, b) in edges.keys() {
+        if let Some((layer_of, _)) = &declared {
+            if let (Some(&la), Some(&lb)) =
+                (layer_of.get(a), layer_of.get(b))
+            {
+                if la < lb {
+                    continue; // already flagged as an upward edge
+                }
+            }
+        }
+        reach[node_id[a.as_str()]][node_id[b.as_str()]] = true;
+    }
+    for k in 0..n {
+        for i in 0..n {
+            if reach[i][k] {
+                for j in 0..n {
+                    if reach[k][j] {
+                        reach[i][j] = true;
+                    }
+                }
+            }
+        }
+    }
+    let mut in_cycle = vec![false; n];
+    let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
+    for i in 0..n {
+        if in_cycle[i] {
+            continue;
+        }
+        let scc: Vec<usize> = (0..n)
+            .filter(|&j| reach[i][j] && reach[j][i])
+            .collect();
+        let scc = if scc.contains(&i) { scc } else { vec![] };
+        if scc.len() > 1 && seen.insert(scc.clone()) {
+            for &j in &scc {
+                in_cycle[j] = true;
+            }
+            let names: Vec<&str> =
+                scc.iter().map(|&j| nodes[j].as_str()).collect();
+            // anchor at the lexicographically smallest intra-SCC site
+            let anchor = edges.iter()
+                .filter(|((a, b), _)| {
+                    names.contains(&a.as_str()) && names.contains(&b.as_str())
+                })
+                .flat_map(|(_, sites)| sites.iter())
+                .min()
+                .cloned()
+                .unwrap_or_else(|| ("lib.rs".to_string(), 0));
+            emit(&mut findings, &mut allows_used, &anchor.0, anchor.1,
+                 format!("dependency cycle between modules: {}",
+                         names.join(" <-> ")),
+                 "break the cycle: move the shared piece into a lower \
+                  layer or merge the modules");
+        }
+    }
+
+    let layers = modules.iter()
+        .map(|m| {
+            let l = declared.as_ref()
+                .and_then(|(lo, _)| lo.get(m).copied());
+            (m.clone(), l)
+        })
+        .collect();
+    (ModuleGraph { layers, edges }, findings, allows_used)
+}
+
+impl ModuleGraph {
+    /// Byte-stable JSON export (BTree ordering end to end).
+    pub fn to_json(&self) -> Json {
+        let modules = Json::Obj(self.layers.iter().map(|(m, l)| {
+            let v = match l {
+                Some(n) => Json::from(*n as usize),
+                None => Json::Null,
+            };
+            (m.clone(), v)
+        }).collect());
+        let edges = Json::Arr(self.edges.iter().map(|((a, b), sites)| {
+            Json::obj(vec![
+                ("from", Json::from(a.as_str())),
+                ("to", Json::from(b.as_str())),
+                ("sites", Json::Arr(sites.iter().map(|(f, l)| {
+                    Json::obj(vec![
+                        ("file", Json::from(f.as_str())),
+                        ("line", Json::from(*l)),
+                    ])
+                }).collect())),
+            ])
+        }).collect());
+        Json::obj(vec![("modules", modules), ("edges", edges)])
+    }
+
+    /// Graphviz DOT export, modules clustered by declared layer.
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from(
+            "digraph mft_modules {\n  rankdir=BT;\n  \
+             node [shape=box, fontname=\"monospace\"];\n");
+        let mut by_layer: BTreeMap<Option<u8>, Vec<&str>> = BTreeMap::new();
+        for (m, l) in &self.layers {
+            by_layer.entry(*l).or_default().push(m);
+        }
+        for (layer, mods) in &by_layer {
+            match layer {
+                Some(n) => {
+                    s.push_str(&format!(
+                        "  subgraph cluster_{n} {{\n    label=\"layer \
+                         {n}\";\n"));
+                    for m in mods {
+                        s.push_str(&format!("    {m};\n"));
+                    }
+                    s.push_str("  }\n");
+                }
+                None => {
+                    for m in mods {
+                        s.push_str(&format!("  {m};\n"));
+                    }
+                }
+            }
+        }
+        for ((a, b), sites) in &self.edges {
+            s.push_str(&format!("  {a} -> {b} [tooltip=\"{} site(s)\"];\n",
+                                sites.len()));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::index::FileIndex;
+
+    const LIB: &str = "\
+//! prose above\n\
+//! mft-lint layers\n\
+//! prose between marker and block is skipped\n\
+//!   0: util\n\
+//!   1: data metrics\n\
+//!   2: fleet\n\
+\n\
+pub mod util;\n";
+
+    fn tree(files: &[(&str, &str)]) -> RepoIndex {
+        RepoIndex {
+            files: files.iter()
+                .map(|(rel, text)| FileIndex::build(rel, text))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn layer_block_parsed() {
+        let f = FileIndex::build("lib.rs", LIB);
+        let (layers, marker) = parse_layers(&f.lines).unwrap();
+        assert_eq!(marker, 2);
+        assert_eq!(layers.get("util"), Some(&0));
+        assert_eq!(layers.get("fleet"), Some(&2));
+        assert_eq!(layers.len(), 4);
+        // trailing prose after the block must not extend it
+        assert!(!layers.contains_key("mod"));
+    }
+
+    #[test]
+    fn clean_layering_no_findings() {
+        let idx = tree(&[
+            ("lib.rs", LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("data/mod.rs", "use crate::util::u;\n"),
+            ("metrics/mod.rs", "use crate::util::u;\n"),
+            ("fleet/mod.rs", "use crate::{data, metrics};\n"),
+        ]);
+        let (g, findings, _) = check(&idx);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(g.edges.len(), 3);
+        assert_eq!(g.layers.get("fleet"), Some(&Some(2)));
+    }
+
+    #[test]
+    fn upward_edge_flagged_at_site_and_allowable() {
+        let idx = tree(&[
+            ("lib.rs", LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("data/mod.rs", "pub fn d() {}\n"),
+            ("metrics/mod.rs", "use crate::fleet::x;\n"),
+            ("fleet/mod.rs", "pub fn x() {}\n"),
+        ]);
+        let (_, findings, allows) = check(&idx);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].lint, ARCH_LAYERING);
+        assert_eq!(findings[0].file, "metrics/mod.rs");
+        assert_eq!(findings[0].line, 1);
+        assert_eq!(allows, 0);
+
+        let idx = tree(&[
+            ("lib.rs", LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("data/mod.rs", "pub fn d() {}\n"),
+            ("metrics/mod.rs",
+             "// mft-lint: allow(arch-layering) -- transitional\n\
+              use crate::fleet::x;\n"),
+            ("fleet/mod.rs", "pub fn x() {}\n"),
+        ]);
+        let (_, findings, allows) = check(&idx);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(allows, 1);
+    }
+
+    #[test]
+    fn cycle_detected_without_a_dag() {
+        // no lib.rs layer block: layering skipped, cycles still found
+        let idx = tree(&[
+            ("data/mod.rs", "use crate::metrics::m;\n"),
+            ("metrics/mod.rs", "use crate::data::d;\n"),
+            ("util/mod.rs", "pub fn u() {}\n"),
+        ]);
+        let (g, findings, _) = check(&idx);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].snippet.contains("data <-> metrics"),
+                "{}", findings[0].snippet);
+        assert_eq!(g.layers.get("data"), Some(&None));
+    }
+
+    #[test]
+    fn undeclared_and_absent_modules_flagged() {
+        let idx = tree(&[
+            ("lib.rs", LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("data/mod.rs", "pub fn d() {}\n"),
+            ("metrics/mod.rs", "pub fn m() {}\n"),
+            // fleet declared but absent; rogue undeclared
+            ("rogue/mod.rs", "pub fn r() {}\n"),
+        ]);
+        let (_, findings, _) = check(&idx);
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings.iter().any(|f| f.snippet.contains("`rogue`")));
+        assert!(findings.iter().any(|f| f.snippet.contains("`fleet`")));
+        assert!(findings.iter().all(|f| f.file == "lib.rs" && f.line == 2));
+    }
+
+    #[test]
+    fn exports_are_byte_stable() {
+        let files: &[(&str, &str)] = &[
+            ("lib.rs", LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("data/mod.rs", "use crate::util::u;\n"),
+            ("metrics/mod.rs", "use crate::util::u;\n"),
+            ("fleet/mod.rs", "use crate::{data, metrics};\n"),
+        ];
+        let (g1, _, _) = check(&tree(files));
+        let (g2, _, _) = check(&tree(files));
+        assert_eq!(g1.to_json().to_string(), g2.to_json().to_string());
+        assert_eq!(g1.to_dot(), g2.to_dot());
+        let j = g1.to_json().to_string();
+        assert!(j.contains("\"modules\""));
+        assert!(j.contains("\"from\""));
+        assert!(g1.to_dot().starts_with("digraph mft_modules"));
+    }
+}

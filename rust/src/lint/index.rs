@@ -1,0 +1,616 @@
+//! Tier-2 indexer: cross-file facts from the blanked token stream.
+//!
+//! Tier 1 judges one line at a time; tier 2 judges the tree.  This
+//! module extracts the per-file facts the graph and contract lints
+//! need — `crate::<module>` reference edges (including multi-line
+//! `use crate::{a, b::{c}}` groups), struct definitions with their
+//! fields, `fn`/`impl` body spans, and `--flag` parse sites — all from
+//! the same [`super::scan::blank_lines`] stream the needle lints
+//! consume, so the two tiers can never disagree about what is code and
+//! what is prose.  `#[cfg(test)]` bodies are skipped exactly as in
+//! tier 1: test code may reference anything.
+//!
+//! The extractors stay token-level on purpose (no parser): every fact
+//! below is expressible as "this token sequence on a code line", and
+//! that keeps the indexer honest under its own lint.
+
+use super::scan::{blank_lines, LineInfo};
+
+/// A `crate::<module>` reference site.
+pub struct UseEdge {
+    /// first path segment after `crate::`
+    pub to: String,
+    pub line: usize,
+}
+
+/// A struct definition with its named fields.
+pub struct StructDef {
+    pub name: String,
+    pub line: usize,
+    /// (field name, 1-based line) in declaration order
+    pub fields: Vec<(String, usize)>,
+}
+
+/// A named body span (`fn` or `impl`), inclusive line range.
+pub struct Span {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// An `args.get("flag")` / `args.has(` / `args.get_parse(` parse site.
+pub struct FlagSite {
+    pub flag: String,
+    pub line: usize,
+}
+
+/// Everything tier 2 knows about one source file.
+pub struct FileIndex {
+    /// repo-relative path, `/`-separated
+    pub rel: String,
+    /// first path segment (file stem for root-level files)
+    pub module: String,
+    pub lines: Vec<LineInfo>,
+    pub edges: Vec<UseEdge>,
+    pub structs: Vec<StructDef>,
+    pub fns: Vec<Span>,
+    pub impls: Vec<Span>,
+    pub flags: Vec<FlagSite>,
+}
+
+/// The indexed tree: every `.rs` file under the lint root (including
+/// `lint/` itself — the linter's sources are exempt from needle lints
+/// but their module edges and flag sites are facts like any other).
+pub struct RepoIndex {
+    pub files: Vec<FileIndex>,
+}
+
+impl FileIndex {
+    pub fn build(rel: &str, text: &str) -> FileIndex {
+        let lines = blank_lines(text);
+        let module = match rel.split('/').next().unwrap_or(rel) {
+            seg if seg.ends_with(".rs") => seg[..seg.len() - 3].to_string(),
+            seg => seg.to_string(),
+        };
+        let edges = scan_edges(&lines);
+        let structs = scan_structs(&lines);
+        let fns = scan_spans(&lines, "fn");
+        let impls = scan_spans(&lines, "impl");
+        let flags = scan_flags(&lines);
+        FileIndex { rel: rel.to_string(), module, lines, edges, structs,
+                    fns, impls, flags }
+    }
+
+    pub fn fn_span(&self, name: &str) -> Option<&Span> {
+        self.fns.iter().find(|s| s.name == name)
+    }
+
+    pub fn impl_span(&self, name: &str) -> Option<&Span> {
+        self.impls.iter().find(|s| s.name == name)
+    }
+}
+
+impl RepoIndex {
+    pub fn file(&self, rel: &str) -> Option<&FileIndex> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+
+    /// First struct with this name anywhere in the tree.
+    pub fn struct_def(&self, name: &str)
+                      -> Option<(&FileIndex, &StructDef)> {
+        self.files.iter().find_map(|f| {
+            f.structs.iter().find(|s| s.name == name).map(|s| (f, s))
+        })
+    }
+
+    /// Is `lint` allowed (inline escape) at this file:line anchor?
+    pub fn allowed(&self, rel: &str, line: usize, lint: &str) -> bool {
+        self.file(rel)
+            .and_then(|f| f.lines.get(line.wrapping_sub(1)))
+            .map(|li| li.allows.iter().any(|a| a == lint))
+            .unwrap_or(false)
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Find `needle` in `hay` (a char slice) starting at `from`, requiring
+/// a non-identifier char (or start of line) immediately before.
+fn find_token(hay: &[char], needle: &str, from: usize) -> Option<usize> {
+    let n: Vec<char> = needle.chars().collect();
+    let mut i = from;
+    while i + n.len() <= hay.len() {
+        if hay[i..i + n.len()] == n[..]
+            && (i == 0 || !is_ident(hay[i - 1]))
+        {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn read_ident(hay: &[char], mut i: usize) -> (String, usize) {
+    let mut s = String::new();
+    while i < hay.len() && is_ident(hay[i]) {
+        s.push(hay[i]);
+        i += 1;
+    }
+    (s, i)
+}
+
+/// `crate::<module>` edges, including multi-line `use crate::{…}`
+/// groups (idents at brace depth 1 are the modules; nested groups and
+/// trailing `::path` segments belong to the item, not the module set).
+fn scan_edges(lines: &[LineInfo]) -> Vec<UseEdge> {
+    let mut out: Vec<UseEdge> = Vec::new();
+    let mut push = |out: &mut Vec<UseEdge>, name: String, line: usize| {
+        if name.is_empty() || name == "self" {
+            return;
+        }
+        // modules are lower_snake; a capitalized ident after crate:: is
+        // an item at crate root (none in this repo, but fixtures)
+        if name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            return;
+        }
+        out.push(UseEdge { to: name, line });
+    };
+
+    // Some(depth) while inside a use-group that has not closed
+    let mut group: Option<i64> = None;
+    // ident already taken for the current depth-1 group item
+    let mut consumed = false;
+
+    for li in lines {
+        if li.skip || !li.has_code {
+            continue;
+        }
+        let hay: Vec<char> = li.blanked.chars().collect();
+        let mut i = 0;
+        loop {
+            if let Some(depth) = group.as_mut() {
+                // inside a `crate::{…}` group: walk chars, collecting
+                // the first ident of each depth-1 item
+                while i < hay.len() {
+                    let c = hay[i];
+                    match c {
+                        '{' => *depth += 1,
+                        '}' => {
+                            *depth -= 1;
+                            if *depth == 0 {
+                                break;
+                            }
+                        }
+                        ',' if *depth == 1 => consumed = false,
+                        _ if *depth == 1 && is_ident(c) && !consumed => {
+                            let (name, j) = read_ident(&hay, i);
+                            push(&mut out, name, li.lineno);
+                            consumed = true;
+                            i = j;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                if i < hay.len() {
+                    group = None; // closed on this line; scan the rest
+                    i += 1;
+                } else {
+                    break; // group continues on the next line
+                }
+            }
+            match find_token(&hay, "crate::", i) {
+                None => break,
+                Some(p) => {
+                    let j = p + "crate::".len();
+                    if hay.get(j) == Some(&'{') {
+                        group = Some(1);
+                        consumed = false;
+                        i = j + 1;
+                    } else {
+                        let (name, j2) = read_ident(&hay, j);
+                        push(&mut out, name, li.lineno);
+                        i = j2.max(j + 1);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// End line of a brace-delimited body whose header starts at
+/// `lines[start_idx]`, column `col` (blanked-char index).  Falls back
+/// to the last line if the braces never balance.
+fn body_end(lines: &[LineInfo], start_idx: usize, col: usize) -> usize {
+    let mut depth = 0i64;
+    let mut started = false;
+    for (k, li) in lines.iter().enumerate().skip(start_idx) {
+        let skip_cols = if k == start_idx { col } else { 0 };
+        for c in li.blanked.chars().skip(skip_cols) {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+            if started && depth <= 0 {
+                return li.lineno;
+            }
+        }
+    }
+    lines.last().map(|l| l.lineno).unwrap_or(1)
+}
+
+/// Named `fn`/`impl` spans.  For `impl`, the name is the implemented
+/// type (`impl Foo`, `impl Trait for Foo` -> `Foo`); generics are
+/// skipped.  Nested fns (inside impls) are indexed too — contract
+/// checks look spans up by name.
+fn scan_spans(lines: &[LineInfo], kw: &str) -> Vec<Span> {
+    let mut out = Vec::new();
+    for (idx, li) in lines.iter().enumerate() {
+        if li.skip || !li.has_code {
+            continue;
+        }
+        let hay: Vec<char> = li.blanked.chars().collect();
+        let Some(p) = find_token(&hay, kw, 0) else { continue };
+        let mut j = p + kw.len();
+        if hay.get(j).is_some_and(|c| is_ident(*c)) {
+            continue; // `fnord`, `impl_detail`, …
+        }
+        // skip whitespace and a generics list
+        while hay.get(j) == Some(&' ') {
+            j += 1;
+        }
+        if hay.get(j) == Some(&'<') {
+            let mut d = 0i64;
+            while j < hay.len() {
+                match hay[j] {
+                    '<' => d += 1,
+                    '>' => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            while hay.get(j) == Some(&' ') {
+                j += 1;
+            }
+        }
+        let (mut name, mut j2) = read_ident(&hay, j);
+        if kw == "impl" {
+            // `impl Trait for Type` -> Type
+            if let Some(f) = find_token(&hay, "for", j2) {
+                let mut k = f + 3;
+                while hay.get(k) == Some(&' ') {
+                    k += 1;
+                }
+                let (n, k2) = read_ident(&hay, k);
+                name = n;
+                j2 = k2;
+            }
+        }
+        if name.is_empty() {
+            continue;
+        }
+        let end = body_end(lines, idx, j2);
+        out.push(Span { name, start: li.lineno, end });
+    }
+    out
+}
+
+/// Struct definitions with named fields.  Only brace-bodied structs
+/// whose `{` opens on the declaration line are indexed (the repo
+/// idiom); tuple and unit structs have no named fields to check.
+fn scan_structs(lines: &[LineInfo]) -> Vec<StructDef> {
+    let mut out = Vec::new();
+    for (idx, li) in lines.iter().enumerate() {
+        if li.skip || !li.has_code {
+            continue;
+        }
+        let hay: Vec<char> = li.blanked.chars().collect();
+        let Some(p) = find_token(&hay, "struct", 0) else { continue };
+        let j = p + "struct".len();
+        if hay.get(j) != Some(&' ') {
+            continue;
+        }
+        let (name, _) = read_ident(&hay, j + 1);
+        if name.is_empty() || !li.blanked.contains('{') {
+            continue;
+        }
+        let end = body_end(lines, idx, 0);
+        let mut fields = Vec::new();
+        let mut depth = super::scan::brace_delta(&li.blanked);
+        for bli in lines.iter().skip(idx + 1) {
+            if bli.lineno > end {
+                break;
+            }
+            if depth == 1 && bli.has_code && !bli.skip {
+                if let Some(f) = field_name(&bli.blanked) {
+                    fields.push((f, bli.lineno));
+                }
+            }
+            depth += super::scan::brace_delta(&bli.blanked);
+        }
+        out.push(StructDef { name, line: li.lineno, fields });
+    }
+    out
+}
+
+/// `   pub foo: T,` -> `foo` (attribute and method lines rejected).
+fn field_name(blanked: &str) -> Option<String> {
+    let mut t = blanked.trim();
+    if t.starts_with('#') {
+        return None;
+    }
+    if let Some(rest) = t.strip_prefix("pub") {
+        // boundary check: a field literally named `publish` keeps its pub
+        if rest.starts_with(' ') || rest.starts_with('(') {
+            let rest = rest.trim_start();
+            t = match rest.strip_prefix('(') {
+                // pub(crate) etc.
+                Some(r) => r.split_once(')')?.1.trim_start(),
+                None => rest,
+            };
+        }
+    }
+    let hay: Vec<char> = t.chars().collect();
+    let (name, j) = read_ident(&hay, 0);
+    if name.is_empty() || name == "fn" {
+        return None;
+    }
+    let mut k = j;
+    while hay.get(k) == Some(&' ') {
+        k += 1;
+    }
+    if hay.get(k) == Some(&':') && hay.get(k + 1) != Some(&':') {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// `args.get("flag")` / `args.has(` / `args.get_parse(` sites.  The
+/// needle is matched on the blanked line (so a doc-comment mention
+/// never counts); the flag literal is read back from the raw line at
+/// the same char offset — blanking is strictly 1:1 on chars.
+fn scan_flags(lines: &[LineInfo]) -> Vec<FlagSite> {
+    const NEEDLES: [&str; 3] = ["args.get_parse(", "args.get(", "args.has("];
+    let mut out = Vec::new();
+    for li in lines {
+        if li.skip || !li.has_code {
+            continue;
+        }
+        let hay: Vec<char> = li.blanked.chars().collect();
+        let raw: Vec<char> = li.raw.chars().collect();
+        for needle in NEEDLES {
+            let mut from = 0;
+            while let Some(p) = find_char_sub(&hay, needle, from) {
+                from = p + needle.len();
+                let mut k = from;
+                while raw.get(k) == Some(&' ') {
+                    k += 1;
+                }
+                if raw.get(k) != Some(&'"') {
+                    continue; // non-literal flag name: not checkable
+                }
+                k += 1;
+                let mut flag = String::new();
+                while k < raw.len() && raw[k] != '"' {
+                    flag.push(raw[k]);
+                    k += 1;
+                }
+                if !flag.is_empty() {
+                    out.push(FlagSite { flag, line: li.lineno });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Plain substring search over a char slice (no boundary requirement —
+/// `self.args.get(` must still match).
+fn find_char_sub(hay: &[char], needle: &str, from: usize) -> Option<usize> {
+    let n: Vec<char> = needle.chars().collect();
+    (from..hay.len().saturating_sub(n.len() - 1))
+        .find(|&i| hay[i..i + n.len()] == n[..])
+}
+
+/// First string-literal argument of each `callee(` call on a line
+/// (token boundary before `callee`, needle matched on the blanked
+/// line, literal read back from raw) — e.g. `field("n_clients", …)`
+/// yields `n_clients`.
+pub(super) fn call_literals(li: &LineInfo, callee: &str) -> Vec<String> {
+    let needle = format!("{callee}(");
+    let hay: Vec<char> = li.blanked.chars().collect();
+    let raw: Vec<char> = li.raw.chars().collect();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_token(&hay, &needle, from) {
+        from = p + needle.len();
+        let mut k = from;
+        while raw.get(k) == Some(&' ') {
+            k += 1;
+        }
+        if raw.get(k) != Some(&'"') {
+            continue;
+        }
+        k += 1;
+        let mut s = String::new();
+        while k < raw.len() && raw[k] != '"' {
+            s.push(raw[k]);
+            k += 1;
+        }
+        if !s.is_empty() {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// All `"…"` literal contents on a raw line (escapes honored, line
+/// comments stop the scan).  Used for allowlist-const extraction.
+pub fn string_literals(raw: &str) -> Vec<String> {
+    let b: Vec<char> = raw.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '/' && b.get(i + 1) == Some(&'/') {
+            break;
+        }
+        if b[i] == '"' {
+            let mut s = String::new();
+            i += 1;
+            while i < b.len() && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    s.push(b[i + 1]);
+                    i += 2;
+                } else {
+                    s.push(b[i]);
+                    i += 1;
+                }
+            }
+            out.push(s);
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(src: &str) -> FileIndex {
+        FileIndex::build("fleet/driver.rs", src)
+    }
+
+    #[test]
+    fn module_from_rel() {
+        assert_eq!(FileIndex::build("fleet/driver.rs", "").module, "fleet");
+        assert_eq!(FileIndex::build("lib.rs", "").module, "lib");
+        assert_eq!(FileIndex::build("util/rng.rs", "").module, "util");
+    }
+
+    #[test]
+    fn simple_edges_collected() {
+        let f = idx("use crate::util::json::Json;\n\
+                     pub fn f() { crate::metrics::flush()?; }\n");
+        let e: Vec<(&str, usize)> =
+            f.edges.iter().map(|e| (e.to.as_str(), e.line)).collect();
+        assert_eq!(e, vec![("util", 1), ("metrics", 2)]);
+    }
+
+    #[test]
+    fn multi_line_use_group() {
+        let f = idx("use crate::{\n\
+                     \x20   config::RunConfig,\n\
+                     \x20   data::{DataLoader, partition::Shard},\n\
+                     \x20   util,\n\
+                     };\n\
+                     use crate::tensor::Tensor;\n");
+        let e: Vec<&str> = f.edges.iter().map(|e| e.to.as_str()).collect();
+        assert_eq!(e, vec!["config", "data", "util", "tensor"]);
+    }
+
+    #[test]
+    fn pub_use_reexport_is_an_edge() {
+        let f = idx("pub use crate::data::cache::{tokenizer_for};\n");
+        assert_eq!(f.edges.len(), 1);
+        assert_eq!(f.edges[0].to, "data");
+    }
+
+    #[test]
+    fn cfg_test_edges_skipped() {
+        let f = idx("use crate::util::rng::Pcg;\n\
+                     #[cfg(test)]\n\
+                     mod tests {\n\
+                         use crate::cli::Args;\n\
+                         fn t() { crate::exp::run(); }\n\
+                     }\n");
+        let e: Vec<&str> = f.edges.iter().map(|e| e.to.as_str()).collect();
+        assert_eq!(e, vec!["util"], "test-only edges must not count");
+    }
+
+    #[test]
+    fn comment_and_string_mentions_are_not_edges() {
+        let f = idx("// crate::fleet is discussed here\n\
+                     let s = \"crate::cli::Args\";\n");
+        assert!(f.edges.is_empty());
+    }
+
+    #[test]
+    fn struct_fields_indexed() {
+        let f = idx("#[derive(Debug)]\n\
+                     pub struct FleetConfig {\n\
+                     \x20   pub n_clients: usize,\n\
+                     \x20   /// docs\n\
+                     \x20   pub lr: f32,\n\
+                     \x20   seed: u64,\n\
+                     }\n\
+                     struct Unit;\n");
+        assert_eq!(f.structs.len(), 1);
+        let s = &f.structs[0];
+        assert_eq!(s.name, "FleetConfig");
+        let names: Vec<&str> =
+            s.fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["n_clients", "lr", "seed"]);
+        assert_eq!(s.fields[0].1, 3);
+    }
+
+    #[test]
+    fn nested_braces_do_not_invent_fields() {
+        let f = idx("pub struct A {\n\
+                     \x20   pub good: usize,\n\
+                     }\n\
+                     pub fn f() {\n\
+                     \x20   let not_a_field: usize = 3;\n\
+                     }\n");
+        assert_eq!(f.structs[0].fields.len(), 1);
+    }
+
+    #[test]
+    fn fn_and_impl_spans() {
+        let f = idx("pub fn config_fingerprint(cfg: &u8) -> String {\n\
+                     \x20   let x = 1;\n\
+                     }\n\
+                     impl RoundRecord {\n\
+                     \x20   pub fn to_json(&self) {}\n\
+                     }\n\
+                     impl Clone for Widget {\n\
+                     }\n");
+        let fp = f.fn_span("config_fingerprint").unwrap();
+        assert_eq!((fp.start, fp.end), (1, 3));
+        let rr = f.impl_span("RoundRecord").unwrap();
+        assert_eq!((rr.start, rr.end), (4, 6));
+        assert!(f.impl_span("Widget").is_some());
+        assert!(f.fn_span("to_json").is_some(), "nested fns indexed too");
+    }
+
+    #[test]
+    fn flag_sites_extracted() {
+        let f = idx(
+            "let r = args.get_parse(\"rounds\", 30usize)?;\n\
+             if args.has(\"deny\") { let x = args.get(\"json\"); }\n\
+             // args.get(\"prose\") in a comment does not count\n");
+        let flags: Vec<(&str, usize)> =
+            f.flags.iter().map(|s| (s.flag.as_str(), s.line)).collect();
+        assert_eq!(flags, vec![("rounds", 1), ("deny", 2), ("json", 2)]);
+    }
+
+    #[test]
+    fn string_literals_handle_escapes() {
+        assert_eq!(string_literals(r#"field("a\"b", x); // "c""#),
+                   vec!["a\"b".to_string()]);
+        assert_eq!(string_literals("&[\"rounds\", \"threads\"],"),
+                   vec!["rounds".to_string(), "threads".to_string()]);
+    }
+}

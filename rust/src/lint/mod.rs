@@ -3,9 +3,21 @@
 //! The repo's invariants — determinism (bitwise-reproducible fleet runs
 //! per seed), durability (crash-anywhere checkpoints), failpoint
 //! coverage — are enforced by tests *after* a violation ships.  This
-//! module enforces them at the source level: a line/token scanner over
-//! `src/` driven by a lint catalog ([`catalog::CATALOG`]) with
-//! per-module allowlists and inline escapes:
+//! module enforces them at the source level, in two tiers:
+//!
+//! * **Tier 1** — a line/token scanner over `src/` driven by a lint
+//!   catalog ([`catalog::CATALOG`]): needle substrings matched against
+//!   blanked source lines, plus the failpoint-coverage cross-check.
+//! * **Tier 2** — a cross-file pass: a lightweight item/`use` indexer
+//!   ([`index`]) feeds a module dependency graph checked against the
+//!   layer DAG declared in `lib.rs` ([`graph`], lint `arch-layering`),
+//!   cross-file contract checks ([`contracts`]: config fingerprint
+//!   coverage, CLI help text, the rounds.jsonl schema docs), and one
+//!   tree-wide needle lint (`det-interior-mut`).  The graph is
+//!   exported byte-stably via `--graph-json FILE` (JSON) and
+//!   `--graph FILE` (Graphviz DOT).
+//!
+//! Both tiers share one escape hatch, inline in the source:
 //!
 //! ```text
 //! // mft-lint: allow(<lint-name>) -- <reason>
@@ -18,17 +30,24 @@
 //!
 //! `mft lint` prints a ranked human summary on stderr and the full
 //! report as JSON on stdout; `--json FILE` also writes the report to a
-//! file (atomically, naturally), and `--deny` exits nonzero on any
-//! finding — that is the CI leg.  See `lint/README.md` for the catalog.
+//! file (atomically, naturally), `--only A,B` / `--skip A,B` restrict
+//! the reported lints (names validated against the catalog),
+//! `--baseline FILE` reports only findings absent from a prior
+//! `lint_report.json`, and `--deny` exits nonzero on any finding —
+//! that is the CI leg.  See `lint/README.md` for the catalog.
 
 pub mod catalog;
+pub mod contracts;
+pub mod graph;
+pub mod index;
 mod scan;
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 
@@ -38,6 +57,8 @@ pub struct Finding {
     pub lint: &'static str,
     pub class: &'static str,
     pub severity: u8,
+    /// 1 = line-level needle/coverage lint, 2 = cross-file analysis
+    pub tier: u8,
     /// repo-relative path, `/`-separated
     pub file: String,
     /// 1-based; 0 for registry-level findings with no single line
@@ -46,29 +67,64 @@ pub struct Finding {
     pub hint: &'static str,
 }
 
+/// What the tier-2 pass actually covered — the clean-tree test asserts
+/// these so "zero findings" provably means "checked and clean", not
+/// "skipped".
+pub struct Tier2Stats {
+    /// modules in the dependency graph
+    pub modules: usize,
+    /// distinct module->module edges
+    pub edges: usize,
+    /// FleetConfig fields cross-checked against the fingerprint
+    pub config_fields_checked: usize,
+    /// distinct `--flag` tokens seen in the help text
+    pub help_flags: usize,
+    /// documented rounds-schema columns reconciled
+    pub schema_columns: usize,
+}
+
 pub struct LintReport {
     /// ranked: (severity, lint, file, line)
     pub findings: Vec<Finding>,
     pub files_scanned: usize,
     pub allows_used: usize,
+    pub graph: graph::ModuleGraph,
+    pub tier2: Tier2Stats,
 }
 
 impl LintReport {
     pub fn to_json(&self) -> Json {
-        let mut by_lint: std::collections::BTreeMap<&str, usize> =
-            std::collections::BTreeMap::new();
+        let mut by_lint: BTreeMap<&str, (usize, u8)> = BTreeMap::new();
+        let mut tiers = [0usize; 2];
         for f in &self.findings {
-            *by_lint.entry(f.lint).or_default() += 1;
+            let e = by_lint.entry(f.lint).or_insert((0, f.tier));
+            e.0 += 1;
+            tiers[(f.tier as usize - 1).min(1)] += 1;
         }
         Json::obj(vec![
             ("ok", Json::from(self.findings.is_empty())),
             ("files_scanned", Json::from(self.files_scanned)),
             ("allows_used", Json::from(self.allows_used)),
+            ("tiers", Json::obj(vec![
+                ("1", Json::from(tiers[0])),
+                ("2", Json::from(tiers[1])),
+            ])),
             ("by_lint",
              Json::Obj(by_lint
                  .into_iter()
-                 .map(|(k, v)| (k.to_string(), Json::from(v)))
+                 .map(|(k, (n, t))| (k.to_string(), Json::obj(vec![
+                     ("count", Json::from(n)),
+                     ("tier", Json::from(t as usize)),
+                 ])))
                  .collect())),
+            ("tier2", Json::obj(vec![
+                ("modules", Json::from(self.tier2.modules)),
+                ("edges", Json::from(self.tier2.edges)),
+                ("config_fields_checked",
+                 Json::from(self.tier2.config_fields_checked)),
+                ("help_flags", Json::from(self.tier2.help_flags)),
+                ("schema_columns", Json::from(self.tier2.schema_columns)),
+            ])),
             ("findings",
              Json::Arr(self.findings
                  .iter()
@@ -76,6 +132,7 @@ impl LintReport {
                      ("lint", Json::from(f.lint)),
                      ("class", Json::from(f.class)),
                      ("severity", Json::from(f.severity as usize)),
+                     ("tier", Json::from(f.tier as usize)),
                      ("file", Json::from(f.file.as_str())),
                      ("line", Json::from(f.line)),
                      ("snippet", Json::from(f.snippet.as_str())),
@@ -87,8 +144,11 @@ impl LintReport {
 }
 
 /// Collect `.rs` files under `root`, sorted by relative path.  The
-/// `lint/` subtree is excluded: the catalog and its fixtures spell the
-/// needles out, and a linter flagging its own definition helps no one.
+/// `lint/` subtree is *indexed* (its module edges and flag sites are
+/// tree facts like any other) but exempt from needle scanning — the
+/// catalog and its fixtures spell the needles out, and a linter
+/// flagging its own definition helps no one.  `run_lint` makes that
+/// split; walk returns everything.
 fn walk(dir: &Path, rel: &str, out: &mut Vec<(PathBuf, String)>)
         -> Result<()> {
     let mut entries: Vec<_> = std::fs::read_dir(dir)
@@ -104,9 +164,6 @@ fn walk(dir: &Path, rel: &str, out: &mut Vec<(PathBuf, String)>)
         };
         let path = e.path();
         if path.is_dir() {
-            if r == "lint" {
-                continue;
-            }
             walk(&path, &r, out)?;
         } else if name.ends_with(".rs") {
             out.push((path, r));
@@ -115,8 +172,14 @@ fn walk(dir: &Path, rel: &str, out: &mut Vec<(PathBuf, String)>)
     Ok(())
 }
 
-/// Run every catalog lint plus the failpoint-coverage cross-check over
-/// the source tree at `root` (normally `rust/src`).
+fn is_lint_source(rel: &str) -> bool {
+    rel.starts_with("lint/") || rel == "lint.rs"
+}
+
+/// Run every catalog lint, the failpoint-coverage cross-check, and the
+/// tier-2 graph/contract analysis over the source tree at `root`
+/// (normally `rust/src`).  The documented rounds.jsonl schema is read
+/// from `<root>/../benches/README.md` when present.
 pub fn run_lint(root: &Path) -> Result<LintReport> {
     let mut files = Vec::new();
     walk(root, "", &mut files)?;
@@ -127,25 +190,109 @@ pub fn run_lint(root: &Path) -> Result<LintReport> {
     let mut findings = Vec::new();
     let mut allows_used = 0usize;
     let mut hits = Vec::new();
+    let mut files_scanned = 0usize;
+    let mut indexed = Vec::new();
     for (path, rel) in &files {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
-        let s = scan::scan_source(rel, &text);
-        findings.extend(s.findings);
-        allows_used += s.allows_used;
-        hits.extend(s.hits);
+        let fi = index::FileIndex::build(rel, &text);
+        if !is_lint_source(rel) {
+            files_scanned += 1;
+            let s = scan::scan_lines(rel, &fi.lines);
+            findings.extend(s.findings);
+            allows_used += s.allows_used;
+            hits.extend(s.hits);
+        }
+        indexed.push(fi);
     }
     findings.extend(
         scan::coverage_findings(crate::util::faults::ALL_POINTS, &hits));
+
+    // tier 2: graph + contracts over the full index (lint/ included)
+    let repo = index::RepoIndex { files: indexed };
+    let (module_graph, gf, ga) = graph::check(&repo);
+    findings.extend(gf);
+    allows_used += ga;
+    let (cf, ca, config_fields_checked) =
+        contracts::check_config_fingerprint(&repo);
+    findings.extend(cf);
+    allows_used += ca;
+    let (hf, ha, help_flags) = contracts::check_cli_help(&repo);
+    findings.extend(hf);
+    allows_used += ha;
+    let readme = root.parent()
+        .map(|p| p.join("benches").join("README.md"))
+        .and_then(|p| std::fs::read_to_string(p).ok());
+    let (sf, sa, schema_columns) =
+        contracts::check_schema(&repo, readme.as_deref());
+    findings.extend(sf);
+    allows_used += sa;
 
     findings.sort_by(|a, b| {
         (a.severity, a.lint, &a.file, a.line)
             .cmp(&(b.severity, b.lint, &b.file, b.line))
     });
-    Ok(LintReport { findings, files_scanned: files.len(), allows_used })
+    let tier2 = Tier2Stats {
+        modules: module_graph.layers.len(),
+        edges: module_graph.edges.len(),
+        config_fields_checked,
+        help_flags,
+        schema_columns,
+    };
+    Ok(LintReport { findings, files_scanned, allows_used,
+                    graph: module_graph, tier2 })
 }
 
-/// `mft lint [--root DIR] [--deny] [--json FILE]`.
+/// Apply `--only` / `--skip` lint-name filters.  Names are validated
+/// against the full catalog namespace; an unknown name is an error,
+/// not a silent no-op.
+pub fn filter_only_skip(report: &mut LintReport, only: Option<&str>,
+                        skip: Option<&str>) -> Result<()> {
+    let names = catalog::all_lint_names();
+    let parse = |list: &str| -> Result<Vec<String>> {
+        let mut v = Vec::new();
+        for n in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if !names.contains(&n) {
+                bail!("unknown lint `{n}` (known: {})", names.join(", "));
+            }
+            v.push(n.to_string());
+        }
+        Ok(v)
+    };
+    if let Some(o) = only {
+        let keep = parse(o)?;
+        report.findings.retain(|f| keep.iter().any(|k| k == f.lint));
+    }
+    if let Some(s) = skip {
+        let drop = parse(s)?;
+        report.findings.retain(|f| !drop.iter().any(|k| k == f.lint));
+    }
+    Ok(())
+}
+
+/// Baseline mode: drop findings already present in a prior report
+/// (matched on (lint, file, snippet) — line numbers shift too easily
+/// to key on).  What remains is the *new* debt.
+pub fn apply_baseline(report: &mut LintReport, prior: &Json) {
+    let mut seen: std::collections::BTreeSet<(String, String, String)> =
+        Default::default();
+    if let Ok(arr) = prior.req("findings").and_then(|f| f.as_arr()) {
+        for f in arr {
+            let get = |k: &str| {
+                f.req(k).and_then(|v| v.as_str().map(String::from))
+                    .unwrap_or_default()
+            };
+            seen.insert((get("lint"), get("file"), get("snippet")));
+        }
+    }
+    report.findings.retain(|f| {
+        !seen.contains(&(f.lint.to_string(), f.file.clone(),
+                         f.snippet.clone()))
+    });
+}
+
+/// `mft lint [--root DIR] [--deny] [--json FILE] [--only A,B]
+/// [--skip A,B] [--baseline FILE] [--graph FILE] [--graph-json FILE]`.
 pub fn cmd_lint(args: &Args) -> Result<()> {
     let root = match args.get("root") {
         Some(r) => PathBuf::from(r),
@@ -159,11 +306,21 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
                 PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
             }),
     };
-    let report = run_lint(&root).context("lint scan")?;
+    let mut report = run_lint(&root).context("lint scan")?;
+    filter_only_skip(&mut report, args.get("only"), args.get("skip"))?;
+    if let Some(p) = args.get("baseline") {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("read baseline {p}"))?;
+        let prior = Json::parse(&text)
+            .with_context(|| format!("parse baseline {p}"))?;
+        apply_baseline(&mut report, &prior);
+    }
 
-    eprintln!("mft lint: {} files scanned, {} finding(s), {} allow(s) used",
+    eprintln!("mft lint: {} files scanned, {} finding(s), {} allow(s) \
+               used; graph: {} modules, {} edges",
               report.files_scanned, report.findings.len(),
-              report.allows_used);
+              report.allows_used, report.tier2.modules,
+              report.tier2.edges);
     for f in &report.findings {
         if f.line > 0 {
             eprintln!("  [{}] {}:{}: {}", f.lint, f.file, f.line, f.snippet);
@@ -171,6 +328,16 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
             eprintln!("  [{}] {}: {}", f.lint, f.file, f.snippet);
         }
         eprintln!("      hint: {}", f.hint);
+    }
+
+    if let Some(p) = args.get("graph-json") {
+        write_atomic(Path::new(p),
+                     report.graph.to_json().to_string().as_bytes())
+            .with_context(|| format!("write {p}"))?;
+    }
+    if let Some(p) = args.get("graph") {
+        write_atomic(Path::new(p), report.graph.to_dot().as_bytes())
+            .with_context(|| format!("write {p}"))?;
     }
 
     let json = report.to_json();
@@ -212,6 +379,10 @@ mod tests {
             .collect()
     }
 
+    fn lint_names(r: &LintReport) -> Vec<&'static str> {
+        r.findings.iter().map(|f| f.lint).collect()
+    }
+
     #[test]
     fn run_lint_aggregates_ranks_and_skips_lint_dir() {
         let driver = format!("use std::collections::HashMap;\n\
@@ -221,14 +392,13 @@ mod tests {
             ("fleet/driver.rs", driver.as_str()),
             // severity 1, must rank after the severity-0 hash finding
             ("fleet/model.rs", "pub fn f() { x.unwrap(); }\n"),
-            // the linter's own sources are exempt
+            // the linter's own sources are exempt from needle scanning
             ("lint/catalog.rs", "pub const N: &str = \"HashMap\";\n"),
             ("clean.rs", "pub fn ok() {}\n"),
         ]);
         let r = run_lint(&root).unwrap();
-        assert_eq!(r.files_scanned, 3, "lint/ must be excluded");
-        let lints: Vec<_> = r.findings.iter().map(|f| f.lint).collect();
-        assert_eq!(lints, vec!["det-hash-iter", "robust-unwrap"]);
+        assert_eq!(r.files_scanned, 3, "lint/ must not be needle-scanned");
+        assert_eq!(lint_names(&r), vec!["det-hash-iter", "robust-unwrap"]);
         assert_eq!(r.findings[0].file, "fleet/driver.rs");
         std::fs::remove_dir_all(&root).unwrap();
     }
@@ -248,9 +418,18 @@ mod tests {
         assert_eq!(fs.len(), 1);
         assert_eq!(fs[0].req("lint").unwrap().as_str().unwrap(),
                    "det-wall-clock");
+        assert_eq!(fs[0].req("tier").unwrap().as_usize().unwrap(), 1);
         assert_eq!(fs[0].req("file").unwrap().as_str().unwrap(),
                    "exp/run.rs");
         assert_eq!(fs[0].req("line").unwrap().as_usize().unwrap(), 1);
+        // per-lint summary carries count + tier; tier totals present
+        let by = j.req("by_lint").unwrap();
+        let dw = by.req("det-wall-clock").unwrap();
+        assert_eq!(dw.req("count").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(dw.req("tier").unwrap().as_usize().unwrap(), 1);
+        let tiers = j.req("tiers").unwrap();
+        assert_eq!(tiers.req("1").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(tiers.req("2").unwrap().as_usize().unwrap(), 0);
         std::fs::remove_dir_all(&root).unwrap();
     }
 
@@ -264,6 +443,241 @@ mod tests {
             .filter(|f| f.lint == "cover-failpoint-routed")
             .count();
         assert_eq!(n_routed, crate::util::faults::ALL_POINTS.len());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    // -- tier-2 acceptance fixtures: each seeded violation produces --
+    // -- exactly one ranked finding; an inline allow suppresses it  --
+
+    const FIX_LIB: &str = "//! mft-lint layers\n\
+                           //!   0: util\n\
+                           //!   1: metrics\n\
+                           //!   2: fleet\n\
+                           pub mod util;\n";
+
+    #[test]
+    fn tier2_upward_edge_fixture() {
+        let driver = format!("pub fn go() -> anyhow::Result<()> {{\n\
+                              {}    Ok(())\n}}\n", routed_hits());
+        let up = "use crate::fleet::go;\n";
+        let root = tmp_tree("t2up", &[
+            ("lib.rs", FIX_LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("metrics/mod.rs", up),
+            ("fleet/driver.rs", driver.as_str()),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert_eq!(lint_names(&r), vec!["arch-layering"], "{:?}", r.findings);
+        assert_eq!(r.findings[0].tier, 2);
+        assert_eq!(r.findings[0].file, "metrics/mod.rs");
+        std::fs::remove_dir_all(&root).unwrap();
+
+        let allowed = format!(
+            "// mft-lint: allow(arch-layering) -- transitional\n{up}");
+        let root = tmp_tree("t2up", &[
+            ("lib.rs", FIX_LIB),
+            ("util/mod.rs", "pub fn u() {}\n"),
+            ("metrics/mod.rs", allowed.as_str()),
+            ("fleet/driver.rs", driver.as_str()),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.allows_used, 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn tier2_unfingerprinted_config_field_fixture() {
+        let cfg = "pub struct FleetConfig {\n\
+                   \x20   pub rounds: usize,\n\
+                   \x20   pub seed: u64,\n\
+                   }\n";
+        let driver = format!(
+            "pub const NON_FINGERPRINTED: &[&str] = &[\"rounds\"];\n\
+             fn config_fingerprint(cfg: &FleetConfig) -> String {{\n\
+             \x20   let mut field = |n: &str, v: String| {{}};\n\
+             \x20   String::new()\n\
+             }}\n\
+             pub fn go() -> anyhow::Result<()> {{\n{}    Ok(())\n}}\n",
+            routed_hits());
+        let root = tmp_tree("t2fp", &[
+            ("fleet/mod.rs", cfg),
+            ("fleet/driver.rs", driver.as_str()),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert_eq!(lint_names(&r), vec!["contract-config-fingerprint"],
+                   "{:?}", r.findings);
+        assert!(r.findings[0].snippet.contains("`seed`"));
+        assert_eq!(r.tier2.config_fields_checked, 2);
+        std::fs::remove_dir_all(&root).unwrap();
+
+        let cfg_allowed =
+            "pub struct FleetConfig {\n\
+             \x20   pub rounds: usize,\n\
+             \x20   // mft-lint: allow(contract-config-fingerprint) -- x\n\
+             \x20   pub seed: u64,\n\
+             }\n";
+        let root = tmp_tree("t2fp", &[
+            ("fleet/mod.rs", cfg_allowed),
+            ("fleet/driver.rs", driver.as_str()),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn tier2_undocumented_flag_fixture() {
+        let help = "fn print_help() {\n\
+                    \x20   eprintln!(\"mft fleet --rounds N\");\n\
+                    }\n";
+        let driver = format!(
+            "pub fn go(args: &Args) -> anyhow::Result<()> {{\n\
+             \x20   let _r = args.get_parse(\"rounds\", 1usize)?;\n\
+             \x20   let _m = args.get(\"mystery\");\n\
+             {}    Ok(())\n}}\n", routed_hits());
+        let root = tmp_tree("t2help", &[
+            ("cli/mod.rs", help),
+            ("fleet/driver.rs", driver.as_str()),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert_eq!(lint_names(&r), vec!["contract-cli-help"],
+                   "{:?}", r.findings);
+        assert!(r.findings[0].snippet.contains("--mystery"));
+        assert_eq!(r.tier2.help_flags, 1);
+        std::fs::remove_dir_all(&root).unwrap();
+
+        let allowed = driver.replace(
+            "    let _m = args.get(\"mystery\");",
+            "    // mft-lint: allow(contract-cli-help) -- internal knob\n\
+             \x20   let _m = args.get(\"mystery\");");
+        let root = tmp_tree("t2help", &[
+            ("cli/mod.rs", help),
+            ("fleet/driver.rs", allowed.as_str()),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn tier2_undocumented_schema_field_fixture() {
+        let record = format!(
+            "pub struct RoundRecord {{\n\
+             \x20   pub round: usize,\n\
+             \x20   pub time_s: f64,\n\
+             }}\n\
+             impl RoundRecord {{\n\
+             \x20   pub fn to_json(&self) {{ \
+                        let _ = (\"round\", \"time_s\"); }}\n\
+             \x20   pub fn from_json(&self) {{ \
+                        let _ = (\"round\", \"time_s\"); }}\n\
+             }}\n\
+             pub fn flush() -> anyhow::Result<()> {{\n{}    Ok(())\n}}\n",
+            routed_hits());
+        let readme = "<!-- rounds-schema:begin -->\n\
+                      | `round` | index |\n\
+                      <!-- rounds-schema:end -->\n";
+        // README lives next to src/, as benches/README.md does
+        let base = tmp_tree("t2schema", &[
+            ("src/metrics/mod.rs", record.as_str()),
+            ("benches/README.md", readme),
+        ]);
+        let r = run_lint(&base.join("src")).unwrap();
+        assert_eq!(lint_names(&r), vec!["contract-schema"],
+                   "{:?}", r.findings);
+        assert!(r.findings[0].snippet.contains("`time_s`"));
+        assert_eq!(r.tier2.schema_columns, 1);
+        std::fs::remove_dir_all(&base).unwrap();
+
+        let allowed = record.replace(
+            "    pub time_s: f64,",
+            "    // mft-lint: allow(contract-schema) -- internal column\n\
+             \x20   pub time_s: f64,");
+        let base = tmp_tree("t2schema", &[
+            ("src/metrics/mod.rs", allowed.as_str()),
+            ("benches/README.md", readme),
+        ]);
+        let r = run_lint(&base.join("src")).unwrap();
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn tier2_interior_mut_fixture() {
+        let driver = format!(
+            "use std::cell::RefCell;\n\
+             pub fn go() -> anyhow::Result<()> {{\n{}    Ok(())\n}}\n",
+            routed_hits());
+        let root = tmp_tree("t2mut", &[("fleet/driver.rs", driver.as_str())]);
+        let r = run_lint(&root).unwrap();
+        assert_eq!(lint_names(&r), vec!["det-interior-mut"],
+                   "{:?}", r.findings);
+        assert_eq!(r.findings[0].tier, 2);
+        std::fs::remove_dir_all(&root).unwrap();
+
+        let allowed = format!(
+            "// mft-lint: allow(det-interior-mut) -- scoped scratch\n\
+             use std::cell::RefCell;\n\
+             pub fn go() -> anyhow::Result<()> {{\n{}    Ok(())\n}}\n",
+            routed_hits());
+        let root = tmp_tree("t2mut", &[("fleet/driver.rs", allowed.as_str())]);
+        let r = run_lint(&root).unwrap();
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    // -- report filters ----------------------------------------------
+
+    fn two_finding_report() -> (LintReport, PathBuf) {
+        let driver = format!("use std::collections::HashMap;\n\
+                              pub fn go() -> anyhow::Result<()> {{\n\
+                              {}    Ok(())\n}}\n", routed_hits());
+        let root = tmp_tree("filt", &[
+            ("fleet/driver.rs", driver.as_str()),
+            ("fleet/model.rs", "pub fn f() { x.unwrap(); }\n"),
+        ]);
+        (run_lint(&root).unwrap(), root)
+    }
+
+    #[test]
+    fn only_and_skip_filter_findings() {
+        let (mut r, root) = two_finding_report();
+        filter_only_skip(&mut r, Some("robust-unwrap"), None).unwrap();
+        assert_eq!(lint_names(&r), vec!["robust-unwrap"]);
+        let (mut r, _) = two_finding_report();
+        filter_only_skip(&mut r, None, Some("robust-unwrap")).unwrap();
+        assert_eq!(lint_names(&r), vec!["det-hash-iter"]);
+        let (mut r, _) = two_finding_report();
+        assert!(filter_only_skip(&mut r, Some("no-such-lint"), None)
+            .is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn baseline_suppresses_prior_findings() {
+        let (mut r, root) = two_finding_report();
+        // baseline = the same report: everything is prior debt
+        let prior = Json::parse(&r.to_json().to_string()).unwrap();
+        apply_baseline(&mut r, &prior);
+        assert!(r.findings.is_empty());
+        // a baseline missing one finding leaves exactly that one
+        let (mut r2, _) = two_finding_report();
+        let mut pruned = Json::parse(&prior.to_string()).unwrap();
+        if let Json::Obj(pairs) = &mut pruned {
+            for (k, v) in pairs {
+                if k == "findings" {
+                    if let Json::Arr(a) = v {
+                        a.retain(|f| {
+                            f.req("lint").unwrap().as_str().unwrap()
+                                != "robust-unwrap"
+                        });
+                    }
+                }
+            }
+        }
+        apply_baseline(&mut r2, &pruned);
+        assert_eq!(lint_names(&r2), vec!["robust-unwrap"]);
         std::fs::remove_dir_all(&root).unwrap();
     }
 }

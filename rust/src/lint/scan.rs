@@ -26,6 +26,101 @@
 use super::catalog::{COVER_ROUTED, COVER_UNKNOWN, CATALOG};
 use super::Finding;
 
+/// One source line after blanking and test/allow resolution — the
+/// token stream the needle lints *and* the tier-2 indexer
+/// ([`super::index`]) both consume, so the two tiers can never disagree
+/// about what is code and what is prose.
+pub struct LineInfo {
+    /// 1-based
+    pub lineno: usize,
+    pub raw: String,
+    /// string contents and comments replaced by spaces
+    pub blanked: String,
+    /// inside (or pending entry into) a `#[cfg(test)]` module — the
+    /// flag `faults::hit` collection uses
+    pub hit_in_test: bool,
+    /// skipped by the scanner: test-module body, the pending attribute
+    /// gap, or the `#[cfg(test)]` line itself
+    pub skip: bool,
+    /// the blanked line has non-whitespace (only meaningful when not
+    /// skipped)
+    pub has_code: bool,
+    /// `mft-lint: allow(name)` annotations in force for this code line
+    /// (its own plus any attached from preceding comment-only lines)
+    pub allows: Vec<String>,
+}
+
+/// Run the blanker + test-skip + allow state machines over a whole
+/// file, producing per-line facts.  This is pass 1+2 of the scanner,
+/// shared with the tier-2 indexer.
+pub fn blank_lines(text: &str) -> Vec<LineInfo> {
+    let mut blanker = Blanker::new();
+    let mut out = Vec::new();
+
+    // allows from preceding comment-only lines, waiting for a code line
+    let mut pending_allows: Vec<String> = Vec::new();
+    // #[cfg(test)] skipping
+    let mut test_pending = false;
+    let mut in_test = false;
+    let mut test_depth = 0i64;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let (blanked, comment) = blanker.blank_line(raw);
+        let hit_in_test = in_test || test_pending;
+        let mut li = LineInfo {
+            lineno: idx + 1,
+            raw: raw.to_string(),
+            blanked,
+            hit_in_test,
+            skip: true,
+            has_code: false,
+            allows: Vec::new(),
+        };
+
+        if in_test {
+            test_depth += brace_delta(&li.blanked);
+            if test_depth <= 0 {
+                in_test = false;
+            }
+            out.push(li);
+            continue;
+        }
+        if test_pending {
+            let d = brace_delta(&li.blanked);
+            if d > 0 {
+                in_test = true;
+                test_depth = d;
+                test_pending = false;
+            } else if !li.blanked.trim().is_empty() && d < 0 {
+                // defensive: attribute orphaned by a close brace
+                test_pending = false;
+            }
+            out.push(li);
+            continue;
+        }
+        if li.blanked.contains("#[cfg(test)]") {
+            test_pending = true;
+            out.push(li);
+            continue;
+        }
+
+        li.skip = false;
+        let line_allows = parse_allows(&comment);
+        li.has_code = !li.blanked.trim().is_empty();
+        if !li.has_code {
+            // comment-only or blank line: allows accumulate (reasons
+            // wrap over multiple comment lines) and wait for code
+            pending_allows.extend(line_allows);
+            out.push(li);
+            continue;
+        }
+        li.allows = std::mem::take(&mut pending_allows);
+        li.allows.extend(line_allows);
+        out.push(li);
+    }
+    out
+}
+
 /// A literal `faults::hit("point")` call site found during the scan.
 pub struct HitSite {
     pub point: String,
@@ -78,8 +173,11 @@ impl Blanker {
                         }
                         i += 2;
                     } else if b[i] == '"' {
+                        // delimiters stay visible in the blanked stream
+                        // (needles like `faults::hit("` anchor on them);
+                        // only the *contents* become spaces
                         self.str_state = StrState::None;
-                        out.push(' ');
+                        out.push('"');
                         i += 1;
                     } else {
                         out.push(' ');
@@ -136,7 +234,7 @@ impl Blanker {
             }
             if b[i] == '"' {
                 self.str_state = StrState::Normal;
-                out.push(' ');
+                out.push('"');
                 i += 1;
                 continue;
             }
@@ -227,7 +325,7 @@ fn parse_hits(raw: &str) -> Vec<String> {
     out
 }
 
-fn brace_delta(blanked: &str) -> i64 {
+pub(super) fn brace_delta(blanked: &str) -> i64 {
     let mut d = 0i64;
     for c in blanked.chars() {
         match c {
@@ -240,7 +338,7 @@ fn brace_delta(blanked: &str) -> i64 {
 }
 
 /// Trim a source line for the report (120 chars keeps the JSON sane).
-fn snippet(raw: &str) -> String {
+pub fn snippet(raw: &str) -> String {
     let t = raw.trim();
     if t.chars().count() > 120 {
         let cut: String = t.chars().take(117).collect();
@@ -250,86 +348,45 @@ fn snippet(raw: &str) -> String {
     }
 }
 
-/// Scan one file's source.  `rel` is the repo-relative path with `/`
-/// separators (scope matching is prefix-based on it).
-pub fn scan_source(rel: &str, text: &str) -> FileScan {
-    let mut blanker = Blanker::new();
+/// Scan one file's pre-blanked lines (pass 3: needle matching plus
+/// failpoint-literal collection).  `rel` is the repo-relative path with
+/// `/` separators (scope matching is prefix-based on it).
+pub fn scan_lines(rel: &str, lines: &[LineInfo]) -> FileScan {
     let mut findings = Vec::new();
     let mut allows_used = 0usize;
     let mut hits = Vec::new();
 
-    // allows from preceding comment-only lines, waiting for a code line
-    let mut pending_allows: Vec<String> = Vec::new();
-    // #[cfg(test)] skipping
-    let mut test_pending = false;
-    let mut in_test = false;
-    let mut test_depth = 0i64;
-
     let applicable: Vec<_> =
         CATALOG.iter().filter(|l| l.scope.applies(rel)).collect();
 
-    for (idx, raw) in text.lines().enumerate() {
-        let lineno = idx + 1;
-        let (blanked, comment) = blanker.blank_line(raw);
-
-        if blanked.contains("faults::hit(\"") {
-            for point in parse_hits(raw) {
+    for li in lines {
+        if li.blanked.contains("faults::hit(\"") {
+            for point in parse_hits(&li.raw) {
                 hits.push(HitSite {
                     point,
                     file: rel.to_string(),
-                    line: lineno,
-                    in_test: in_test || test_pending,
+                    line: li.lineno,
+                    in_test: li.hit_in_test,
                 });
             }
         }
-
-        if in_test {
-            test_depth += brace_delta(&blanked);
-            if test_depth <= 0 {
-                in_test = false;
-            }
+        if li.skip || !li.has_code {
             continue;
         }
-        if test_pending {
-            let d = brace_delta(&blanked);
-            if d > 0 {
-                in_test = true;
-                test_depth = d;
-                test_pending = false;
-            } else if !blanked.trim().is_empty() && d < 0 {
-                // defensive: attribute orphaned by a close brace
-                test_pending = false;
-            }
-            continue;
-        }
-        if blanked.contains("#[cfg(test)]") {
-            test_pending = true;
-            continue;
-        }
-
-        let line_allows = parse_allows(&comment);
-        let has_code = !blanked.trim().is_empty();
-        if !has_code {
-            // comment-only or blank line: allows accumulate (reasons
-            // wrap over multiple comment lines) and wait for code
-            pending_allows.extend(line_allows);
-            continue;
-        }
-        let mut active = std::mem::take(&mut pending_allows);
-        active.extend(line_allows);
 
         for lint in &applicable {
-            if lint.needles.iter().any(|n| blanked.contains(n)) {
-                if active.iter().any(|a| a == lint.name) {
+            if lint.needles.iter().any(|n| li.blanked.contains(n)) {
+                if li.allows.iter().any(|a| a == lint.name) {
                     allows_used += 1;
                 } else {
                     findings.push(Finding {
                         lint: lint.name,
                         class: lint.class,
                         severity: lint.severity,
+                        tier: lint.tier,
                         file: rel.to_string(),
-                        line: lineno,
-                        snippet: snippet(raw),
+                        line: li.lineno,
+                        snippet: snippet(&li.raw),
                         hint: lint.hint,
                     });
                 }
@@ -338,6 +395,11 @@ pub fn scan_source(rel: &str, text: &str) -> FileScan {
     }
 
     FileScan { findings, allows_used, hits }
+}
+
+/// Blank + scan one file's source in one call (fixture tests use this).
+pub fn scan_source(rel: &str, text: &str) -> FileScan {
+    scan_lines(rel, &blank_lines(text))
 }
 
 /// Cross-check the failpoint registry against the collected hit sites:
@@ -352,6 +414,7 @@ pub fn coverage_findings(points: &[&str], hits: &[HitSite]) -> Vec<Finding> {
                 lint: COVER_ROUTED,
                 class: "coverage",
                 severity: 0,
+                tier: 1,
                 file: "util/faults.rs".to_string(),
                 line: 0,
                 snippet: format!(
@@ -370,6 +433,7 @@ pub fn coverage_findings(points: &[&str], hits: &[HitSite]) -> Vec<Finding> {
                 lint: COVER_UNKNOWN,
                 class: "coverage",
                 severity: 0,
+                tier: 1,
                 file: h.file.clone(),
                 line: h.line,
                 snippet: format!("faults::hit(\"{}\")", h.point),
@@ -473,6 +537,29 @@ mod tests {
         // unwrap_or is not a panic
         assert_eq!(lints("fleet/model.rs", "m.get(k).unwrap_or(&0);\n"),
                    vec![]);
+    }
+
+    #[test]
+    fn det_interior_mut_fire_scope_and_allow() {
+        assert_eq!(lints("fleet/client.rs", "use std::cell::RefCell;\n"),
+                   vec![("det-interior-mut", 1)]);
+        assert_eq!(lints("train/trainer.rs",
+                         "static N: AtomicUsize = AtomicUsize::new(0);\n"),
+                   vec![("det-interior-mut", 1)]);
+        assert_eq!(lints("data/loader.rs", "let m = Mutex::new(0);\n"),
+                   vec![("det-interior-mut", 1)]);
+        // the sanctioned homes of interior mutability are exempt
+        assert_eq!(lints("util/pool.rs", "use std::sync::atomic::AtomicUsize;\n"),
+                   vec![]);
+        assert_eq!(lints("util/clock.rs", "use std::cell::RefCell;\n"), vec![]);
+        assert_eq!(lints("runtime/engine.rs", "cache: RefCell<u8>,\n"), vec![]);
+        assert_eq!(lints("obs/prof.rs", "inner: RefCell<u8>,\n"), vec![]);
+        let allowed =
+            "// mft-lint: allow(det-interior-mut) -- single-threaded scratch\n\
+             let c: Cell<u8> = Cell::new(0);\n";
+        let s = scan_source("fleet/model.rs", allowed);
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        assert_eq!(s.allows_used, 1);
     }
 
     // -- scanner mechanics -------------------------------------------

@@ -31,7 +31,7 @@ use anyhow::{bail, Context, Result};
 pub use prof::Prof;
 pub use trace::{validate_chrome_trace, TraceBuf, TraceEvent, TraceSink};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::util::json::Json;
 
 /// `mft trace SUBCOMMAND` dispatcher.

@@ -1,0 +1,163 @@
+//! Flag parsing: the `--flag value` / `--flag=value` argument model
+//! every `mft` subcommand shares.
+//!
+//! This lives in `util` (layer 0), not `cli/`, on purpose: every
+//! subsystem that accepts flags — `fleet`, `obs`, `bench`, `viz`,
+//! `agent`, `exp`, `lint` — parses its own, and the layer contract
+//! (`lib.rs` layer map, enforced by `mft lint` arch-layering) forbids
+//! them from reaching *up* into the application layer for the parser.
+//! `cli/` re-exports these names, so the application-layer spelling
+//! (`cli::Args`) still works at the top.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+/// Flags that take *two* space-separated operands (e.g. `--link-regime
+/// P_BAD FACTOR`); the parser joins them into one space-separated value
+/// so the generic `(name, value)` flag shape holds.  `--flag=a,b` works
+/// too — consumers split on comma or whitespace.
+const TWO_VALUE_FLAGS: &[&str] = &["link-regime"];
+
+pub struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it: VecDeque<String> = argv.into_iter().collect();
+        while let Some(a) = it.pop_front() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else {
+                    // boolean or valued flag: peek
+                    let takes_value = it
+                        .front()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let mut v = it.pop_front().unwrap_or_default();
+                        if TWO_VALUE_FLAGS.contains(&name) {
+                            let second = it
+                                .front()
+                                .map(|n| !n.starts_with("--"))
+                                .unwrap_or(false);
+                            if second {
+                                v.push(' ');
+                                v.push_str(&it.pop_front()
+                                    .unwrap_or_default());
+                            }
+                        }
+                        flags.push((name.to_string(), Some(v)));
+                    } else {
+                        flags.push((name.to_string(), None));
+                    }
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T)
+                                           -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+/// Where run artifacts land: `--artifacts DIR`, else `MFT_ARTIFACTS`,
+/// else `./artifacts`.
+pub fn artifact_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        // mft-lint: allow(det-env-config) -- artifact *location* only;
+        // the bytes written there are the same wherever they land
+        .or_else(|| std::env::var("MFT_ARTIFACTS").ok().map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let a = args("train --model gpt2-nano --steps 5 --shard --lr 0.001");
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.get("model"), Some("gpt2-nano"));
+        assert!(a.has("shard"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 5);
+        assert_eq!(a.get_parse("lr", 0.0f32).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn eq_form_flags() {
+        let a = args("exp --out=/tmp/x --steps=7");
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = args("train --steps 3 --steps 9");
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 9);
+    }
+
+    #[test]
+    fn two_value_flags_collect_both_operands() {
+        // --link-regime P_BAD FACTOR: the second operand must not leak
+        // into the positionals
+        let a = args("fleet --link-regime 0.3 0.2 --rounds 4");
+        assert_eq!(a.get("link-regime"), Some("0.3 0.2"));
+        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 4);
+        assert_eq!(a.pos(0), Some("fleet"));
+        assert_eq!(a.pos(1), None, "operand leaked into positionals");
+        // = form with a comma still works
+        let a = args("fleet --link-regime=0.3,0.2");
+        assert_eq!(a.get("link-regime"), Some("0.3,0.2"));
+        // a lone operand followed by another flag stays a single value
+        let a = args("fleet --link-regime 0.3 --rounds 4");
+        assert_eq!(a.get("link-regime"), Some("0.3"));
+        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 4);
+    }
+
+    #[test]
+    fn artifact_dir_flag_beats_default() {
+        let a = args("train --artifacts /tmp/arts");
+        assert_eq!(artifact_dir(&a), PathBuf::from("/tmp/arts"));
+    }
+}

@@ -1,7 +1,8 @@
 //! Shared substrate: JSON, seeded RNG, virtual clock, deterministic
 //! thread pool, failpoint injection, atomic file replacement, CRC32,
-//! small helpers.
+//! flag parsing, small helpers.
 
+pub mod args;
 pub mod clock;
 pub mod crc;
 pub mod faults;

@@ -14,7 +14,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::cli::Args;
+use crate::util::args::Args;
 use crate::metrics::{read_rounds, read_steps, read_summary, RoundRecord,
                      StepRecord};
 use crate::util::json::Json;

@@ -230,10 +230,15 @@ fn print_help() {
                      cross-file analysis (module-graph layering against\n\
                      the lib.rs layer map, FleetConfig vs\n\
                      config_fingerprint, flag vs help text, RoundRecord\n\
-                     vs rounds.jsonl schema docs), with inline\n\
+                     vs rounds.jsonl schema docs) + tier 3 dimensional\n\
+                     analysis (unit suffixes: seconds/bytes/joules/…,\n\
+                     expression-level mismatch checks, ledger\n\
+                     conservation vs summary totals and the trace test,\n\
+                     unused-allow reconciliation), with inline\n\
                      `mft-lint: allow(name) -- reason` escapes\n\
                      --deny (exit nonzero on any finding — the CI leg)\n\
                      --json FILE (write the ranked report)\n\
+                     --sarif FILE (write a SARIF 2.1.0 export)\n\
                      --root DIR (source tree; default rust/src)\n\
                      --only A,B / --skip A,B (restrict by lint name)\n\
                      --baseline FILE (report only findings absent from\n\

@@ -289,14 +289,14 @@ impl FleetClient {
                            -> f64 {
         let step_s = (cfg.micro_batch * cfg.window) as f64
             * cfg.flops_per_token / (self.device.cpu_gflops * 1e9);
-        let mut t = 0.0;
+        let mut t_s = 0.0;
         for _ in 0..cfg.local_steps {
-            t += step_s;
+            t_s += step_s;
         }
         if cfg.transport {
-            t += self.link.upload_s(adapter_bytes);
+            t_s += self.link.upload_s(adapter_bytes);
         }
-        t
+        t_s
     }
 
     /// What the `bandwidth` selection policy compares against the
@@ -310,20 +310,20 @@ impl FleetClient {
     /// predictably infeasible, not all risk.
     pub fn estimate_round_s(&self, cfg: &FleetConfig, adapter_bytes: u64)
                             -> f64 {
-        let mut t = self.nominal_round_s(cfg, adapter_bytes);
+        let mut t_s = self.nominal_round_s(cfg, adapter_bytes);
         if cfg.transport {
             let backlog = self.pending_total_bytes();
             if backlog > 0 {
-                t += self.link.upload_s(backlog);
+                t_s += self.link.upload_s(backlog);
             }
             if let Some(r) = &cfg.link_regime {
                 if self.link_bad {
-                    let up = self.link.upload_s(adapter_bytes + backlog);
-                    t += up * (1.0 / r.factor - 1.0);
+                    let up_s = self.link.upload_s(adapter_bytes + backlog);
+                    t_s += up_s * (1.0 / r.factor - 1.0);
                 }
             }
         }
-        t
+        t_s
     }
 
     /// Bytes still owed to the link across the whole upload queue — the
@@ -358,34 +358,36 @@ impl FleetClient {
     /// aggregator can still use it.
     pub fn evict_stale(&mut self, round: usize, keep_rounds: usize)
                        -> (u64, u64) {
-        let mut dropped = 0u64;
-        let mut transmitted = 0u64;
+        let mut dropped_bytes = 0u64;
+        let mut transmitted_bytes = 0u64;
         let mut max_age = 0u64;
         self.pending_up.retain(|b| {
-            let age = round.saturating_sub(b.origin_round);
-            let stale = age > keep_rounds;
+            let age_rounds = round.saturating_sub(b.origin_round);
+            let stale = age_rounds > keep_rounds;
             if stale {
-                dropped += b.bytes_left;
-                transmitted += b.total_bytes - b.bytes_left;
-                max_age = max_age.max(age as u64);
+                dropped_bytes += b.bytes_left;
+                transmitted_bytes += b.total_bytes - b.bytes_left;
+                max_age = max_age.max(age_rounds as u64);
             }
             !stale
         });
-        if (dropped > 0 || transmitted > 0) && self.trace.is_some() {
+        if (dropped_bytes > 0 || transmitted_bytes > 0)
+            && self.trace.is_some()
+        {
             let ev = TraceEvent {
                 name: "evict_stale",
                 round: round as u64,
                 client: Some(self.id),
                 t0_s: self.clock.now_s(),
-                bytes: dropped,
-                bytes_aux: transmitted,
+                bytes: dropped_bytes,
+                bytes_aux: transmitted_bytes,
                 battery: self.battery.level_frac(),
                 age: max_age,
                 ..TraceEvent::default()
             };
             self.tr(ev);
         }
-        (dropped, transmitted)
+        (dropped_bytes, transmitted_bytes)
     }
 
     /// Advance the correlated-outage chain by one round (one `net_rng`
@@ -478,11 +480,12 @@ impl FleetClient {
     pub fn sample_status(&mut self, cfg: &FleetConfig, adapter_bytes: u64)
                          -> ClientStatus {
         let bg = self.bg_rng.range_f64(0.2, 0.95);
-        let free = ((1.0 - bg) * self.device.ram_budget_bytes as f64) as u64;
+        let free_bytes =
+            ((1.0 - bg) * self.device.ram_budget_bytes as f64) as u64;
         ClientStatus {
             id: self.id,
             battery_frac: self.battery.level_frac(),
-            free_ram_bytes: free,
+            free_ram_bytes: free_bytes,
             est_round_s: self.estimate_round_s(cfg, adapter_bytes),
         }
     }
@@ -583,34 +586,35 @@ impl FleetClient {
         // battery but not the deadline-relevant time_s)
         let mut download_s = 0.0f64;
         let mut bytes_down = 0u64;
-        let mut transfer_energy = 0.0f64;
+        let mut transfer_j = 0.0f64;
         if cfg.transport {
-            let t_dl0 = self.clock.now_s();
-            let needed = link.download_s(adapter_bytes);
-            let limit = self.battery.seconds_until_empty(link.p_radio);
-            if limit < needed {
+            let t_dl0_s = self.clock.now_s();
+            let needed_s = link.download_s(adapter_bytes);
+            let limit_s = self.battery.seconds_until_empty(link.p_radio);
+            if limit_s < needed_s {
                 // died mid-download: only the seconds and bytes that
                 // really happened are charged (the old model drained the
                 // full transfer from an already-flat battery and
                 // reported zero radio bytes)
-                self.clock.sleep(limit);
-                let e = self.battery.drain_with(limit, link.p_radio);
+                self.clock.sleep(limit_s);
+                let spent_j = self.battery.drain_with(limit_s, link.p_radio);
                 self.battery.set_level_frac(0.0);
                 let mut u = ClientUpdate::failed(self.id,
                                                  ClientFailure::BatteryDead);
-                u.download_s = limit;
-                u.bytes_down = partial_bytes(adapter_bytes, limit, needed);
-                u.energy_j = e;
+                u.download_s = limit_s;
+                u.bytes_down = partial_bytes(adapter_bytes, limit_s,
+                                             needed_s);
+                u.energy_j = spent_j;
                 u.link_silent = true;
                 if self.trace.is_some() {
                     let ev = TraceEvent {
                         name: "broadcast",
                         round: round as u64,
                         client: Some(self.id),
-                        t0_s: t_dl0,
-                        dur_s: limit,
+                        t0_s: t_dl0_s,
+                        dur_s: limit_s,
                         bytes: u.bytes_down,
-                        energy_j: e,
+                        energy_j: spent_j,
                         battery: 0.0,
                         ..TraceEvent::default()
                     };
@@ -618,19 +622,19 @@ impl FleetClient {
                 }
                 return Ok(u);
             }
-            download_s = needed;
+            download_s = needed_s;
             bytes_down = adapter_bytes;
-            self.clock.sleep(needed);
-            transfer_energy += self.battery.drain_with(needed, link.p_radio);
+            self.clock.sleep(needed_s);
+            transfer_j += self.battery.drain_with(needed_s, link.p_radio);
             if self.trace.is_some() {
                 let ev = TraceEvent {
                     name: "broadcast",
                     round: round as u64,
                     client: Some(self.id),
-                    t0_s: t_dl0,
-                    dur_s: needed,
+                    t0_s: t_dl0_s,
+                    dur_s: needed_s,
                     bytes: adapter_bytes,
-                    energy_j: transfer_energy,
+                    energy_j: transfer_j,
                     battery: self.battery.level_frac(),
                     ..TraceEvent::default()
                 };
@@ -641,7 +645,7 @@ impl FleetClient {
                                                  ClientFailure::BatteryDead);
                 u.download_s = download_s;
                 u.bytes_down = bytes_down;
-                u.energy_j = transfer_energy;
+                u.energy_j = transfer_j;
                 u.link_silent = true;
                 return Ok(u);
             }
@@ -650,7 +654,7 @@ impl FleetClient {
         // mismatch, mid-compute battery death) must still carry the
         // broadcast the battery already paid for — an Err that bubbled
         // straight to run_round would zero out the accounting
-        let t_lr0 = self.clock.now_s();
+        let t_lr0_s = self.clock.now_s();
         let mut u = match self
             .load_global(names, global)
             .and_then(|()| self.local_round(model, cfg))
@@ -661,7 +665,7 @@ impl FleetClient {
                     self.id, ClientFailure::Error(e.to_string()));
                 u.download_s = download_s;
                 u.bytes_down = bytes_down;
-                u.energy_j = transfer_energy;
+                u.energy_j = transfer_j;
                 return Ok(u);
             }
         };
@@ -675,7 +679,7 @@ impl FleetClient {
                 name: "local_round",
                 round: round as u64,
                 client: Some(self.id),
-                t0_s: t_lr0,
+                t0_s: t_lr0_s,
                 dur_s: u.time_s,
                 n: u.n_samples as u64,
                 energy_j: u.energy_j,
@@ -684,7 +688,7 @@ impl FleetClient {
             };
             self.tr(ev);
         }
-        u.energy_j += transfer_energy;
+        u.energy_j += transfer_j;
         if u.failure.is_some() {
             return Ok(u);
         }
@@ -704,34 +708,34 @@ impl FleetClient {
             // landed.
             let backlog = self.pending_total_bytes();
             let total = backlog + adapter_bytes;
-            let needed = link.upload_s(total);
-            let avail = (deadline_s - u.time_s).max(0.0);
-            let limit = self.battery.seconds_until_empty(link.p_radio);
-            let send_s = needed.min(avail).min(limit);
-            let t_up0 = self.clock.now_s();
+            let needed_s = link.upload_s(total);
+            let avail_s = (deadline_s - u.time_s).max(0.0);
+            let limit_s = self.battery.seconds_until_empty(link.p_radio);
+            let send_s = needed_s.min(avail_s).min(limit_s);
+            let t_up0_s = self.clock.now_s();
             self.clock.sleep(send_s);
-            let up_e = self.battery.drain_with(send_s, link.p_radio);
-            u.energy_j += up_e;
+            let up_j = self.battery.drain_with(send_s, link.p_radio);
+            u.energy_j += up_j;
             u.upload_s = send_s;
             u.time_s += send_s;
-            let sent = if send_s >= needed {
+            let sent_bytes = if send_s >= needed_s {
                 total
             } else {
-                partial_bytes(total, send_s, needed)
+                partial_bytes(total, send_s, needed_s)
             };
             // drain the queue oldest-first with the bytes that hit the
             // air; blobs that finish are delivered to the server even
             // if the client straggles or dies afterwards
-            let mut remaining = sent;
-            let mut stale_sent = 0u64;
-            while remaining > 0 {
+            let mut remaining_bytes = sent_bytes;
+            let mut stale_sent_bytes = 0u64;
+            while remaining_bytes > 0 {
                 let Some(blob) = self.pending_up.first_mut() else {
                     break;
                 };
-                let take = blob.bytes_left.min(remaining);
-                blob.bytes_left -= take;
-                remaining -= take;
-                stale_sent += take;
+                let take_bytes = blob.bytes_left.min(remaining_bytes);
+                blob.bytes_left -= take_bytes;
+                remaining_bytes -= take_bytes;
+                stale_sent_bytes += take_bytes;
                 if blob.bytes_left == 0 {
                     let b = self.pending_up.remove(0);
                     u.stale_delivered.push(StaleDelivery {
@@ -742,8 +746,8 @@ impl FleetClient {
                     });
                 }
             }
-            u.bytes_up_backlog = stale_sent;
-            u.bytes_up = sent - stale_sent;
+            u.bytes_up_backlog = stale_sent_bytes;
+            u.bytes_up = sent_bytes - stale_sent_bytes;
             // the upload leg becomes up to two spans: the backlog flush
             // (oldest-first queue drain) then the fresh delta, with the
             // leg's time/energy split pro-rata by bytes.  Emitted
@@ -753,13 +757,13 @@ impl FleetClient {
             // must never go backwards
             if self.trace.is_some() {
                 let bat = self.battery.level_frac();
-                let frac = if sent > 0 {
-                    stale_sent as f64 / sent as f64
+                let frac = if sent_bytes > 0 {
+                    stale_sent_bytes as f64 / sent_bytes as f64
                 } else {
                     0.0
                 };
-                let stale_dur = send_s * frac;
-                if stale_sent > 0 {
+                let stale_dur_s = send_s * frac;
+                if stale_sent_bytes > 0 {
                     let age = u.stale_delivered.iter()
                         .map(|sd| round.saturating_sub(sd.origin_round)
                              as u64)
@@ -769,18 +773,18 @@ impl FleetClient {
                         name: "upload_stale_flush",
                         round: round as u64,
                         client: Some(self.id),
-                        t0_s: t_up0,
-                        dur_s: stale_dur,
+                        t0_s: t_up0_s,
+                        dur_s: stale_dur_s,
                         n: u.stale_delivered.len() as u64,
-                        bytes: stale_sent,
-                        energy_j: up_e * frac,
+                        bytes: stale_sent_bytes,
+                        energy_j: up_j * frac,
                         battery: bat,
                         age,
                         ..TraceEvent::default()
                     };
                     self.tr(ev);
                 }
-                let name = if send_s < needed {
+                let name = if send_s < needed_s {
                     "upload_partial"
                 } else {
                     "upload"
@@ -789,19 +793,19 @@ impl FleetClient {
                     name,
                     round: round as u64,
                     client: Some(self.id),
-                    t0_s: t_up0 + stale_dur,
-                    dur_s: send_s - stale_dur,
+                    t0_s: t_up0_s + stale_dur_s,
+                    dur_s: send_s - stale_dur_s,
                     bytes: u.bytes_up,
-                    energy_j: up_e * (1.0 - frac),
+                    energy_j: up_j * (1.0 - frac),
                     battery: bat,
                     ..TraceEvent::default()
                 };
                 self.tr(ev);
             }
-            if send_s < needed {
+            if send_s < needed_s {
                 // interrupted mid-transfer: only the bytes that hit the
                 // air this round are accounted this round
-                if send_s >= limit {
+                if send_s >= limit_s {
                     // battery death: the round rolls back, so the fresh
                     // delta is NOT queued — a resumed blob whose
                     // training the rollback erased would deliver a
@@ -823,9 +827,9 @@ impl FleetClient {
                     // livelock fix pins.  `drop_stale_after = 0` means
                     // no stale tolerance at all: the remainder is
                     // dropped on the spot.
-                    let fresh_left = adapter_bytes - u.bytes_up;
+                    let fresh_left_bytes = adapter_bytes - u.bytes_up;
                     if cfg.drop_stale_after == 0 {
-                        u.bytes_dropped_stale += fresh_left;
+                        u.bytes_dropped_stale += fresh_left_bytes;
                         u.delta.clear();
                         if self.trace.is_some() {
                             let ev = TraceEvent {
@@ -833,7 +837,7 @@ impl FleetClient {
                                 round: round as u64,
                                 client: Some(self.id),
                                 t0_s: self.clock.now_s(),
-                                bytes: fresh_left,
+                                bytes: fresh_left_bytes,
                                 battery: self.battery.level_frac(),
                                 ..TraceEvent::default()
                             };
@@ -870,7 +874,7 @@ impl FleetClient {
                         self.pending_up.push(PendingBlob {
                             origin_round: round,
                             total_bytes: adapter_bytes,
-                            bytes_left: fresh_left,
+                            bytes_left: fresh_left_bytes,
                             n_samples: u.n_samples,
                             delta: std::mem::take(&mut u.delta),
                         });
@@ -926,8 +930,8 @@ impl FleetClient {
         let mut pairs: Vec<(u32, u32)> =
             Vec::with_capacity(cfg.micro_batch * cfg.window);
         let mut scratch = crate::fleet::model::GradScratch::default();
-        let t_start = self.clock.now_s();
-        let mut energy = 0.0f64;
+        let t_start_s = self.clock.now_s();
+        let mut energy_j = 0.0f64;
         let mut loss_sum = 0.0f64;
         let mut n_samples = 0usize;
         for _ in 0..cfg.local_steps {
@@ -967,11 +971,11 @@ impl FleetClient {
             let step_s = pairs.len() as f64 * cfg.flops_per_token
                 / (self.device.cpu_gflops * 1e9);
             self.clock.advance_work(step_s);
-            energy += self.battery.drain(step_s, 0.0);
-            let delay =
+            energy_j += self.battery.drain(step_s, 0.0);
+            let delay_s =
                 self.scheduler.after_step(&self.battery, &self.clock, step_s);
-            if delay > 0.0 {
-                energy += self.battery.drain(0.0, delay);
+            if delay_s > 0.0 {
+                energy_j += self.battery.drain(0.0, delay_s);
             }
             if self.battery.is_empty() {
                 // the device died mid-round: report the partial round as
@@ -980,12 +984,12 @@ impl FleetClient {
                 let mut u = ClientUpdate::failed(self.id,
                                                  ClientFailure::BatteryDead);
                 u.n_samples = n_samples;
-                u.time_s = self.clock.now_s() - t_start;
-                u.energy_j = energy;
+                u.time_s = self.clock.now_s() - t_start_s;
+                u.energy_j = energy_j;
                 return Ok(u);
             }
         }
-        let time_s = self.clock.now_s() - t_start;
+        let time_s = self.clock.now_s() - t_start_s;
         let mut delta = Vec::with_capacity(self.global_names.len());
         for (i, name) in self.global_names.iter().enumerate() {
             let local = self.adapter.get(name)?.as_f32()?;
@@ -1002,7 +1006,7 @@ impl FleetClient {
             delta,
             train_loss: loss_sum / cfg.local_steps.max(1) as f64,
             time_s,
-            energy_j: energy,
+            energy_j,
             ..ClientUpdate::default()
         })
     }

@@ -184,6 +184,32 @@ pub const NON_FINGERPRINTED: &[&str] = &[
     "profile",
 ];
 
+/// [`RoundRecord`](crate::metrics::RoundRecord)/[`ClientUpdate`]
+/// ledger counters deliberately *not* reconciled against both the
+/// summary totals and the fleet trace test.  `mft lint`
+/// (contract-ledger) checks every seconds/bytes/joules counter on
+/// those structs against the summary-totals aggregation and
+/// `tests/fleet_trace.rs` in both directions: a counter missing from
+/// either side must sit here with a reason, and a listed counter that
+/// becomes fully reconciled is flagged as stale.
+pub const NON_RECONCILED: &[&str] = &[
+    // a per-round *maximum* (slowest dropped straggler), not a
+    // conserved quantity: the summary reports its sum, but no trace
+    // span carries it — a straggler's upload span ends at the deadline
+    // cut, not at its would-be finish
+    "straggler_time_s",
+    // per-client wall-time legs: they shape each client span's layout
+    // (t0/duration) rather than ride a scalar counter, so there is
+    // nothing to sum against
+    "download_s",
+    "upload_s",
+    // backlog-flush bytes are already reconciled inside the uplink
+    // fate equation through `bytes_up_stale` (the driver folds flushed
+    // backlog into the stale-progress counter); a second per-field
+    // check would double-count them
+    "bytes_up_backlog",
+];
+
 /// Everything about a config that must match for a checkpoint to be
 /// resumable.  Each trajectory-relevant field is formatted in
 /// explicitly, by name (v6; v5 was Debug-of-a-normalized-clone, which
@@ -507,7 +533,7 @@ fn sweep_unreferenced(dir: &Path, ckpt: &CkptState, dropped: &[Generation],
 /// times.
 #[allow(clippy::too_many_arguments)]
 fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
-                   ckpt: &mut CkptState, round: usize, cum_energy: f64,
+                   ckpt: &mut CkptState, round: usize, cum_energy_j: f64,
                    select_rng: &Pcg, clients: &[FleetClient],
                    changed: &[usize], names: &[String],
                    global: &[Vec<f32>],
@@ -560,7 +586,9 @@ fn save_fleet_ckpt(dir: &Path, cfg: &FleetConfig, scratch: &mut LoraState,
         .collect();
     let gen_json = Json::obj(vec![
         ("round", Json::from(round)),
-        ("cum_energy", bits_json(cum_energy.to_bits())),
+        // JSON key predates the unit-suffix convention; renaming it
+        // would break resume against existing checkpoints
+        ("cum_energy", bits_json(cum_energy_j.to_bits())),
         ("select_rng", pair_json(select_rng.state_parts())),
         ("global_ckpt", Json::from(ckpt.global_file.clone())),
         ("global_crc", Json::from(ckpt.global_crc as u64)),
@@ -621,7 +649,7 @@ pub fn sweep_fresh_out_dir(dir: &Path) {
 
 struct ResumeState {
     round: usize,
-    cum_energy: f64,
+    cum_energy_j: f64,
     select_rng: (u64, u64),
     clients: Vec<ClientPersist>,
     /// committed safetensors file per client, from the json
@@ -674,7 +702,7 @@ fn parse_generation(gj: &Json) -> Result<ResumeState> {
     }
     Ok(ResumeState {
         round: gj.req("round")?.as_usize()?,
-        cum_energy: f64::from_bits(bits_parse(gj.req("cum_energy")?)?),
+        cum_energy_j: f64::from_bits(bits_parse(gj.req("cum_energy")?)?),
         select_rng: pair_parse(gj.req("select_rng")?)?,
         clients,
         client_files,
@@ -933,7 +961,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     let threads = pool::resolve_threads(cfg.threads);
     let mut select_rng = Pcg::new(cfg.seed.wrapping_add(7));
     let mut records: Vec<RoundRecord> = Vec::new();
-    let mut cum_energy = 0.0f64;
+    let mut cum_energy_j = 0.0f64;
     let mut start_round = 1usize;
     let mut ckpt = CkptState::fresh(cfg.n_clients);
     // recovery events this process observed (retries, fallbacks,
@@ -949,7 +977,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
     // synthetic (idle gap + round makespan per round) and restarts at 0
     // on --resume, so a resumed run's trace covers the resumed rounds
     let mut sink: Option<TraceSink> = cfg.trace.as_ref().map(|_| TraceSink::new());
-    let mut coord_clock = 0.0f64;
+    let mut coord_clock_s = 0.0f64;
     // clients whose on-disk state is behind the last committed
     // checkpoint; accumulates across skipped rounds when --ckpt-every
     // K > 1 so the next commit writes every file that moved
@@ -989,7 +1017,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             bail!("fleet checkpoint has {} clients, config has {}",
                   rs.clients.len(), clients.len());
         }
-        cum_energy = rs.cum_energy;
+        cum_energy_j = rs.cum_energy_j;
         select_rng = Pcg::from_parts(rs.select_rng.0, rs.select_rng.1);
         for ((c, p), f) in
             clients.iter_mut().zip(&rs.clients).zip(&rs.client_files)
@@ -1114,13 +1142,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
 
     for round in start_round..=cfg.rounds {
         // background drain between rounds
-        let mut idle_e = 0.0f64;
+        let mut idle_j = 0.0f64;
         for c in clients.iter_mut() {
-            let e = c.battery.drain(0.0, cfg.round_idle_s);
-            cum_energy += e;
-            idle_e += e;
+            let drain_j = c.battery.drain(0.0, cfg.round_idle_s);
+            cum_energy_j += drain_j;
+            idle_j += drain_j;
         }
-        coord_clock += cfg.round_idle_s;
+        coord_clock_s += cfg.round_idle_s;
         // stale-upload lifecycle, round start: every client's queue —
         // selected or not — evicts blobs older than `drop_stale_after`
         // rounds.  Age-based eviction is what bounds a passed-over
@@ -1142,11 +1170,11 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
         // name the queue-eviction share explicitly
         let mut bytes_wasted_evicted = 0u64;
         for c in clients.iter_mut() {
-            let (dropped, transmitted) =
+            let (dropped_bytes, transmitted_bytes) =
                 c.evict_stale(round, cfg.drop_stale_after);
-            bytes_dropped_stale += dropped;
-            bytes_wasted += transmitted;
-            bytes_wasted_evicted += transmitted;
+            bytes_dropped_stale += dropped_bytes;
+            bytes_wasted += transmitted_bytes;
+            bytes_wasted_evicted += transmitted_bytes;
             if let Some(reg) = &cfg.link_regime {
                 c.advance_link_regime(round, reg);
             }
@@ -1162,7 +1190,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
                                      &statuses, &mut select_rng);
             (statuses, sel)
         };
-        let min_batt = sel
+        let min_batt_frac = sel
             .selected
             .iter()
             .map(|&id| statuses[id].battery_frac)
@@ -1189,7 +1217,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
                 c.run_round(&names, &global, &model, cfg, round, deadline_s)
             })
         };
-        cum_energy += results.iter().map(|u| u.energy_j).sum::<f64>();
+        cum_energy_j += results.iter().map(|u| u.energy_j).sum::<f64>();
 
         // classify: delivered on time / straggler / failed locally /
         // failed on the link.  Only bytes that actually hit the air are
@@ -1351,7 +1379,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             n_failed_upload,
             n_stale_aggregated,
             mean_train_loss: mean_loss,
-            energy_j: cum_energy,
+            energy_j: cum_energy_j,
             bytes_up: bytes_delivered,
             bytes_up_wasted: bytes_wasted,
             bytes_up_stale: bytes_stale,
@@ -1365,7 +1393,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             min_battery_selected: if sel.selected.is_empty() {
                 1.0
             } else {
-                min_batt
+                min_batt_frac
             },
         };
         if let Some(d) = &out_dir {
@@ -1396,7 +1424,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             let _g = prof.scope("ckpt_commit");
             let retries_before = recovery.ckpt_retries;
             save_fleet_ckpt(d, cfg, &mut template, &mut ckpt, round,
-                            cum_energy, &select_rng, &clients, &changed,
+                            cum_energy_j, &select_rng, &clients, &changed,
                             &names, &global, &mut recovery)?;
             ckpt_retries_this_round = recovery.ckpt_retries - retries_before;
             ckpt_dirty.fill(false);
@@ -1414,20 +1442,20 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             sink.push(TraceEvent {
                 name: "select",
                 round: round as u64,
-                t0_s: coord_clock,
+                t0_s: coord_clock_s,
                 n: sel.selected.len() as u64,
-                energy_j: idle_e,
+                energy_j: idle_j,
                 ..TraceEvent::default()
             });
             for c in clients.iter_mut() {
                 let (evs, dropped) = c.take_trace();
                 sink.absorb(evs, dropped);
             }
-            let t_end = coord_clock + round_time_s;
+            let t_end_s = coord_clock_s + round_time_s;
             sink.push(TraceEvent {
                 name: "aggregate",
                 round: round as u64,
-                t0_s: t_end,
+                t0_s: t_end_s,
                 n: n_cohort as u64,
                 age: n_stale_aggregated as u64,
                 ..TraceEvent::default()
@@ -1435,14 +1463,14 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             sink.push(TraceEvent {
                 name: "eval",
                 round: round as u64,
-                t0_s: t_end,
+                t0_s: t_end_s,
                 ..TraceEvent::default()
             });
             if let Some(n_changed) = did_ckpt {
                 sink.push(TraceEvent {
                     name: "ckpt_commit",
                     round: round as u64,
-                    t0_s: t_end,
+                    t0_s: t_end_s,
                     n: n_changed as u64,
                     ..TraceEvent::default()
                 });
@@ -1451,13 +1479,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
                 sink.push(TraceEvent {
                     name: "ckpt_retry",
                     round: round as u64,
-                    t0_s: t_end,
+                    t0_s: t_end_s,
                     n: ckpt_retries_this_round as u64,
                     ..TraceEvent::default()
                 });
             }
         }
-        coord_clock += round_time_s;
+        coord_clock_s += round_time_s;
     }
 
     // export the merged global adapter through the standard path
@@ -1519,7 +1547,18 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetResult> {
             train_rounds.iter().map(|r| r.n_skipped_ram).sum::<usize>())),
         ("total_skipped_link", Json::from(
             train_rounds.iter().map(|r| r.n_skipped_link).sum::<usize>())),
-        ("total_energy_kj", Json::from(cum_energy / 1000.0)),
+        // conservation: the energy total is read off the ledger itself
+        // (the last round's cumulative `energy_j`), not a shadow
+        // accumulator — `mft lint` (contract-ledger) holds every
+        // RoundRecord counter to this standard.  Identical bits: the
+        // driver assigns `energy_j: cum_energy_j` when it builds each
+        // record, so `last.energy_j` IS the accumulator's final value.
+        ("total_energy_kj", Json::from(last.energy_j / 1000.0)),
+        ("total_time_s", Json::from(
+            train_rounds.iter().map(|r| r.time_s).sum::<f64>())),
+        ("total_straggler_time_s", Json::from(
+            train_rounds.iter().map(|r| r.straggler_time_s)
+                .sum::<f64>())),
         ("adapter_bytes", Json::from(adapter_bytes)),
         ("total_bytes_up_delivered", Json::from(
             train_rounds.iter().map(|r| r.bytes_up).sum::<u64>())),

@@ -79,10 +79,13 @@ pub struct SelectionOutcome {
     pub skipped_link: Vec<usize>,
 }
 
-/// Pick this round's participants.  `deadline_s` is the driver's
-/// straggler deadline — only [`SelectPolicy::Bandwidth`] reads it.
-pub fn select_clients(policy: &SelectPolicy, mu: f64, ram_required: u64,
-                      deadline_s: f64, statuses: &[ClientStatus],
+/// Pick this round's participants.  `mu_frac` is the battery floor
+/// (fraction of full charge), `ram_required_bytes` the per-client RAM
+/// gate; `deadline_s` is the driver's straggler deadline — only
+/// [`SelectPolicy::Bandwidth`] reads it.
+pub fn select_clients(policy: &SelectPolicy, mu_frac: f64,
+                      ram_required_bytes: u64, deadline_s: f64,
+                      statuses: &[ClientStatus],
                       rng: &mut Pcg) -> SelectionOutcome {
     let mut out = SelectionOutcome::default();
     match policy {
@@ -99,10 +102,10 @@ pub fn select_clients(policy: &SelectPolicy, mu: f64, ram_required: u64,
             let gate_link = matches!(policy, SelectPolicy::Bandwidth);
             for s in statuses {
                 // the <= 0.0 arm keeps the no-dead-battery invariant even
-                // when mu is configured to 0
-                if s.battery_frac <= 0.0 || s.battery_frac < mu {
+                // when mu_frac is configured to 0
+                if s.battery_frac <= 0.0 || s.battery_frac < mu_frac {
                     out.skipped_battery.push(s.id);
-                } else if s.free_ram_bytes < ram_required {
+                } else if s.free_ram_bytes < ram_required_bytes {
                     out.skipped_ram.push(s.id);
                 } else if gate_link && s.est_round_s > deadline_s {
                     out.skipped_link.push(s.id);

@@ -159,14 +159,33 @@ pub const CONTRACT_CLI_HELP: &str = "contract-cli-help";
 /// documented schema in `benches/README.md`.
 pub const CONTRACT_SCHEMA: &str = "contract-schema";
 
-/// Every lint name `mft lint` can emit (needle, coverage and tier-2
-/// computed lints) — the namespace `--only`/`--skip` validate against.
+// -- tier-3 lint names (computed in units.rs / mod.rs) --------------
+
+/// Add/sub/compare/assign across different inferred units.
+pub const UNITS_MISMATCH: &str = "units-mismatch";
+/// A product/quotient with a known derived unit bound to a name
+/// without the matching suffix.
+pub const UNITS_CONVERSION: &str = "units-conversion";
+/// A bare, unsuffixed identifier flowing into a unit-typed position
+/// inside the accounting dirs.
+pub const UNITS_UNTYPED: &str = "units-untyped";
+/// `RoundRecord`/`ClientUpdate` counters vs the summary-totals
+/// aggregation, the trace-reconciliation test and `NON_RECONCILED`,
+/// both directions.
+pub const CONTRACT_LEDGER: &str = "contract-ledger";
+/// An inline `mft-lint: allow(...)` that suppressed nothing this run.
+pub const UNUSED_ALLOW: &str = "unused-allow";
+
+/// Every lint name `mft lint` can emit (needle, coverage, tier-2 and
+/// tier-3 computed lints) — the namespace `--only`/`--skip` validate
+/// against.
 pub fn all_lint_names() -> Vec<&'static str> {
     let mut names: Vec<&'static str> =
         CATALOG.iter().map(|l| l.name).collect();
     names.extend([COVER_ROUTED, COVER_UNKNOWN, ARCH_LAYERING,
                   CONTRACT_CONFIG_FINGERPRINT, CONTRACT_CLI_HELP,
-                  CONTRACT_SCHEMA]);
+                  CONTRACT_SCHEMA, UNITS_MISMATCH, UNITS_CONVERSION,
+                  UNITS_UNTYPED, CONTRACT_LEDGER, UNUSED_ALLOW]);
     names.sort_unstable();
     names
 }
@@ -189,6 +208,15 @@ mod tests {
         for t2 in [ARCH_LAYERING, CONTRACT_CONFIG_FINGERPRINT,
                    CONTRACT_CLI_HELP, CONTRACT_SCHEMA, "det-interior-mut"] {
             assert!(names.contains(&t2), "{t2} missing from namespace");
+        }
+    }
+
+    #[test]
+    fn tier3_names_registered() {
+        let names = all_lint_names();
+        for t3 in [UNITS_MISMATCH, UNITS_CONVERSION, UNITS_UNTYPED,
+                   CONTRACT_LEDGER, UNUSED_ALLOW] {
+            assert!(names.contains(&t3), "{t3} missing from namespace");
         }
     }
 

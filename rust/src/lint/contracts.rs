@@ -32,7 +32,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use super::catalog::{CONTRACT_CLI_HELP, CONTRACT_CONFIG_FINGERPRINT,
                      CONTRACT_SCHEMA};
 use super::index::{call_literals, string_literals, RepoIndex};
-use super::Finding;
+use super::{AllowUse, Finding};
 
 fn finding(lint: &'static str, file: &str, line: usize, snippet: String,
            hint: &'static str) -> Finding {
@@ -48,22 +48,23 @@ fn finding(lint: &'static str, file: &str, line: usize, snippet: String,
     }
 }
 
-/// Push unless an inline allow covers the anchor line.
-fn emit(index: &RepoIndex, findings: &mut Vec<Finding>, allows: &mut usize,
-        f: Finding) {
+/// Push unless an inline allow covers the anchor line; a suppression
+/// is recorded so the unused-allow meta-lint can reconcile it.
+fn emit(index: &RepoIndex, findings: &mut Vec<Finding>,
+        allows: &mut Vec<AllowUse>, f: Finding) {
     if index.allowed(&f.file, f.line, f.lint) {
-        *allows += 1;
+        allows.push((f.file, f.line, f.lint));
     } else {
         findings.push(f);
     }
 }
 
 /// `FleetConfig` fields vs `config_fingerprint` + `NON_FINGERPRINTED`.
-/// Returns (findings, allows_used, fields_checked).
+/// Returns (findings, allows_fired, fields_checked).
 pub fn check_config_fingerprint(index: &RepoIndex)
-                                -> (Vec<Finding>, usize, usize) {
+                                -> (Vec<Finding>, Vec<AllowUse>, usize) {
     let Some((sfile, sdef)) = index.struct_def("FleetConfig") else {
-        return (Vec::new(), 0, 0);
+        return (Vec::new(), Vec::new(), 0);
     };
 
     // every field("name", …) call inside any config_fingerprint fn
@@ -118,7 +119,7 @@ pub fn check_config_fingerprint(index: &RepoIndex)
         allowlist.iter().map(|(n, _, _)| n.as_str()).collect();
 
     let mut findings = Vec::new();
-    let mut allows = 0usize;
+    let mut allows = Vec::new();
     for (name, line) in &sdef.fields {
         if fingerprinted.contains(name)
             || allowed_names.contains(name.as_str())
@@ -178,15 +179,16 @@ fn help_tokens(raw: &str) -> Vec<String> {
 }
 
 /// Parsed `--flag` sites vs the `print_help` text, both directions.
-/// Returns (findings, allows_used, help_flags_seen).
-pub fn check_cli_help(index: &RepoIndex) -> (Vec<Finding>, usize, usize) {
+/// Returns (findings, allows_fired, help_flags_seen).
+pub fn check_cli_help(index: &RepoIndex)
+                      -> (Vec<Finding>, Vec<AllowUse>, usize) {
     let Some((hfile, hspan)) = index.files.iter().find_map(|f| {
         if !f.rel.starts_with("cli/") {
             return None;
         }
         f.fn_span("print_help").map(|s| (f, s))
     }) else {
-        return (Vec::new(), 0, 0);
+        return (Vec::new(), Vec::new(), 0);
     };
 
     // token -> first help line mentioning it
@@ -201,7 +203,7 @@ pub fn check_cli_help(index: &RepoIndex) -> (Vec<Finding>, usize, usize) {
     }
 
     let mut findings = Vec::new();
-    let mut allows = 0usize;
+    let mut allows = Vec::new();
 
     // direction 1: parse sites in user-facing subsystems must be in
     // the help text
@@ -240,15 +242,15 @@ pub fn check_cli_help(index: &RepoIndex) -> (Vec<Finding>, usize, usize) {
 
 /// `RoundRecord` fields vs the JSON writer/reader and the documented
 /// schema table in `benches/README.md`.  Returns (findings,
-/// allows_used, documented_columns).
+/// allows_fired, documented_columns).
 pub fn check_schema(index: &RepoIndex, readme: Option<&str>)
-                    -> (Vec<Finding>, usize, usize) {
+                    -> (Vec<Finding>, Vec<AllowUse>, usize) {
     let Some((rfile, rdef)) = index.struct_def("RoundRecord") else {
-        return (Vec::new(), 0, 0);
+        return (Vec::new(), Vec::new(), 0);
     };
 
     let mut findings = Vec::new();
-    let mut allows = 0usize;
+    let mut allows = Vec::new();
 
     // writer + reader: each field name appears >= 2x as a string
     // literal inside the impl RoundRecord span (to_json + from_json)
@@ -374,7 +376,7 @@ mod tests {
                          ("fleet/driver.rs", d.as_str())]);
         let (f, a, checked) = check_config_fingerprint(&idx);
         assert!(f.is_empty(), "{f:?}");
-        assert_eq!(a, 0);
+        assert!(a.is_empty());
         assert_eq!(checked, 3);
     }
 
@@ -398,7 +400,7 @@ mod tests {
                          ("fleet/driver.rs", d.as_str())]);
         let (f, a, _) = check_config_fingerprint(&idx);
         assert!(f.is_empty(), "{f:?}");
-        assert_eq!(a, 1);
+        assert_eq!(a.len(), 1);
     }
 
     #[test]
@@ -417,7 +419,8 @@ mod tests {
         let idx = tree(&[("clean.rs", "pub fn ok() {}\n")]);
         let (f, a, checked) = check_config_fingerprint(&idx);
         assert!(f.is_empty());
-        assert_eq!((a, checked), (0, 0));
+        assert!(a.is_empty());
+        assert_eq!(checked, 0);
     }
 
     const HELP: &str =
@@ -461,7 +464,7 @@ mod tests {
                           "fn v(args: &Args) { args.get(\"seed\"); }\n")]);
         let (f, a, _) = check_cli_help(&idx);
         assert!(f.is_empty(), "{f:?}");
-        assert_eq!(a, 1);
+        assert_eq!(a.len(), 1);
     }
 
     #[test]
@@ -528,7 +531,7 @@ mod tests {
         let idx = tree(&[("metrics/mod.rs", rec_allowed.as_str())]);
         let (f, a, _) = check_schema(&idx, Some(readme.as_str()));
         assert!(f.is_empty(), "{f:?}");
-        assert_eq!(a, 1);
+        assert_eq!(a.len(), 1);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use super::catalog::ARCH_LAYERING;
 use super::index::RepoIndex;
 use super::scan::LineInfo;
-use super::Finding;
+use super::{AllowUse, Finding};
 use crate::util::json::Json;
 
 /// The assembled module dependency graph.
@@ -72,8 +72,9 @@ pub fn parse_layers(lines: &[LineInfo])
 }
 
 /// Build the graph and run the `arch-layering` checks.  Returns
-/// (graph, findings, allows_used).
-pub fn check(index: &RepoIndex) -> (ModuleGraph, Vec<Finding>, usize) {
+/// (graph, findings, allows_fired).
+pub fn check(index: &RepoIndex)
+             -> (ModuleGraph, Vec<Finding>, Vec<AllowUse>) {
     let modules: BTreeSet<String> = index.files.iter()
         .map(|f| f.module.clone())
         .filter(|m| m != "lib" && m != "main")
@@ -102,12 +103,13 @@ pub fn check(index: &RepoIndex) -> (ModuleGraph, Vec<Finding>, usize) {
         .and_then(|f| parse_layers(&f.lines));
 
     let mut findings = Vec::new();
-    let mut allows_used = 0usize;
-    let mut emit = |findings: &mut Vec<Finding>, allows: &mut usize,
+    let mut allows_used: Vec<AllowUse> = Vec::new();
+    let mut emit = |findings: &mut Vec<Finding>,
+                    allows: &mut Vec<AllowUse>,
                     file: &str, line: usize, snippet: String,
                     hint: &'static str| {
         if index.allowed(file, line, ARCH_LAYERING) {
-            *allows += 1;
+            allows.push((file.to_string(), line, ARCH_LAYERING));
         } else {
             findings.push(Finding {
                 lint: ARCH_LAYERING,
@@ -354,7 +356,7 @@ pub mod util;\n";
         assert_eq!(findings[0].lint, ARCH_LAYERING);
         assert_eq!(findings[0].file, "metrics/mod.rs");
         assert_eq!(findings[0].line, 1);
-        assert_eq!(allows, 0);
+        assert!(allows.is_empty());
 
         let idx = tree(&[
             ("lib.rs", LIB),
@@ -367,7 +369,8 @@ pub mod util;\n";
         ]);
         let (_, findings, allows) = check(&idx);
         assert!(findings.is_empty(), "{findings:?}");
-        assert_eq!(allows, 1);
+        assert_eq!(allows, vec![("metrics/mod.rs".to_string(), 2,
+                                 ARCH_LAYERING)]);
     }
 
     #[test]

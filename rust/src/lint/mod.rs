@@ -3,7 +3,7 @@
 //! The repo's invariants — determinism (bitwise-reproducible fleet runs
 //! per seed), durability (crash-anywhere checkpoints), failpoint
 //! coverage — are enforced by tests *after* a violation ships.  This
-//! module enforces them at the source level, in two tiers:
+//! module enforces them at the source level, in three tiers:
 //!
 //! * **Tier 1** — a line/token scanner over `src/` driven by a lint
 //!   catalog ([`catalog::CATALOG`]): needle substrings matched against
@@ -16,8 +16,18 @@
 //!   tree-wide needle lint (`det-interior-mut`).  The graph is
 //!   exported byte-stably via `--graph-json FILE` (JSON) and
 //!   `--graph FILE` (Graphviz DOT).
+//! * **Tier 3** — dimensional analysis of the accounting ledger
+//!   ([`units`]): a unit (seconds, bytes, joules, …) is inferred for
+//!   every suffixed identifier, a tiny expression walker checks
+//!   additive/comparison/assignment sites for unit agreement
+//!   (`units-mismatch` / `units-conversion` / `units-untyped`), and a
+//!   conservation contract (`contract-ledger`) reconciles every
+//!   `RoundRecord`/`ClientUpdate` counter against the fleet summary
+//!   totals and the trace-reconciliation test.  A meta-lint
+//!   (`unused-allow`) flags inline escapes that no longer suppress
+//!   anything.
 //!
-//! Both tiers share one escape hatch, inline in the source:
+//! All tiers share one escape hatch, inline in the source:
 //!
 //! ```text
 //! // mft-lint: allow(<lint-name>) -- <reason>
@@ -33,14 +43,20 @@
 //! file (atomically, naturally), `--only A,B` / `--skip A,B` restrict
 //! the reported lints (names validated against the catalog),
 //! `--baseline FILE` reports only findings absent from a prior
-//! `lint_report.json`, and `--deny` exits nonzero on any finding —
+//! `lint_report.json`, `--sarif FILE` writes a SARIF 2.1.0 export for
+//! code-scanning UIs, and `--deny` exits nonzero on any finding —
 //! that is the CI leg.  See `lint/README.md` for the catalog.
+//!
+//! The per-file scan+index pass fans out over the
+//! [`crate::util::pool`] workers; results merge in path order, so the
+//! report is byte-identical for any `MFT_THREADS`.
 
 pub mod catalog;
 pub mod contracts;
 pub mod graph;
 pub mod index;
 mod scan;
+pub mod units;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -51,13 +67,20 @@ use crate::util::args::Args;
 use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 
+/// One inline allow annotation that suppressed a finding:
+/// (repo-relative file, code line it covers, lint name).  The
+/// unused-allow meta-lint reconciles these against every annotation in
+/// the tree.
+pub type AllowUse = (String, usize, &'static str);
+
 /// One lint violation, anchored to a source line.
 #[derive(Debug)]
 pub struct Finding {
     pub lint: &'static str,
     pub class: &'static str,
     pub severity: u8,
-    /// 1 = line-level needle/coverage lint, 2 = cross-file analysis
+    /// 1 = line-level needle/coverage lint, 2 = cross-file analysis,
+    /// 3 = dimensional/ledger/meta analysis
     pub tier: u8,
     /// repo-relative path, `/`-separated
     pub file: String,
@@ -83,6 +106,21 @@ pub struct Tier2Stats {
     pub schema_columns: usize,
 }
 
+/// What the tier-3 pass actually covered (same contract as
+/// [`Tier2Stats`]: the clean-tree test pins floors on these).
+pub struct Tier3Stats {
+    /// unit-suffixed identifier occurrences seen in the accounting dirs
+    pub unit_idents: usize,
+    /// expression sites the dimensional walker checked
+    pub exprs_checked: usize,
+    /// unit-typed `RoundRecord`/`ClientUpdate` counters reconciled
+    pub ledger_counters: usize,
+    /// of those, counters found in the summary-totals aggregation
+    pub ledger_summary_refs: usize,
+    /// of those, counters found in the trace-reconciliation test
+    pub ledger_trace_refs: usize,
+}
+
 pub struct LintReport {
     /// ranked: (severity, lint, file, line)
     pub findings: Vec<Finding>,
@@ -90,16 +128,17 @@ pub struct LintReport {
     pub allows_used: usize,
     pub graph: graph::ModuleGraph,
     pub tier2: Tier2Stats,
+    pub tier3: Tier3Stats,
 }
 
 impl LintReport {
     pub fn to_json(&self) -> Json {
         let mut by_lint: BTreeMap<&str, (usize, u8)> = BTreeMap::new();
-        let mut tiers = [0usize; 2];
+        let mut tiers = [0usize; 3];
         for f in &self.findings {
             let e = by_lint.entry(f.lint).or_insert((0, f.tier));
             e.0 += 1;
-            tiers[(f.tier as usize - 1).min(1)] += 1;
+            tiers[(f.tier as usize - 1).min(2)] += 1;
         }
         Json::obj(vec![
             ("ok", Json::from(self.findings.is_empty())),
@@ -108,6 +147,7 @@ impl LintReport {
             ("tiers", Json::obj(vec![
                 ("1", Json::from(tiers[0])),
                 ("2", Json::from(tiers[1])),
+                ("3", Json::from(tiers[2])),
             ])),
             ("by_lint",
              Json::Obj(by_lint
@@ -124,6 +164,16 @@ impl LintReport {
                  Json::from(self.tier2.config_fields_checked)),
                 ("help_flags", Json::from(self.tier2.help_flags)),
                 ("schema_columns", Json::from(self.tier2.schema_columns)),
+            ])),
+            ("tier3", Json::obj(vec![
+                ("unit_idents", Json::from(self.tier3.unit_idents)),
+                ("exprs_checked", Json::from(self.tier3.exprs_checked)),
+                ("ledger_counters",
+                 Json::from(self.tier3.ledger_counters)),
+                ("ledger_summary_refs",
+                 Json::from(self.tier3.ledger_summary_refs)),
+                ("ledger_trace_refs",
+                 Json::from(self.tier3.ledger_trace_refs)),
             ])),
             ("findings",
              Json::Arr(self.findings
@@ -176,34 +226,77 @@ fn is_lint_source(rel: &str) -> bool {
     rel.starts_with("lint/") || rel == "lint.rs"
 }
 
+/// Per-file result of the parallel read+index+scan pass.
+struct PerFile {
+    index: index::FileIndex,
+    /// None for the linter's own sources (indexed, never scanned)
+    scan: Option<scan::FileScan>,
+    units: Option<units::UnitsScan>,
+}
+
 /// Run every catalog lint, the failpoint-coverage cross-check, and the
-/// tier-2 graph/contract analysis over the source tree at `root`
-/// (normally `rust/src`).  The documented rounds.jsonl schema is read
-/// from `<root>/../benches/README.md` when present.
+/// tier-2/3 graph/contract/units analysis over the source tree at
+/// `root` (normally `rust/src`).  The documented rounds.jsonl schema is
+/// read from `<root>/../benches/README.md` and the trace-reconciliation
+/// test from `<root>/../tests/fleet_trace.rs` when present.  Uses the
+/// `MFT_THREADS` worker default; see [`run_lint_with_threads`].
 pub fn run_lint(root: &Path) -> Result<LintReport> {
+    run_lint_with_threads(root, 0)
+}
+
+/// As [`run_lint`] with an explicit worker count (`0` = the
+/// `MFT_THREADS`/host default).  The per-file pass fans out over
+/// [`crate::util::pool::ordered_map`] and merges in path order, so the
+/// report is byte-identical for any thread count.
+pub fn run_lint_with_threads(root: &Path, threads: usize)
+                             -> Result<LintReport> {
     let mut files = Vec::new();
     walk(root, "", &mut files)?;
     if files.is_empty() {
         bail!("no .rs files under {}", root.display());
     }
 
+    let threads = crate::util::pool::resolve_threads(threads);
+    let per: Vec<Result<PerFile>> =
+        crate::util::pool::ordered_map(&files, threads, |_, (path, rel)| {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read {}", path.display()))?;
+            let fi = index::FileIndex::build(rel, &text);
+            let (scan, units) = if is_lint_source(rel) {
+                (None, None)
+            } else {
+                (Some(scan::scan_lines(rel, &fi.lines)),
+                 Some(units::scan_units(rel, &fi.lines)))
+            };
+            Ok(PerFile { index: fi, scan, units })
+        });
+
     let mut findings = Vec::new();
-    let mut allows_used = 0usize;
     let mut hits = Vec::new();
     let mut files_scanned = 0usize;
     let mut indexed = Vec::new();
-    for (path, rel) in &files {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("read {}", path.display()))?;
-        let fi = index::FileIndex::build(rel, &text);
-        if !is_lint_source(rel) {
+    // every annotation that suppressed something, across all tiers —
+    // the unused-allow meta-lint reconciles the full tree against it
+    let mut fired: Vec<AllowUse> = Vec::new();
+    let mut unit_idents = 0usize;
+    let mut exprs_checked = 0usize;
+    for pf in per {
+        let pf = pf?;
+        if let Some(s) = pf.scan {
             files_scanned += 1;
-            let s = scan::scan_lines(rel, &fi.lines);
             findings.extend(s.findings);
-            allows_used += s.allows_used;
+            fired.extend(s.allows_fired.iter()
+                .map(|&(l, n)| (pf.index.rel.clone(), l, n)));
             hits.extend(s.hits);
         }
-        indexed.push(fi);
+        if let Some(u) = pf.units {
+            findings.extend(u.findings);
+            fired.extend(u.allows_fired.iter()
+                .map(|&(l, n)| (pf.index.rel.clone(), l, n)));
+            unit_idents += u.stats.unit_idents;
+            exprs_checked += u.stats.exprs_checked;
+        }
+        indexed.push(pf.index);
     }
     findings.extend(
         scan::coverage_findings(crate::util::faults::ALL_POINTS, &hits));
@@ -212,21 +305,36 @@ pub fn run_lint(root: &Path) -> Result<LintReport> {
     let repo = index::RepoIndex { files: indexed };
     let (module_graph, gf, ga) = graph::check(&repo);
     findings.extend(gf);
-    allows_used += ga;
+    fired.extend(ga);
     let (cf, ca, config_fields_checked) =
         contracts::check_config_fingerprint(&repo);
     findings.extend(cf);
-    allows_used += ca;
+    fired.extend(ca);
     let (hf, ha, help_flags) = contracts::check_cli_help(&repo);
     findings.extend(hf);
-    allows_used += ha;
+    fired.extend(ha);
     let readme = root.parent()
         .map(|p| p.join("benches").join("README.md"))
         .and_then(|p| std::fs::read_to_string(p).ok());
     let (sf, sa, schema_columns) =
         contracts::check_schema(&repo, readme.as_deref());
     findings.extend(sf);
-    allows_used += sa;
+    fired.extend(sa);
+
+    // tier 3: ledger conservation against the summary totals and the
+    // trace-reconciliation test
+    let trace = root.parent()
+        .map(|p| p.join("tests").join("fleet_trace.rs"))
+        .and_then(|p| std::fs::read_to_string(p).ok());
+    let (lf, la, ledger) = units::check_ledger(&repo, trace.as_deref());
+    findings.extend(lf);
+    fired.extend(la);
+
+    // meta: every annotation in the tree must have suppressed something
+    // this run, or carry allow(unused-allow) on the same line
+    let mut allows_used = fired.len();
+    findings.extend(unused_allow_findings(&repo, &fired,
+                                          &mut allows_used));
 
     findings.sort_by(|a, b| {
         (a.severity, a.lint, &a.file, a.line)
@@ -239,8 +347,85 @@ pub fn run_lint(root: &Path) -> Result<LintReport> {
         help_flags,
         schema_columns,
     };
+    let tier3 = Tier3Stats {
+        unit_idents,
+        exprs_checked,
+        ledger_counters: ledger.counters,
+        ledger_summary_refs: ledger.summary_refs,
+        ledger_trace_refs: ledger.trace_refs,
+    };
     Ok(LintReport { findings, files_scanned, allows_used,
-                    graph: module_graph, tier2 })
+                    graph: module_graph, tier2, tier3 })
+}
+
+/// The `unused-allow` meta-lint: reconcile every inline annotation on a
+/// live code line (lint/ included — its real escapes are escapes like
+/// any other) against the suppressions that actually fired this run.
+/// A stale allow is reportable; `allow(unused-allow)` on the same line
+/// keeps it (and thereby fires itself).
+fn unused_allow_findings(repo: &index::RepoIndex, fired: &[AllowUse],
+                         allows_used: &mut usize) -> Vec<Finding> {
+    let fired_set: std::collections::BTreeSet<(&str, usize, &str)> =
+        fired.iter().map(|(f, l, n)| (f.as_str(), *l, *n)).collect();
+    let mut unused: Vec<(&str, usize, &str)> = Vec::new();
+    for f in &repo.files {
+        for li in &f.lines {
+            if li.skip || !li.has_code {
+                continue;
+            }
+            for name in &li.allows {
+                let key = (f.rel.as_str(), li.lineno, name.as_str());
+                if !fired_set.contains(&key) {
+                    unused.push(key);
+                }
+            }
+        }
+    }
+    let mut kept: std::collections::BTreeSet<(&str, usize)> =
+        Default::default();
+    let mut out = Vec::new();
+    let emit = |out: &mut Vec<Finding>, file: &str, line: usize,
+                name: &str| {
+        out.push(Finding {
+            lint: catalog::UNUSED_ALLOW,
+            class: "meta",
+            severity: 1,
+            tier: 3,
+            file: file.to_string(),
+            line,
+            snippet: format!(
+                "inline allow({name}) suppressed no finding this run"),
+            hint: "the escape no longer escapes anything; delete the \
+                   annotation, or add allow(unused-allow) on the same \
+                   line if it is load-bearing for another configuration",
+        });
+    };
+    for &(file, line, name) in &unused {
+        if name == catalog::UNUSED_ALLOW {
+            continue; // judged in the second pass
+        }
+        let f = repo.files.iter().find(|f| f.rel == file);
+        let keeps = f.is_some_and(|f| {
+            f.lines.iter().any(|li| {
+                li.lineno == line
+                    && li.allows.iter().any(|a| a == catalog::UNUSED_ALLOW)
+            })
+        });
+        if keeps {
+            // the unused-allow annotation on that line just fired
+            if kept.insert((file, line)) {
+                *allows_used += 1;
+            }
+        } else {
+            emit(&mut out, file, line, name);
+        }
+    }
+    for &(file, line, name) in &unused {
+        if name == catalog::UNUSED_ALLOW && !kept.contains(&(file, line)) {
+            emit(&mut out, file, line, name);
+        }
+    }
+    out
 }
 
 /// Apply `--only` / `--skip` lint-name filters.  Names are validated
@@ -291,8 +476,56 @@ pub fn apply_baseline(report: &mut LintReport, prior: &Json) {
     });
 }
 
-/// `mft lint [--root DIR] [--deny] [--json FILE] [--only A,B]
-/// [--skip A,B] [--baseline FILE] [--graph FILE] [--graph-json FILE]`.
+/// SARIF 2.1.0 export of a (possibly filtered) report: one run, one
+/// driver, the full lint namespace as rules.  Minimal by design — just
+/// enough for code-scanning UIs to place each finding on a line.
+pub fn sarif_report(report: &LintReport) -> Json {
+    let rules = Json::Arr(catalog::all_lint_names()
+        .into_iter()
+        .map(|n| Json::obj(vec![("id", Json::from(n))]))
+        .collect());
+    let results = Json::Arr(report.findings.iter().map(|f| {
+        let level = if f.severity == 0 { "error" } else { "warning" };
+        let mut phys = vec![
+            ("artifactLocation",
+             Json::obj(vec![("uri", Json::from(f.file.as_str()))])),
+        ];
+        if f.line > 0 {
+            // registry-level findings (line 0) carry no region
+            phys.push(("region",
+                       Json::obj(vec![("startLine", Json::from(f.line))])));
+        }
+        Json::obj(vec![
+            ("ruleId", Json::from(f.lint)),
+            ("level", Json::from(level)),
+            ("message", Json::obj(vec![
+                ("text",
+                 Json::from(format!("{} (hint: {})", f.snippet, f.hint))),
+            ])),
+            ("locations", Json::Arr(vec![Json::obj(vec![
+                ("physicalLocation", Json::obj(phys)),
+            ])])),
+        ])
+    }).collect());
+    Json::obj(vec![
+        ("$schema",
+         Json::from("https://json.schemastore.org/sarif-2.1.0.json")),
+        ("version", Json::from("2.1.0")),
+        ("runs", Json::Arr(vec![Json::obj(vec![
+            ("tool", Json::obj(vec![
+                ("driver", Json::obj(vec![
+                    ("name", Json::from("mft-lint")),
+                    ("rules", rules),
+                ])),
+            ])),
+            ("results", results),
+        ])])),
+    ])
+}
+
+/// `mft lint [--root DIR] [--deny] [--json FILE] [--sarif FILE]
+/// [--only A,B] [--skip A,B] [--baseline FILE] [--graph FILE]
+/// [--graph-json FILE]`.
 pub fn cmd_lint(args: &Args) -> Result<()> {
     let root = match args.get("root") {
         Some(r) => PathBuf::from(r),
@@ -343,6 +576,11 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
     let json = report.to_json();
     if let Some(p) = args.get("json") {
         write_atomic(Path::new(p), json.to_string().as_bytes())
+            .with_context(|| format!("write {p}"))?;
+    }
+    if let Some(p) = args.get("sarif") {
+        write_atomic(Path::new(p),
+                     sarif_report(&report).to_string().as_bytes())
             .with_context(|| format!("write {p}"))?;
     }
     // machine-readable report on stdout (same contract as `mft chaos`)
@@ -430,6 +668,11 @@ mod tests {
         let tiers = j.req("tiers").unwrap();
         assert_eq!(tiers.req("1").unwrap().as_usize().unwrap(), 1);
         assert_eq!(tiers.req("2").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(tiers.req("3").unwrap().as_usize().unwrap(), 0);
+        let t3 = j.req("tier3").unwrap();
+        assert_eq!(t3.req("unit_idents").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(t3.req("ledger_counters").unwrap().as_usize().unwrap(),
+                   0);
         std::fs::remove_dir_all(&root).unwrap();
     }
 
@@ -624,6 +867,85 @@ mod tests {
         let root = tmp_tree("t2mut", &[("fleet/driver.rs", allowed.as_str())]);
         let r = run_lint(&root).unwrap();
         assert!(r.findings.is_empty(), "{:?}", r.findings);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    // -- tier-3 meta + exports ---------------------------------------
+
+    #[test]
+    fn tier3_unused_allow_fixture() {
+        let driver = format!("pub fn go() -> anyhow::Result<()> {{\n\
+                              {}    Ok(())\n}}\n", routed_hits());
+        let stale = "// mft-lint: allow(det-hash-iter) -- nothing here\n\
+                     pub fn ok() {}\n";
+        let root = tmp_tree("t3ua", &[
+            ("fleet/driver.rs", driver.as_str()),
+            ("clean.rs", stale),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert_eq!(lint_names(&r), vec!["unused-allow"], "{:?}", r.findings);
+        assert_eq!(r.findings[0].tier, 3);
+        assert_eq!(r.findings[0].file, "clean.rs");
+        assert_eq!(r.findings[0].line, 2);
+        std::fs::remove_dir_all(&root).unwrap();
+
+        // allow(unused-allow) on the same line keeps a stale escape —
+        // and thereby counts as a fired annotation itself
+        let kept = "// mft-lint: allow(det-hash-iter) -- other config\n\
+                    // mft-lint: allow(unused-allow) -- load-bearing\n\
+                    pub fn ok() {}\n";
+        let root = tmp_tree("t3ua", &[
+            ("fleet/driver.rs", driver.as_str()),
+            ("clean.rs", kept),
+        ]);
+        let r = run_lint(&root).unwrap();
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.allows_used, 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn sarif_export_shape() {
+        let (r, root) = two_finding_report();
+        let j = Json::parse(&sarif_report(&r).to_string()).unwrap();
+        assert_eq!(j.req("version").unwrap().as_str().unwrap(), "2.1.0");
+        let runs = j.req("runs").unwrap().as_arr().unwrap();
+        let results = runs[0].req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), r.findings.len());
+        assert_eq!(results[0].req("ruleId").unwrap().as_str().unwrap(),
+                   "det-hash-iter");
+        assert_eq!(results[0].req("level").unwrap().as_str().unwrap(),
+                   "error");
+        // severity-1 findings map to "warning"
+        assert_eq!(results[1].req("level").unwrap().as_str().unwrap(),
+                   "warning");
+        let loc = results[0].req("locations").unwrap().as_arr().unwrap();
+        let phys = loc[0].req("physicalLocation").unwrap();
+        assert_eq!(phys.req("artifactLocation").unwrap().req("uri")
+                       .unwrap().as_str().unwrap(),
+                   "fleet/driver.rs");
+        assert_eq!(phys.req("region").unwrap().req("startLine")
+                       .unwrap().as_usize().unwrap(), 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn threads_do_not_change_the_report() {
+        let driver = format!("use std::collections::HashMap;\n\
+                              pub fn go() -> anyhow::Result<()> {{\n\
+                              {}    Ok(())\n}}\n", routed_hits());
+        let root = tmp_tree("t3thr", &[
+            ("fleet/driver.rs", driver.as_str()),
+            ("fleet/model.rs", "pub fn f() { x.unwrap(); }\n"),
+            ("clean.rs", "pub fn ok() {}\n"),
+        ]);
+        let base = run_lint_with_threads(&root, 1).unwrap()
+            .to_json().to_string();
+        for t in [2, 4] {
+            let got = run_lint_with_threads(&root, t).unwrap()
+                .to_json().to_string();
+            assert_eq!(base, got, "threads={t}");
+        }
         std::fs::remove_dir_all(&root).unwrap();
     }
 

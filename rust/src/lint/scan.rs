@@ -105,7 +105,17 @@ pub fn blank_lines(text: &str) -> Vec<LineInfo> {
         }
 
         li.skip = false;
-        let line_allows = parse_allows(&comment);
+        // doc comments never carry live allows — `///`/`//!` text that
+        // *describes* the annotation syntax (this module included)
+        // must not register phantom escapes, which the unused-allow
+        // meta-lint would then flag
+        let ct = comment.trim_start();
+        let line_allows = if ct.starts_with("///") || ct.starts_with("//!")
+        {
+            Vec::new()
+        } else {
+            parse_allows(&comment)
+        };
         li.has_code = !li.blanked.trim().is_empty();
         if !li.has_code {
             // comment-only or blank line: allows accumulate (reasons
@@ -135,6 +145,9 @@ pub struct FileScan {
     pub findings: Vec<Finding>,
     /// allow annotations that suppressed at least one finding
     pub allows_used: usize,
+    /// (line, lint) per suppression — the unused-allow meta-lint
+    /// reconciles these against every annotation in the tree
+    pub allows_fired: Vec<(usize, &'static str)>,
     pub hits: Vec<HitSite>,
 }
 
@@ -354,6 +367,7 @@ pub fn snippet(raw: &str) -> String {
 pub fn scan_lines(rel: &str, lines: &[LineInfo]) -> FileScan {
     let mut findings = Vec::new();
     let mut allows_used = 0usize;
+    let mut allows_fired = Vec::new();
     let mut hits = Vec::new();
 
     let applicable: Vec<_> =
@@ -378,6 +392,7 @@ pub fn scan_lines(rel: &str, lines: &[LineInfo]) -> FileScan {
             if lint.needles.iter().any(|n| li.blanked.contains(n)) {
                 if li.allows.iter().any(|a| a == lint.name) {
                     allows_used += 1;
+                    allows_fired.push((li.lineno, lint.name));
                 } else {
                     findings.push(Finding {
                         lint: lint.name,
@@ -394,7 +409,7 @@ pub fn scan_lines(rel: &str, lines: &[LineInfo]) -> FileScan {
         }
     }
 
-    FileScan { findings, allows_used, hits }
+    FileScan { findings, allows_used, allows_fired, hits }
 }
 
 /// Blank + scan one file's source in one call (fixture tests use this).

@@ -1,0 +1,1310 @@
+//! Tier-3 dimensional analysis: units on the accounting ledger.
+//!
+//! Every accounting bug this repo has shipped was a units error — a
+//! compute-only seconds value compared against a compute+upload
+//! deadline, bytes charged to the wrong fate counter.  This pass
+//! infers a **unit** for identifiers from their suffix (`_s` seconds,
+//! `_bytes`/`bytes_*` bytes, `_j` joules, `_mbps` mbit/s, `_w` watts,
+//! `_frac` dimensionless ratio, …) plus a small signature table for
+//! known conversion helpers (`upload_s(bytes) -> s`,
+//! `partial_bytes(…) -> bytes`, `drain_with(w, s) -> j`), then walks
+//! the blanked token stream checking expression positions:
+//!
+//! * **units-mismatch** — add/sub/compare/assign across different
+//!   inferred units (`x_s > y_bytes`, `energy_j += dur_s`).
+//! * **units-conversion** — a product/quotient with a *known* derived
+//!   unit must bind to a correctly-suffixed name (`bytes / rate_mbps`
+//!   is seconds; binding it to plain `t` hides the dimension).
+//! * **units-untyped** — a bare, unsuffixed identifier flowing into a
+//!   unit-typed struct field, comparison or assignment inside the
+//!   accounting dirs (`fleet/`, `energy/`, `metrics/`, `obs/`).
+//!
+//! The unit algebra is deliberately tiny: `NUM` (literals) is
+//! transparent, ratios multiply away, `power × time = energy`,
+//! `rate × time = data`, `charge × volts = energy`, `data / rate =
+//! time`, `data / time = rate`, `energy / time = power`, `x / x =
+//! ratio`.  Anything the algebra cannot prove resolves to *unknown*
+//! and is never reported — the scanner is token-level, so it trades
+//! recall for a near-zero false-positive rate on real code.  Known
+//! residual blind spot: struct *patterns* in match arms look like
+//! struct literals to the context tracker (see README).
+//!
+//! **contract-ledger** (cross-file, same tier): every seconds/bytes/
+//! joules counter on `RoundRecord`/`ClientUpdate` must appear in the
+//! driver's summary-totals aggregation (`let mut pairs = vec![` … `]`)
+//! AND in the trace-reconciliation test, or sit on the reasoned
+//! `NON_RECONCILED` allowlist; stale allowlist entries are flagged the
+//! other way.  A new counter cannot ship half-wired again.
+
+use std::collections::BTreeSet;
+
+use super::catalog::{CONTRACT_LEDGER, UNITS_CONVERSION, UNITS_MISMATCH,
+                     UNITS_UNTYPED};
+use super::index::{string_literals, RepoIndex};
+use super::scan::{blank_lines, snippet, LineInfo};
+use super::{AllowUse, Finding};
+
+// ---------------------------------------------------------------- vocab
+
+/// An inferred physical dimension.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dim {
+    Time,
+    Data,
+    Energy,
+    Rate,
+    Power,
+    Ratio,
+    Rounds,
+    Charge,
+    Voltage,
+}
+
+/// Suffix-driven unit vocabulary.  Exact names cover the handful of
+/// idiomatic short forms the tree uses (`p_idle` watts, `bytes`,
+/// `frac`, `volts`, `round`).  Order matters: `_mbit_s` must win over
+/// the `_s` seconds suffix it ends with.
+pub fn unit_of_ident(name: &str) -> Option<Dim> {
+    if matches!(name, "p_idle" | "p_compute" | "p_radio" | "p_extra") {
+        return Some(Dim::Power);
+    }
+    if name.ends_with("_mbit_s") || name.ends_with("_mbps") {
+        return Some(Dim::Rate);
+    }
+    if name.ends_with("_s") || name.ends_with("_secs") {
+        return Some(Dim::Time);
+    }
+    if name.ends_with("_bytes") || name.starts_with("bytes_")
+        || name == "bytes" || name.ends_with("_mb")
+    {
+        return Some(Dim::Data);
+    }
+    if name.ends_with("_j") || name.ends_with("_kj") {
+        return Some(Dim::Energy);
+    }
+    if name.ends_with("_w") || name.ends_with("_watts") {
+        return Some(Dim::Power);
+    }
+    if name.ends_with("_frac") || name.ends_with("_pct") || name == "frac" {
+        return Some(Dim::Ratio);
+    }
+    if name.ends_with("_mah") {
+        return Some(Dim::Charge);
+    }
+    if name.ends_with("_volts") || name == "volts" {
+        return Some(Dim::Voltage);
+    }
+    if name == "round" || name.ends_with("_round")
+        || name.ends_with("_rounds")
+    {
+        return Some(Dim::Rounds);
+    }
+    None
+}
+
+/// Return-unit signature table for the repo's conversion helpers;
+/// falls back to the suffix vocabulary on the callee name.
+pub fn unit_of_call(callee: &str) -> Option<Dim> {
+    match callee {
+        "upload_s" | "download_s" | "seconds_until_empty" | "now_s" => {
+            Some(Dim::Time)
+        }
+        "partial_bytes" | "pending_total_bytes" => Some(Dim::Data),
+        "drain" | "drain_with" => Some(Dim::Energy),
+        "level_frac" => Some(Dim::Ratio),
+        _ => unit_of_ident(callee),
+    }
+}
+
+/// Methods that preserve their receiver's unit (`x_s.max(0.0)` is
+/// still seconds; `x.round()` is *not* rounds).
+const TRANSPARENT: &[&str] = &[
+    "abs", "ceil", "clamp", "floor", "max", "min", "powi", "round",
+    "saturating_add", "saturating_sub", "sqrt",
+];
+
+/// Tokens that are identifiers to the tokenizer but never "bare
+/// value" candidates for units-untyped (primitive type names in enum
+/// variant defs, keyword-ish values).
+const NOT_BARE: &[&str] = &[
+    "None", "bool", "char", "f32", "f64", "false", "i128", "i16", "i32",
+    "i64", "i8", "isize", "self", "str", "true", "u128", "u16", "u32",
+    "u64", "u8", "usize",
+];
+
+/// Dirs where the stricter `units-untyped` / `units-conversion` rules
+/// apply (mismatches are reported everywhere).
+const SCOPED: &[&str] = &["fleet/", "energy/", "metrics/", "obs/"];
+
+// ------------------------------------------------------------ tokenizer
+
+fn is_ident_tok(t: &str) -> bool {
+    t.as_bytes()
+        .first()
+        .is_some_and(|&c| c.is_ascii_alphabetic() || c == b'_')
+}
+
+fn is_num_tok(t: &str) -> bool {
+    t.as_bytes().first().is_some_and(|c| c.is_ascii_digit())
+}
+
+fn is_camel(t: &str) -> bool {
+    t.as_bytes().first().is_some_and(|c| c.is_ascii_uppercase())
+}
+
+/// Tokenize one blanked line: identifiers, numeric literals (greedy
+/// over `.`, so `0..n` yields the number `0..` then `n` — ranges never
+/// read as arithmetic), multi-char operators, single punctuation.
+fn tokens_of(blanked: &str) -> Vec<&str> {
+    const THREE: &[&[u8]] = &[b"..=", b"<<=", b">>="];
+    const TWO: &[&[u8]] = &[
+        b"::", b"->", b"=>", b"..", b"&&", b"||", b"<<", b">>", b"+=",
+        b"-=", b"*=", b"/=", b"%=", b"<=", b">=", b"==", b"!=",
+    ];
+    let s = blanked.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < s.len() {
+        let c = s[i];
+        if !c.is_ascii() {
+            i += blanked[i..].chars().next().map_or(1, char::len_utf8);
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let st = i;
+            i += 1;
+            while i < s.len()
+                && (s[i].is_ascii_alphanumeric() || s[i] == b'_')
+            {
+                i += 1;
+            }
+            out.push(&blanked[st..i]);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let st = i;
+            i += 1;
+            while i < s.len()
+                && (s[i].is_ascii_alphanumeric() || s[i] == b'_'
+                    || s[i] == b'.')
+            {
+                i += 1;
+            }
+            out.push(&blanked[st..i]);
+            continue;
+        }
+        let rest = &s[i..];
+        if let Some(op) = THREE.iter().find(|op| rest.starts_with(op)) {
+            out.push(&blanked[i..i + op.len()]);
+            i += op.len();
+            continue;
+        }
+        if let Some(op) = TWO.iter().find(|op| rest.starts_with(op)) {
+            out.push(&blanked[i..i + op.len()]);
+            i += op.len();
+            continue;
+        }
+        if b"-+*/%<>=!&|^.,;:(){}[]#?@'\"".contains(&c) {
+            out.push(&blanked[i..i + 1]);
+        }
+        i += 1;
+    }
+    out
+}
+
+// ------------------------------------------------- operand resolution
+
+/// A resolved operand: a numeric literal (unit-transparent) or a known
+/// dimension.  `Option<Val>::None` means *unknown* — never reported.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Val {
+    Num,
+    Known(Dim),
+}
+
+fn known(v: Option<Val>) -> Option<Dim> {
+    match v {
+        Some(Val::Known(d)) => Some(d),
+        _ => None,
+    }
+}
+
+/// Walk back over `.ident` / `ident::` chain segments to the chain's
+/// first token.
+fn chain_start(toks: &[&str], j: usize) -> usize {
+    let mut k = j;
+    while k >= 2
+        && (toks[k - 1] == "." || toks[k - 1] == "::")
+        && is_ident_tok(toks[k - 2])
+    {
+        k -= 2;
+    }
+    k
+}
+
+/// Skip a balanced paren group starting at `j` (which holds `(`);
+/// returns the index of the matching `)`, or `toks.len()` if
+/// unbalanced (multi-line call — give up on this operand).
+fn skip_parens(toks: &[&str], j: usize) -> usize {
+    let mut d = 0i64;
+    let mut m = j;
+    while m < toks.len() {
+        match toks[m] {
+            "(" => d += 1,
+            ")" => {
+                d -= 1;
+                if d == 0 {
+                    return m;
+                }
+            }
+            _ => {}
+        }
+        m += 1;
+    }
+    m
+}
+
+/// Resolve the operand *ending* at index `i` (inclusive).  Returns
+/// (value, start index of the operand's chain).
+fn resolve_left(toks: &[&str], i: isize) -> (Option<Val>, usize) {
+    if i < 0 {
+        return (None, 0);
+    }
+    let j = i as usize;
+    let t = toks[j];
+    if is_num_tok(t) {
+        return (Some(Val::Num), j);
+    }
+    if t == ")" {
+        let mut d = 0i64;
+        let mut k = j as isize;
+        while k >= 0 {
+            match toks[k as usize] {
+                ")" => d += 1,
+                "(" => {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k -= 1;
+        }
+        if k <= 0 {
+            return (None, k.max(0) as usize);
+        }
+        let k = k as usize;
+        if is_ident_tok(toks[k - 1]) {
+            let callee = toks[k - 1];
+            let start = chain_start(toks, k - 1);
+            // transparent methods pass the receiver's unit through;
+            // anything more complex than a plain ident chain resolves
+            // to unknown
+            let u = if TRANSPARENT.contains(&callee) {
+                let mut b = k as isize - 3;
+                while b >= start as isize
+                    && TRANSPARENT.contains(&toks[b as usize])
+                {
+                    b -= 2;
+                }
+                if b >= start as isize
+                    && is_ident_tok(toks[b as usize])
+                    && !is_camel(toks[b as usize])
+                {
+                    unit_of_ident(toks[b as usize])
+                } else {
+                    None
+                }
+            } else {
+                unit_of_call(callee)
+            };
+            return (u.map(Val::Known), start);
+        }
+        return (None, k);
+    }
+    if is_ident_tok(t) {
+        if is_camel(t) {
+            return (None, j);
+        }
+        let start = chain_start(toks, j);
+        return (unit_of_ident(t).map(Val::Known), start);
+    }
+    (None, j)
+}
+
+/// Resolve the operand *starting* at index `i`.  Returns (value, end
+/// index exclusive, bare) where `bare` marks a single unqualified
+/// identifier with no call — the units-untyped candidate shape.
+fn resolve_right(toks: &[&str], i: usize) -> (Option<Val>, usize, bool) {
+    let n = toks.len();
+    if i >= n {
+        return (None, i, false);
+    }
+    let t = toks[i];
+    if is_num_tok(t) {
+        return (Some(Val::Num), i + 1, false);
+    }
+    if t == "-" {
+        let (u, e, _) = resolve_right(toks, i + 1);
+        return (u, e, false);
+    }
+    if is_ident_tok(t) {
+        // walk forward over the `.`/`::` chain
+        let mut k = i;
+        while k + 2 < n
+            && (toks[k + 1] == "." || toks[k + 1] == "::")
+            && is_ident_tok(toks[k + 2])
+        {
+            k += 2;
+        }
+        let last = toks[k];
+        if k + 1 < n && toks[k + 1] == "(" {
+            // call: the unit comes from the callee signature, except
+            // transparent methods pass their receiver's unit through
+            let u = if TRANSPARENT.contains(&last) {
+                let mut b = k as isize - 2;
+                while b >= i as isize
+                    && TRANSPARENT.contains(&toks[b as usize])
+                {
+                    b -= 2;
+                }
+                if b >= i as isize && !is_camel(toks[b as usize]) {
+                    unit_of_ident(toks[b as usize])
+                } else {
+                    None
+                }
+            } else {
+                unit_of_call(last)
+            };
+            let mut e = skip_parens(toks, k + 1) + 1;
+            // trailing transparent chain: `.max(0.0).min(cap_s)`
+            while e + 1 < n
+                && toks[e] == "."
+                && TRANSPARENT.contains(&toks[e + 1])
+            {
+                if e + 2 < n && toks[e + 2] == "(" {
+                    e = skip_parens(toks, e + 2) + 1;
+                } else {
+                    e += 2;
+                }
+            }
+            return (u.map(Val::Known), e, false);
+        }
+        if is_camel(last) {
+            return (None, k + 1, false);
+        }
+        let u = unit_of_ident(last);
+        let bare = k == i && !NOT_BARE.contains(&t);
+        // `as f64` casts are unit-transparent
+        let mut e = k + 1;
+        while e + 1 < n && toks[e] == "as" {
+            e += 2;
+        }
+        return (u.map(Val::Known), e, bare);
+    }
+    if t == "(" {
+        // parenthesised sub-expressions stay unresolved (token-level
+        // scanner: precision over recall)
+        return (None, skip_parens(toks, i) + 1, false);
+    }
+    (None, i, false)
+}
+
+// --------------------------------------------------------- unit algebra
+
+fn combine(a: Option<Val>, op: char, b: Option<Val>) -> Option<Val> {
+    let (a, b) = match (a, b) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return None,
+    };
+    use Dim::*;
+    if op == '*' {
+        return match (a, b) {
+            (Val::Num, x) | (x, Val::Num) => Some(x),
+            (Val::Known(Ratio), x) | (x, Val::Known(Ratio)) => Some(x),
+            (Val::Known(x), Val::Known(y)) => {
+                let pair = |p, q| (x == p && y == q) || (x == q && y == p);
+                if pair(Power, Time) || pair(Charge, Voltage) {
+                    Some(Val::Known(Energy))
+                } else if pair(Rate, Time) {
+                    Some(Val::Known(Data))
+                } else {
+                    None
+                }
+            }
+        };
+    }
+    match (a, b) {
+        (x, Val::Num) => Some(x),
+        (Val::Num, _) => None,
+        (x, Val::Known(Ratio)) => Some(x),
+        (Val::Known(x), Val::Known(y)) if x == y => Some(Val::Known(Ratio)),
+        (Val::Known(Data), Val::Known(Rate)) => Some(Val::Known(Time)),
+        (Val::Known(Data), Val::Known(Time)) => Some(Val::Known(Rate)),
+        (Val::Known(Energy), Val::Known(Time)) => Some(Val::Known(Power)),
+        (Val::Known(Energy), Val::Known(Power)) => Some(Val::Known(Time)),
+        _ => None,
+    }
+}
+
+/// Evaluate a `*`/`/` chain then `+`/`-` terms from `start` until an
+/// unhandled token.  Returns (value, end index, top-level operator).
+fn eval_expr(toks: &[&str], start: usize)
+             -> (Option<Val>, usize, Option<char>) {
+    let n = toks.len();
+    let mul_chain = |j: usize| -> (Option<Val>, usize, Option<char>) {
+        let (mut u, mut e, _) = resolve_right(toks, j);
+        if e == j {
+            return (None, j, None);
+        }
+        let mut topop = None;
+        while e < n && (toks[e] == "*" || toks[e] == "/") {
+            let op = if toks[e] == "*" { '*' } else { '/' };
+            topop = Some(op);
+            let (u2, e2, _) = resolve_right(toks, e + 1);
+            if e2 == e + 1 {
+                return (None, e, topop);
+            }
+            u = combine(u, op, u2);
+            e = e2;
+        }
+        (u, e, topop)
+    };
+    let (mut u, mut e, mut topop) = mul_chain(start);
+    while e < n && (toks[e] == "+" || toks[e] == "-") {
+        let op = if toks[e] == "+" { '+' } else { '-' };
+        let (u2, e2, _) = mul_chain(e + 1);
+        if e2 == e + 1 {
+            return (u, e, topop);
+        }
+        u = match (u, u2) {
+            (x, Some(Val::Num)) => x,
+            (Some(Val::Num), x) => x,
+            (x, y) if x == y => x,
+            _ => None,
+        };
+        topop = Some(op);
+        e = e2;
+    }
+    (u, e, topop)
+}
+
+// --------------------------------------------------------- the scanner
+
+/// What the tier-3 expression pass covered in one file.
+#[derive(Default)]
+pub struct UnitsStats {
+    /// unit-suffixed identifier tokens seen (scoped dirs only)
+    pub unit_idents: usize,
+    /// expression positions resolved (field inits, let bindings,
+    /// operator sites, assignments)
+    pub exprs_checked: usize,
+}
+
+pub struct UnitsScan {
+    pub findings: Vec<Finding>,
+    /// (line, lint) pairs where an inline allow suppressed a finding
+    pub allows_fired: Vec<(usize, &'static str)>,
+    pub stats: UnitsStats,
+}
+
+fn units_emit(out: &mut UnitsScan, rel: &str, li: &LineInfo,
+              lint: &'static str) {
+    if li.allows.iter().any(|a| a == lint) {
+        out.allows_fired.push((li.lineno, lint));
+        return;
+    }
+    let (severity, hint) = if lint == UNITS_MISMATCH {
+        (0, "the two sides carry different inferred units; insert an \
+             explicit conversion or fix the misleading suffix")
+    } else if lint == UNITS_CONVERSION {
+        (1, "this product/quotient has a known unit; bind it to a name \
+             carrying that unit's suffix")
+    } else {
+        (1, "give the identifier a unit suffix so the dimension is \
+             visible at the use site")
+    };
+    out.findings.push(Finding {
+        lint,
+        class: "units",
+        severity,
+        tier: 3,
+        file: rel.to_string(),
+        line: li.lineno,
+        snippet: snippet(&li.raw),
+        hint,
+    });
+}
+
+/// Statement-ish keywords before `Ident {` that mean the brace is a
+/// body, not a struct literal.
+const NO_LITERAL_KW: &[&str] = &[
+    "else", "enum", "fn", "for", "if", "impl", "loop", "match", "mod",
+    "move", "return", "struct", "trait", "unsafe", "use", "where",
+    "while",
+];
+
+/// Run the tier-3 expression rules over one file's pre-blanked lines.
+pub fn scan_units(rel: &str, lines: &[LineInfo]) -> UnitsScan {
+    let scoped = SCOPED.iter().any(|p| rel.starts_with(p));
+    // flatten non-test code lines into one token stream
+    let mut toks: Vec<&str> = Vec::new();
+    let mut lineof: Vec<usize> = Vec::new();
+    for (idx, li) in lines.iter().enumerate() {
+        if li.skip || !li.has_code {
+            continue;
+        }
+        for t in tokens_of(&li.blanked) {
+            toks.push(t);
+            lineof.push(idx);
+        }
+    }
+    let n = toks.len();
+    let mut out = UnitsScan {
+        findings: Vec::new(),
+        allows_fired: Vec::new(),
+        stats: UnitsStats::default(),
+    };
+
+    if scoped {
+        out.stats.unit_idents += toks
+            .iter()
+            .filter(|t| {
+                is_ident_tok(t) && !is_camel(t)
+                    && unit_of_ident(t).is_some()
+            })
+            .count();
+    }
+
+    // struct-literal context stack: (brace depth at open, name)
+    let mut depth = 0i64;
+    let mut ctx: Vec<i64> = Vec::new();
+
+    let mut i = 0usize;
+    while i < n {
+        let t = toks[i];
+
+        if t == "{" {
+            // struct literal iff a CamelCase ident sits directly
+            // before and the token before *that* is not a body keyword
+            if i > 0 && is_ident_tok(toks[i - 1]) && is_camel(toks[i - 1]) {
+                let mut k = i as isize - 2;
+                while k >= 1 && toks[k as usize] == "::" {
+                    k -= 2;
+                }
+                let kw = if k >= 0 { toks[k as usize] } else { "" };
+                if !NO_LITERAL_KW.contains(&kw) {
+                    ctx.push(depth);
+                }
+            }
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t == "}" {
+            depth -= 1;
+            if ctx.last().copied() == Some(depth) {
+                ctx.pop();
+            }
+            i += 1;
+            continue;
+        }
+
+        // field init inside a struct literal: `ident:` one level in
+        if !ctx.is_empty()
+            && depth == ctx.last().unwrap() + 1
+            && is_ident_tok(t)
+            && !is_camel(t)
+            && i + 1 < n
+            && toks[i + 1] == ":"
+            && (i == 0 || toks[i - 1] == "{" || toks[i - 1] == ",")
+        {
+            if let Some(fdim) = unit_of_ident(t) {
+                if scoped {
+                    out.stats.exprs_checked += 1;
+                    let (u, e, bare) = resolve_right(toks, i + 2);
+                    let single = e < n
+                        && (toks[e] == "," || toks[e] == "}");
+                    if single && bare && u.is_none() {
+                        units_emit(&mut out, rel, &lines[lineof[i]],
+                                   UNITS_UNTYPED);
+                    } else if single && known(u).is_some_and(|d| d != fdim)
+                    {
+                        units_emit(&mut out, rel, &lines[lineof[i]],
+                                   UNITS_MISMATCH);
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+
+        // `let [mut] NAME [: Type] = EXPR ;`
+        if t == "let" {
+            let mut j = i + 1;
+            if j < n && toks[j] == "mut" {
+                j += 1;
+            }
+            if j < n && is_ident_tok(toks[j]) && !is_camel(toks[j]) {
+                let ndim = unit_of_ident(toks[j]);
+                let mut k = j + 1;
+                while k < n && toks[k] != "=" && toks[k] != ";" {
+                    k += 1;
+                }
+                if k < n && toks[k] == "=" {
+                    out.stats.exprs_checked += 1;
+                    let (u, e, topop) = eval_expr(toks, k + 1);
+                    if e < n && toks[e] == ";" {
+                        if let Some(d) = known(u) {
+                            if let Some(nd) = ndim {
+                                if d != nd {
+                                    units_emit(&mut out, rel,
+                                               &lines[lineof[i]],
+                                               UNITS_MISMATCH);
+                                }
+                            } else if matches!(topop,
+                                               Some('*') | Some('/'))
+                                && scoped
+                            {
+                                units_emit(&mut out, rel,
+                                           &lines[lineof[i]],
+                                           UNITS_CONVERSION);
+                            }
+                        }
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+
+        // comparisons, compound assigns, plain add/sub
+        if matches!(t, "<" | ">" | "<=" | ">=" | "==" | "!=" | "+=" | "-="
+                       | "+" | "-")
+        {
+            out.stats.exprs_checked += 1;
+            let (lu, ls) = resolve_left(toks, i as isize - 1);
+            let (ru, e0, rbare) = resolve_right(toks, i + 1);
+            // an operand that is itself a *factor* of a `*`/`/` chain
+            // does not carry its term's unit — in `p_w * t1_s + p_w *
+            // t2_s` both neighbors of `+` are factors of energy-valued
+            // products.  Skip the neighbor checks whenever either side
+            // continues as a product; the let rule's full-expression
+            // evaluator still covers bound products.
+            if (ls >= 1 && matches!(toks[ls - 1], "*" | "/"))
+                || (e0 < n && matches!(toks[e0], "*" | "/"))
+            {
+                i += 1;
+                continue;
+            }
+            let ordered = matches!(t, "<" | ">" | "<=" | ">=");
+            if matches!(t, "<" | ">" | "<=" | ">=" | "==" | "!=") {
+                if let (Some(a), Some(b)) = (known(lu), known(ru)) {
+                    if a != b {
+                        units_emit(&mut out, rel, &lines[lineof[i]],
+                                   UNITS_MISMATCH);
+                    }
+                } else if scoped && known(lu).is_some() && ru.is_none()
+                    && rbare && ordered
+                {
+                    units_emit(&mut out, rel, &lines[lineof[i]],
+                               UNITS_UNTYPED);
+                } else if scoped && known(ru).is_some() && lu.is_none()
+                    && ordered && i >= 1 && is_ident_tok(toks[i - 1])
+                    && !is_camel(toks[i - 1])
+                    && !NOT_BARE.contains(&toks[i - 1])
+                    && ls == i - 1
+                {
+                    units_emit(&mut out, rel, &lines[lineof[i]],
+                               UNITS_UNTYPED);
+                }
+            } else if t == "+=" || t == "-=" {
+                if let (Some(a), Some(b)) = (known(lu), known(ru)) {
+                    if a != b && b != Dim::Ratio {
+                        units_emit(&mut out, rel, &lines[lineof[i]],
+                                   UNITS_MISMATCH);
+                    }
+                } else if scoped && known(lu).is_some() && ru.is_none()
+                    && rbare && e0 < n && toks[e0] == ";"
+                {
+                    units_emit(&mut out, rel, &lines[lineof[i]],
+                               UNITS_UNTYPED);
+                }
+            } else if let (Some(a), Some(b)) = (known(lu), known(ru)) {
+                if a != b {
+                    units_emit(&mut out, rel, &lines[lineof[i]],
+                               UNITS_MISMATCH);
+                }
+            }
+            i += 1;
+            continue;
+        }
+
+        // `CHAIN = EXPR ;` with a unit-suffixed last segment (the let
+        // rule owns `let name = …` — skip that shape here)
+        if t == "=" && i >= 1 && is_ident_tok(toks[i - 1])
+            && !is_camel(toks[i - 1])
+        {
+            if let Some(ldim) = unit_of_ident(toks[i - 1]) {
+                let cs = chain_start(toks, i - 1);
+                let owned_by_let = cs >= 1
+                    && (toks[cs - 1] == "let" || toks[cs - 1] == "mut");
+                if !owned_by_let {
+                    out.stats.exprs_checked += 1;
+                    let (u, e, bare) = resolve_right(toks, i + 1);
+                    let single = e < n && toks[e] == ";";
+                    if single && bare && u.is_none() && scoped {
+                        units_emit(&mut out, rel, &lines[lineof[i]],
+                                   UNITS_UNTYPED);
+                    } else if single && known(u).is_some_and(|d| d != ldim)
+                    {
+                        units_emit(&mut out, rel, &lines[lineof[i]],
+                                   UNITS_MISMATCH);
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+
+        i += 1;
+    }
+    out
+}
+
+// ------------------------------------------------------ contract-ledger
+
+/// What the ledger-conservation check covered.
+#[derive(Default)]
+pub struct LedgerStats {
+    /// seconds/bytes/joules counters on RoundRecord + ClientUpdate
+    pub counters: usize,
+    /// counters referenced in the summary-totals aggregation
+    pub summary_refs: usize,
+    /// counters referenced in the trace-reconciliation test
+    pub trace_refs: usize,
+}
+
+fn ledger_finding(file: &str, line: usize, snippet: String,
+                  hint: &'static str) -> Finding {
+    Finding {
+        lint: CONTRACT_LEDGER,
+        class: "contract",
+        severity: 0,
+        tier: 3,
+        file: file.to_string(),
+        line,
+        snippet,
+        hint,
+    }
+}
+
+/// `.name` with a non-identifier character after — a dotted field
+/// reference, not a prefix of a longer name.
+fn contains_ref(text: &str, name: &str) -> bool {
+    let needle = format!(".{name}");
+    let bytes = text.as_bytes();
+    let mut start = 0;
+    while let Some(p) = text[start..].find(&needle) {
+        let end = start + p + needle.len();
+        let boundary = bytes
+            .get(end)
+            .map_or(true, |&c| !(c.is_ascii_alphanumeric() || c == b'_'));
+        if boundary {
+            return true;
+        }
+        start += p + 1;
+    }
+    false
+}
+
+/// Every seconds/bytes/joules counter on `RoundRecord`/`ClientUpdate`
+/// must be referenced by the summary-totals aggregation (the
+/// `let mut pairs = vec![` region) AND by the trace-reconciliation
+/// test, or sit on the `NON_RECONCILED` allowlist; allowlist entries
+/// that are not counters, or that became fully reconciled, are stale.
+/// Skips silently (zeroed stats) when the tree has no summary region —
+/// fixture trees should not drown in noise; the clean-tree test
+/// asserts the stats to prove engagement.
+pub fn check_ledger(index: &RepoIndex, trace_test: Option<&str>)
+                    -> (Vec<Finding>, Vec<AllowUse>, LedgerStats) {
+    // subjects: union of unit-typed counters, RoundRecord anchors first
+    let mut subjects: Vec<(String, String, usize)> = Vec::new();
+    for sname in ["RoundRecord", "ClientUpdate"] {
+        let Some((sfile, sdef)) = index.struct_def(sname) else {
+            continue;
+        };
+        for (fname, fline) in &sdef.fields {
+            if subjects.iter().any(|(name, _, _)| name == fname) {
+                continue;
+            }
+            if matches!(unit_of_ident(fname),
+                        Some(Dim::Time | Dim::Data | Dim::Energy))
+            {
+                subjects.push((fname.clone(), sfile.rel.clone(), *fline));
+            }
+        }
+    }
+
+    // the summary-totals regions: every `let mut pairs = vec![` … `]`
+    // block in the tree, depth tracked per line like the
+    // NON_FINGERPRINTED extraction.  All regions are concatenated so
+    // the anchor stays robust when other modules use the same idiom
+    // for small JSON objects (e.g. eval-result serialization) — a
+    // counter reference in any of them counts as summary coverage.
+    let mut region = String::new();
+    let mut found_region = false;
+    for f in &index.files {
+        let mut in_region = false;
+        let mut depth = 0i64;
+        for li in &f.lines {
+            if li.skip || !li.has_code {
+                continue;
+            }
+            if !in_region {
+                if li.blanked.contains("let mut pairs = vec![") {
+                    in_region = true;
+                    found_region = true;
+                } else {
+                    continue;
+                }
+            }
+            depth += li.blanked.chars().map(|c| match c {
+                '[' => 1,
+                ']' => -1,
+                _ => 0,
+            }).sum::<i64>();
+            region.push_str(&li.blanked);
+            region.push('\n');
+            if depth <= 0 {
+                in_region = false;
+                depth = 0;
+            }
+        }
+    }
+    if !found_region || subjects.is_empty() {
+        return (Vec::new(), Vec::new(), LedgerStats::default());
+    }
+
+    // the NON_RECONCILED allowlist: literals from the const decl line
+    // through the closing `];`
+    let mut allowlist: Vec<(String, String, usize)> = Vec::new();
+    'allow: for f in &index.files {
+        let mut in_const = false;
+        let mut depth = 0i64;
+        for li in &f.lines {
+            if li.skip || !li.has_code {
+                continue;
+            }
+            if !in_const {
+                if li.blanked.contains("NON_RECONCILED")
+                    && li.blanked.contains("const")
+                {
+                    in_const = true;
+                } else {
+                    continue;
+                }
+            }
+            depth += li.blanked.chars().map(|c| match c {
+                '[' => 1,
+                ']' => -1,
+                _ => 0,
+            }).sum::<i64>();
+            for lit in string_literals(&li.raw) {
+                allowlist.push((lit, f.rel.clone(), li.lineno));
+            }
+            if depth <= 0 {
+                break 'allow;
+            }
+        }
+    }
+    let allowed_names: BTreeSet<&str> =
+        allowlist.iter().map(|(n, _, _)| n.as_str()).collect();
+
+    let trace_text: Option<String> = trace_test.map(|t| {
+        blank_lines(t)
+            .iter()
+            .map(|li| li.blanked.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+    });
+
+    let mut findings = Vec::new();
+    let mut allows: Vec<AllowUse> = Vec::new();
+    let mut emit = |findings: &mut Vec<Finding>,
+                    allows: &mut Vec<AllowUse>, f: Finding| {
+        if index.allowed(&f.file, f.line, f.lint) {
+            allows.push((f.file, f.line, f.lint));
+        } else {
+            findings.push(f);
+        }
+    };
+
+    let mut stats = LedgerStats {
+        counters: subjects.len(),
+        summary_refs: 0,
+        trace_refs: 0,
+    };
+    for (name, file, line) in &subjects {
+        let in_summary = contains_ref(&region, name);
+        let in_trace = trace_text
+            .as_deref()
+            .map(|t| contains_ref(t, name));
+        if in_summary {
+            stats.summary_refs += 1;
+        }
+        if in_trace == Some(true) {
+            stats.trace_refs += 1;
+        }
+        let allowlisted = allowed_names.contains(name.as_str());
+        if !in_summary && !allowlisted {
+            emit(&mut findings, &mut allows, ledger_finding(
+                file, *line,
+                format!("ledger counter `{name}` is missing from the \
+                         summary-totals aggregation"),
+                "wire the counter into the summary pairs (a \
+                 (\"total_*\", …) entry) or add it to NON_RECONCILED \
+                 with a reason"));
+        }
+        if in_trace == Some(false) && !allowlisted {
+            emit(&mut findings, &mut allows, ledger_finding(
+                file, *line,
+                format!("ledger counter `{name}` is not reconciled by \
+                         the trace test"),
+                "reconcile the counter in the fleet trace test or add \
+                 it to NON_RECONCILED with a reason"));
+        }
+    }
+    for (name, file, line) in &allowlist {
+        let subject = subjects.iter().any(|(n, _, _)| n == name);
+        let fully_covered = contains_ref(&region, name)
+            && trace_text
+                .as_deref()
+                .is_some_and(|t| contains_ref(t, name));
+        if !subject {
+            emit(&mut findings, &mut allows, ledger_finding(
+                file, *line,
+                format!("NON_RECONCILED entry `{name}` is not a \
+                         RoundRecord/ClientUpdate ledger counter"),
+                "remove the stale allowlist entry"));
+        } else if fully_covered {
+            emit(&mut findings, &mut allows, ledger_finding(
+                file, *line,
+                format!("NON_RECONCILED entry `{name}` is reconciled in \
+                         both the summary totals and the trace test"),
+                "remove the stale allowlist entry"));
+        }
+    }
+    (findings, allows, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::index::{FileIndex, RepoIndex};
+    use super::*;
+
+    fn units(rel: &str, text: &str) -> UnitsScan {
+        scan_units(rel, &blank_lines(text))
+    }
+
+    fn names(s: &UnitsScan) -> Vec<&'static str> {
+        s.findings.iter().map(|f| f.lint).collect()
+    }
+
+    // ---- vocabulary + algebra --------------------------------------
+
+    #[test]
+    fn suffix_vocabulary() {
+        assert_eq!(unit_of_ident("upload_s"), Some(Dim::Time));
+        assert_eq!(unit_of_ident("bytes_up"), Some(Dim::Data));
+        assert_eq!(unit_of_ident("sent_bytes"), Some(Dim::Data));
+        assert_eq!(unit_of_ident("energy_j"), Some(Dim::Energy));
+        assert_eq!(unit_of_ident("link_mbps"), Some(Dim::Rate));
+        assert_eq!(unit_of_ident("link_mbit_s"), Some(Dim::Rate));
+        assert_eq!(unit_of_ident("p_radio"), Some(Dim::Power));
+        assert_eq!(unit_of_ident("battery_frac"), Some(Dim::Ratio));
+        assert_eq!(unit_of_ident("capacity_mah"), Some(Dim::Charge));
+        assert_eq!(unit_of_ident("round"), Some(Dim::Rounds));
+        // a *collection* named `rounds` is not the Rounds dimension
+        assert_eq!(unit_of_ident("rounds"), None);
+        assert_eq!(unit_of_ident("delta"), None);
+        assert_eq!(unit_of_call("drain_with"), Some(Dim::Energy));
+        assert_eq!(unit_of_call("partial_bytes"), Some(Dim::Data));
+        assert_eq!(unit_of_call("seconds_until_empty"), Some(Dim::Time));
+    }
+
+    #[test]
+    fn unit_algebra() {
+        use Dim::*;
+        let k = |d| Some(Val::Known(d));
+        assert_eq!(combine(k(Power), '*', k(Time)), k(Energy));
+        assert_eq!(combine(k(Time), '*', k(Power)), k(Energy));
+        assert_eq!(combine(k(Rate), '*', k(Time)), k(Data));
+        assert_eq!(combine(k(Charge), '*', k(Voltage)), k(Energy));
+        assert_eq!(combine(k(Data), '/', k(Rate)), k(Time));
+        assert_eq!(combine(k(Data), '/', k(Time)), k(Rate));
+        assert_eq!(combine(k(Energy), '/', k(Time)), k(Power));
+        assert_eq!(combine(k(Energy), '/', k(Power)), k(Time));
+        assert_eq!(combine(k(Data), '/', k(Data)), k(Ratio));
+        assert_eq!(combine(k(Time), '*', k(Ratio)), k(Time));
+        assert_eq!(combine(k(Time), '/', k(Ratio)), k(Time));
+        assert_eq!(combine(k(Time), '*', Some(Val::Num)), k(Time));
+        assert_eq!(combine(k(Time), '/', Some(Val::Num)), k(Time));
+        assert_eq!(combine(Some(Val::Num), '/', k(Time)), None);
+        assert_eq!(combine(k(Time), '*', k(Data)), None);
+        assert_eq!(combine(k(Time), '*', None), None);
+    }
+
+    // ---- units-mismatch --------------------------------------------
+
+    #[test]
+    fn mismatch_compare_fires_and_allows() {
+        let fire = "pub fn f(x_s: f64, y_bytes: f64) {\n\
+                    \x20   if x_s > y_bytes { panic!() }\n}\n";
+        let s = units("fleet/x.rs", fire);
+        assert_eq!(names(&s), vec![UNITS_MISMATCH], "{:?}", s.findings);
+        assert_eq!(s.findings[0].line, 2);
+        // mismatches are reported outside the scoped dirs too
+        let s = units("cli/x.rs", fire);
+        assert_eq!(names(&s), vec![UNITS_MISMATCH]);
+        let allowed = "pub fn f(x_s: f64, y_bytes: f64) {\n\
+                       \x20   // mft-lint: allow(units-mismatch) -- cmp\n\
+                       \x20   if x_s > y_bytes { panic!() }\n}\n";
+        let s = units("fleet/x.rs", allowed);
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        assert_eq!(s.allows_fired, vec![(3, UNITS_MISMATCH)]);
+    }
+
+    #[test]
+    fn mismatch_let_assign_and_compound() {
+        let s = units("fleet/x.rs",
+                      "fn f(p_w: f64, dt_s: f64) {\n\
+                       \x20   let lim_s = p_w * dt_s;\n}\n");
+        assert_eq!(names(&s), vec![UNITS_MISMATCH]); // energy into _s
+        let s = units("fleet/x.rs",
+                      "fn f(e: &mut E, dur_s: f64) {\n\
+                       \x20   e.energy_j += dur_s;\n}\n");
+        assert_eq!(names(&s), vec![UNITS_MISMATCH]);
+        let s = units("fleet/x.rs",
+                      "fn f(e: &mut E, x_j: f64) {\n\
+                       \x20   e.time_s = x_j;\n}\n");
+        assert_eq!(names(&s), vec![UNITS_MISMATCH]);
+        // scaling by a ratio is fine on compound assign
+        let s = units("fleet/x.rs",
+                      "fn f(e: &mut E, frac: f64) {\n\
+                       \x20   e.time_s -= frac;\n}\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+    }
+
+    // ---- units-conversion ------------------------------------------
+
+    #[test]
+    fn conversion_fires_and_allows() {
+        let fire = "fn f(bytes: f64, link_mbps: f64) {\n\
+                    \x20   let t = bytes / link_mbps;\n}\n";
+        let s = units("fleet/x.rs", fire);
+        assert_eq!(names(&s), vec![UNITS_CONVERSION], "{:?}", s.findings);
+        // outside scoped dirs the conversion rule is silent
+        let s = units("cli/x.rs", fire);
+        assert!(s.findings.is_empty());
+        // a correctly-suffixed binding is clean
+        let s = units("fleet/x.rs",
+                      "fn f(bytes: f64, link_mbps: f64) {\n\
+                       \x20   let t_s = bytes / link_mbps;\n}\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        let allowed = "fn f(bytes: f64, link_mbps: f64) {\n\
+                       \x20   // mft-lint: allow(units-conversion) -- x\n\
+                       \x20   let t = bytes / link_mbps;\n}\n";
+        let s = units("fleet/x.rs", allowed);
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        assert_eq!(s.allows_fired, vec![(3, UNITS_CONVERSION)]);
+    }
+
+    // ---- units-untyped ---------------------------------------------
+
+    #[test]
+    fn untyped_fires_and_allows() {
+        let fire = "fn f(free: f64, cap_bytes: f64) {\n\
+                    \x20   if free < cap_bytes { panic!() }\n}\n";
+        let s = units("fleet/x.rs", fire);
+        assert_eq!(names(&s), vec![UNITS_UNTYPED], "{:?}", s.findings);
+        // only inside the accounting dirs
+        let s = units("cli/x.rs", fire);
+        assert!(s.findings.is_empty());
+        let allowed = "fn f(free: f64, cap_bytes: f64) {\n\
+                       \x20   // mft-lint: allow(units-untyped) -- ok\n\
+                       \x20   if free < cap_bytes { panic!() }\n}\n";
+        let s = units("fleet/x.rs", allowed);
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        assert_eq!(s.allows_fired, vec![(3, UNITS_UNTYPED)]);
+        // bare value into a unit-typed struct-literal field
+        let s = units("fleet/x.rs",
+                      "fn f(x: f64) -> R {\n\
+                       \x20   R { time_s: x, n: 3 }\n}\n");
+        assert_eq!(names(&s), vec![UNITS_UNTYPED]);
+        // suffixed value into the same field is clean
+        let s = units("fleet/x.rs",
+                      "fn f(x_s: f64) -> R {\n\
+                       \x20   R { time_s: x_s, n: 3 }\n}\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+    }
+
+    // ---- resolution details ----------------------------------------
+
+    #[test]
+    fn transparent_methods_and_casts() {
+        // .max/.min keep the receiver's unit
+        let s = units("fleet/x.rs",
+                      "fn f(x_s: f64, cap_s: f64) {\n\
+                       \x20   let lim_s = x_s.max(0.0).min(cap_s);\n}\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        // .round() is not the Rounds dimension
+        let s = units("fleet/x.rs",
+                      "fn f(x: f64, n_rounds: usize) {\n\
+                       \x20   let y = x.round();\n\
+                       \x20   if x.round() > n_rounds as f64 { panic!() }\n\
+                       }\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        // `as f64` casts are unit-transparent
+        let s = units("fleet/x.rs",
+                      "fn f(sent_bytes: u64, lim_bytes: f64) {\n\
+                       \x20   if sent_bytes as f64 > lim_bytes { }\n}\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        // primitive type names are never "bare" untyped candidates
+        let s = units("fleet/x.rs",
+                      "enum E { V { time_s: f64 }, W { bytes: u64 } }\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        // conversion helper signatures resolve through calls
+        let s = units("fleet/x.rs",
+                      "fn f(b: &B, deadline_s: f64) {\n\
+                       \x20   if b.seconds_until_empty() > deadline_s \
+                       { }\n}\n");
+        assert!(s.findings.is_empty(), "{:?}", s.findings);
+        let s = units("fleet/x.rs",
+                      "fn f(b: &B, lim_bytes: f64) {\n\
+                       \x20   if b.seconds_until_empty() > lim_bytes \
+                       { }\n}\n");
+        assert_eq!(names(&s), vec![UNITS_MISMATCH]);
+    }
+
+    #[test]
+    fn engagement_stats_count() {
+        let s = units("fleet/x.rs",
+                      "fn f(a_s: f64, b_s: f64, c_bytes: f64) {\n\
+                       \x20   let d_s = a_s + b_s;\n\
+                       \x20   let r = c_bytes / c_bytes;\n}\n");
+        assert!(s.stats.unit_idents >= 6, "{}", s.stats.unit_idents);
+        assert!(s.stats.exprs_checked >= 3, "{}", s.stats.exprs_checked);
+        // unscoped files do not count unit idents
+        let s = units("cli/x.rs", "fn f(a_s: f64) { let b_s = a_s; }\n");
+        assert_eq!(s.stats.unit_idents, 0);
+    }
+
+    // ---- contract-ledger -------------------------------------------
+
+    const LEDGER_METRICS: &str =
+        "pub struct RoundRecord {\n\
+         \x20   pub round: usize,\n\
+         \x20   pub time_s: f64,\n\
+         \x20   pub bytes_up: u64,\n\
+         }\n";
+
+    fn ledger_tree(metrics: &str, driver: &str)
+                   -> (RepoIndex, &'static str) {
+        let idx = RepoIndex {
+            files: vec![
+                FileIndex::build("metrics/mod.rs", metrics),
+                FileIndex::build("fleet/driver.rs", driver),
+            ],
+        };
+        // trace test reconciles bytes_up only
+        (idx, "fn t() { assert_eq!(a.bytes_up, b.bytes_up); }\n")
+    }
+
+    #[test]
+    fn ledger_missing_counter_fires_both_directions() {
+        let driver = "pub const NON_RECONCILED: &[&str] = &[];\n\
+                      fn s(r: &R) {\n\
+                      \x20   let mut pairs = vec![\n\
+                      \x20       (\"total_bytes_up\", r.bytes_up),\n\
+                      \x20   ];\n}\n";
+        let (idx, trace) = ledger_tree(LEDGER_METRICS, driver);
+        let (f, a, st) = check_ledger(&idx, Some(trace));
+        // time_s missing from the summary AND the trace test
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.lint == CONTRACT_LEDGER
+                             && x.snippet.contains("`time_s`")));
+        assert!(a.is_empty());
+        assert_eq!((st.counters, st.summary_refs, st.trace_refs),
+                   (2, 1, 1));
+        // without a trace test the trace direction is skipped
+        let (f, _, st) = check_ledger(&idx, None);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(st.trace_refs, 0);
+    }
+
+    #[test]
+    fn ledger_allowlist_and_inline_allow() {
+        // NON_RECONCILED covers the miss
+        let driver = "pub const NON_RECONCILED: &[&str] = &[\n\
+                      \x20   \"time_s\",\n\
+                      ];\n\
+                      fn s(r: &R) {\n\
+                      \x20   let mut pairs = vec![\n\
+                      \x20       (\"total_bytes_up\", r.bytes_up),\n\
+                      \x20   ];\n}\n";
+        let (idx, trace) = ledger_tree(LEDGER_METRICS, driver);
+        let (f, a, _) = check_ledger(&idx, Some(trace));
+        assert!(f.is_empty(), "{f:?}");
+        assert!(a.is_empty());
+        // an inline allow on the field decl suppresses instead
+        let metrics = LEDGER_METRICS.replace(
+            "    pub time_s: f64,",
+            "    // mft-lint: allow(contract-ledger) -- fixture\n\
+             \x20   pub time_s: f64,");
+        let driver_empty = "pub const NON_RECONCILED: &[&str] = &[];\n\
+                            fn s(r: &R) {\n\
+                            \x20   let mut pairs = vec![\n\
+                            \x20       (\"total_bytes_up\", r.bytes_up),\n\
+                            \x20   ];\n}\n";
+        let (idx, trace) = ledger_tree(&metrics, driver_empty);
+        let (f, a, _) = check_ledger(&idx, Some(trace));
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a.len(), 2); // both directions suppressed
+        assert_eq!(a[0].2, CONTRACT_LEDGER);
+    }
+
+    #[test]
+    fn ledger_stale_entries_flagged() {
+        // `bytes_up` is reconciled in both directions and `ghost` is
+        // not a counter at all: both allowlist entries are stale
+        let driver = "pub const NON_RECONCILED: &[&str] = &[\n\
+                      \x20   \"bytes_up\",\n\
+                      \x20   \"ghost\",\n\
+                      \x20   \"time_s\",\n\
+                      ];\n\
+                      fn s(r: &R) {\n\
+                      \x20   let mut pairs = vec![\n\
+                      \x20       (\"total_bytes_up\", r.bytes_up),\n\
+                      \x20   ];\n}\n";
+        let (idx, trace) = ledger_tree(LEDGER_METRICS, driver);
+        let (f, _, _) = check_ledger(&idx, Some(trace));
+        let snips: Vec<&str> =
+            f.iter().map(|x| x.snippet.as_str()).collect();
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(snips.iter().any(|s| s.contains("`bytes_up`")));
+        assert!(snips.iter().any(|s| s.contains("`ghost`")));
+    }
+
+    #[test]
+    fn ledger_skips_without_summary_region() {
+        let idx = RepoIndex {
+            files: vec![FileIndex::build("metrics/mod.rs",
+                                         LEDGER_METRICS)],
+        };
+        let (f, a, st) = check_ledger(&idx, None);
+        assert!(f.is_empty() && a.is_empty());
+        assert_eq!(st.counters, 0);
+    }
+}

@@ -104,18 +104,18 @@ fn cmd_summarize(args: &Args) -> Result<()> {
             .and_then(|v| v.as_f64().ok())
             .unwrap_or(0.0);
         let bytes = g_u64("bytes") + g_u64("bytes_aux");
-        let energy = g_f64("energy_j");
+        let energy_j = g_f64("energy_j");
         let p = phases.entry(name).or_default();
         p.count += 1;
         p.dur_s += dur_s;
         p.bytes += bytes;
-        p.energy_j += energy;
+        p.energy_j += energy_j;
         if tid > 0 {
             let t = tracks.entry(tid).or_default();
             t.count += 1;
             t.dur_s += dur_s;
             t.bytes += bytes;
-            t.energy_j += energy;
+            t.energy_j += energy_j;
         }
     }
 

@@ -162,6 +162,19 @@ fn trace_spans_reconcile_with_round_record_byte_and_energy_ledger() {
                 evs.iter().filter(|e| e.name == name).count(), 1,
                 "round {}: expected exactly one {name} span", r.round);
         }
+        // virtual clock: the aggregate marker sits exactly one round
+        // makespan after the select span.  Exact f64 equality is
+        // intentional — the driver stamps both from the same sum
+        // (`coord_clock_s + round_time_s`), and `time_s` IS
+        // `round_time_s`, so the ledger's makespan reconciles
+        // bit-for-bit with the trace timeline.
+        let t0 = |name: &str| -> f64 {
+            evs.iter().find(|e| e.name == name).unwrap().t0_s
+        };
+        assert_eq!(t0("aggregate").to_bits(),
+                   (t0("select") + r.time_s).to_bits(),
+                   "round {}: aggregate marker != select t0 + time_s",
+                   r.round);
     }
 
     // the reconciliation is vacuous unless the hostile paths fired

@@ -1,15 +1,16 @@
 //! The shipped source tree is lint-clean: `mft lint --deny` on `src/`
-//! must find nothing — across both tiers.  This is the same gate CI
-//! runs via the binary; running it in-process here pins it into
+//! must find nothing — across all three tiers.  This is the same gate
+//! CI runs via the binary; running it in-process here pins it into
 //! `cargo test` too, so a violation fails fast with the offending
 //! findings in the assert message instead of waiting for the CI leg.
 //!
-//! For tier 2 the zero-findings assert alone would be satisfiable by a
-//! check that silently skipped (every cross-file check bails when its
-//! subject is absent, for fixture trees), so the tests below also pin
-//! the *engagement stats*: config fields actually checked, help flags
+//! The zero-findings assert alone would be satisfiable by a check that
+//! silently skipped (every cross-file check bails when its subject is
+//! absent, for fixture trees), so the tests below also pin the
+//! *engagement stats*: config fields actually checked, help flags
 //! actually seen, schema columns actually matched, modules and edges
-//! actually indexed.
+//! actually indexed, unit-suffixed identifiers actually seen and
+//! ledger counters actually reconciled (tier 3).
 
 use std::path::Path;
 
@@ -80,6 +81,74 @@ fn module_graph_exports_byte_stable() {
     assert_eq!(a.graph.to_json().to_string(), b.graph.to_json().to_string());
     assert_eq!(a.graph.to_dot(), b.graph.to_dot());
     assert!(!a.graph.to_dot().is_empty());
+}
+
+/// Tier 3 ran against the real tree, not vacuously.  The floors pin:
+/// the unit vocabulary actually matched a large population of
+/// suffixed identifiers in the accounting dirs, the expression walker
+/// actually resolved thousands of positions, and the ledger
+/// conservation check actually found the RoundRecord/ClientUpdate
+/// counters, the summary-totals region and the trace test.  (Current
+/// actuals: ~845 unit idents, ~3360 expression positions, 12 ledger
+/// counters with 9 summary / 8 trace reconciliations.)
+#[test]
+fn tier3_checks_engaged_on_shipped_tree() {
+    let report = mft::lint::run_lint(&repo_src()).expect("lint scan");
+    let t3 = &report.tier3;
+    assert!(t3.unit_idents >= 400,
+            "unit vocabulary matched only {} identifiers",
+            t3.unit_idents);
+    assert!(t3.exprs_checked >= 2000,
+            "expression walker resolved only {} positions",
+            t3.exprs_checked);
+    assert!(t3.ledger_counters >= 12,
+            "ledger saw only {} RoundRecord/ClientUpdate counters",
+            t3.ledger_counters);
+    assert!(t3.ledger_summary_refs >= 9,
+            "only {} counters reconciled in the summary totals",
+            t3.ledger_summary_refs);
+    assert!(t3.ledger_trace_refs >= 8,
+            "only {} counters reconciled in the trace test",
+            t3.ledger_trace_refs);
+}
+
+/// Every inline `mft-lint: allow(...)` in the tree still suppresses a
+/// live finding: the unused-allow meta-lint found nothing stale, and
+/// the suppression count proves the allows actually fired (the tree
+/// carries its real escapes, so the count is a floor, not zero).
+#[test]
+fn no_stale_inline_allows() {
+    let report = mft::lint::run_lint(&repo_src()).expect("lint scan");
+    let stale: Vec<&mft::lint::Finding> = report
+        .findings
+        .iter()
+        .filter(|f| f.lint == "unused-allow")
+        .collect();
+    assert!(stale.is_empty(), "stale inline allows: {stale:?}");
+    assert!(report.allows_used >= 20,
+            "only {} inline allows fired — the escape audit is not \
+             seeing the tree's real suppressions",
+            report.allows_used);
+}
+
+/// The parallel scan is deterministic: `lint_report.json` (the full
+/// report serialization) is byte-identical for any thread count, so
+/// the CI artifact and the `--baseline` workflow never depend on the
+/// host's core count.
+#[test]
+fn report_byte_identical_across_thread_counts() {
+    let one = mft::lint::run_lint_with_threads(&repo_src(), 1)
+        .expect("lint scan")
+        .to_json()
+        .to_string();
+    for threads in [2usize, 4] {
+        let tn = mft::lint::run_lint_with_threads(&repo_src(), threads)
+            .expect("lint scan")
+            .to_json()
+            .to_string();
+        assert_eq!(one, tn,
+                   "lint report differs at {threads} threads");
+    }
 }
 
 /// Failpoint coverage specifically: every registered point is routed to
